@@ -1,0 +1,61 @@
+//! OLAP end-to-end: generate a TPC-H-shaped database, run analytical
+//! queries on the morsel-parallel engine with and without the ARCAS
+//! adaptive controller, verify results against the serial oracle.
+//!
+//! ```bash
+//! cargo run --release --example olap_engine [sf] [cores]
+//! ```
+
+use std::sync::Arc;
+
+use arcas::policy::{ArcasPolicy, RingPolicy};
+use arcas::topology::Topology;
+use arcas::util::table::Table;
+use arcas::workloads::olap::{all_queries, run_query, run_query_serial, Db};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let sf: f64 = args.first().and_then(|s| s.parse().ok()).unwrap_or(0.02);
+    let cores: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(8);
+
+    let topo = Topology::milan_2s();
+    let db = Arc::new(Db::generate(sf, 42));
+    println!(
+        "database: sf={sf}, lineitem {} rows, total {}",
+        db.rows(arcas::workloads::olap::Table::Lineitem),
+        arcas::util::fmt_bytes(db.total_bytes())
+    );
+
+    let mut t = Table::new(
+        "analytical queries: default vs +ARCAS",
+        &["query", "rows", "default ms", "+ARCAS ms", "speedup", "verified"],
+    );
+    // A representative subset: scan-heavy, join-heavy, group-by-heavy.
+    for id in [1usize, 3, 5, 6, 9, 12, 18, 21] {
+        let q = &all_queries()[id - 1];
+        let (rows_ref, sum_ref) = run_query_serial(&db, q);
+        let base = run_query(&topo, Box::new(RingPolicy::new()), cores, db.clone(), q);
+        let arc = run_query(
+            &topo,
+            Box::new(ArcasPolicy::new(&topo).with_timer(100_000)),
+            cores,
+            db.clone(),
+            q,
+        );
+        let verified = base.rows_out == rows_ref
+            && arc.rows_out == rows_ref
+            && (arc.agg_sum - sum_ref).abs() <= sum_ref.abs() * 1e-9 + 1e-6;
+        t.row(vec![
+            format!("Q{}", q.id),
+            rows_ref.to_string(),
+            format!("{:.2}", base.report.makespan_ns as f64 / 1e6),
+            format!("{:.2}", arc.report.makespan_ns as f64 / 1e6),
+            format!(
+                "{:.2}x",
+                base.report.makespan_ns as f64 / arc.report.makespan_ns as f64
+            ),
+            if verified { "ok".into() } else { "MISMATCH".into() },
+        ]);
+    }
+    println!("{}", t.render());
+}

@@ -1,0 +1,67 @@
+//! Quickstart: the ARCAS API in ~40 lines.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use arcas::api::{Arcas, ArcasConfig};
+use arcas::mem::Placement;
+use arcas::topology::Topology;
+
+fn main() {
+    // ARCAS_Init() — dual-socket Milan model, adaptive policy.
+    let mut rt = Arcas::init_with(ArcasConfig {
+        topology: Topology::milan_2s(),
+        timer_ns: 100_000,
+        ..Default::default()
+    });
+    println!("machine: {}", rt.topology().summary());
+
+    // Allocate a shared 64 MiB region, interleaved across NUMA nodes.
+    let data = rt.alloc("dataset", 64 << 20, Placement::Interleave);
+
+    // all_do(): run one task per rank; each streams its slice and does
+    // some math. Yield points are where ARCAS profiles and migrates.
+    let report = rt.all_do_chunked(32, 16, move |ctx, rank, _chunk| {
+        ctx.seq_read(data, 2 << 20);
+        ctx.compute_flops(1_000_000);
+        let _ = rank;
+    });
+
+    println!("policy            {}", report.policy);
+    println!("makespan          {}", arcas::util::fmt_ns(report.makespan_ns));
+    println!("dispatches        {}", report.dispatches);
+    println!("steals            {}", report.steals);
+    println!("final spread rate {}", report.spread_rate);
+    let c = &report.counts;
+    println!(
+        "accesses          local {:.0} | near {:.0} | far {:.0} | dram {:.0}",
+        c.local, c.near, c.far, c.dram
+    );
+
+    // Synchronous RPC to a specific core (the `call()` API).
+    let answer = rt.call(0, 9, |ctx| {
+        ctx.compute_ns(50);
+        42
+    });
+    println!("call(core 9)      -> {answer}");
+
+    // The same runtime also runs on real OS threads (host executor).
+    let pool = arcas::sched::HostExecutor::new(4, rt.topology(), false);
+    let hits = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
+    for _ in 0..64 {
+        let hits = hits.clone();
+        pool.execute(move || {
+            hits.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        });
+    }
+    pool.wait_all();
+    println!(
+        "host executor     ran {} jobs on {} workers ({} steals)",
+        hits.load(std::sync::atomic::Ordering::Relaxed),
+        pool.workers(),
+        pool.steal_count()
+    );
+
+    rt.finalize();
+}

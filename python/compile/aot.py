@@ -1,0 +1,104 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) -> HLO text artifacts for rust.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: the
+image's xla_extension 0.5.1 rejects jax>=0.5's 64-bit-instruction-id
+protos, while the text parser reassigns ids (see aot_recipe /
+/opt/xla-example). Each artifact is listed in ``artifacts/manifest.txt``
+(INI, parsed by rust's `util::config`) with its entry point and shapes.
+
+Usage: python -m compile.aot [--out-dir ../artifacts]
+Re-running is a no-op if inputs are unchanged (Makefile dependency).
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*dims):
+    return jax.ShapeDtypeStruct(tuple(dims), jnp.float32)
+
+
+def _shape_str(dims):
+    return "x".join(str(d) for d in dims) if dims else "scalar"
+
+
+# Artifact registry: name -> (fn, input specs, output dims-for-manifest).
+def registry():
+    entries = {}
+
+    def add(name, fn, in_specs, out_dims):
+        entries[name] = (fn, in_specs, out_dims)
+
+    for b, f in [(128, 1024), (64, 64), (256, 2048)]:
+        add(
+            f"logreg_loss_grad_b{b}_f{f}",
+            model.logreg_loss_grad,
+            [_spec(b, f), _spec(b), _spec(f)],
+            [(), (f,)],
+        )
+        add(
+            f"sgd_step_b{b}_f{f}",
+            model.sgd_step,
+            [_spec(b, f), _spec(b), _spec(f), _spec()],
+            [(), (f,)],
+        )
+    for n, k, d in [(512, 32, 64), (256, 16, 16)]:
+        add(
+            f"pdist_n{n}_k{k}_d{d}",
+            model.pairwise_dist,
+            [_spec(n, d), _spec(k, d)],
+            [(n, k)],
+        )
+    return entries
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--only", default=None, help="lower a single entry")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest_lines = []
+    for name, (fn, in_specs, out_dims) in sorted(registry().items()):
+        if args.only and name != args.only:
+            continue
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        manifest_lines.append(f"[{name}]")
+        manifest_lines.append(f"file = {fname}")
+        manifest_lines.append(
+            "inputs = " + ";".join(_shape_str(s.shape) for s in in_specs)
+        )
+        manifest_lines.append(
+            "outputs = " + ";".join(_shape_str(d) for d in out_dims)
+        )
+        manifest_lines.append("")
+        print(f"lowered {name}: {len(text)} chars")
+
+    if not args.only:
+        with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+            f.write("\n".join(manifest_lines))
+        print(f"wrote manifest with {len(registry())} entries")
+
+
+if __name__ == "__main__":
+    main()

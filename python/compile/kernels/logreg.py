@@ -1,0 +1,126 @@
+"""L1 Pallas kernels for the logistic-regression hot spot.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper tiles the
+working set to per-chiplet 32 MB L3 slices and co-locates compute
+(Algorithm 2). On TPU the same insight becomes VMEM-blocked matmuls: the
+sample matrix is split into (BM × BK) blocks that fit the VMEM budget, the
+grid walks HBM block-by-block (the BlockSpec index_map is the rank→tile
+map), and partial results accumulate in the output block — compute next to
+the tile, exactly the chiplet story.
+
+Kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so interpret mode lowers to plain HLO (see
+/opt/xla-example/README.md). Block shapes stay multiples of (8, 128) so
+the same kernels compile for a real TPU MXU unchanged.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VMEM budget heuristic: a (BM, BK) f32 block + vector operands should
+# stay well under ~16 MiB of VMEM. 256×512×4 B = 512 KiB per block.
+DEFAULT_BM = 256
+DEFAULT_BK = 512
+
+
+def _pick_block(dim, pref, floor):
+    """Largest divisor of `dim` that is <= pref, >= floor if possible."""
+    if dim <= pref:
+        return dim
+    for cand in range(pref, floor - 1, -1):
+        if dim % cand == 0:
+            return cand
+    return dim  # fall back to a single block
+
+
+def _matvec_kernel(x_ref, w_ref, o_ref):
+    """One grid step: o[i-block] += X[i-block, k-block] @ w[k-block]."""
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # (BM, BK) @ (BK,) accumulated in f32.
+    o_ref[...] += x_ref[...] @ w_ref[...]
+
+
+def matvec(x, w, bm=None, bk=None, interpret=True):
+    """z = X @ w with X: (B, F) f32, w: (F,) f32, VMEM-tiled."""
+    b, f = x.shape
+    bm = bm or _pick_block(b, DEFAULT_BM, 8)
+    bk = bk or _pick_block(f, DEFAULT_BK, 128)
+    grid = (pl.cdiv(b, bm), pl.cdiv(f, bk))
+    return pl.pallas_call(
+        _matvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, k: (i, k)),
+            pl.BlockSpec((bk,), lambda i, k: (k,)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i, k: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=interpret,
+    )(x, w)
+
+
+def _matvec_t_kernel(x_ref, e_ref, o_ref):
+    """One grid step: g[k-block] += X[i-block, k-block]^T @ e[i-block]."""
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += x_ref[...].T @ e_ref[...]
+
+
+def matvec_t(x, e, bm=None, bk=None, interpret=True):
+    """g = X^T @ e with X: (B, F), e: (B,), VMEM-tiled.
+
+    The accumulation dimension (samples) is the *inner* grid axis so the
+    output block stays resident while partials accumulate — the
+    double-buffering-friendly schedule.
+    """
+    b, f = x.shape
+    bm = bm or _pick_block(b, DEFAULT_BM, 8)
+    bk = bk or _pick_block(f, DEFAULT_BK, 128)
+    grid = (pl.cdiv(f, bk), pl.cdiv(b, bm))
+    return pl.pallas_call(
+        _matvec_t_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda k, i: (i, k)),
+            pl.BlockSpec((bm,), lambda k, i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bk,), lambda k, i: (k,)),
+        out_shape=jax.ShapeDtypeStruct((f,), jnp.float32),
+        interpret=interpret,
+    )(x, e)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def logreg_loss_grad(x, y, w, interpret=True):
+    """Minibatch logistic loss + gradient, hot paths in Pallas.
+
+    Semantics match ``ref.logreg_loss_grad_ref`` and the rust RustGrad
+    engine bit-for-bit-ish (f32 accumulation order differs).
+    """
+    b = x.shape[0]
+    z = matvec(x, w, interpret=interpret)
+    p = 1.0 / (1.0 + jnp.exp(-z))
+    pc = jnp.clip(p, 1e-7, 1.0 - 1e-7)
+    loss = -jnp.mean(y * jnp.log(pc) + (1.0 - y) * jnp.log(1.0 - pc))
+    err = p - y
+    grad = matvec_t(x, err, interpret=interpret) / b
+    return loss, grad
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sgd_step(x, y, w, lr, interpret=True):
+    """One fused SGD step: (loss, w_new)."""
+    loss, grad = logreg_loss_grad(x, y, w, interpret=interpret)
+    return loss, w - lr * grad

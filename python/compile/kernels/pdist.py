@@ -1,0 +1,62 @@
+"""L1 Pallas kernel: pairwise squared distances (StreamCluster hot spot).
+
+D(n, k) = |P_n|^2 + |C_k|^2 - 2 P_n · C_k — expressed as a blocked matmul
+so the inner product runs on the MXU. The point matrix is tiled along N
+(the streaming axis — one batch slice per grid step, the VMEM analog of
+ARCAS streaming a batch slice through a chiplet's L3); the center matrix
+is small and stays resident across grid steps.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BN = 256
+
+
+def _pdist_kernel(p_ref, c_ref, o_ref):
+    p = p_ref[...]  # (BN, D)
+    c = c_ref[...]  # (K, D)
+    pn = jnp.sum(p * p, axis=1, keepdims=True)  # (BN, 1)
+    cn = jnp.sum(c * c, axis=1, keepdims=True).T  # (1, K)
+    o_ref[...] = pn + cn - 2.0 * (p @ c.T)
+
+
+def _pick_block(dim, pref, floor):
+    if dim <= pref:
+        return dim
+    for cand in range(pref, floor - 1, -1):
+        if dim % cand == 0:
+            return cand
+    return dim
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pdist(p, c, interpret=True):
+    """Squared distances, P: (N, D), C: (K, D) -> (N, K)."""
+    n, d = p.shape
+    k = c.shape[0]
+    bn = _pick_block(n, DEFAULT_BN, 8)
+    return pl.pallas_call(
+        _pdist_kernel,
+        grid=(pl.cdiv(n, bn),),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k), jnp.float32),
+        interpret=interpret,
+    )(p, c)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def assign_points(p, c, interpret=True):
+    """StreamCluster assignment step: nearest-center index + cost.
+
+    Returns (assignment (N,) int32, min squared distance (N,) f32).
+    """
+    d = pdist(p, c, interpret=interpret)
+    return jnp.argmin(d, axis=1).astype(jnp.int32), jnp.min(d, axis=1)

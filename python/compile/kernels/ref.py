@@ -1,0 +1,45 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the pytest suite (and, transitively, the rust
+`RustGrad` engine) is validated against. Everything is plain jax.numpy —
+no pallas, no custom calls.
+"""
+
+import jax.numpy as jnp
+
+
+def matvec_ref(x, w):
+    """z = X @ w for X: (B, F), w: (F,)."""
+    return x @ w
+
+
+def matvec_t_ref(x, e):
+    """g = X^T @ e for X: (B, F), e: (B,)."""
+    return x.T @ e
+
+
+def logreg_loss_grad_ref(x, y, w):
+    """Minibatch logistic loss + gradient.
+
+    Matches rust `RustGrad::loss_grad`: mean BCE loss, gradient of the
+    mean loss w.r.t. w.
+    """
+    z = x @ w
+    p = jnp.clip(1.0 / (1.0 + jnp.exp(-z)), 1e-7, 1.0 - 1e-7)
+    loss = -jnp.mean(y * jnp.log(p) + (1.0 - y) * jnp.log(1.0 - p))
+    err = (1.0 / (1.0 + jnp.exp(-z))) - y
+    grad = x.T @ err / x.shape[0]
+    return loss, grad
+
+
+def sgd_step_ref(x, y, w, lr):
+    """One SGD step: returns (loss, w - lr * grad)."""
+    loss, grad = logreg_loss_grad_ref(x, y, w)
+    return loss, w - lr * grad
+
+
+def pdist_ref(p, c):
+    """Squared euclidean distances, P: (N, D), C: (K, D) -> (N, K)."""
+    pn = jnp.sum(p * p, axis=1, keepdims=True)  # (N, 1)
+    cn = jnp.sum(c * c, axis=1, keepdims=True).T  # (1, K)
+    return pn + cn - 2.0 * (p @ c.T)

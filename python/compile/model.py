@@ -1,0 +1,44 @@
+"""L2: the JAX compute graphs ARCAS executes through PJRT.
+
+Each function here is a complete jax program calling the L1 Pallas
+kernels; `aot.py` lowers them once to HLO text for the rust runtime.
+Python never runs on the request path — these definitions exist only at
+build time.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels import logreg, pdist
+
+
+def sgd_step(x, y, w, lr):
+    """One SGD step over a fixed-size minibatch.
+
+    Inputs:  x (B, F) f32, y (B,) f32, w (F,) f32, lr () f32.
+    Outputs: (loss () f32, w_new (F,) f32).
+    """
+    return logreg.sgd_step(x, y, w, lr)
+
+
+def logreg_loss_grad(x, y, w):
+    """Loss + gradient without the update (Fig. 10's two measurements).
+
+    Outputs: (loss () f32, grad (F,) f32).
+    """
+    return logreg.logreg_loss_grad(x, y, w)
+
+
+def logreg_loss(x, y, w):
+    """Forward-only loss (Fig. 10a)."""
+    loss, _ = logreg.logreg_loss_grad(x, y, w)
+    return (loss,)
+
+
+def pairwise_assign(p, c):
+    """StreamCluster assignment: (assignment (N,) i32, cost (N,) f32)."""
+    return pdist.assign_points(p, c)
+
+
+def pairwise_dist(p, c):
+    """Raw squared-distance matrix (N, K)."""
+    return (pdist.pdist(p, c),)

@@ -1,0 +1,187 @@
+"""Kernel-vs-reference correctness: the CORE L1 signal.
+
+Pallas kernels (interpret=True) must match the pure-jnp oracles across
+shapes and values — hypothesis sweeps shapes, fixed tests pin the AOT
+shapes used by the rust runtime.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import logreg, pdist, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+
+
+# --------------------------------------------------------------------
+# matvec kernels
+# --------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.sampled_from([8, 16, 64, 128, 256]),
+    f=st.sampled_from([128, 256, 512, 1024]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matvec_matches_ref(b, f, seed):
+    rng = np.random.default_rng(seed)
+    x, w = rand(rng, b, f), rand(rng, f)
+    got = logreg.matvec(x, w)
+    want = ref.matvec_ref(x, w)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.sampled_from([8, 16, 64, 128, 256]),
+    f=st.sampled_from([128, 256, 512, 1024]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matvec_t_matches_ref(b, f, seed):
+    rng = np.random.default_rng(seed)
+    x, e = rand(rng, b, f), rand(rng, b)
+    got = logreg.matvec_t(x, e)
+    want = ref.matvec_t_ref(x, e)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_matvec_non_divisible_blocks():
+    # Odd sizes exercise the block-picking fallback paths.
+    rng = np.random.default_rng(0)
+    for b, f in [(7, 130), (33, 257), (1, 128), (300, 1000)]:
+        x, w = rand(rng, b, f), rand(rng, f)
+        np.testing.assert_allclose(
+            logreg.matvec(x, w), ref.matvec_ref(x, w), rtol=3e-4, atol=3e-4
+        )
+
+
+# --------------------------------------------------------------------
+# logistic regression loss/grad/step
+# --------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.sampled_from([8, 32, 64, 128]),
+    f=st.sampled_from([16, 64, 256, 1024]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_loss_grad_matches_ref(b, f, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, b, f) / np.sqrt(f)
+    y = jnp.asarray((rng.random(b) > 0.5).astype(np.float32))
+    w = rand(rng, f)
+    loss, grad = logreg.logreg_loss_grad(x, y, w)
+    loss_r, grad_r = ref.logreg_loss_grad_ref(x, y, w)
+    np.testing.assert_allclose(loss, loss_r, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(grad, grad_r, rtol=2e-4, atol=1e-5)
+
+
+def test_gradient_against_jax_autodiff():
+    # The hand-derived gradient must equal jax.grad of the loss.
+    rng = np.random.default_rng(7)
+    b, f = 32, 64
+    x = rand(rng, b, f) / 8.0
+    y = jnp.asarray((rng.random(b) > 0.5).astype(np.float32))
+    w = rand(rng, f)
+
+    def pure_loss(w):
+        return ref.logreg_loss_grad_ref(x, y, w)[0]
+
+    auto = jax.grad(pure_loss)(w)
+    _, ours = logreg.logreg_loss_grad(x, y, w)
+    np.testing.assert_allclose(ours, auto, rtol=5e-4, atol=1e-5)
+
+
+def test_sgd_step_reduces_loss():
+    rng = np.random.default_rng(3)
+    b, f = 128, 256
+    w_true = rand(rng, f)
+    x = rand(rng, b, f) / np.sqrt(f)
+    y = (ref.matvec_ref(x, w_true) > 0).astype(jnp.float32)
+    w = jnp.zeros(f)
+    loss0, w = logreg.sgd_step(x, y, w, 5.0)
+    loss1, w = logreg.sgd_step(x, y, w, 5.0)
+    loss2, _ = logreg.sgd_step(x, y, w, 5.0)
+    assert loss1 < loss0
+    assert loss2 < loss1
+
+
+def test_aot_shapes_exactly():
+    # Pin the shapes aot.py lowers for the rust runtime.
+    rng = np.random.default_rng(11)
+    for b, f in [(128, 1024), (64, 64), (256, 2048)]:
+        x = rand(rng, b, f) / np.sqrt(f)
+        y = jnp.asarray((rng.random(b) > 0.5).astype(np.float32))
+        w = rand(rng, f)
+        loss, grad = logreg.logreg_loss_grad(x, y, w)
+        loss_r, grad_r = ref.logreg_loss_grad_ref(x, y, w)
+        np.testing.assert_allclose(loss, loss_r, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(grad, grad_r, rtol=3e-4, atol=1e-5)
+
+
+# --------------------------------------------------------------------
+# pairwise distance kernel
+# --------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([8, 64, 256, 512]),
+    k=st.sampled_from([1, 4, 16, 32]),
+    d=st.sampled_from([2, 16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pdist_matches_ref(n, k, d, seed):
+    rng = np.random.default_rng(seed)
+    p, c = rand(rng, n, d), rand(rng, k, d)
+    got = pdist.pdist(p, c)
+    want = ref.pdist_ref(p, c)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_pdist_is_nonnegative_and_zero_diagonal():
+    rng = np.random.default_rng(1)
+    p = rand(rng, 16, 8)
+    d = np.asarray(pdist.pdist(p, p))
+    assert (d > -1e-4).all()
+    np.testing.assert_allclose(np.diag(d), 0.0, atol=1e-4)
+
+
+def test_assign_points_picks_nearest():
+    p = jnp.asarray([[0.0, 0.0], [10.0, 10.0], [0.1, 0.0]], dtype=jnp.float32)
+    c = jnp.asarray([[0.0, 0.0], [10.0, 10.0]], dtype=jnp.float32)
+    a, cost = pdist.assign_points(p, c)
+    assert list(np.asarray(a)) == [0, 1, 0]
+    np.testing.assert_allclose(cost[0], 0.0, atol=1e-6)
+
+
+# --------------------------------------------------------------------
+# AOT lowering produces loadable HLO text
+# --------------------------------------------------------------------
+
+def test_lowering_emits_hlo_text(tmp_path):
+    import jax as _jax
+    from compile import aot, model
+
+    lowered = _jax.jit(model.pairwise_dist).lower(
+        _jax.ShapeDtypeStruct((256, 16), jnp.float32),
+        _jax.ShapeDtypeStruct((16, 16), jnp.float32),
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f32[256,16]" in text
+
+
+def test_registry_covers_required_entries():
+    from compile import aot
+
+    names = set(aot.registry().keys())
+    assert "logreg_loss_grad_b128_f1024" in names
+    assert "sgd_step_b128_f1024" in names
+    assert "pdist_n512_k32_d64" in names

@@ -1,0 +1,108 @@
+//! Ablation: how much is chiplet-awareness worth on *different* machines?
+//!
+//! The paper's closing claim is that data-intensive systems must move
+//! beyond NUMA-awareness *because of* chiplet partitioning. The clean
+//! ablation: run the same workload suite under ARCAS vs the best
+//! NUMA-aware baseline on
+//!   - milan_2s      (the testbed: 2 x 8 chiplets),
+//!   - genoa_1s      (more chiplets per socket: 12),
+//!   - monolithic_64 (one unified LLC — chiplet-awareness should buy ~0).
+//!
+//! Expected shape: ARCAS's advantage grows with chiplet count and
+//! vanishes on the monolithic die.
+
+use std::sync::Arc;
+
+use arcas::harness;
+use arcas::topology::Topology;
+use arcas::util::table::Table;
+use arcas::workloads::graph::{self, kronecker::kronecker};
+use arcas::workloads::streamcluster::{generate_points, run_streamcluster, ScConfig};
+
+fn main() {
+    let args = harness::bench_cli("ablation_topology", "chiplet-awareness vs machine").parse();
+    harness::print_header(
+        "Ablation: ARCAS advantage across machine generations",
+        &args,
+        &harness::bench_topology(&args),
+    );
+    let cache_scale = args.f64("cache-scale");
+    let scale = ((16_777_216.0 * args.f64("scale")) as u64).max(1024).ilog2();
+
+    let mut t = Table::new(
+        "ARCAS speedup over NUMA-aware baseline, by machine",
+        &["machine", "chiplets", "BFS vs RING", "SSSP vs RING", "StreamCluster vs Shoal"],
+    );
+    for preset in ["milan_2s", "genoa_1s", "monolithic_64"] {
+        let topo = Topology::preset(preset).unwrap().scale_caches(cache_scale);
+        let cores = 32.min(topo.num_cores());
+        let g = Arc::new(kronecker(scale, 16, args.u64("seed")));
+        let src = g.max_degree_vertex();
+
+        let bfs_ring = graph::run_bfs(&topo, harness::baseline("ring", &topo), cores, g.clone(), src)
+            .0
+            .report
+            .makespan_ns;
+        let bfs_arcas = graph::run_bfs(&topo, harness::arcas(&topo, &args), cores, g.clone(), src)
+            .0
+            .report
+            .makespan_ns;
+        let sssp_ring =
+            graph::run_sssp(&topo, harness::baseline("ring", &topo), cores, g.clone(), src)
+                .0
+                .report
+                .makespan_ns;
+        let sssp_arcas = graph::run_sssp(&topo, harness::arcas(&topo, &args), cores, g.clone(), src)
+            .0
+            .report
+            .makespan_ns;
+
+        // StreamCluster at 16 workers, batch ~5 chiplets' L3 (on the
+        // monolithic machine that is just a fraction of the one LLC).
+        let dims = 64usize;
+        let batch =
+            ((5 * topo.total_l3() / topo.num_chiplets() as u64) as usize / (dims * 4)).max(1024);
+        let cfg = ScConfig {
+            n_points: batch * 2,
+            dims,
+            batch_size: batch,
+            k_min: 10,
+            k_max: 20,
+            max_centers: 5_000,
+            local_iters: 3,
+            seed: 7,
+        };
+        let pts = Arc::new(generate_points(&cfg));
+        let sc_shoal = run_streamcluster(
+            &topo,
+            harness::baseline("shoal", &topo),
+            16.min(topo.num_cores()),
+            &cfg,
+            pts.clone(),
+        )
+        .report
+        .makespan_ns;
+        let sc_arcas = run_streamcluster(
+            &topo,
+            harness::arcas(&topo, &args),
+            16.min(topo.num_cores()),
+            &cfg,
+            pts,
+        )
+        .report
+        .makespan_ns;
+
+        t.row(vec![
+            preset.to_string(),
+            topo.num_chiplets().to_string(),
+            format!("{:.2}x", bfs_ring as f64 / bfs_arcas as f64),
+            format!("{:.2}x", sssp_ring as f64 / sssp_arcas as f64),
+            format!("{:.2}x", sc_shoal as f64 / sc_arcas as f64),
+        ]);
+    }
+    t.emit("ablation_topology");
+    println!(
+        "expected shape: speedups > 1 on chiplet machines, ~1.0 on the monolithic LLC\n\
+         (chiplet-awareness is free when there is nothing to be aware of)"
+    );
+}

@@ -1,0 +1,109 @@
+//! Fig. 1 reproduction: headline ARCAS speedups over the NUMA-aware
+//! baselines across the benchmark suite (the paper's opening bar chart).
+
+use std::sync::Arc;
+
+use arcas::harness;
+use arcas::util::table::Table;
+use arcas::workloads::graph::{self, kronecker::kronecker};
+use arcas::workloads::olap::{all_queries, run_query, Db};
+use arcas::workloads::sgd::{generate_data, run_sgd, DwStrategy, RustGrad, SgdConfig, SgdMode};
+use arcas::workloads::streamcluster::{generate_points, run_streamcluster, ScConfig};
+
+fn main() {
+    let args = harness::bench_cli("fig01_summary", "headline speedups").parse();
+    let topo = harness::bench_topology(&args);
+    harness::print_header("Fig 1: ARCAS speedups vs NUMA-aware systems", &args, &topo);
+    let cores = 32.min(topo.num_cores());
+    let seed = args.u64("seed");
+
+    let mut t = Table::new(
+        "Fig 1: ARCAS speedup over NUMA-aware baseline",
+        &["benchmark", "baseline", "speedup"],
+    );
+    let mut speedups = Vec::new();
+    let mut push = |t: &mut Table, name: &str, base: &str, s: f64| {
+        t.row(vec![name.to_string(), base.to_string(), format!("{s:.2}x")]);
+        speedups.push(s);
+    };
+
+    // Graph suite vs RING.
+    let scale = ((16_777_216.0 * args.f64("scale")) as u64).max(1024).ilog2();
+    let g = Arc::new(kronecker(scale, 16, seed));
+    let src = g.max_degree_vertex();
+    let bfs_r = graph::run_bfs(&topo, harness::baseline("ring", &topo), cores, g.clone(), src)
+        .0
+        .report
+        .makespan_ns;
+    let bfs_a = graph::run_bfs(&topo, harness::arcas(&topo, &args), cores, g.clone(), src)
+        .0
+        .report
+        .makespan_ns;
+    push(&mut t, "BFS", "RING", bfs_r as f64 / bfs_a as f64);
+    let sssp_r = graph::run_sssp(&topo, harness::baseline("ring", &topo), cores, g.clone(), src)
+        .0
+        .report
+        .makespan_ns;
+    let sssp_a = graph::run_sssp(&topo, harness::arcas(&topo, &args), cores, g.clone(), src)
+        .0
+        .report
+        .makespan_ns;
+    push(&mut t, "SSSP", "RING", sssp_r as f64 / sssp_a as f64);
+
+    // StreamCluster vs Shoal at 16 cores (the paper's biggest-gap point);
+    // batch sized to ~5 chiplets' L3 as in fig08.
+    let dims = 64usize;
+    let batch = ((5 * topo.l3_per_chiplet) as usize / (dims * 4)).max(1024);
+    let sc = ScConfig {
+        n_points: batch * 2,
+        dims,
+        batch_size: batch,
+        k_min: 10,
+        k_max: 20,
+        max_centers: 5_000,
+        local_iters: 3,
+        seed: 7,
+    };
+    let pts = Arc::new(generate_points(&sc));
+    let sc_s = run_streamcluster(&topo, harness::baseline("shoal", &topo), 16, &sc, pts.clone())
+        .report
+        .makespan_ns;
+    let sc_a = run_streamcluster(&topo, harness::arcas(&topo, &args), 16, &sc, pts)
+        .report
+        .makespan_ns;
+    push(&mut t, "StreamCluster", "Shoal", sc_s as f64 / sc_a as f64);
+
+    // SGD vs DimmWitted-NUMA-node.
+    let cfg = SgdConfig {
+        n_samples: ((10_000.0 * args.f64("scale") * 10.0) as usize).max(512),
+        n_features: 1024,
+        minibatch: 128,
+        epochs: 2,
+        lr: 0.1,
+        seed,
+    };
+    let data = generate_data(&cfg);
+    let dw = run_sgd(&topo, harness::baseline("ring", &topo), cores, &cfg, &data,
+                     DwStrategy::PerNode, SgdMode::Grad, Arc::new(RustGrad));
+    let dwa = run_sgd(&topo, harness::arcas(&topo, &args), cores, &cfg, &data,
+                      DwStrategy::PerCore, SgdMode::Grad, Arc::new(RustGrad));
+    push(&mut t, "SGD", "DimmWitted", dwa.gbps() / dw.gbps());
+
+    // TPC-H Q5 (join-heavy) vs chiplet-agnostic default.
+    let db = Arc::new(Db::generate(args.f64("scale"), seed));
+    let q5 = &all_queries()[4];
+    let q_base = run_query(&topo, harness::baseline("ring", &topo), 8, db.clone(), q5)
+        .report
+        .makespan_ns;
+    let q_arc = run_query(&topo, harness::arcas(&topo, &args), 8, db, q5)
+        .report
+        .makespan_ns;
+    push(&mut t, "TPC-H Q5", "default", q_base as f64 / q_arc as f64);
+
+    t.emit("fig01_summary");
+    println!(
+        "geomean speedup {:.2}x; max {:.2}x (paper headline: up to 3.85x in graph processing)",
+        arcas::util::stats::geomean(&speedups),
+        speedups.iter().cloned().fold(f64::MIN, f64::max)
+    );
+}

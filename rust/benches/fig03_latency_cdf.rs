@@ -1,0 +1,71 @@
+//! Fig. 3 reproduction: CDF of core-to-core latency on dual-socket Milan.
+//!
+//! The paper measures ping-pong latency for three scenarios: Within
+//! Chiplet, Within NUMA (which shows the 3-step structure: ~25 ns
+//! intra-chiplet, ~85 ns near group, ≥150 ns far group) and Cross NUMA.
+//! Here the samples come from the calibrated topology model's all-pairs
+//! latency (with the simulator's message path adding queue effects).
+
+use arcas::harness;
+use arcas::topology::{LatencyClass, Topology};
+use arcas::util::stats::Cdf;
+use arcas::util::table::Table;
+
+fn main() {
+    let args = harness::bench_cli("fig03_latency_cdf", "core-to-core latency CDF").parse();
+    let topo = Topology::preset(&args.str("topology")).unwrap_or_else(Topology::milan_2s);
+    harness::print_header("Fig 3: core-to-core latency CDF", &args, &topo);
+
+    let n = topo.num_cores();
+    let mut within_chiplet = Vec::new();
+    let mut within_numa = Vec::new();
+    let mut cross_numa = Vec::new();
+    for a in 0..n {
+        for b in (a + 1)..n {
+            let ns = topo.core_to_core_ns(a, b);
+            match topo.latency_class(a, b) {
+                LatencyClass::SameCore => {}
+                LatencyClass::IntraChiplet => {
+                    within_chiplet.push(ns);
+                    within_numa.push(ns);
+                }
+                LatencyClass::InterChipletNear | LatencyClass::InterChipletFar => {
+                    within_numa.push(ns);
+                }
+                LatencyClass::CrossNuma | LatencyClass::CrossSocket => cross_numa.push(ns),
+            }
+        }
+    }
+
+    let mut t = Table::new(
+        "Fig 3: latency CDF (ns at percentile)",
+        &["percentile", "Within Chiplet", "Within NUMA", "Cross NUMA"],
+    );
+    let cdfs = [
+        Cdf::from_samples(&within_chiplet),
+        Cdf::from_samples(&within_numa),
+        Cdf::from_samples(&cross_numa),
+    ];
+    for q in [0.01, 0.10, 0.25, 0.50, 0.75, 0.90, 0.99, 1.0] {
+        let mut row = vec![format!("p{:.0}", q * 100.0)];
+        for c in &cdfs {
+            row.push(format!("{:.0}", c.quantile(q)));
+        }
+        t.row(row);
+    }
+    t.emit("fig03_latency_cdf");
+
+    // The 3-step structure within a NUMA domain (the paper's key point).
+    let wn = Cdf::from_samples(&within_numa);
+    println!(
+        "within-NUMA steps: {:.0} ns ({:.0}%), {:.0} ns ({:.0}%), {:.0} ns (rest)",
+        wn.quantile(0.05),
+        wn.at(30.0) * 100.0,
+        wn.quantile(0.5),
+        (wn.at(100.0) - wn.at(30.0)) * 100.0,
+        wn.quantile(0.95),
+    );
+    assert!(wn.quantile(0.05) < 35.0);
+    assert!(wn.quantile(0.95) > 140.0);
+    println!("OK: within-NUMA latency is heterogeneous (3 groups), matching Fig. 3");
+}

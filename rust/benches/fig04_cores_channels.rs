@@ -1,0 +1,34 @@
+//! Fig. 4 reproduction: server CPU cores vs memory channels, 2010–2026.
+//!
+//! Curated public vendor data (the figure's point is the widening
+//! cores-per-channel gap that motivates cache-aware scheduling).
+
+use arcas::harness;
+use arcas::util::table::Table;
+
+fn main() {
+    let mut t = Table::new(
+        "Fig 4: cores vs memory channels over the years",
+        &["year", "cpu", "cores", "mem channels", "cores/channel"],
+    );
+    let rows = harness::cores_vs_channels();
+    for (year, cpu, cores, ch) in &rows {
+        t.row(vec![
+            year.to_string(),
+            cpu.to_string(),
+            cores.to_string(),
+            ch.to_string(),
+            format!("{:.1}", *cores as f64 / *ch as f64),
+        ]);
+    }
+    t.emit("fig04_cores_channels");
+
+    let first = rows[0].2 as f64 / rows[0].3 as f64;
+    let last = rows.last().unwrap().2 as f64 / rows.last().unwrap().3 as f64;
+    println!(
+        "cores-per-channel grew {:.1}x ({}->{}): the bandwidth wall the paper motivates",
+        last / first,
+        rows[0].0,
+        rows.last().unwrap().0
+    );
+}

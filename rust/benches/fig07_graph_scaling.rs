@@ -1,0 +1,90 @@
+//! Fig. 7 reproduction: graph processing + RandomAccess scalability,
+//! ARCAS vs RING, cores 1..128.
+//!
+//! Six panels: BFS, PR, CC, SSSP, GUPS, Graph500. The paper reports
+//! near-linear ARCAS scaling with the gap to RING widening at high core
+//! counts (headline speedups 1.8x / 1.9x / 2.3x on BFS / CC / SSSP).
+
+use std::sync::Arc;
+
+use arcas::harness;
+use arcas::util::table::SeriesSet;
+use arcas::workloads::graph::{self, kronecker::kronecker};
+
+fn main() {
+    let args = harness::bench_cli("fig07_graph_scaling", "graph scalability vs RING").parse();
+    let topo = harness::bench_topology(&args);
+    harness::print_header("Fig 7: graph + GUPS scalability", &args, &topo);
+
+    // Paper: 2^24 vertices, ef 16 (~4 GB). Scaled: 2^24 * scale.
+    let scale_f = args.f64("scale");
+    let scale = ((16_777_216.0 * scale_f) as u64).max(1024).ilog2();
+    let seed = args.u64("seed");
+    let g = Arc::new(kronecker(scale, 16, seed));
+    println!(
+        "# graph: 2^{scale} vertices, {} edges, {}",
+        g.num_edges(),
+        arcas::util::fmt_bytes(g.bytes())
+    );
+    let cores = harness::core_sweep(&args, &[1, 2, 4, 8, 16, 32, 64, 128]);
+    let src = g.max_degree_vertex();
+    let src2 = g.neighbors(src).first().copied().unwrap_or(src);
+
+    let algos: Vec<(&str, Box<dyn Fn(&arcas::topology::Topology, Box<dyn arcas::policy::Policy>, usize) -> f64>)> = vec![
+        ("BFS", Box::new({
+            let g = g.clone();
+            move |t, p, c| graph::run_bfs(t, p, c, g.clone(), src).0.teps()
+        })),
+        ("PR", Box::new({
+            let g = g.clone();
+            move |t, p, c| graph::run_pagerank(t, p, c, g.clone(), 5).0.teps()
+        })),
+        ("CC", Box::new({
+            let g = g.clone();
+            move |t, p, c| graph::run_cc(t, p, c, g.clone()).0.teps()
+        })),
+        ("SSSP", Box::new({
+            let g = g.clone();
+            move |t, p, c| graph::run_sssp(t, p, c, g.clone(), src).0.teps()
+        })),
+        ("GUPS", Box::new({
+            let words = (g.num_vertices() * 4) as usize;
+            move |t, p, c| {
+                graph::run_gups(t, p, c, words, 50_000, 7).0.teps()
+            }
+        })),
+        ("Graph500", Box::new({
+            let g = g.clone();
+            move |t, p, c| {
+                // Graph500: BFS from a random non-isolated root, TEPS.
+                graph::run_bfs(t, p, c, g.clone(), src2).0.teps()
+            }
+        })),
+    ];
+
+    let mut headline = Vec::new();
+    for (name, run) in &algos {
+        let mut series = SeriesSet::new(
+            &format!("Fig 7 [{name}]: throughput (M items/s)"),
+            "cores",
+            &["ARCAS", "RING"],
+        );
+        let mut last_ratio = 1.0;
+        for &c in &cores {
+            if c > topo.num_cores() {
+                continue;
+            }
+            let a = run(&topo, harness::arcas(&topo, &args), c) / 1e6;
+            let r = run(&topo, harness::baseline("ring", &topo), c) / 1e6;
+            last_ratio = a / r.max(1e-12);
+            series.point(c as f64, vec![a, r]);
+        }
+        series.emit(&format!("fig07_{}", name.to_lowercase()));
+        println!("{name}: ARCAS/RING at max cores = {last_ratio:.2}x\n");
+        headline.push((name, last_ratio));
+    }
+    println!("== Fig 7 headline (paper: BFS 1.8x, CC 1.9x, SSSP 2.3x at 128 cores) ==");
+    for (name, r) in headline {
+        println!("  {name:<9} {r:.2}x");
+    }
+}

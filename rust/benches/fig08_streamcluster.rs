@@ -1,0 +1,88 @@
+//! Fig. 8 reproduction: StreamCluster speedup vs single core, ARCAS vs
+//! Shoal, 1..64 cores.
+//!
+//! Paper shape: ARCAS peaks ~21x around 24 cores, Shoal ~16x at 32; the
+//! biggest gap (~2x) is at 16 cores, where Shoal's sequential placement
+//! confines compute to 2 of 8 chiplets (2×32 MB of L3 for a ~512 MB
+//! dataset) while ARCAS spreads over all 8.
+
+use std::sync::Arc;
+
+use arcas::harness;
+use arcas::util::table::SeriesSet;
+use arcas::workloads::streamcluster::{generate_points, run_streamcluster, ScConfig};
+
+fn main() {
+    let args = harness::bench_cli("fig08_streamcluster", "StreamCluster vs Shoal").parse();
+    let topo = harness::bench_topology(&args);
+    harness::print_header("Fig 8: StreamCluster scalability", &args, &topo);
+
+    // Batch sized from the machine: ~5 chiplets' worth of L3, so the
+    // batch fits when spread across 8 chiplets but spills to DRAM on the
+    // 2 chiplets Shoal fills at 16 cores (the paper's 512 MB vs 2x32 MB).
+    let dims = 64usize;
+    let batch = ((5 * topo.l3_per_chiplet) as usize / (dims * 4)).max(1024);
+    let cfg = ScConfig {
+        n_points: batch * 2,
+        dims,
+        batch_size: batch,
+        k_min: 10,
+        k_max: 20,
+        max_centers: 5_000,
+        local_iters: 3,
+        seed: 7,
+    };
+    println!(
+        "# {} points x {} dims, batch {} ({} per batch)",
+        cfg.n_points,
+        cfg.dims,
+        cfg.batch_size,
+        arcas::util::fmt_bytes(cfg.batch_bytes())
+    );
+    let pts = Arc::new(generate_points(&cfg));
+    let cores = harness::core_sweep(&args, &[1, 2, 4, 8, 16, 24, 32, 40, 48, 64]);
+
+    // Single-core baseline (policy-independent).
+    let base = run_streamcluster(
+        &topo,
+        harness::baseline("local", &topo),
+        1,
+        &cfg,
+        pts.clone(),
+    )
+    .report
+    .makespan_ns as f64;
+
+    let mut series = SeriesSet::new(
+        "Fig 8: StreamCluster speedup over 1 core",
+        "cores",
+        &["ARCAS", "Shoal"],
+    );
+    let mut gap_at_16 = 0.0;
+    for &c in &cores {
+        if c > topo.num_cores() {
+            continue;
+        }
+        let a = base
+            / run_streamcluster(&topo, harness::arcas(&topo, &args), c, &cfg, pts.clone())
+                .report
+                .makespan_ns as f64;
+        let s = base
+            / run_streamcluster(
+                &topo,
+                harness::baseline("shoal", &topo),
+                c,
+                &cfg,
+                pts.clone(),
+            )
+            .report
+            .makespan_ns as f64;
+        if c == 16 {
+            gap_at_16 = a / s;
+        }
+        println!("cores {c:>3}: ARCAS {a:.2}x  Shoal {s:.2}x");
+        series.point(c as f64, vec![a, s]);
+    }
+    series.emit("fig08_streamcluster");
+    println!("gap at 16 cores: {gap_at_16:.2}x (paper: ~2x)");
+}

@@ -1,0 +1,76 @@
+//! Fig. 9 reproduction: ARCAS speedup over RING as the graph size grows
+//! (paper: 19 MB → 5,300 MB by raising the vertex count), at 32 and 64
+//! cores, across the six benchmarks.
+//!
+//! Paper shape: speedups are stable across dataset sizes (the working
+//! set, not total size, is what matters) and larger at 64 cores.
+
+use std::sync::Arc;
+
+use arcas::harness;
+use arcas::util::table::Table;
+use arcas::workloads::graph::{self, kronecker::kronecker};
+
+fn main() {
+    let args = harness::bench_cli("fig09_datasize", "speedup vs graph size").parse();
+    let topo = harness::bench_topology(&args);
+    harness::print_header("Fig 9: ARCAS/RING speedup vs graph size", &args, &topo);
+
+    // Paper scales 2^16..2^24; we sweep 4 sizes around the configured
+    // scale (each step quadruples the dataset).
+    let base_scale = ((16_777_216.0 * args.f64("scale")) as u64).max(512).ilog2();
+    let scales: Vec<u32> = if args.flag("quick") {
+        vec![base_scale.saturating_sub(2), base_scale]
+    } else {
+        vec![
+            base_scale.saturating_sub(3),
+            base_scale.saturating_sub(2),
+            base_scale.saturating_sub(1),
+            base_scale,
+        ]
+    };
+    let core_counts: Vec<usize> = [32usize, 64]
+        .iter()
+        .copied()
+        .filter(|&c| c <= topo.num_cores())
+        .collect();
+
+    for &cores in &core_counts {
+        let mut t = Table::new(
+            &format!("Fig 9 @{cores} cores: ARCAS speedup over RING"),
+            &["graph", "MB", "BFS", "PR", "CC", "SSSP", "GUPS", "Graph500"],
+        );
+        for &sc in &scales {
+            let g = Arc::new(kronecker(sc, 16, args.u64("seed")));
+            let src = g.max_degree_vertex();
+            let mb = g.bytes() as f64 / 1e6;
+            let speedup = |name: &str| -> f64 {
+                let run = |p: Box<dyn arcas::policy::Policy>| -> u64 {
+                    match name {
+                        "BFS" => graph::run_bfs(&topo, p, cores, g.clone(), src).0.report.makespan_ns,
+                        "PR" => graph::run_pagerank(&topo, p, cores, g.clone(), 5).0.report.makespan_ns,
+                        "CC" => graph::run_cc(&topo, p, cores, g.clone()).0.report.makespan_ns,
+                        "SSSP" => graph::run_sssp(&topo, p, cores, g.clone(), src).0.report.makespan_ns,
+                        "GUPS" => {
+                            graph::run_gups(&topo, p, cores, g.num_vertices() * 4, 20_000, 7)
+                                .0
+                                .report
+                                .makespan_ns
+                        }
+                        _ => graph::run_bfs(&topo, p, cores, g.clone(), src).0.report.makespan_ns,
+                    }
+                };
+                let ring = run(harness::baseline("ring", &topo));
+                let arcas = run(harness::arcas(&topo, &args));
+                ring as f64 / arcas as f64
+            };
+            let mut row = vec![format!("2^{sc}"), format!("{mb:.0}")];
+            for name in ["BFS", "PR", "CC", "SSSP", "GUPS", "Graph500"] {
+                row.push(format!("{:.2}", speedup(name)));
+            }
+            t.row(row);
+        }
+        t.emit(&format!("fig09_datasize_{cores}c"));
+    }
+    println!("paper shape: speedups stable across sizes; larger at 64 cores than 32");
+}

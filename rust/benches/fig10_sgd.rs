@@ -1,0 +1,119 @@
+//! Fig. 10 reproduction: SGD (logistic regression) throughput, 8–64
+//! cores, five systems:
+//!
+//!   DimmWitted+ARCAS, DimmWitted+ARCAS+std::async, DimmWitted-per-core,
+//!   DimmWitted-NUMA-node, DimmWitted-per-machine.
+//!
+//! Two panels: (a) loss computation, (b) gradient computation. Paper
+//! shape: ARCAS scales to ~165 GB/s (loss) / ~106 GB/s (grad); the best
+//! native strategy (NUMA-node) plateaus ~50 / ~40 GB/s; std::async is
+//! worse than NUMA-node.
+//!
+//! When `make artifacts` has run and the minibatch matches a compiled
+//! shape, the gradient math executes through PJRT (real XLA numerics).
+
+use std::sync::Arc;
+
+use arcas::harness;
+use arcas::runtime::{PjrtGrad, PjrtRuntime};
+use arcas::util::table::SeriesSet;
+use arcas::workloads::sgd::{
+    generate_data, run_sgd, DwStrategy, GradEngine, RustGrad, SgdConfig, SgdMode, SgdRun,
+};
+
+fn main() {
+    let args = harness::bench_cli("fig10_sgd", "SGD throughput, 5 systems").parse();
+    let topo = harness::bench_topology(&args);
+    harness::print_header("Fig 10: SGD throughput", &args, &topo);
+
+    // Paper: 10,000 samples x 8,192 features (~320 MB). Scaled; the
+    // feature dim is pinned to 1024 so the PJRT artifact applies.
+    let cfg = SgdConfig {
+        n_samples: ((10_000.0 * args.f64("scale") * 20.0) as usize).max(512),
+        n_features: 1024,
+        minibatch: 128,
+        epochs: 2,
+        lr: 0.1,
+        seed: args.u64("seed"),
+    };
+    println!(
+        "# {} x {} (data {})",
+        cfg.n_samples,
+        cfg.n_features,
+        arcas::util::fmt_bytes(cfg.data_bytes())
+    );
+    let data = generate_data(&cfg);
+
+    // PJRT engine if artifacts are available.
+    let engine: Arc<dyn GradEngine> =
+        match PjrtRuntime::load(&PjrtRuntime::default_dir())
+            .ok()
+            .and_then(|rt| PjrtGrad::new(rt, cfg.minibatch, cfg.n_features).ok())
+        {
+            Some(g) => {
+                println!("# gradient engine: PJRT (AOT JAX/Pallas artifact)");
+                Arc::new(g)
+            }
+            None => {
+                println!("# gradient engine: rust fallback (run `make artifacts` for PJRT)");
+                Arc::new(RustGrad)
+            }
+        };
+
+    let cores = harness::core_sweep(&args, &[8, 16, 32, 48, 64]);
+    let data = Arc::new(data);
+
+    // (name, policy, tasks-per-core factor, strategy)
+    let systems: Vec<(&str, &str, usize, DwStrategy)> = vec![
+        ("DW+ARCAS", "arcas", 1, DwStrategy::PerCore),
+        // Thread-per-shard explosion: ~20 shards per core (paper: 641
+        // threads on 32 cores).
+        ("DW+ARCAS+std::async", "os_async", 20, DwStrategy::PerCore),
+        ("DW-per-core", "shoal", 1, DwStrategy::PerCore),
+        ("DW-NUMA-node", "ring", 1, DwStrategy::PerNode),
+        ("DW-per-machine", "shoal", 1, DwStrategy::PerMachine),
+    ];
+    let run_one = |policy: &str, cores: usize, tasks: usize, strategy: DwStrategy, mode: SgdMode| -> SgdRun {
+        let p: Box<dyn arcas::policy::Policy> = match policy {
+            "arcas" => harness::arcas(&topo, &args),
+            // taskset-confined OS threads (the paper sweeps allotted cores).
+            "os_async" => Box::new(arcas::policy::OsAsyncPolicy::confined(cores)),
+            other => harness::baseline(other, &topo),
+        };
+        run_sgd(&topo, p, tasks, &cfg, &data, strategy, mode, engine.clone())
+    };
+
+    for (mode, label) in [(SgdMode::Loss, "a: logistic loss"), (SgdMode::Grad, "b: gradient")] {
+        let names: Vec<&str> = systems.iter().map(|(n, _, _, _)| *n).collect();
+        let mut series = SeriesSet::new(
+            &format!("Fig 10{label} throughput (GB/s)"),
+            "cores",
+            &names,
+        );
+        for &c in &cores {
+            if c > topo.num_cores() {
+                continue;
+            }
+            let mut ys = Vec::new();
+            for (_, policy, factor, strategy) in &systems {
+                let r = run_one(policy, c, c * factor, *strategy, mode);
+                ys.push(r.gbps());
+            }
+            println!(
+                "{label} cores {c:>3}: {}",
+                names
+                    .iter()
+                    .zip(&ys)
+                    .map(|(n, y)| format!("{n}={y:.1}"))
+                    .collect::<Vec<_>>()
+                    .join("  ")
+            );
+            series.point(c as f64, ys);
+        }
+        series.emit(&format!(
+            "fig10{}",
+            if mode == SgdMode::Loss { "a_loss" } else { "b_grad" }
+        ));
+    }
+    println!("paper shape: ARCAS scales with cores; native strategies plateau; std::async < NUMA-node");
+}

@@ -1,0 +1,73 @@
+//! Fig. 13 reproduction: OLTP commits/s under LocalCache vs
+//! DistributedCache scheduling (ERMIA-style engine), YCSB (a) and TPC-C
+//! (b), across core counts.
+//!
+//! Paper shape: a *null* result — the two policies are nearly identical
+//! at every core count, because OLTP is commit/synchronization-bound.
+
+use arcas::harness;
+use arcas::util::table::SeriesSet;
+use arcas::workloads::oltp::{run_oltp, OltpWorkload};
+
+fn main() {
+    let args = harness::bench_cli("fig13_oltp", "OLTP Local vs Distributed").parse();
+    let topo = harness::bench_topology(&args);
+    harness::print_header("Fig 13: OLTP commits/s", &args, &topo);
+
+    let txns: u64 = if args.flag("quick") { 5_000 } else { 20_000 };
+    let cores = harness::core_sweep(&args, &[4, 8, 16, 32, 64]);
+    let workloads = [
+        (
+            "a: YCSB",
+            OltpWorkload::ycsb_scaled(args.f64("scale")),
+            "fig13a_ycsb",
+        ),
+        (
+            "b: TPC-C",
+            OltpWorkload::tpcc_scaled(args.f64("scale") * 50.0),
+            "fig13b_tpcc",
+        ),
+    ];
+
+    for (label, wl, slug) in workloads {
+        let mut series = SeriesSet::new(
+            &format!("Fig 13{label}: commits/s"),
+            "cores",
+            &["LocalCache", "DistributedCache"],
+        );
+        let mut max_dev: f64 = 0.0;
+        for &c in &cores {
+            if c > topo.num_cores() {
+                continue;
+            }
+            let local = run_oltp(
+                &topo,
+                harness::baseline("local", &topo),
+                c,
+                &wl,
+                txns,
+                args.u64("seed"),
+            );
+            let dist = run_oltp(
+                &topo,
+                harness::baseline("distributed", &topo),
+                c,
+                &wl,
+                txns,
+                args.u64("seed"),
+            );
+            let (l, d) = (local.commits_per_sec(), dist.commits_per_sec());
+            max_dev = max_dev.max((l / d - 1.0).abs());
+            println!(
+                "{label} cores {c:>3}: Local {l:>12.0}  Distributed {d:>12.0}  ({:+.1}%)",
+                (l / d - 1.0) * 100.0
+            );
+            series.point(c as f64, vec![l, d]);
+        }
+        series.emit(slug);
+        println!(
+            "{label}: max policy deviation {:.1}% (paper: nearly identical)\n",
+            max_dev * 100.0
+        );
+    }
+}

@@ -1,0 +1,79 @@
+//! Runtime microbenchmarks (wall-clock, criterion-style): the §Perf
+//! numbers for the L3 hot paths.
+//!
+//!   - Chase-Lev deque push/pop/steal
+//!   - simulator dispatch rate (coroutine steps/s)
+//!   - cache-model access cost
+//!   - host executor job dispatch overhead
+//!   - Algorithm 2 placement-map computation
+
+use arcas::controller::placement_map;
+use arcas::deque::Deque;
+use arcas::mem::Placement;
+use arcas::policy::LocalCachePolicy;
+use arcas::sched::{HostExecutor, SimExecutor};
+use arcas::sim::Machine;
+use arcas::task::IterTask;
+use arcas::topology::Topology;
+use arcas::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::new();
+    let topo = Topology::milan_2s();
+
+    // --- deque ops.
+    let d = Deque::new();
+    b.bench("deque push+pop (owner)", || {
+        d.push(1);
+        d.pop()
+    });
+    for i in 0..1024 {
+        d.push(i);
+    }
+    b.bench("deque steal (uncontended)", || {
+        let s = d.steal();
+        if let arcas::deque::Steal::Success(v) = s {
+            d.push(v);
+        }
+        s
+    });
+
+    // --- cache model access.
+    let mut m = Machine::new(topo.clone());
+    let r = m.alloc("bench", 64 << 20, Placement::Interleave);
+    b.bench("cachesim access (rand 1k ops)", || {
+        m.access(0, arcas::cachesim::Access::rand_read(r, 1000, 64 << 20))
+    });
+
+    // --- simulator dispatch rate.
+    let res = b.bench("sim dispatch (1k coroutine steps)", || {
+        let machine = Machine::new(Topology::milan_1s());
+        let mut ex = SimExecutor::new(machine, Box::new(LocalCachePolicy));
+        ex.spawn_group(8, |_| {
+            Box::new(IterTask::new(125, |ctx, _| ctx.compute_ns(100)))
+        });
+        ex.run().dispatches
+    });
+    println!(
+        "  => {:.1} M simulated dispatches/s",
+        1000.0 / res.median_ns * 1e3
+    );
+
+    // --- Algorithm 2 placement map.
+    b.bench("placement_map (128 ranks)", || {
+        placement_map(&topo, 4, 128)
+    });
+
+    // --- host executor dispatch overhead.
+    let pool = HostExecutor::new(4, &Topology::milan_1s(), false);
+    let res = b.bench("host executor 1k no-op jobs", || {
+        for _ in 0..1000 {
+            pool.execute(|| {});
+        }
+        pool.wait_all();
+    });
+    println!(
+        "  => {:.0} ns/job dispatch overhead",
+        res.median_ns / 1000.0
+    );
+}

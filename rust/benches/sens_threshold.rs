@@ -1,0 +1,95 @@
+//! §4.6 sensitivity analysis reproduction: sweep RMT_CHIP_ACCESS_RATE and
+//! measure its impact (the paper selects 300 events per SCHEDULER_TIMER).
+//!
+//! Also sweeps the SCHEDULER_TIMER itself and the approach bias — the
+//! ablation DESIGN.md calls out for Algorithm 1's two knobs.
+
+use std::sync::Arc;
+
+use arcas::controller::Approach;
+use arcas::harness;
+use arcas::policy::ArcasPolicy;
+use arcas::util::table::Table;
+use arcas::workloads::graph::{self, kronecker::kronecker};
+
+fn main() {
+    let args = harness::bench_cli("sens_threshold", "RMT_CHIP_ACCESS_RATE sweep").parse();
+    let topo = harness::bench_topology(&args);
+    harness::print_header("§4.6 sensitivity: threshold + timer + approach", &args, &topo);
+    let cores = 32.min(topo.num_cores());
+    let scale = ((16_777_216.0 * args.f64("scale")) as u64).max(1024).ilog2();
+    let g = Arc::new(kronecker(scale, 16, args.u64("seed")));
+    let src = g.max_degree_vertex();
+    let timer = args.u64("timer-us") * 1_000;
+
+    // --- threshold sweep.
+    let mut t = Table::new(
+        "RMT_CHIP_ACCESS_RATE sweep (BFS + GUPS makespans, ms)",
+        &["threshold", "BFS ms", "GUPS ms", "final spread (BFS)"],
+    );
+    let mut best = (f64::INFINITY, 0u64);
+    for thr in [25u64, 50, 100, 200, 300, 500, 1000, 5000] {
+        let policy = || {
+            Box::new(
+                ArcasPolicy::new(&topo)
+                    .with_timer(timer)
+                    .with_threshold(thr as f64),
+            )
+        };
+        let bfs = graph::run_bfs(&topo, policy(), cores, g.clone(), src).0.report;
+        let gups =
+            graph::run_gups(&topo, policy(), cores, g.num_vertices() * 4, 30_000, 7).0.report;
+        let total = (bfs.makespan_ns + gups.makespan_ns) as f64 / 1e6;
+        if total < best.0 {
+            best = (total, thr);
+        }
+        t.row(vec![
+            thr.to_string(),
+            format!("{:.2}", bfs.makespan_ns as f64 / 1e6),
+            format!("{:.2}", gups.makespan_ns as f64 / 1e6),
+            bfs.spread_rate.to_string(),
+        ]);
+    }
+    t.emit("sens_threshold");
+    println!("best combined threshold: {} (paper selects 300)\n", best.1);
+
+    // --- timer sweep ablation.
+    let mut t = Table::new(
+        "SCHEDULER_TIMER sweep (BFS makespan, ms)",
+        &["timer_us", "BFS ms", "migrations"],
+    );
+    for timer_us in [10u64, 25, 50, 100, 500, 2000] {
+        let policy = Box::new(ArcasPolicy::new(&topo).with_timer(timer_us * 1000));
+        let r = graph::run_bfs(&topo, policy, cores, g.clone(), src).0.report;
+        t.row(vec![
+            timer_us.to_string(),
+            format!("{:.2}", r.makespan_ns as f64 / 1e6),
+            r.migrations.to_string(),
+        ]);
+    }
+    t.emit("sens_timer");
+
+    // --- approach ablation (location-centric vs cache-size-centric).
+    let mut t = Table::new(
+        "approach ablation (BFS makespan, ms)",
+        &["approach", "BFS ms", "final spread"],
+    );
+    for (name, a) in [
+        ("location-centric", Approach::LocationCentric),
+        ("balanced", Approach::Balanced),
+        ("cache-size-centric", Approach::CacheSizeCentric),
+    ] {
+        let policy = Box::new(
+            ArcasPolicy::new(&topo)
+                .with_timer(timer)
+                .with_approach(a),
+        );
+        let r = graph::run_bfs(&topo, policy, cores, g.clone(), src).0.report;
+        t.row(vec![
+            name.to_string(),
+            format!("{:.2}", r.makespan_ns as f64 / 1e6),
+            r.spread_rate.to_string(),
+        ]);
+    }
+    t.emit("sens_approach");
+}

@@ -1,0 +1,70 @@
+//! Tab. 1 reproduction: chiplet access counters (×10³) at 64 cores,
+//! ARCAS vs RING, across the six graph benchmarks.
+//!
+//! Paper shape: ARCAS's remote-NUMA-chiplet accesses are orders of
+//! magnitude below RING's, while its local-chiplet hits are higher —
+//! chiplet-aware placement converts remote L3 traffic into local hits.
+
+use std::sync::Arc;
+
+use arcas::harness;
+use arcas::util::table::Table;
+use arcas::workloads::graph::{self, kronecker::kronecker};
+
+fn main() {
+    let args = harness::bench_cli("tab1_chiplet_accesses", "Tab 1: access counters").parse();
+    let topo = harness::bench_topology(&args);
+    harness::print_header("Tab 1: chiplet accesses @64 cores", &args, &topo);
+    let cores = 64.min(topo.num_cores());
+    let scale = ((16_777_216.0 * args.f64("scale")) as u64).max(1024).ilog2();
+    let g = Arc::new(kronecker(scale, 16, args.u64("seed")));
+    let src = g.max_degree_vertex();
+
+    let mut t = Table::new(
+        "Tab 1: chiplet accesses (x10^3), 64 cores",
+        &[
+            "Application",
+            "RemoteNUMA ARCAS",
+            "RemoteNUMA RING",
+            "LocalChiplet ARCAS",
+            "LocalChiplet RING",
+        ],
+    );
+    let run = |name: &str, policy: Box<dyn arcas::policy::Policy>| -> (f64, f64) {
+        let report = match name {
+            "BFS" => graph::run_bfs(&topo, policy, cores, g.clone(), src).0.report,
+            "PR" => graph::run_pagerank(&topo, policy, cores, g.clone(), 5).0.report,
+            "CC" => graph::run_cc(&topo, policy, cores, g.clone()).0.report,
+            "SSSP" => graph::run_sssp(&topo, policy, cores, g.clone(), src).0.report,
+            "GUPS" => {
+                graph::run_gups(&topo, policy, cores, g.num_vertices() * 4, 50_000, 7)
+                    .0
+                    .report
+            }
+            _ => graph::run_bfs(&topo, policy, cores, g.clone(), src).0.report,
+        };
+        (report.counts.far / 1e3, report.counts.local / 1e3)
+    };
+
+    let mut ratios = Vec::new();
+    for name in ["BFS", "PR", "CC", "SSSP", "GUPS", "Graph500"] {
+        let (a_far, a_local) = run(name, harness::arcas(&topo, &args));
+        let (r_far, r_local) = run(name, harness::baseline("ring", &topo));
+        t.row(vec![
+            name.to_string(),
+            format!("{:.0}", a_far),
+            format!("{:.0}", r_far),
+            format!("{:.0}", a_local),
+            format!("{:.0}", r_local),
+        ]);
+        ratios.push((name, r_far / a_far.max(0.001), a_local / r_local.max(0.001)));
+    }
+    t.emit("tab1_chiplet_accesses");
+
+    println!("paper shape check: ARCAS remote-NUMA accesses << RING; local >= RING");
+    for (name, far_ratio, local_ratio) in ratios {
+        println!(
+            "  {name:<9} RING/ARCAS remote = {far_ratio:>10.0}x   ARCAS/RING local = {local_ratio:.2}x"
+        );
+    }
+}

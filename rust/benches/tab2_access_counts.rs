@@ -1,0 +1,80 @@
+//! Tab. 2 reproduction: memory/cache access counts (×10³) for
+//! StreamCluster, ARCAS vs Shoal, at 8/16/32/64 cores.
+//!
+//! Paper shape: at 8 cores Shoal shows >7× ARCAS's main-memory accesses
+//! (one chiplet's L3 vs eight); the gap narrows as core counts grow and
+//! Shoal spills onto more chiplets, converging by 64 cores.
+
+use std::sync::Arc;
+
+use arcas::harness;
+use arcas::util::table::Table;
+use arcas::workloads::streamcluster::{generate_points, run_streamcluster, ScConfig};
+
+fn main() {
+    let args = harness::bench_cli("tab2_access_counts", "Tab 2: access counts").parse();
+    let topo = harness::bench_topology(&args);
+    harness::print_header("Tab 2: StreamCluster accesses by level", &args, &topo);
+
+    // Batch sized from the machine: ~5 chiplets' worth of L3, so the
+    // batch fits when spread across 8 chiplets but spills to DRAM on the
+    // 2 chiplets Shoal fills at 16 cores (the paper's 512 MB vs 2x32 MB).
+    let dims = 64usize;
+    let batch = ((5 * topo.l3_per_chiplet) as usize / (dims * 4)).max(1024);
+    let cfg = ScConfig {
+        n_points: batch * 2,
+        dims,
+        batch_size: batch,
+        k_min: 10,
+        k_max: 20,
+        max_centers: 5_000,
+        local_iters: 3,
+        seed: 7,
+    };
+    let pts = Arc::new(generate_points(&cfg));
+
+    let mut t = Table::new(
+        "Tab 2: accesses (x10^3) ARCAS vs Shoal",
+        &[
+            "Cores",
+            "LocalChiplet A",
+            "LocalChiplet S",
+            "LocalNUMAChiplet A",
+            "LocalNUMAChiplet S",
+            "MainMemory A",
+            "MainMemory S",
+        ],
+    );
+    let mut mem_ratio_8 = 0.0;
+    for cores in [8usize, 16, 32, 64] {
+        if cores > topo.num_cores() {
+            continue;
+        }
+        let a = run_streamcluster(&topo, harness::arcas(&topo, &args), cores, &cfg, pts.clone())
+            .report
+            .counts;
+        let s = run_streamcluster(
+            &topo,
+            harness::baseline("shoal", &topo),
+            cores,
+            &cfg,
+            pts.clone(),
+        )
+        .report
+        .counts;
+        if cores == 8 {
+            mem_ratio_8 = s.dram / a.dram.max(0.001);
+        }
+        t.row(vec![
+            cores.to_string(),
+            format!("{:.0}", a.local / 1e3),
+            format!("{:.0}", s.local / 1e3),
+            format!("{:.0}", a.near / 1e3),
+            format!("{:.0}", s.near / 1e3),
+            format!("{:.0}", a.dram / 1e3),
+            format!("{:.0}", s.dram / 1e3),
+        ]);
+    }
+    t.emit("tab2_access_counts");
+    println!("Shoal/ARCAS main-memory ratio at 8 cores: {mem_ratio_8:.1}x (paper: >7x)");
+}

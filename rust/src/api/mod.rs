@@ -1,0 +1,300 @@
+//! Public programming API (§4.6).
+//!
+//! Mirrors the paper's C++ surface:
+//!
+//! | paper               | here                                  |
+//! |---------------------|---------------------------------------|
+//! | `ARCAS_Init()`      | [`Arcas::init`] / [`Arcas::init_with`]|
+//! | `ARCAS_Finalize()`  | [`Arcas::finalize`]                   |
+//! | `run(lambda)`       | [`Arcas::run`]                        |
+//! | `all_do(lambda)`    | [`Arcas::all_do`]                     |
+//! | `call(core, f)`     | [`Arcas::call`] / [`Arcas::call_async`]|
+//! | `barrier()`         | [`crate::task::BspTask`] barrier steps|
+//!
+//! ```no_run
+//! use arcas::api::Arcas;
+//! use arcas::mem::Placement;
+//!
+//! let mut rt = Arcas::init();
+//! let data = rt.alloc("vector", 64 << 20, Placement::Interleave);
+//! let report = rt.all_do(16, move |ctx, _rank| {
+//!     ctx.seq_read(data, 4 << 20);
+//!     ctx.compute_flops(1_000_000);
+//! });
+//! println!("took {} ms", report.makespan_ns as f64 / 1e6);
+//! rt.finalize();
+//! ```
+
+use crate::controller::Approach;
+use crate::mem::{Placement, RegionId};
+use crate::policy::{self, ArcasPolicy, Policy};
+use crate::sched::{RunReport, SimExecutor};
+use crate::sim::Machine;
+use crate::task::{Coroutine, FnTask, IterTask, TaskCtx};
+use crate::topology::Topology;
+use crate::util::config::Config;
+
+/// Runtime configuration.
+#[derive(Clone, Debug)]
+pub struct ArcasConfig {
+    pub topology: Topology,
+    pub policy: String,
+    pub timer_ns: u64,
+    pub threshold: f64,
+    pub approach: Approach,
+}
+
+impl Default for ArcasConfig {
+    fn default() -> Self {
+        Self {
+            topology: Topology::milan_2s(),
+            policy: "arcas".into(),
+            timer_ns: crate::controller::DEFAULT_SCHEDULER_TIMER_NS,
+            threshold: crate::controller::DEFAULT_RMT_CHIP_ACCESS_RATE,
+            approach: Approach::Balanced,
+        }
+    }
+}
+
+impl ArcasConfig {
+    /// Load from a config file (`[topology]` + `[scheduler]` sections).
+    pub fn from_config(cfg: &Config) -> Self {
+        let topology = Topology::from_config(cfg);
+        Self {
+            topology,
+            policy: cfg.str_or("scheduler", "policy", "arcas"),
+            timer_ns: cfg.u64_or(
+                "scheduler",
+                "timer_ns",
+                crate::controller::DEFAULT_SCHEDULER_TIMER_NS,
+            ),
+            threshold: cfg.f64_or(
+                "scheduler",
+                "rmt_chip_access_rate",
+                crate::controller::DEFAULT_RMT_CHIP_ACCESS_RATE,
+            ),
+            approach: match cfg.str_or("scheduler", "approach", "balanced").as_str() {
+                "location" => Approach::LocationCentric,
+                "cache_size" => Approach::CacheSizeCentric,
+                _ => Approach::Balanced,
+            },
+        }
+    }
+}
+
+/// The ARCAS runtime handle.
+pub struct Arcas {
+    cfg: ArcasConfig,
+    machine: Machine,
+    finalized: bool,
+}
+
+impl Arcas {
+    /// `ARCAS_Init()` with defaults (dual-socket Milan, adaptive policy).
+    pub fn init() -> Self {
+        Self::init_with(ArcasConfig::default())
+    }
+
+    pub fn init_with(cfg: ArcasConfig) -> Self {
+        let machine = Machine::new(cfg.topology.clone());
+        Self {
+            cfg,
+            machine,
+            finalized: false,
+        }
+    }
+
+    /// `ARCAS_Finalize()`.
+    pub fn finalize(&mut self) {
+        self.finalized = true;
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.cfg.topology
+    }
+
+    pub fn machine(&self) -> &Machine {
+        &self.machine
+    }
+
+    pub fn machine_mut(&mut self) -> &mut Machine {
+        &mut self.machine
+    }
+
+    /// Allocate a region visible to all tasks.
+    pub fn alloc(&mut self, label: &str, size: u64, placement: Placement) -> RegionId {
+        self.machine.alloc(label, size, placement)
+    }
+
+    fn build_policy(&self) -> Box<dyn Policy> {
+        match self.cfg.policy.as_str() {
+            "arcas" => Box::new(
+                ArcasPolicy::new(&self.cfg.topology)
+                    .with_timer(self.cfg.timer_ns)
+                    .with_threshold(self.cfg.threshold)
+                    .with_approach(self.cfg.approach),
+            ),
+            other => policy::by_name(other, &self.cfg.topology)
+                .unwrap_or_else(|| panic!("unknown policy {other}")),
+        }
+    }
+
+    /// Run a group of `n` coroutines (full control over yield points).
+    /// Consumes the machine state for the run and restores it after,
+    /// carrying cache residency forward.
+    pub fn run(
+        &mut self,
+        n: usize,
+        make: impl FnMut(usize) -> Box<dyn Coroutine>,
+    ) -> RunReport {
+        assert!(!self.finalized, "runtime already finalized");
+        let machine = std::mem::replace(&mut self.machine, Machine::new(self.cfg.topology.clone()));
+        let mut ex = SimExecutor::new(machine, self.build_policy()).with_timer(self.cfg.timer_ns);
+        ex.spawn_group(n, make);
+        let report = ex.run();
+        self.machine = ex.machine;
+        report
+    }
+
+    /// `all_do`: execute a closure once per task (one task per rank).
+    pub fn all_do<F>(&mut self, n: usize, f: F) -> RunReport
+    where
+        F: Fn(&mut TaskCtx<'_>, usize) + Send + Sync + Clone + 'static,
+    {
+        self.run(n, move |rank| {
+            let f = f.clone();
+            Box::new(FnTask(move |ctx: &mut TaskCtx<'_>| f(ctx, rank)))
+        })
+    }
+
+    /// `all_do` with `iters` chunks per task, yielding between chunks
+    /// (the shape most paper workloads use).
+    pub fn all_do_chunked<F>(&mut self, n: usize, iters: u64, f: F) -> RunReport
+    where
+        F: Fn(&mut TaskCtx<'_>, usize, u64) + Send + Sync + Clone + 'static,
+    {
+        self.run(n, move |rank| {
+            let f = f.clone();
+            Box::new(IterTask::new(iters, move |ctx, it| f(ctx, rank, it)))
+        })
+    }
+
+    /// Synchronous RPC: run `f` on a specific core, charging the
+    /// round-trip message cost from `from_core` (the `call()` API).
+    pub fn call<R>(
+        &mut self,
+        from_core: usize,
+        target_core: usize,
+        f: impl FnOnce(&mut TaskCtx<'_>) -> R,
+    ) -> R {
+        // Request message.
+        self.machine.message(from_core, target_core, 64);
+        let mut ctx = TaskCtx {
+            machine: &mut self.machine,
+            core: target_core,
+            task_id: usize::MAX,
+            rank: 0,
+            group_size: 1,
+            now_ns: 0,
+            step_outcome: Default::default(),
+        };
+        let r = f(&mut ctx);
+        // Response message.
+        self.machine.message(target_core, from_core, 64);
+        r
+    }
+
+    /// Asynchronous RPC: fire-and-forget task pinned to a core; returns
+    /// immediately after charging the send.
+    pub fn call_async(&mut self, from_core: usize, target_core: usize, f: impl FnOnce(&mut TaskCtx<'_>) + Send) {
+        self.machine.message(from_core, target_core, 64);
+        let mut ctx = TaskCtx {
+            machine: &mut self.machine,
+            core: target_core,
+            task_id: usize::MAX,
+            rank: 0,
+            group_size: 1,
+            now_ns: 0,
+            step_outcome: Default::default(),
+        };
+        f(&mut ctx);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_run_finalize_lifecycle() {
+        let mut rt = Arcas::init();
+        let report = rt.all_do(4, |ctx, _| ctx.compute_ns(100));
+        assert!(report.makespan_ns >= 100);
+        rt.finalize();
+    }
+
+    #[test]
+    #[should_panic(expected = "finalized")]
+    fn run_after_finalize_panics() {
+        let mut rt = Arcas::init();
+        rt.finalize();
+        let _ = rt.all_do(1, |_, _| {});
+    }
+
+    #[test]
+    fn alloc_and_access_through_api() {
+        let mut rt = Arcas::init();
+        let r = rt.alloc("buf", 8 << 20, Placement::Bind(0));
+        let report = rt.all_do(8, move |ctx, _| {
+            ctx.seq_read(r, 1 << 20);
+        });
+        assert!(report.counts.total_ops() > 0.0);
+    }
+
+    #[test]
+    fn chunked_run_dispatches_iters() {
+        let mut rt = Arcas::init();
+        let report = rt.all_do_chunked(2, 5, |ctx, _, _| ctx.compute_ns(10));
+        assert_eq!(report.dispatches, 10);
+    }
+
+    #[test]
+    fn call_charges_round_trip() {
+        let mut rt = Arcas::init();
+        let before = rt.machine().now(0);
+        let v = rt.call(0, 9, |ctx| {
+            ctx.compute_ns(100);
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(rt.machine().now(0) > before);
+        assert!(rt.machine().now(9) >= 100);
+    }
+
+    #[test]
+    fn cache_state_carries_across_runs() {
+        let mut rt = Arcas::init_with(ArcasConfig {
+            policy: "local".into(),
+            ..Default::default()
+        });
+        let r = rt.alloc("buf", 4 << 20, Placement::Bind(0));
+        rt.all_do(1, move |ctx, _| {
+            ctx.seq_read(r, 4 << 20);
+        });
+        // Second run: the region is warm in chiplet 0's L3.
+        let resident = rt.machine().cache.resident(0, r);
+        assert!(resident > 0, "residency must persist across runs");
+    }
+
+    #[test]
+    fn config_from_file_text() {
+        let cfg = Config::parse(
+            "[topology]\npreset = milan_1s\n[scheduler]\npolicy = ring\ntimer_ns = 5000000\n",
+        )
+        .unwrap();
+        let ac = ArcasConfig::from_config(&cfg);
+        assert_eq!(ac.topology.sockets, 1);
+        assert_eq!(ac.policy, "ring");
+        assert_eq!(ac.timer_ns, 5_000_000);
+    }
+}

@@ -1,0 +1,145 @@
+//! Hierarchical access counters — the libpfm substitute.
+//!
+//! Counts are kept per chiplet (of the *issuing* core) and in aggregate,
+//! using the same taxonomy the paper reports in Tab. 1 and Tab. 2.
+//! `fill_events()` — remote-chiplet cache fills — is the signal Algorithm 1
+//! polls via `getEventCounter()`.
+
+use super::Outcome;
+
+/// Counts for one class bucket.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ClassCounts {
+    /// L3 hits in the issuing core's own chiplet.
+    pub local: f64,
+    /// L3 hits in a sibling chiplet within the same NUMA domain.
+    pub near: f64,
+    /// L3 hits in a chiplet on another NUMA domain / socket.
+    pub far: f64,
+    /// DRAM accesses.
+    pub dram: f64,
+}
+
+impl ClassCounts {
+    pub fn total_ops(&self) -> f64 {
+        self.local + self.near + self.far + self.dram
+    }
+
+    /// Remote-chiplet fill events: everything served from outside the
+    /// local chiplet's L3 other than DRAM (the paper's "cache fill events
+    /// ... remote memory accesses between chiplets").
+    pub fn fill_events(&self) -> f64 {
+        self.near + self.far
+    }
+
+    pub fn add(&mut self, o: &Outcome) {
+        self.local += o.local_hits;
+        self.near += o.near_hits;
+        self.far += o.far_hits;
+        self.dram += o.dram_lines;
+    }
+
+    pub fn merge(&mut self, other: &ClassCounts) {
+        self.local += other.local;
+        self.near += other.near;
+        self.far += other.far;
+        self.dram += other.dram;
+    }
+}
+
+/// Per-chiplet + aggregate counters with snapshot/delta support.
+#[derive(Clone, Debug)]
+pub struct Counters {
+    per_chiplet: Vec<ClassCounts>,
+}
+
+impl Counters {
+    pub fn new(num_chiplets: usize) -> Self {
+        Self {
+            per_chiplet: vec![ClassCounts::default(); num_chiplets],
+        }
+    }
+
+    pub fn record(&mut self, chiplet: usize, o: &Outcome) {
+        self.per_chiplet[chiplet].add(o);
+    }
+
+    pub fn chiplet(&self, chiplet: usize) -> &ClassCounts {
+        &self.per_chiplet[chiplet]
+    }
+
+    pub fn total(&self) -> ClassCounts {
+        let mut t = ClassCounts::default();
+        for c in &self.per_chiplet {
+            t.merge(c);
+        }
+        t
+    }
+
+    pub fn reset(&mut self) {
+        for c in &mut self.per_chiplet {
+            *c = ClassCounts::default();
+        }
+    }
+
+    /// Aggregate remote-chiplet fill events (Algorithm 1's counter).
+    pub fn fill_events(&self) -> f64 {
+        self.total().fill_events()
+    }
+
+    pub fn num_chiplets(&self) -> usize {
+        self.per_chiplet.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(local: f64, near: f64, far: f64, dram: f64) -> Outcome {
+        Outcome {
+            local_hits: local,
+            near_hits: near,
+            far_hits: far,
+            dram_lines: dram,
+            latency_ns: 0.0,
+            dram_bytes: dram * 64.0,
+        }
+    }
+
+    #[test]
+    fn record_and_total() {
+        let mut c = Counters::new(4);
+        c.record(0, &outcome(10.0, 5.0, 1.0, 2.0));
+        c.record(3, &outcome(1.0, 0.0, 0.0, 9.0));
+        let t = c.total();
+        assert_eq!(t.local, 11.0);
+        assert_eq!(t.near, 5.0);
+        assert_eq!(t.far, 1.0);
+        assert_eq!(t.dram, 11.0);
+        assert_eq!(t.total_ops(), 28.0);
+    }
+
+    #[test]
+    fn fill_events_exclude_local_and_dram() {
+        let mut c = Counters::new(2);
+        c.record(1, &outcome(100.0, 7.0, 3.0, 50.0));
+        assert_eq!(c.fill_events(), 10.0);
+    }
+
+    #[test]
+    fn reset_zeroes() {
+        let mut c = Counters::new(2);
+        c.record(0, &outcome(1.0, 1.0, 1.0, 1.0));
+        c.reset();
+        assert_eq!(c.total().total_ops(), 0.0);
+    }
+
+    #[test]
+    fn per_chiplet_isolation() {
+        let mut c = Counters::new(2);
+        c.record(0, &outcome(5.0, 0.0, 0.0, 0.0));
+        assert_eq!(c.chiplet(0).local, 5.0);
+        assert_eq!(c.chiplet(1).local, 0.0);
+    }
+}

@@ -1,0 +1,474 @@
+//! Analytic per-chiplet L3 cache model.
+//!
+//! This is the substitute for the libpfm hardware counters of the paper's
+//! testbed. Tasks do not issue individual loads; they issue *access
+//! summaries* (`Pattern` over a `Region`). The model tracks per-chiplet
+//! residency (segment-LRU over regions) and computes the expected split of
+//! line accesses across the hierarchy:
+//!
+//! - **local chiplet** L3 hit          (paper: "Local Chiplet"),
+//! - **sibling chiplet, same NUMA** L3 hit ("Local NUMA Chiplet"),
+//! - **chiplet on another NUMA/socket** L3 hit ("Remote NUMA Chiplet"),
+//! - **DRAM** access                    ("Main Memory").
+//!
+//! The split drives both the virtual-time cost (latency × accesses +
+//! bandwidth terms via [`crate::memsim`]) and the event counters that
+//! Algorithm 1's `getEventCounter()` reads (remote-chiplet cache-fill
+//! events). Expected-value accounting keeps the model deterministic and
+//! fast — billions of modeled line accesses cost a few arithmetic ops.
+
+mod counters;
+pub use counters::{ClassCounts, Counters};
+
+use std::collections::HashMap;
+
+use crate::mem::RegionId;
+use crate::topology::Topology;
+
+/// Cache line size in bytes.
+pub const LINE: u64 = 64;
+
+/// Access pattern summary for one task step.
+#[derive(Clone, Copy, Debug)]
+pub enum Pattern {
+    /// Stream `bytes` sequentially (scan / write of a contiguous chunk).
+    Seq { bytes: u64 },
+    /// `ops` line-sized accesses uniformly distributed over `span` bytes.
+    Rand { ops: u64, span: u64 },
+}
+
+impl Pattern {
+    /// Number of line accesses this pattern issues.
+    pub fn ops(&self) -> u64 {
+        match *self {
+            Pattern::Seq { bytes } => crate::util::div_ceil(bytes.max(1), LINE),
+            Pattern::Rand { ops, .. } => ops,
+        }
+    }
+
+    /// Expected number of *unique* bytes touched.
+    pub fn unique_bytes(&self) -> u64 {
+        match *self {
+            Pattern::Seq { bytes } => bytes,
+            Pattern::Rand { ops, span } => {
+                let lines = (span / LINE).max(1);
+                // E[unique lines] = L * (1 - (1 - 1/L)^ops) ≈ L(1-e^{-ops/L}).
+                let frac = 1.0 - (-(ops as f64) / lines as f64).exp();
+                ((lines as f64 * frac) * LINE as f64) as u64
+            }
+        }
+    }
+}
+
+/// One modeled access: a pattern over a region, issued from a core.
+#[derive(Clone, Copy, Debug)]
+pub struct Access {
+    pub region: RegionId,
+    pub pattern: Pattern,
+    pub write: bool,
+    /// Memory-level parallelism: how many accesses overlap (1.0 =
+    /// dependent pointer chase, 8–16 = streaming with prefetch).
+    pub mlp: f64,
+}
+
+impl Access {
+    pub fn seq_read(region: RegionId, bytes: u64) -> Self {
+        Self { region, pattern: Pattern::Seq { bytes }, write: false, mlp: 8.0 }
+    }
+
+    pub fn seq_write(region: RegionId, bytes: u64) -> Self {
+        Self { region, pattern: Pattern::Seq { bytes }, write: true, mlp: 8.0 }
+    }
+
+    pub fn rand_read(region: RegionId, ops: u64, span: u64) -> Self {
+        Self { region, pattern: Pattern::Rand { ops, span }, write: false, mlp: 2.0 }
+    }
+
+    pub fn rand_write(region: RegionId, ops: u64, span: u64) -> Self {
+        Self { region, pattern: Pattern::Rand { ops, span }, write: true, mlp: 2.0 }
+    }
+
+    pub fn with_mlp(mut self, mlp: f64) -> Self {
+        self.mlp = mlp.max(1.0);
+        self
+    }
+}
+
+/// Expected outcome of one modeled access.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Outcome {
+    pub local_hits: f64,
+    pub near_hits: f64,
+    pub far_hits: f64,
+    pub dram_lines: f64,
+    /// Latency-weighted cost in ns (excluding DRAM bandwidth queueing,
+    /// which the memsim adds on top).
+    pub latency_ns: f64,
+    /// Bytes that must come from DRAM.
+    pub dram_bytes: f64,
+}
+
+impl Outcome {
+    pub fn total_ops(&self) -> f64 {
+        self.local_hits + self.near_hits + self.far_hits + self.dram_lines
+    }
+}
+
+/// Per-region residency in one chiplet's L3.
+#[derive(Clone, Debug)]
+struct Segment {
+    bytes: u64,
+    stamp: u64,
+}
+
+/// One chiplet's shared L3.
+#[derive(Clone, Debug)]
+struct ChipletL3 {
+    capacity: u64,
+    used: u64,
+    segments: HashMap<RegionId, Segment>,
+}
+
+impl ChipletL3 {
+    fn new(capacity: u64) -> Self {
+        Self { capacity, used: 0, segments: HashMap::new() }
+    }
+
+    fn resident(&self, region: RegionId) -> u64 {
+        self.segments.get(&region).map(|s| s.bytes).unwrap_or(0)
+    }
+
+    /// Bring `bytes` of `region` into this L3, evicting LRU segments.
+    fn fill(&mut self, region: RegionId, bytes: u64, stamp: u64, region_size: u64) {
+        let have = self.resident(region);
+        let want = (have + bytes).min(region_size).min(self.capacity);
+        if want <= have {
+            if let Some(s) = self.segments.get_mut(&region) {
+                s.stamp = stamp; // refresh recency only
+            }
+            return;
+        }
+        let mut delta = want - have;
+        // Evict LRU segments until there is room.
+        while self.used + delta > self.capacity {
+            let victim = self
+                .segments
+                .iter()
+                .filter(|(id, _)| **id != region)
+                .min_by_key(|(_, s)| s.stamp)
+                .map(|(id, _)| *id);
+            match victim {
+                Some(id) => {
+                    let seg = self.segments.remove(&id).unwrap();
+                    self.used -= seg.bytes;
+                }
+                None => {
+                    // Only this region resides here; shrink the fill.
+                    delta = self.capacity - self.used;
+                    break;
+                }
+            }
+        }
+        let e = self
+            .segments
+            .entry(region)
+            .or_insert(Segment { bytes: 0, stamp });
+        e.bytes += delta;
+        e.stamp = stamp;
+        self.used += delta;
+    }
+
+    /// Drop `frac` of the resident bytes of `region` (coherence
+    /// invalidation on remote writes).
+    fn invalidate_frac(&mut self, region: RegionId, frac: f64) {
+        if let Some(s) = self.segments.get_mut(&region) {
+            let drop = (s.bytes as f64 * frac.clamp(0.0, 1.0)) as u64;
+            s.bytes -= drop;
+            self.used -= drop;
+            if s.bytes == 0 {
+                self.segments.remove(&region);
+            }
+        }
+    }
+
+    fn flush(&mut self) {
+        self.segments.clear();
+        self.used = 0;
+    }
+}
+
+/// The machine-wide cache model.
+#[derive(Clone, Debug)]
+pub struct CacheSim {
+    topo: Topology,
+    chiplets: Vec<ChipletL3>,
+    region_sizes: HashMap<RegionId, u64>,
+    stamp: u64,
+    /// Hierarchical access counters (the libpfm substitute).
+    pub counters: Counters,
+}
+
+impl CacheSim {
+    pub fn new(topo: &Topology) -> Self {
+        let chiplets = (0..topo.num_chiplets())
+            .map(|_| ChipletL3::new(topo.l3_per_chiplet))
+            .collect();
+        Self {
+            topo: topo.clone(),
+            chiplets,
+            region_sizes: HashMap::new(),
+            stamp: 0,
+            counters: Counters::new(topo.num_chiplets()),
+        }
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    pub fn register_region(&mut self, region: RegionId, size: u64) {
+        self.region_sizes.insert(region, size.max(1));
+    }
+
+    pub fn drop_region(&mut self, region: RegionId) {
+        self.region_sizes.remove(&region);
+        for ch in &mut self.chiplets {
+            ch.invalidate_frac(region, 1.0);
+        }
+    }
+
+    pub fn region_size(&self, region: RegionId) -> u64 {
+        *self.region_sizes.get(&region).unwrap_or(&1)
+    }
+
+    /// Resident bytes of `region` in `chiplet`'s L3.
+    pub fn resident(&self, chiplet: usize, region: RegionId) -> u64 {
+        self.chiplets[chiplet].resident(region)
+    }
+
+    /// Flush every chiplet's L3 (between experiment repetitions).
+    pub fn flush_all(&mut self) {
+        for ch in &mut self.chiplets {
+            ch.flush();
+        }
+    }
+
+    /// Model one access issued by `core`; returns the expected outcome and
+    /// updates residency + counters.
+    pub fn access(&mut self, core: usize, acc: Access) -> Outcome {
+        self.stamp += 1;
+        let my_chiplet = self.topo.chiplet_of(core);
+        let my_numa = self.topo.numa_of_core(core);
+        let size = self.region_size(acc.region) as f64;
+        let ops = acc.pattern.ops() as f64;
+        if ops == 0.0 {
+            return Outcome::default();
+        }
+
+        // Probability a touched line is resident in a given chiplet's L3.
+        // Residency is tracked per-region; resident bytes are assumed
+        // uniformly spread over the region.
+        let frac_of = |resident: u64| -> f64 { (resident as f64 / size).min(1.0) };
+
+        let p_local = frac_of(self.chiplets[my_chiplet].resident(acc.region));
+
+        // Fraction available from sibling chiplets in the same NUMA domain
+        // (union bound, capped by what is not already local).
+        let mut p_near = 0.0;
+        for ch in self.topo.chiplets_of_numa(my_numa) {
+            if ch != my_chiplet {
+                p_near += frac_of(self.chiplets[ch].resident(acc.region));
+            }
+        }
+        p_near = p_near.min(1.0 - p_local).max(0.0);
+
+        // Fraction available from chiplets on other NUMA domains.
+        let mut p_far = 0.0;
+        for numa in 0..self.topo.num_numa() {
+            if numa == my_numa {
+                continue;
+            }
+            for ch in self.topo.chiplets_of_numa(numa) {
+                p_far += frac_of(self.chiplets[ch].resident(acc.region));
+            }
+        }
+        p_far = p_far.min((1.0 - p_local - p_near).max(0.0));
+
+        let p_dram = (1.0 - p_local - p_near - p_far).max(0.0);
+
+        let local_hits = ops * p_local;
+        let near_hits = ops * p_near;
+        let far_hits = ops * p_far;
+        let dram_lines = ops * p_dram;
+
+        // Latency per class; overlapped by MLP.
+        let lat = &self.topo.lat;
+        let near_ns = lat.l3_hit_ns + lat.inter_chiplet_near_ns;
+        let far_ns = lat.l3_hit_ns + lat.cross_socket_ns;
+        let dram_ns = self.topo.dram_access_ns(core, my_numa);
+        let raw_ns = local_hits * lat.l3_hit_ns
+            + near_hits * near_ns
+            + far_hits * far_ns
+            + dram_lines * dram_ns;
+        let latency_ns = raw_ns / acc.mlp.max(1.0);
+
+        // Residency update: fills land in the local chiplet's L3.
+        let unique = acc.pattern.unique_bytes().min(size as u64);
+        let fill_bytes = ((unique as f64) * (1.0 - p_local)) as u64;
+        self.chiplets[my_chiplet].fill(acc.region, fill_bytes, self.stamp, size as u64);
+
+        // Coherence: a write invalidates the written fraction elsewhere.
+        if acc.write {
+            let written_frac = (unique as f64 / size).min(1.0);
+            for ch in 0..self.chiplets.len() {
+                if ch != my_chiplet {
+                    self.chiplets[ch].invalidate_frac(acc.region, written_frac);
+                }
+            }
+        }
+
+        let out = Outcome {
+            local_hits,
+            near_hits,
+            far_hits,
+            dram_lines,
+            latency_ns,
+            dram_bytes: dram_lines * LINE as f64,
+        };
+        self.counters.record(my_chiplet, &out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::RegionId;
+
+    fn setup() -> (CacheSim, RegionId) {
+        let topo = Topology::milan_2s();
+        let mut sim = CacheSim::new(&topo);
+        let r = RegionId(1);
+        sim.register_region(r, 16 << 20); // 16 MiB, fits one chiplet L3
+        (sim, r)
+    }
+
+    #[test]
+    fn cold_access_goes_to_dram() {
+        let (mut sim, r) = setup();
+        let out = sim.access(0, Access::seq_read(r, 16 << 20));
+        assert!(out.dram_lines > 0.9 * out.total_ops());
+        assert!(out.local_hits < 0.1 * out.total_ops());
+    }
+
+    #[test]
+    fn warm_access_hits_local_l3() {
+        let (mut sim, r) = setup();
+        sim.access(0, Access::seq_read(r, 16 << 20)); // warm
+        let out = sim.access(0, Access::seq_read(r, 16 << 20));
+        assert!(
+            out.local_hits > 0.95 * out.total_ops(),
+            "local={} total={}",
+            out.local_hits,
+            out.total_ops()
+        );
+    }
+
+    #[test]
+    fn sibling_chiplet_hit_counts_as_near() {
+        let (mut sim, r) = setup();
+        sim.access(0, Access::seq_read(r, 16 << 20)); // chiplet 0 warm
+        // Core 8 is chiplet 1 (same NUMA): should mostly hit chiplet 0's L3.
+        let out = sim.access(8, Access::rand_read(r, 1000, 16 << 20));
+        assert!(out.near_hits > 0.8 * out.total_ops(), "near={:?}", out);
+    }
+
+    #[test]
+    fn cross_socket_hit_counts_as_far() {
+        let (mut sim, r) = setup();
+        sim.access(0, Access::seq_read(r, 16 << 20));
+        // Core 64 is on socket 1.
+        let out = sim.access(64, Access::rand_read(r, 1000, 16 << 20));
+        assert!(out.far_hits > 0.8 * out.total_ops(), "far={:?}", out);
+    }
+
+    #[test]
+    fn oversized_region_misses() {
+        let topo = Topology::milan_2s();
+        let mut sim = CacheSim::new(&topo);
+        let r = RegionId(2);
+        sim.register_region(r, 256 << 20); // 8x one chiplet's L3
+        sim.access(0, Access::seq_read(r, 256 << 20));
+        let out = sim.access(0, Access::rand_read(r, 10_000, 256 << 20));
+        // At most 32/256 can be resident locally.
+        assert!(out.local_hits < 0.2 * out.total_ops(), "{out:?}");
+        assert!(out.dram_lines > 0.5 * out.total_ops(), "{out:?}");
+    }
+
+    #[test]
+    fn latency_orders_local_faster_than_remote() {
+        let (mut sim, r) = setup();
+        sim.access(0, Access::seq_read(r, 16 << 20));
+        let local = sim.access(0, Access::rand_read(r, 1000, 16 << 20));
+        let mut sim2 = CacheSim::new(&Topology::milan_2s());
+        sim2.register_region(r, 16 << 20);
+        sim2.access(0, Access::seq_read(r, 16 << 20));
+        let remote = sim2.access(40, Access::rand_read(r, 1000, 16 << 20));
+        assert!(local.latency_ns < remote.latency_ns);
+    }
+
+    #[test]
+    fn write_invalidates_remote_copies() {
+        let (mut sim, r) = setup();
+        sim.access(0, Access::seq_read(r, 16 << 20));
+        assert!(sim.resident(0, r) > 0);
+        // Full overwrite from chiplet 2.
+        sim.access(16, Access::seq_write(r, 16 << 20));
+        assert_eq!(sim.resident(0, r), 0, "writer must invalidate readers");
+        assert!(sim.resident(2, r) > 0);
+    }
+
+    #[test]
+    fn lru_eviction_respects_capacity() {
+        let topo = Topology::milan_2s();
+        let mut sim = CacheSim::new(&topo);
+        let a = RegionId(10);
+        let b = RegionId(11);
+        sim.register_region(a, 24 << 20);
+        sim.register_region(b, 24 << 20);
+        sim.access(0, Access::seq_read(a, 24 << 20));
+        sim.access(0, Access::seq_read(b, 24 << 20));
+        let used = sim.chiplets[0].used;
+        assert!(used <= topo.l3_per_chiplet);
+        // b is more recent; a must have been (partially) evicted.
+        assert!(sim.resident(0, b) > sim.resident(0, a));
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let (mut sim, r) = setup();
+        sim.access(0, Access::seq_read(r, 1 << 20));
+        sim.access(8, Access::rand_read(r, 100, 1 << 20));
+        assert!(sim.counters.total().dram > 0.0);
+        assert!(sim.counters.total().total_ops() > 0.0);
+    }
+
+    #[test]
+    fn pattern_unique_bytes() {
+        let p = Pattern::Seq { bytes: 4096 };
+        assert_eq!(p.unique_bytes(), 4096);
+        let r = Pattern::Rand { ops: 1_000_000, span: 1 << 20 };
+        // ops >> lines: nearly all lines touched.
+        assert!(r.unique_bytes() > (1u64 << 20) * 9 / 10); // > 90% of 1 MiB
+        let few = Pattern::Rand { ops: 10, span: 1 << 30 };
+        assert!(few.unique_bytes() <= 10 * LINE);
+    }
+
+    #[test]
+    fn flush_clears_residency() {
+        let (mut sim, r) = setup();
+        sim.access(0, Access::seq_read(r, 16 << 20));
+        sim.flush_all();
+        assert_eq!(sim.resident(0, r), 0);
+    }
+}

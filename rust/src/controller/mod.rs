@@ -1,0 +1,387 @@
+//! Adaptive controller: the paper's Algorithm 1 (Chiplet Scheduling
+//! Policy) and Algorithm 2 (Update Location).
+//!
+//! The controller periodically reads the remote-chiplet cache-fill event
+//! rate from the profiler. If the rate exceeds `RMT_CHIP_ACCESS_RATE`
+//! (default 300 events per `SCHEDULER_TIMER`, the value the paper's §4.6
+//! sensitivity analysis selects), tasks are *spread* over more chiplets
+//! (more aggregate L3); otherwise they are *compacted* onto fewer chiplets
+//! (better locality). `update_location` maps task ranks to concrete cores
+//! for a given spread rate and binds their memory to the right NUMA node.
+
+use crate::topology::Topology;
+
+/// Defaults from the paper (§4.6).
+pub const DEFAULT_SCHEDULER_TIMER_NS: u64 = 10_000_000; // 10 ms
+pub const DEFAULT_RMT_CHIP_ACCESS_RATE: f64 = 300.0;
+
+/// Scheduling approach (§4.1: "the controller generates adaptive policies
+/// that switch between location-centric and cache-size-centric
+/// approaches").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Approach {
+    /// Minimize cross-chiplet communication: bias toward compaction
+    /// (higher threshold before spreading).
+    LocationCentric,
+    /// Maximize aggregate cache: bias toward spreading (lower threshold).
+    CacheSizeCentric,
+    /// Paper default: threshold as configured.
+    Balanced,
+}
+
+impl Approach {
+    /// Threshold multiplier implementing the bias.
+    fn threshold_factor(self) -> f64 {
+        match self {
+            Approach::LocationCentric => 2.0,
+            Approach::CacheSizeCentric => 0.5,
+            Approach::Balanced => 1.0,
+        }
+    }
+}
+
+/// Algorithm 1 state.
+#[derive(Clone, Debug)]
+pub struct AdaptiveController {
+    pub timer_ns: u64,
+    pub rmt_chip_access_rate: f64,
+    pub approach: Approach,
+    pub spread_rate: usize,
+    /// Chiplets available (Algorithm 1's `CHIPLETS`).
+    pub max_chiplets: usize,
+    last_decision_ns: u64,
+    /// Windows remaining in which compaction is suppressed (set when a
+    /// compaction immediately had to be undone — breaks thrash cycles).
+    compact_backoff: u32,
+    /// Did the previous decision compact?
+    last_was_compact: bool,
+    /// Decision log for diagnostics: (t_ns, rate, new_spread).
+    pub decisions: Vec<(u64, f64, usize)>,
+}
+
+impl AdaptiveController {
+    pub fn new(topo: &Topology) -> Self {
+        Self {
+            timer_ns: DEFAULT_SCHEDULER_TIMER_NS,
+            rmt_chip_access_rate: DEFAULT_RMT_CHIP_ACCESS_RATE,
+            approach: Approach::Balanced,
+            spread_rate: 1,
+            max_chiplets: topo.num_chiplets(),
+            last_decision_ns: 0,
+            compact_backoff: 0,
+            last_was_compact: false,
+            decisions: Vec::new(),
+        }
+    }
+
+    pub fn with_timer(mut self, timer_ns: u64) -> Self {
+        self.timer_ns = timer_ns;
+        self
+    }
+
+    pub fn with_threshold(mut self, rate: f64) -> Self {
+        self.rmt_chip_access_rate = rate;
+        self
+    }
+
+    pub fn with_approach(mut self, approach: Approach) -> Self {
+        self.approach = approach;
+        self
+    }
+
+    pub fn with_spread(mut self, spread: usize) -> Self {
+        self.spread_rate = spread.clamp(1, self.max_chiplets);
+        self
+    }
+
+    /// Grace period: suppress compaction for the first `windows` decision
+    /// windows (cold caches always look like "low remote traffic" before
+    /// the working set has been pulled in once).
+    pub fn with_warmup(mut self, windows: u32) -> Self {
+        self.compact_backoff = windows;
+        self
+    }
+
+    /// Is a scheduling decision due at `now_ns`? (Algorithm 1 line 4.)
+    pub fn due(&self, now_ns: u64) -> bool {
+        now_ns.saturating_sub(self.last_decision_ns) >= self.timer_ns
+    }
+
+    /// Algorithm 1: consume the windowed fill-event rate; returns the new
+    /// spread rate if it changed.
+    ///
+    /// `rate` must already be normalized to events per `timer_ns`
+    /// (the profiler does `counter × SCHEDULER_TIMER / elapsed`).
+    pub fn tick(&mut self, now_ns: u64, rate: f64) -> Option<usize> {
+        if !self.due(now_ns) {
+            return None;
+        }
+        self.last_decision_ns = now_ns;
+        let threshold = self.rmt_chip_access_rate * self.approach.threshold_factor();
+        let old = self.spread_rate;
+        self.compact_backoff = self.compact_backoff.saturating_sub(1);
+        if rate >= threshold {
+            // High inter-chiplet traffic: spread for aggregate cache.
+            if self.spread_rate < self.max_chiplets {
+                self.spread_rate += 1;
+            }
+            if self.last_was_compact {
+                // The compaction we just did caused this spike: the
+                // working set needs those chiplets. Back off further
+                // compaction attempts for a while (thrash breaker).
+                self.compact_backoff = 16;
+            }
+            self.last_was_compact = false;
+        } else if rate < threshold * 0.5 && self.compact_backoff == 0 {
+            // Low traffic: compact for locality. The 0.5 hysteresis band
+            // (rates in [thr/2, thr) hold steady) prevents spread-rate
+            // oscillation when the fill rate hovers near the threshold —
+            // the stability role the paper assigns to choosing a "higher
+            // value [that] would delay changes to the scheduling" (§4.2).
+            if self.spread_rate > 1 {
+                self.spread_rate -= 1;
+                self.last_was_compact = true;
+            }
+        } else {
+            self.last_was_compact = false;
+        }
+        self.decisions.push((now_ns, rate, self.spread_rate));
+        if self.spread_rate != old {
+            Some(self.spread_rate)
+        } else {
+            None
+        }
+    }
+}
+
+/// Result of Algorithm 2 for one rank.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Location {
+    pub core: usize,
+    pub numa: usize,
+}
+
+/// Algorithm 2 (Update Location): map `rank` of `group_size` threads onto
+/// a core, given the spread rate.
+///
+/// With spread rate `s`, consecutive ranks are packed into blocks of
+/// `cores_per_chiplet / s` per chiplet — so a group of `n` threads
+/// occupies `n·s / cores_per_chiplet` chiplets: `s = 1` compacts the
+/// group onto the fewest chiplets, `s = CHIPLETS` gives maximal spread.
+/// Overflowing chiplet indices wrap around, shifting to unused slots
+/// (Algorithm 2 lines 7–9).
+///
+/// NOTE: the paper computes `core = chiplet × CHIPLETS + slot`, which is
+/// only correct when `CHIPLETS == CORES_PER_CHIPLET` (both are 8 on the
+/// Milan testbed). We use `chiplet × cores_per_chiplet + slot`, which is
+/// the general form.
+pub fn update_location(
+    topo: &Topology,
+    spread_rate: usize,
+    rank: usize,
+    group_size: usize,
+) -> Option<Location> {
+    update_location_bounded(topo, spread_rate, rank, group_size, topo.num_chiplets())
+}
+
+/// [`update_location`] restricted to the first `chiplets` chiplets — the
+/// socket-confined variant ARCAS uses when the group fits fewer sockets
+/// (§5.2: "ARCAS fully occupies all cores in a single socket").
+pub fn update_location_bounded(
+    topo: &Topology,
+    spread_rate: usize,
+    rank: usize,
+    group_size: usize,
+    chiplets: usize,
+) -> Option<Location> {
+    let chiplets = chiplets.clamp(1, topo.num_chiplets());
+    let cpc = topo.cores_per_chiplet;
+    // Bounds check (Algorithm 2 line 2).
+    if spread_rate == 0 || spread_rate > chiplets || group_size > topo.num_cores() {
+        return None;
+    }
+    let block = (cpc / spread_rate).max(1);
+    let mut chiplet = rank / block;
+    let mut slot = rank % block;
+    if chiplet >= chiplets {
+        // Wrap: move to the next slot group on the wrapped chiplet.
+        let wrap = chiplet / chiplets;
+        chiplet %= chiplets;
+        slot = (slot + wrap * block) % cpc;
+    }
+    let core = chiplet * cpc + slot;
+    let numa = topo.numa_of_core(core);
+    Some(Location { core, numa })
+}
+
+/// Compute the full rank→core map for a group (deduplicated fallback: if
+/// two ranks collide after wrap-around, later ranks move to the next free
+/// core — affinity must stay one-task-per-core whenever group ≤ cores).
+pub fn placement_map(topo: &Topology, spread_rate: usize, group_size: usize) -> Vec<usize> {
+    placement_map_bounded(topo, spread_rate, group_size, topo.num_chiplets())
+}
+
+/// [`placement_map`] restricted to the first `chiplets` chiplets.
+pub fn placement_map_bounded(
+    topo: &Topology,
+    spread_rate: usize,
+    group_size: usize,
+    chiplets: usize,
+) -> Vec<usize> {
+    let n_cores = topo.num_cores();
+    let mut used = vec![false; n_cores];
+    let mut map = Vec::with_capacity(group_size);
+    for rank in 0..group_size {
+        let want = update_location_bounded(topo, spread_rate, rank, group_size, chiplets)
+            .map(|l| l.core)
+            .unwrap_or(rank % n_cores);
+        let mut core = want;
+        // Linear-probe to the next free core on collision.
+        if group_size <= n_cores {
+            while used[core] {
+                core = (core + 1) % n_cores;
+            }
+            used[core] = true;
+        }
+        map.push(core);
+    }
+    map
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn topo() -> Topology {
+        Topology::milan_2s() // 16 chiplets x 8 cores
+    }
+
+    #[test]
+    fn spread_one_compacts_onto_first_chiplets() {
+        let t = topo();
+        // 8 threads, spread 1: all on chiplet 0.
+        for rank in 0..8 {
+            let l = update_location(&t, 1, rank, 8).unwrap();
+            assert_eq!(t.chiplet_of(l.core), 0, "rank {rank} -> {:?}", l);
+        }
+        // 16 threads fill chiplets 0 and 1.
+        let l = update_location(&t, 1, 15, 16).unwrap();
+        assert_eq!(t.chiplet_of(l.core), 1);
+    }
+
+    #[test]
+    fn max_spread_uses_one_core_per_chiplet() {
+        let t = topo();
+        let s = t.cores_per_chiplet; // spread = 8 -> block = 1
+        let mut chiplets_seen = std::collections::BTreeSet::new();
+        for rank in 0..8 {
+            let l = update_location(&t, s, rank, 8).unwrap();
+            chiplets_seen.insert(t.chiplet_of(l.core));
+        }
+        assert_eq!(chiplets_seen.len(), 8, "8 ranks on 8 distinct chiplets");
+    }
+
+    #[test]
+    fn spread_two_uses_twice_the_chiplets() {
+        let t = topo();
+        let used = |s: usize| -> usize {
+            (0..16)
+                .map(|r| t.chiplet_of(update_location(&t, s, r, 16).unwrap().core))
+                .collect::<std::collections::BTreeSet<_>>()
+                .len()
+        };
+        assert_eq!(used(1), 2);
+        assert_eq!(used(2), 4);
+        assert_eq!(used(4), 8);
+    }
+
+    #[test]
+    fn wrap_around_stays_in_bounds() {
+        let t = topo();
+        for rank in 0..t.num_cores() {
+            let l = update_location(&t, 8, rank, t.num_cores()).unwrap();
+            assert!(l.core < t.num_cores());
+            assert_eq!(l.numa, t.numa_of_core(l.core));
+        }
+    }
+
+    #[test]
+    fn bounds_checks_reject_invalid() {
+        let t = topo();
+        assert!(update_location(&t, 0, 0, 8).is_none());
+        assert!(update_location(&t, 17, 0, 8).is_none());
+        assert!(update_location(&t, 1, 0, 1000).is_none());
+    }
+
+    #[test]
+    fn placement_map_is_injective_when_it_fits() {
+        let t = topo();
+        for s in [1, 2, 4, 8] {
+            for n in [8, 16, 64, 128] {
+                let map = placement_map(&t, s, n);
+                let uniq: std::collections::BTreeSet<_> = map.iter().collect();
+                assert_eq!(uniq.len(), n, "spread={s} n={n} must be 1:1");
+            }
+        }
+    }
+
+    #[test]
+    fn controller_spreads_on_high_rate() {
+        let t = topo();
+        let mut c = AdaptiveController::new(&t);
+        assert_eq!(c.spread_rate, 1);
+        let changed = c.tick(c.timer_ns, 500.0);
+        assert_eq!(changed, Some(2));
+        // Not due yet: no change.
+        assert_eq!(c.tick(c.timer_ns + 1, 500.0), None);
+        // Next interval: spreads again.
+        assert_eq!(c.tick(2 * c.timer_ns, 500.0), Some(3));
+    }
+
+    #[test]
+    fn controller_compacts_on_low_rate() {
+        let t = topo();
+        let mut c = AdaptiveController::new(&t).with_spread(4);
+        assert_eq!(c.tick(c.timer_ns, 10.0), Some(3));
+        assert_eq!(c.tick(2 * c.timer_ns, 10.0), Some(2));
+    }
+
+    #[test]
+    fn controller_clamps_at_bounds() {
+        let t = topo();
+        let mut c = AdaptiveController::new(&t).with_spread(1);
+        assert_eq!(c.tick(c.timer_ns, 0.0), None); // already at 1
+        let mut c = AdaptiveController::new(&t).with_spread(16);
+        assert_eq!(c.tick(c.timer_ns, 1e9), None); // already at max
+    }
+
+    #[test]
+    fn approaches_shift_threshold() {
+        let t = topo();
+        // Rate of 300 is exactly at the default threshold.
+        let mut balanced = AdaptiveController::new(&t);
+        assert_eq!(balanced.tick(balanced.timer_ns, 300.0), Some(2));
+        // Location-centric doubles the threshold: 250 < 600/2 -> compact,
+        // while balanced would hold (250 in [150, 300)).
+        let mut loc = AdaptiveController::new(&t)
+            .with_approach(Approach::LocationCentric)
+            .with_spread(4);
+        assert_eq!(loc.tick(loc.timer_ns, 250.0), Some(3));
+        let mut bal = AdaptiveController::new(&t).with_spread(4);
+        assert_eq!(bal.tick(bal.timer_ns, 250.0), None, "hysteresis band holds");
+        // Cache-size-centric halves it: 200 >= 150 -> spread.
+        let mut cache = AdaptiveController::new(&t).with_approach(Approach::CacheSizeCentric);
+        assert_eq!(cache.tick(cache.timer_ns, 200.0), Some(2));
+    }
+
+    #[test]
+    fn decision_log_records() {
+        let t = topo();
+        let mut c = AdaptiveController::new(&t);
+        c.tick(c.timer_ns, 400.0);
+        c.tick(2 * c.timer_ns, 100.0);
+        assert_eq!(c.decisions.len(), 2);
+        assert_eq!(c.decisions[0].2, 2);
+        assert_eq!(c.decisions[1].2, 1);
+    }
+}

@@ -1,0 +1,154 @@
+//! Experiment harness shared by the per-figure/table benches.
+//!
+//! Each bench binary (rust/benches/*.rs) regenerates one figure or table
+//! of the paper; this module holds the common surface: the standard CLI,
+//! policy construction, scaled controller timers, and curated data for
+//! Fig. 4 (the cores-vs-memory-channels trend).
+
+use crate::controller::Approach;
+use crate::policy::{self, ArcasPolicy, Policy};
+use crate::topology::Topology;
+use crate::util::cli::{Args, Cli};
+
+/// Standard bench CLI: every figure bench accepts the same knobs.
+pub fn bench_cli(name: &str, about: &str) -> Cli {
+    Cli::new(name, about)
+        .opt("scale", "0.02", "dataset scale factor vs the paper's sizes")
+        .opt("cache-scale", "0.05", "L3 capacity scale factor (keeps crossovers aligned)")
+        .opt("cores", "", "comma-separated core counts (empty = figure default)")
+        .opt("seed", "42", "PRNG seed")
+        .opt("timer-us", "50", "ARCAS controller timer, microseconds")
+        .opt("topology", "milan_2s", "machine preset (milan_2s|milan_1s|genoa_1s|monolithic_64)")
+        .flag("quick", "smaller sweep for smoke runs")
+        .flag("bench", "(passed by `cargo bench`; ignored)")
+}
+
+/// Resolve topology + cache scaling from bench args.
+pub fn bench_topology(args: &Args) -> Topology {
+    let t = Topology::preset(&args.str("topology")).unwrap_or_else(Topology::milan_2s);
+    let cs = args.f64("cache-scale");
+    if (cs - 1.0).abs() > 1e-9 {
+        t.scale_caches(cs)
+    } else {
+        t
+    }
+}
+
+/// Core counts: CLI override or the figure's default sweep.
+pub fn core_sweep(args: &Args, default: &[usize]) -> Vec<usize> {
+    let s = args.str("cores");
+    if s.is_empty() {
+        if args.flag("quick") {
+            default
+                .iter()
+                .copied()
+                .filter(|&c| c <= 16)
+                .collect()
+        } else {
+            default.to_vec()
+        }
+    } else {
+        args.u64_list("cores").iter().map(|&c| c as usize).collect()
+    }
+}
+
+/// ARCAS policy with the bench-configured timer.
+pub fn arcas(topo: &Topology, args: &Args) -> Box<dyn Policy> {
+    Box::new(ArcasPolicy::new(topo).with_timer(args.u64("timer-us") * 1_000))
+}
+
+pub fn arcas_with(topo: &Topology, args: &Args, approach: Approach) -> Box<dyn Policy> {
+    Box::new(
+        ArcasPolicy::new(topo)
+            .with_timer(args.u64("timer-us") * 1_000)
+            .with_approach(approach),
+    )
+}
+
+/// Any baseline by name.
+pub fn baseline(name: &str, topo: &Topology) -> Box<dyn Policy> {
+    policy::by_name(name, topo).unwrap_or_else(|| panic!("unknown policy {name}"))
+}
+
+/// Fig. 4 curated data: (year, representative high-end server CPU,
+/// cores, memory channels). Sources are public vendor specs; the 2026
+/// row is the paper's projection.
+pub fn cores_vs_channels() -> Vec<(u32, &'static str, u32, u32)> {
+    vec![
+        (2010, "Xeon X7560", 8, 4),
+        (2012, "Xeon E5-2690", 8, 4),
+        (2014, "Xeon E5-2699 v3", 18, 4),
+        (2016, "Xeon E5-2699 v4", 22, 4),
+        (2017, "EPYC 7601 (Naples)", 32, 8),
+        (2019, "EPYC 7742 (Rome)", 64, 8),
+        (2021, "EPYC 7763 (Milan)", 64, 8),
+        (2023, "EPYC 9654 (Genoa)", 96, 12),
+        (2024, "EPYC 9754 (Bergamo)", 128, 12),
+        (2026, "projected", 300, 12),
+    ]
+}
+
+/// Print a standard bench header so every output records its config.
+pub fn print_header(name: &str, args: &Args, topo: &Topology) {
+    println!("### {name}");
+    println!(
+        "# topology={} scale={} cache-scale={} seed={} timer={}us quick={}",
+        topo.summary(),
+        args.str("scale"),
+        args.str("cache-scale"),
+        args.str("seed"),
+        args.str("timer-us"),
+        args.flag("quick"),
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(extra: &[&str]) -> Args {
+        bench_cli("t", "test")
+            .parse_from(extra.iter().map(|s| s.to_string()))
+            .unwrap()
+    }
+
+    #[test]
+    fn defaults_resolve() {
+        let args = parse(&[]);
+        let topo = bench_topology(&args);
+        assert_eq!(topo.name, "milan_2s");
+        // cache-scale 0.05 applied.
+        assert_eq!(topo.l3_per_chiplet, (32u64 << 20) / 20);
+    }
+
+    #[test]
+    fn core_sweep_override_and_quick() {
+        let args = parse(&["--cores", "1,2,4"]);
+        assert_eq!(core_sweep(&args, &[8, 16]), vec![1, 2, 4]);
+        let args = parse(&["--quick"]);
+        assert_eq!(core_sweep(&args, &[1, 8, 16, 64]), vec![1, 8, 16]);
+        let args = parse(&[]);
+        assert_eq!(core_sweep(&args, &[1, 8]), vec![1, 8]);
+    }
+
+    #[test]
+    fn policies_construct() {
+        let args = parse(&[]);
+        let topo = bench_topology(&args);
+        assert_eq!(arcas(&topo, &args).name(), "ARCAS");
+        assert_eq!(baseline("ring", &topo).name(), "RING");
+    }
+
+    #[test]
+    fn fig4_trend_is_monotone_in_cores() {
+        let rows = cores_vs_channels();
+        assert!(rows.len() >= 8);
+        for w in rows.windows(2) {
+            assert!(w[1].2 >= w[0].2, "cores never regress");
+        }
+        // The gap grows: cores/channel at the end >> at the start.
+        let first = rows[0].2 as f64 / rows[0].3 as f64;
+        let last = rows.last().unwrap().2 as f64 / rows.last().unwrap().3 as f64;
+        assert!(last > first * 5.0);
+    }
+}

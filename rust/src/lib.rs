@@ -1,0 +1,38 @@
+//! # ARCAS — Adaptive Runtime System for Chiplet-Aware Scheduling
+//!
+//! A from-scratch reproduction of the ARCAS runtime system (Fogli et al.,
+//! CS.AR 2025) for chiplet-based CPUs, built as a three-layer
+//! rust + JAX + Pallas stack (AOT via xla/PJRT).
+//!
+//! The crate contains:
+//! - the simulated chiplet machine substrate ([`topology`], [`cachesim`],
+//!   [`memsim`], [`sim`]) standing in for the paper's dual-socket AMD EPYC
+//!   Milan 7713 testbed,
+//! - the ARCAS runtime proper ([`task`], [`deque`], [`sched`],
+//!   [`profiler`], [`controller`], [`policy`], [`mem`], [`api`]),
+//! - all baseline systems the paper compares against (RING, Shoal,
+//!   DimmWitted native strategies, std::async, static Local/Distributed
+//!   cache policies) in [`policy`] and [`workloads`],
+//! - every evaluation workload ([`workloads`]): the graph suite,
+//!   StreamCluster, DimmWitted-style SGD, a mini OLAP engine (TPC-H-shaped)
+//!   and a mini OLTP engine (YCSB / TPC-C-lite),
+//! - the PJRT bridge ([`runtime`]) that loads the AOT-compiled JAX/Pallas
+//!   artifacts and runs them on the request path, and
+//! - the experiment [`harness`] regenerating every figure and table of the
+//!   paper's evaluation.
+pub mod util;
+pub mod topology;
+pub mod cachesim;
+pub mod memsim;
+pub mod sim;
+pub mod task;
+pub mod deque;
+pub mod sched;
+pub mod profiler;
+pub mod controller;
+pub mod policy;
+pub mod mem;
+pub mod api;
+pub mod runtime;
+pub mod workloads;
+pub mod harness;

@@ -1,0 +1,229 @@
+//! `arcas` — CLI for the ARCAS runtime reproduction.
+//!
+//! Subcommands:
+//!   topology   — print a machine preset and its latency classes
+//!   run        — run one workload under a policy and print the report
+//!   artifacts  — list + smoke-test the AOT PJRT artifacts
+//!   policies   — list available scheduling policies
+
+use std::sync::Arc;
+
+use arcas::harness;
+use arcas::policy;
+use arcas::sched::RunReport;
+use arcas::topology::Topology;
+use arcas::util::cli::Cli;
+use arcas::util::table::Table;
+use arcas::workloads::{graph, oltp, sgd, streamcluster};
+
+fn main() {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = if args.is_empty() {
+        "help".to_string()
+    } else {
+        args.remove(0)
+    };
+    match cmd.as_str() {
+        "topology" => cmd_topology(args),
+        "run" => cmd_run(args),
+        "artifacts" => cmd_artifacts(),
+        "policies" => cmd_policies(),
+        _ => {
+            println!(
+                "arcas — Adaptive Runtime System for Chiplet-Aware Scheduling\n\n\
+                 USAGE: arcas <topology|run|artifacts|policies> [options]\n\n\
+                   topology [preset]       print machine layout + latency classes\n\
+                   run [options]           run a workload (see `arcas run --help`)\n\
+                   artifacts               list + smoke-test AOT artifacts\n\
+                   policies                list scheduling policies\n\n\
+                 Figures/tables of the paper: `cargo bench --bench fig07_graph_scaling` etc."
+            );
+        }
+    }
+}
+
+fn cmd_topology(args: Vec<String>) {
+    let preset = args.first().map(|s| s.as_str()).unwrap_or("milan_2s");
+    let Some(t) = Topology::preset(preset) else {
+        eprintln!("unknown preset {preset} (milan_2s|milan_1s|genoa_1s|monolithic_64)");
+        std::process::exit(2);
+    };
+    println!("{}", t.summary());
+    let mut tab = Table::new(
+        "latency classes (ns)",
+        &["class", "latency", "example core pair"],
+    );
+    let pairs = [
+        (0usize, 1usize),
+        (0, t.cores_per_chiplet),
+        (0, 5 * t.cores_per_chiplet),
+        (0, t.cores_per_socket().min(t.num_cores() - 1)),
+    ];
+    for (a, b) in pairs {
+        if a == b || b >= t.num_cores() {
+            continue;
+        }
+        tab.row(vec![
+            t.latency_class(a, b).label().to_string(),
+            format!("{:.0}", t.core_to_core_ns(a, b)),
+            format!("core {a} <-> core {b}"),
+        ]);
+    }
+    println!("{}", tab.render());
+}
+
+fn print_report(name: &str, r: &RunReport) {
+    println!("== {name} ({} policy) ==", r.policy);
+    println!("  makespan          {}", arcas::util::fmt_ns(r.makespan_ns));
+    println!("  dispatches        {}", r.dispatches);
+    println!("  steals            {}", r.steals);
+    println!("  migrations        {}", r.migrations);
+    println!("  barrier epochs    {}", r.barrier_epochs);
+    println!("  final spread rate {}", r.spread_rate);
+    let c = &r.counts;
+    println!(
+        "  accesses          local {:.0} | near {:.0} | far {:.0} | dram {:.0}",
+        c.local, c.near, c.far, c.dram
+    );
+    println!("  dram bytes        {}", arcas::util::fmt_bytes(r.dram_bytes as u64));
+    println!(
+        "  avg threads       {:.2} (peak {})",
+        r.avg_concurrency, r.peak_concurrency
+    );
+}
+
+fn cmd_run(args: Vec<String>) {
+    let cli = Cli::new("arcas run", "run one workload under a policy")
+        .opt("workload", "bfs", "bfs|pr|cc|sssp|gups|streamcluster|sgd|ycsb|tpcc")
+        .opt("policy", "arcas", "arcas|ring|shoal|local|distributed|os_async")
+        .opt("cores", "16", "worker count")
+        .opt("scale", "12", "graph scale (2^N vertices) or workload scale")
+        .opt("topology", "milan_2s", "machine preset")
+        .opt("timer-us", "100", "ARCAS controller timer (us)")
+        .opt("seed", "42", "PRNG seed");
+    let a = cli.parse_from(args).unwrap_or_else(|msg| {
+        eprintln!("{msg}");
+        std::process::exit(2);
+    });
+    let topo = Topology::preset(&a.str("topology")).unwrap_or_else(Topology::milan_2s);
+    let cores = a.usize("cores");
+    let seed = a.u64("seed");
+    let mk_policy = || -> Box<dyn policy::Policy> {
+        if a.str("policy") == "arcas" {
+            Box::new(policy::ArcasPolicy::new(&topo).with_timer(a.u64("timer-us") * 1000))
+        } else {
+            policy::by_name(&a.str("policy"), &topo).unwrap_or_else(|| {
+                eprintln!("unknown policy");
+                std::process::exit(2);
+            })
+        }
+    };
+    let wl = a.str("workload");
+    match wl.as_str() {
+        "bfs" | "pr" | "cc" | "sssp" | "gups" => {
+            let scale = a.u64("scale") as u32;
+            if wl == "gups" {
+                let (run, _) =
+                    graph::run_gups(&topo, mk_policy(), cores, 1 << scale, 100_000, seed);
+                print_report("GUPS", &run.report);
+                println!("  GUPS              {:.4} Gup/s", run.teps() / 1e9);
+                return;
+            }
+            let g = Arc::new(graph::kronecker::kronecker(scale, 16, seed));
+            println!(
+                "graph: 2^{scale} vertices, {} edges ({})",
+                g.num_edges(),
+                arcas::util::fmt_bytes(g.bytes())
+            );
+            let src = g.max_degree_vertex();
+            let (run, _result_size) = match wl.as_str() {
+                "bfs" => {
+                    let (r, d) = graph::run_bfs(&topo, mk_policy(), cores, g, src);
+                    (r, d.iter().filter(|&&x| x != u32::MAX).count())
+                }
+                "pr" => {
+                    let (r, pr) = graph::run_pagerank(&topo, mk_policy(), cores, g, 10);
+                    (r, pr.len())
+                }
+                "cc" => {
+                    let (r, l) = graph::run_cc(&topo, mk_policy(), cores, g);
+                    (r, graph::algos::component_count(&l))
+                }
+                _ => {
+                    let (r, d) = graph::run_sssp(&topo, mk_policy(), cores, g, src);
+                    (r, d.iter().filter(|&&x| x != u64::MAX).count())
+                }
+            };
+            print_report(&wl, &run.report);
+            println!("  TEPS              {:.3} M/s", run.teps() / 1e6);
+        }
+        "streamcluster" => {
+            let cfg = streamcluster::ScConfig::bench(0.05);
+            let pts = Arc::new(streamcluster::generate_points(&cfg));
+            let res = streamcluster::run_streamcluster(&topo, mk_policy(), cores, &cfg, pts);
+            print_report("streamcluster", &res.report);
+            println!("  centers           {}", res.n_centers);
+            println!("  final cost        {:.1}", res.final_cost);
+        }
+        "sgd" => {
+            let cfg = sgd::SgdConfig::bench(0.05);
+            let data = sgd::generate_data(&cfg);
+            let run = sgd::run_sgd(
+                &topo,
+                mk_policy(),
+                cores,
+                &cfg,
+                &data,
+                sgd::DwStrategy::PerCore,
+                sgd::SgdMode::Grad,
+                Arc::new(sgd::RustGrad),
+            );
+            print_report("sgd", &run.report);
+            println!("  throughput        {:.1} GB/s", run.gbps());
+            println!("  loss trace        {:?}", run.loss_trace);
+        }
+        "ycsb" | "tpcc" => {
+            let wl_spec = if wl == "ycsb" {
+                oltp::OltpWorkload::ycsb_scaled(0.01)
+            } else {
+                oltp::OltpWorkload::tpcc_scaled(0.2)
+            };
+            let run = oltp::run_oltp(&topo, mk_policy(), cores, &wl_spec, 20_000, seed);
+            print_report(&wl, &run.report);
+            println!("  commits/s         {:.0}", run.commits_per_sec());
+            println!("  aborts            {}", run.aborts);
+        }
+        other => {
+            eprintln!("unknown workload {other}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_artifacts() {
+    let dir = arcas::runtime::PjrtRuntime::default_dir();
+    match arcas::runtime::PjrtRuntime::load(&dir) {
+        Ok(rt) => {
+            println!("platform: {}", rt.platform);
+            println!("{} artifacts in {dir}:", rt.len());
+            for n in rt.names() {
+                println!("  {n}");
+            }
+        }
+        Err(e) => {
+            eprintln!("cannot load artifacts from {dir}: {e:#}");
+            eprintln!("run `make artifacts` first");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn cmd_policies() {
+    let topo = Topology::milan_2s();
+    println!("available policies:");
+    for name in ["arcas", "ring", "shoal", "local", "distributed", "os_async"] {
+        let p = policy::by_name(name, &topo).unwrap();
+        println!("  {:<12} {}", name, p.name());
+    }
+    let _ = harness::cores_vs_channels();
+}

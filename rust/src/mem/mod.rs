@@ -1,0 +1,171 @@
+//! Memory regions and NUMA-aware placement — the `numactl`/`mbind`
+//! substitute the runtime manages (§4.1 "task and memory manager").
+//!
+//! Workloads allocate named [`Region`]s with a [`Placement`] policy; the
+//! cache model tracks residency per region, and the DRAM side of an access
+//! is charged against the region's home NUMA node(s). Algorithm 2's
+//! `set_mempolicy(MPOL_BIND, …)` maps to [`MemoryManager::rebind`].
+
+use std::collections::HashMap;
+
+/// Opaque region handle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RegionId(pub u32);
+
+/// NUMA placement policy for a region.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    /// All pages on one NUMA node (MPOL_BIND).
+    Bind(usize),
+    /// Pages interleaved across all NUMA nodes (MPOL_INTERLEAVE).
+    Interleave,
+    /// Logically replicated per NUMA node (Shoal-style array replication —
+    /// reads are always node-local, writes pay a broadcast).
+    Replicated,
+}
+
+/// A named allocation.
+#[derive(Clone, Debug)]
+pub struct Region {
+    pub id: RegionId,
+    pub label: String,
+    pub size: u64,
+    pub placement: Placement,
+}
+
+/// Region registry + placement bookkeeping.
+#[derive(Clone, Debug, Default)]
+pub struct MemoryManager {
+    regions: HashMap<RegionId, Region>,
+    next: u32,
+}
+
+impl MemoryManager {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Allocate a region; returns its handle.
+    pub fn alloc(&mut self, label: &str, size: u64, placement: Placement) -> RegionId {
+        self.next += 1;
+        let id = RegionId(self.next);
+        self.regions.insert(
+            id,
+            Region {
+                id,
+                label: label.to_string(),
+                size: size.max(1),
+                placement,
+            },
+        );
+        id
+    }
+
+    pub fn free(&mut self, id: RegionId) -> Option<Region> {
+        self.regions.remove(&id)
+    }
+
+    pub fn get(&self, id: RegionId) -> Option<&Region> {
+        self.regions.get(&id)
+    }
+
+    pub fn size(&self, id: RegionId) -> u64 {
+        self.regions.get(&id).map(|r| r.size).unwrap_or(1)
+    }
+
+    pub fn placement(&self, id: RegionId) -> Placement {
+        self.regions
+            .get(&id)
+            .map(|r| r.placement)
+            .unwrap_or(Placement::Interleave)
+    }
+
+    /// Re-bind a region to a NUMA node (Algorithm 2 line 14:
+    /// `set_mempolicy(MPOL_BIND, 1 << numa_node)`).
+    pub fn rebind(&mut self, id: RegionId, numa: usize) {
+        if let Some(r) = self.regions.get_mut(&id) {
+            r.placement = Placement::Bind(numa);
+        }
+    }
+
+    /// Expected DRAM-latency multiplier context: which NUMA node serves a
+    /// DRAM access to `region` issued from `core_numa`, under the region's
+    /// placement. Returns `(serving_numa, local_fraction)`:
+    /// for `Interleave` the access is split across nodes.
+    pub fn dram_home(&self, id: RegionId, core_numa: usize, num_numa: usize) -> (usize, f64) {
+        match self.placement(id) {
+            Placement::Bind(n) => (n, if n == core_numa { 1.0 } else { 0.0 }),
+            Placement::Replicated => (core_numa, 1.0),
+            Placement::Interleave => (core_numa, 1.0 / num_numa.max(1) as f64),
+        }
+    }
+
+    pub fn total_allocated(&self) -> u64 {
+        self.regions.values().map(|r| r.size).sum()
+    }
+
+    pub fn len(&self) -> usize {
+        self.regions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.regions.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_assigns_unique_ids() {
+        let mut m = MemoryManager::new();
+        let a = m.alloc("a", 100, Placement::Bind(0));
+        let b = m.alloc("b", 200, Placement::Interleave);
+        assert_ne!(a, b);
+        assert_eq!(m.size(a), 100);
+        assert_eq!(m.size(b), 200);
+        assert_eq!(m.total_allocated(), 300);
+        assert_eq!(m.len(), 2);
+    }
+
+    #[test]
+    fn rebind_changes_placement() {
+        let mut m = MemoryManager::new();
+        let a = m.alloc("a", 100, Placement::Bind(0));
+        m.rebind(a, 1);
+        assert_eq!(m.placement(a), Placement::Bind(1));
+    }
+
+    #[test]
+    fn dram_home_bind() {
+        let mut m = MemoryManager::new();
+        let a = m.alloc("a", 100, Placement::Bind(1));
+        assert_eq!(m.dram_home(a, 1, 2), (1, 1.0));
+        assert_eq!(m.dram_home(a, 0, 2), (1, 0.0));
+    }
+
+    #[test]
+    fn dram_home_interleave_splits() {
+        let mut m = MemoryManager::new();
+        let a = m.alloc("a", 100, Placement::Interleave);
+        let (_, frac) = m.dram_home(a, 0, 2);
+        assert!((frac - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dram_home_replicated_is_local() {
+        let mut m = MemoryManager::new();
+        let a = m.alloc("a", 100, Placement::Replicated);
+        assert_eq!(m.dram_home(a, 1, 2), (1, 1.0));
+    }
+
+    #[test]
+    fn free_removes() {
+        let mut m = MemoryManager::new();
+        let a = m.alloc("a", 100, Placement::Bind(0));
+        assert!(m.free(a).is_some());
+        assert!(m.get(a).is_none());
+        assert!(m.is_empty());
+    }
+}

@@ -1,0 +1,626 @@
+//! Scheduling policies: ARCAS and every baseline the paper compares
+//! against.
+//!
+//! A [`Policy`] answers four questions for the executor:
+//! 1. where does each task rank start (`initial_placement`),
+//! 2. how does placement react to profiling windows (`on_timer`),
+//! 3. where may an idle core steal from (`steal_order`),
+//! 4. what does a context switch cost (`switch_model`).
+//!
+//! | policy | stands in for | signature behaviour |
+//! |---|---|---|
+//! | [`ArcasPolicy`]            | the paper's system     | Algorithms 1+2, chiplet-first stealing |
+//! | [`RingPolicy`]             | RING [26]              | NUMA round-robin, chiplet-agnostic, NUMA-confined stealing |
+//! | [`ShoalPolicy`]            | Shoal [17]             | strict sequential task→core order (fills chiplets one by one) |
+//! | [`LocalCachePolicy`]       | §2.3 LocalCache        | static compaction on fewest chiplets |
+//! | [`DistributedCachePolicy`] | §2.3 DistributedCache  | static max spread across chiplets |
+//! | [`OsAsyncPolicy`]          | std::async baseline    | OS threads, no affinity, OS switch costs |
+
+use crate::controller::{placement_map, placement_map_bounded, AdaptiveController, Approach};
+use crate::profiler::WindowSample;
+use crate::topology::Topology;
+
+/// Context-switch cost regime.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SwitchModel {
+    /// User-space coroutine switch (~tens of ns).
+    Coroutine,
+    /// OS thread switch (~µs) + spawn cost on first dispatch.
+    OsThread,
+}
+
+/// A scheduling policy.
+pub trait Policy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Rank → core map at spawn time.
+    fn initial_placement(&mut self, topo: &Topology, group_size: usize) -> Vec<usize>;
+
+    /// Periodic adaptation; returns a new rank → core map to migrate to.
+    fn on_timer(
+        &mut self,
+        _topo: &Topology,
+        _now_ns: u64,
+        _sample: &WindowSample,
+        _group_size: usize,
+    ) -> Option<Vec<usize>> {
+        None
+    }
+
+    /// Cores an idle `thief` may steal from, in preference order.
+    /// Default: same chiplet, then same NUMA, then everywhere.
+    fn steal_order(&self, topo: &Topology, thief: usize, active: &[usize]) -> Vec<usize> {
+        chiplet_first_steal_order(topo, thief, active)
+    }
+
+    fn switch_model(&self) -> SwitchModel {
+        SwitchModel::Coroutine
+    }
+
+    /// The controller's current spread rate (diagnostics; static policies
+    /// report their fixed value).
+    fn spread_rate(&self) -> usize {
+        1
+    }
+
+    /// The policy's preferred profiling-window length; the executor adopts
+    /// it so Algorithm 1 and the profiler sample on the same cadence.
+    fn timer_ns(&self) -> Option<u64> {
+        None
+    }
+}
+
+/// ARCAS's steal order (§4.4): same chiplet first, then same NUMA, then
+/// other chiplets — preserving cache locality.
+pub fn chiplet_first_steal_order(topo: &Topology, thief: usize, active: &[usize]) -> Vec<usize> {
+    let my_chiplet = topo.chiplet_of(thief);
+    let my_numa = topo.numa_of_core(thief);
+    let mut order: Vec<usize> = active.iter().copied().filter(|&c| c != thief).collect();
+    order.sort_by_key(|&c| {
+        let tier = if topo.chiplet_of(c) == my_chiplet {
+            0
+        } else if topo.numa_of_core(c) == my_numa {
+            1
+        } else {
+            2
+        };
+        (tier, c)
+    });
+    order
+}
+
+/// NUMA-confined steal order (RING/Shoal: never steal across sockets).
+pub fn numa_confined_steal_order(topo: &Topology, thief: usize, active: &[usize]) -> Vec<usize> {
+    let my_numa = topo.numa_of_core(thief);
+    let mut order: Vec<usize> = active
+        .iter()
+        .copied()
+        .filter(|&c| c != thief && topo.numa_of_core(c) == my_numa)
+        .collect();
+    order.sort_unstable();
+    order
+}
+
+// =====================================================================
+// ARCAS
+// =====================================================================
+
+/// The paper's adaptive chiplet-aware policy (Algorithms 1 + 2).
+pub struct ArcasPolicy {
+    pub controller: AdaptiveController,
+    /// Last applied rank→core map (to skip no-benefit reshuffles).
+    last_map: Vec<usize>,
+    /// Chiplets the group is confined to (minimal socket span).
+    avail_chiplets: usize,
+}
+
+impl ArcasPolicy {
+    pub fn new(topo: &Topology) -> Self {
+        Self {
+            controller: AdaptiveController::new(topo),
+            last_map: Vec::new(),
+            avail_chiplets: topo.num_chiplets(),
+        }
+    }
+
+    pub fn with_approach(mut self, a: Approach) -> Self {
+        self.controller = self.controller.with_approach(a);
+        self
+    }
+
+    pub fn with_threshold(mut self, rate: f64) -> Self {
+        self.controller = self.controller.with_threshold(rate);
+        self
+    }
+
+    pub fn with_timer(mut self, timer_ns: u64) -> Self {
+        self.controller = self.controller.with_timer(timer_ns);
+        self
+    }
+
+    /// Start from a spread rate matched to the group size: use the fewest
+    /// *sockets* that can host the group (§5.2: "ARCAS fully occupies all
+    /// cores in a single socket"), but all chiplets *within* those sockets
+    /// for maximal aggregate L3 (§5.3: 16 tasks across all 8 chiplets).
+    /// Algorithm 1 then adapts from there.
+    fn initial_spread(&self, topo: &Topology, group_size: usize) -> usize {
+        let sockets_needed = crate::util::div_ceil(
+            group_size as u64,
+            topo.cores_per_socket() as u64,
+        ) as usize;
+        let avail_chiplets = (sockets_needed * topo.numa_per_socket * topo.chiplets_per_numa)
+            .min(topo.num_chiplets());
+        // Spread s puts the group on ~ group*s/cores_per_chiplet chiplets;
+        // choose s so that covers all the available chiplets (round up:
+        // prefer touching every chiplet's L3 over perfect packing).
+        let want = crate::util::div_ceil(
+            (avail_chiplets * topo.cores_per_chiplet) as u64,
+            group_size.max(1) as u64,
+        ) as usize;
+        want.clamp(1, topo.num_chiplets())
+    }
+}
+
+impl Policy for ArcasPolicy {
+    fn name(&self) -> &'static str {
+        "ARCAS"
+    }
+
+    fn initial_placement(&mut self, topo: &Topology, group_size: usize) -> Vec<usize> {
+        let sockets_needed = crate::util::div_ceil(
+            group_size as u64,
+            topo.cores_per_socket() as u64,
+        ) as usize;
+        self.avail_chiplets = (sockets_needed * topo.numa_per_socket * topo.chiplets_per_numa)
+            .min(topo.num_chiplets());
+        let s = self.initial_spread(topo, group_size);
+        self.controller = self.controller.clone().with_spread(s).with_warmup(4);
+        self.controller.max_chiplets = self.avail_chiplets;
+        let map = placement_map_bounded(topo, s, group_size, self.avail_chiplets);
+        self.last_map = map.clone();
+        map
+    }
+
+    fn on_timer(
+        &mut self,
+        topo: &Topology,
+        now_ns: u64,
+        sample: &WindowSample,
+        group_size: usize,
+    ) -> Option<Vec<usize>> {
+        let s = self.controller.tick(now_ns, sample.rate)?;
+        let map = placement_map_bounded(topo, s, group_size, self.avail_chiplets);
+        // Migrating is only worth it when the *chiplet occupancy* changes
+        // (more or fewer L3 slices in play). A spread step that merely
+        // reshuffles ranks across the same chiplet histogram would throw
+        // away warmed residency for nothing — skip it.
+        let hist = |m: &[usize]| -> Vec<usize> {
+            let mut h = vec![0usize; topo.num_chiplets()];
+            for &c in m {
+                h[topo.chiplet_of(c)] += 1;
+            }
+            h
+        };
+        if !self.last_map.is_empty() && hist(&map) == hist(&self.last_map) {
+            return None;
+        }
+        self.last_map = map.clone();
+        Some(map)
+    }
+
+    fn spread_rate(&self) -> usize {
+        self.controller.spread_rate
+    }
+
+    fn timer_ns(&self) -> Option<u64> {
+        Some(self.controller.timer_ns)
+    }
+}
+
+// =====================================================================
+// RING baseline
+// =====================================================================
+
+/// RING [26]: NUMA-aware message-batching runtime. Placement is
+/// NUMA-balanced but *chiplet-agnostic*: ranks are split evenly across
+/// NUMA domains, then assigned to cores sequentially within each domain —
+/// RING avoids remote-NUMA memory but does nothing about the partitioned
+/// L3 (the effect Tab. 1 quantifies). Like the OS scheduler underneath
+/// it, RING periodically rebalances tasks over cores with no notion of
+/// chiplet boundaries ("unrestricted core/task replacement", §5.3) —
+/// every rebalance walks warmed state across chiplets and sockets.
+pub struct RingPolicy {
+    base_map: Vec<usize>,
+    rotation: usize,
+    /// Rebalance cadence (the OS scheduler ticks regardless of what the
+    /// runtime wants; ~200 us matches the scaled experiments' ratio of
+    /// rebalances to run length).
+    timer_ns: u64,
+}
+
+impl Default for RingPolicy {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RingPolicy {
+    pub fn new() -> Self {
+        Self {
+            base_map: Vec::new(),
+            rotation: 0,
+            timer_ns: 200_000,
+        }
+    }
+
+    pub fn with_timer(mut self, timer_ns: u64) -> Self {
+        self.timer_ns = timer_ns;
+        self
+    }
+}
+
+impl Policy for RingPolicy {
+    fn name(&self) -> &'static str {
+        "RING"
+    }
+
+    fn initial_placement(&mut self, topo: &Topology, group_size: usize) -> Vec<usize> {
+        let numa = topo.num_numa();
+        let per_numa = crate::util::div_ceil(group_size as u64, numa as u64) as usize;
+        let map: Vec<usize> = (0..group_size)
+            .map(|rank| {
+                let node = rank / per_numa;
+                let idx = rank % per_numa;
+                let base = node * topo.cores_per_numa();
+                base + (idx % topo.cores_per_numa())
+            })
+            .collect();
+        self.base_map = map.clone();
+        map
+    }
+
+    fn on_timer(
+        &mut self,
+        _topo: &Topology,
+        _now_ns: u64,
+        _sample: &WindowSample,
+        group_size: usize,
+    ) -> Option<Vec<usize>> {
+        if self.base_map.len() != group_size || group_size < 2 {
+            return None;
+        }
+        // Chiplet-agnostic rebalance: rotate ranks over the in-use cores.
+        self.rotation += 1;
+        let n = self.base_map.len();
+        Some(
+            (0..n)
+                .map(|rank| self.base_map[(rank + self.rotation) % n])
+                .collect(),
+        )
+    }
+
+    fn steal_order(&self, topo: &Topology, thief: usize, active: &[usize]) -> Vec<usize> {
+        numa_confined_steal_order(topo, thief, active)
+    }
+
+    fn timer_ns(&self) -> Option<u64> {
+        Some(self.timer_ns)
+    }
+}
+
+// =====================================================================
+// Shoal baseline
+// =====================================================================
+
+/// Shoal [17]: strictly sequential task→core assignment (task 0 → core 0,
+/// task 1 → core 1, ...). NUMA-aware memory via array replication, but at
+/// 16 cores it confines compute to 2 of 8 chiplets (§5.3's pathology).
+/// Within its core span, tasks are periodically rebalanced with no
+/// chiplet awareness (§5.3: "unrestricted core/task replacement").
+pub struct ShoalPolicy {
+    span: usize,
+    rotation: usize,
+    timer_ns: u64,
+}
+
+impl Default for ShoalPolicy {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ShoalPolicy {
+    pub fn new() -> Self {
+        Self {
+            span: 0,
+            rotation: 0,
+            timer_ns: 200_000,
+        }
+    }
+
+    pub fn with_timer(mut self, timer_ns: u64) -> Self {
+        self.timer_ns = timer_ns;
+        self
+    }
+}
+
+impl Policy for ShoalPolicy {
+    fn name(&self) -> &'static str {
+        "Shoal"
+    }
+
+    fn initial_placement(&mut self, topo: &Topology, group_size: usize) -> Vec<usize> {
+        self.span = group_size.min(topo.num_cores());
+        (0..group_size).map(|r| r % topo.num_cores()).collect()
+    }
+
+    fn on_timer(
+        &mut self,
+        topo: &Topology,
+        _now_ns: u64,
+        _sample: &WindowSample,
+        group_size: usize,
+    ) -> Option<Vec<usize>> {
+        if self.span < 2 {
+            return None;
+        }
+        // Rebalance within the sequential span only when it crosses a
+        // chiplet boundary (a single-chiplet span has nothing to lose).
+        if self.span <= topo.cores_per_chiplet {
+            return None;
+        }
+        self.rotation += 1;
+        Some(
+            (0..group_size)
+                .map(|rank| (rank + self.rotation) % self.span)
+                .collect(),
+        )
+    }
+
+    fn steal_order(&self, topo: &Topology, thief: usize, active: &[usize]) -> Vec<usize> {
+        numa_confined_steal_order(topo, thief, active)
+    }
+
+    fn timer_ns(&self) -> Option<u64> {
+        Some(self.timer_ns)
+    }
+}
+
+// =====================================================================
+// Static LocalCache / DistributedCache (§2.3, Fig. 5, Fig. 13)
+// =====================================================================
+
+/// Confine tasks to the fewest chiplets (maximize locality, minimize
+/// aggregate L3).
+pub struct LocalCachePolicy;
+
+impl Policy for LocalCachePolicy {
+    fn name(&self) -> &'static str {
+        "LocalCache"
+    }
+
+    fn initial_placement(&mut self, topo: &Topology, group_size: usize) -> Vec<usize> {
+        placement_map(topo, 1, group_size)
+    }
+
+    fn spread_rate(&self) -> usize {
+        1
+    }
+}
+
+/// Spread tasks across the maximum number of chiplets (maximize aggregate
+/// L3, pay inter-chiplet latency).
+pub struct DistributedCachePolicy;
+
+impl Policy for DistributedCachePolicy {
+    fn name(&self) -> &'static str {
+        "DistributedCache"
+    }
+
+    fn initial_placement(&mut self, topo: &Topology, group_size: usize) -> Vec<usize> {
+        placement_map(topo, topo.num_chiplets().min(topo.cores_per_chiplet), group_size)
+    }
+
+    fn spread_rate(&self) -> usize {
+        8
+    }
+}
+
+// =====================================================================
+// std::async baseline
+// =====================================================================
+
+/// OS-thread-per-task execution (the DimmWitted+std::async baseline of
+/// Fig. 10/11): no affinity (round-robin), OS context-switch and
+/// thread-spawn costs, free-for-all stealing (the OS load balancer).
+/// `confined(n)` restricts threads to the first `n` cores (the taskset
+/// the paper's per-core-count sweep implies).
+#[derive(Default)]
+pub struct OsAsyncPolicy {
+    span: Option<usize>,
+}
+
+impl OsAsyncPolicy {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn confined(span: usize) -> Self {
+        Self { span: Some(span) }
+    }
+}
+
+impl Policy for OsAsyncPolicy {
+    fn name(&self) -> &'static str {
+        "std::async"
+    }
+
+    fn initial_placement(&mut self, topo: &Topology, group_size: usize) -> Vec<usize> {
+        // The OS spreads runnable threads over the allowed cores with no
+        // notion of chiplets; oversubscription wraps around.
+        let span = self.span.unwrap_or(topo.num_cores()).clamp(1, topo.num_cores());
+        (0..group_size).map(|r| r % span).collect()
+    }
+
+    fn steal_order(&self, topo: &Topology, thief: usize, active: &[usize]) -> Vec<usize> {
+        // Models the kernel's CFS migrating threads anywhere.
+        let mut order: Vec<usize> = active.iter().copied().filter(|&c| c != thief).collect();
+        // Rotate by thief to avoid herd behaviour.
+        if !order.is_empty() {
+            let pivot = thief % order.len();
+            order.rotate_left(pivot);
+        }
+        let _ = topo;
+        order
+    }
+
+    fn switch_model(&self) -> SwitchModel {
+        SwitchModel::OsThread
+    }
+}
+
+/// Construct a policy by name (CLI surface).
+pub fn by_name(name: &str, topo: &Topology) -> Option<Box<dyn Policy>> {
+    match name {
+        "arcas" => Some(Box::new(ArcasPolicy::new(topo))),
+        "ring" => Some(Box::new(RingPolicy::new())),
+        "shoal" => Some(Box::new(ShoalPolicy::new())),
+        "local" => Some(Box::new(LocalCachePolicy)),
+        "distributed" => Some(Box::new(DistributedCachePolicy)),
+        "os_async" => Some(Box::new(OsAsyncPolicy::new())),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cachesim::ClassCounts;
+
+    fn topo() -> Topology {
+        Topology::milan_2s()
+    }
+
+    fn chiplets_used(topo: &Topology, map: &[usize]) -> usize {
+        map.iter()
+            .map(|&c| topo.chiplet_of(c))
+            .collect::<std::collections::BTreeSet<_>>()
+            .len()
+    }
+
+    #[test]
+    fn shoal_confines_16_tasks_to_2_chiplets() {
+        let t = topo();
+        let map = ShoalPolicy::new().initial_placement(&t, 16);
+        assert_eq!(chiplets_used(&t, &map), 2, "the §5.3 pathology");
+    }
+
+    #[test]
+    fn arcas_spreads_16_tasks_across_8_chiplets() {
+        let t = Topology::milan_1s();
+        let mut p = ArcasPolicy::new(&t);
+        let map = p.initial_placement(&t, 16);
+        assert_eq!(chiplets_used(&t, &map), 8, "§5.3: ARCAS uses all chiplets");
+    }
+
+    #[test]
+    fn local_vs_distributed_chiplet_counts() {
+        let t = Topology::milan_1s();
+        let local = LocalCachePolicy.initial_placement(&t, 8);
+        let dist = DistributedCachePolicy.initial_placement(&t, 8);
+        assert_eq!(chiplets_used(&t, &local), 1);
+        assert_eq!(chiplets_used(&t, &dist), 8);
+    }
+
+    #[test]
+    fn ring_balances_across_numa_ignoring_chiplets() {
+        let t = topo();
+        let map = RingPolicy::new().initial_placement(&t, 64);
+        let numa0 = map.iter().filter(|&&c| t.numa_of_core(c) == 0).count();
+        let numa1 = map.iter().filter(|&&c| t.numa_of_core(c) == 1).count();
+        assert_eq!(numa0, 32);
+        assert_eq!(numa1, 32);
+        // Within a NUMA node, cores are sequential => chiplets fill in
+        // order (chiplet-agnostic compaction).
+        assert_eq!(chiplets_used(&t, &map[..32]), 4);
+    }
+
+    #[test]
+    fn steal_order_prefers_chiplet_then_numa() {
+        let t = topo();
+        let active: Vec<usize> = vec![1, 9, 70, 3];
+        let order = chiplet_first_steal_order(&t, 0, &active);
+        assert_eq!(order, vec![1, 3, 9, 70]);
+    }
+
+    #[test]
+    fn numa_confined_steal_never_crosses_socket() {
+        let t = topo();
+        let active: Vec<usize> = vec![1, 9, 70, 100];
+        let order = numa_confined_steal_order(&t, 0, &active);
+        assert_eq!(order, vec![1, 9]);
+    }
+
+    #[test]
+    fn arcas_timer_adapts_placement() {
+        let t = Topology::milan_1s();
+        let mut p = ArcasPolicy::new(&t).with_timer(1_000_000);
+        let _ = p.initial_placement(&t, 8); // spread = 8 initially
+        let sample_low = WindowSample {
+            at_ns: 1_000_000,
+            fill_events: 0.0,
+            rate: 0.0,
+            counts: ClassCounts::default(),
+            live_tasks: 8,
+        };
+        // Low remote-traffic: compacts by one step. Spread 8→7 does not
+        // change the chiplet histogram for 8 tasks (block stays 1), so no
+        // migration map is emitted yet.
+        // The warmup grace suppresses immediate compaction; spread holds.
+        let new_map = p.on_timer(&t, 1_000_000, &sample_low, 8);
+        assert!(new_map.is_none());
+        assert_eq!(p.spread_rate(), 8, "warmup grace holds the spread");
+        // After the grace period, sustained low traffic compacts; the
+        // first *migration* comes when the chiplet histogram changes
+        // (spread 4: 2 ranks per chiplet).
+        let mut emitted = None;
+        for k in 2..24u64 {
+            let s = WindowSample {
+                at_ns: k * 1_000_000,
+                ..sample_low
+            };
+            if let Some(m) = p.on_timer(&t, k * 1_000_000, &s, 8) {
+                emitted = Some((p.spread_rate(), m));
+                break;
+            }
+        }
+        let (spread, map) = emitted.expect("compaction must eventually migrate");
+        assert_eq!(spread, 4);
+        let chiplets: std::collections::BTreeSet<_> =
+            map.iter().map(|&c| t.chiplet_of(c)).collect();
+        assert_eq!(chiplets.len(), 4);
+    }
+
+    #[test]
+    fn os_async_allows_oversubscription() {
+        let t = topo();
+        let map = OsAsyncPolicy::new().initial_placement(&t, 641); // Fig. 11's 641 threads
+        assert_eq!(map.len(), 641);
+        assert!(map.iter().all(|&c| c < t.num_cores()));
+    }
+
+    #[test]
+    fn by_name_resolves_all() {
+        let t = topo();
+        for n in ["arcas", "ring", "shoal", "local", "distributed", "os_async"] {
+            assert!(by_name(n, &t).is_some(), "{n}");
+        }
+        assert!(by_name("nope", &t).is_none());
+    }
+
+    #[test]
+    fn switch_models() {
+        assert_eq!(OsAsyncPolicy::new().switch_model(), SwitchModel::OsThread);
+        assert_eq!(RingPolicy::new().switch_model(), SwitchModel::Coroutine);
+    }
+}

@@ -1,0 +1,183 @@
+//! Low-overhead performance profiler (§4.5).
+//!
+//! The profiler is the component that turns raw cache-model counters into
+//! the signals the adaptive controller consumes:
+//!
+//! - **windowed cache-fill event rate** — `getEventCounter()` /
+//!   `resetEventCounter()` from Algorithm 1,
+//! - **concurrency timeline** — live thread/task samples (Fig. 11),
+//! - **per-window hierarchy mix** — local / near / far / DRAM shares used
+//!   by the approach selection (location-centric vs cache-size-centric).
+//!
+//! In the real system this is libpfm reads at coroutine yield points; here
+//! the counters come from the cache model, sampled at the same points.
+
+use crate::cachesim::{ClassCounts, Counters};
+
+/// One profiling window snapshot.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WindowSample {
+    pub at_ns: u64,
+    /// Remote-chiplet fill events in this window.
+    pub fill_events: f64,
+    /// Event rate normalized to events per `timer_ns`.
+    pub rate: f64,
+    pub counts: ClassCounts,
+    /// Live tasks/threads at sample time.
+    pub live_tasks: usize,
+}
+
+/// Windowed profiler state.
+#[derive(Clone, Debug, Default)]
+pub struct Profiler {
+    last_total: ClassCounts,
+    last_ns: u64,
+    pub samples: Vec<WindowSample>,
+    /// Concurrency timeline (Fig. 11): (t_ns, live threads).
+    pub concurrency: Vec<(u64, usize)>,
+}
+
+impl Profiler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// `getEventCounter()` + window bookkeeping: returns the sample for
+    /// the window ending at `now_ns`, computing the fill-event *rate*
+    /// normalized to `timer_ns` (Algorithm 1 line 6:
+    /// `rate ← counter × SCHEDULER_TIMER / elapsed`).
+    pub fn sample_window(
+        &mut self,
+        now_ns: u64,
+        counters: &Counters,
+        timer_ns: u64,
+        live_tasks: usize,
+    ) -> WindowSample {
+        let total = counters.total();
+        let fills = (total.fill_events() - self.last_total.fill_events()).max(0.0);
+        let elapsed = now_ns.saturating_sub(self.last_ns).max(1);
+        let rate = fills * timer_ns as f64 / elapsed as f64;
+        let mut delta = total;
+        // Window delta per class.
+        delta.local -= self.last_total.local;
+        delta.near -= self.last_total.near;
+        delta.far -= self.last_total.far;
+        delta.dram -= self.last_total.dram;
+        let sample = WindowSample {
+            at_ns: now_ns,
+            fill_events: fills,
+            rate,
+            counts: delta,
+            live_tasks,
+        };
+        self.samples.push(sample);
+        // `resetEventCounter()`: we keep absolute counters and move the
+        // baseline instead (non-destructive for other readers).
+        self.last_total = total;
+        self.last_ns = now_ns;
+        sample
+    }
+
+    /// Record a concurrency sample (Fig. 11 timeline).
+    pub fn sample_concurrency(&mut self, now_ns: u64, live: usize) {
+        self.concurrency.push((now_ns, live));
+    }
+
+    /// Average live threads over the run (the paper quotes 16.23 vs 31.16).
+    pub fn avg_concurrency(&self) -> f64 {
+        if self.concurrency.is_empty() {
+            return 0.0;
+        }
+        self.concurrency.iter().map(|(_, l)| *l as f64).sum::<f64>()
+            / self.concurrency.len() as f64
+    }
+
+    /// Fraction of window accesses served outside the local chiplet,
+    /// across the most recent `k` windows.
+    pub fn recent_remote_share(&self, k: usize) -> f64 {
+        let tail = &self.samples[self.samples.len().saturating_sub(k)..];
+        let (mut remote, mut total) = (0.0, 0.0);
+        for s in tail {
+            remote += s.counts.fill_events() + s.counts.dram;
+            total += s.counts.total_ops();
+        }
+        if total <= 0.0 {
+            0.0
+        } else {
+            remote / total
+        }
+    }
+
+    pub fn reset(&mut self) {
+        *self = Self::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cachesim::Outcome;
+
+    fn counters_with(local: f64, near: f64, far: f64, dram: f64) -> Counters {
+        let mut c = Counters::new(2);
+        c.record(
+            0,
+            &Outcome {
+                local_hits: local,
+                near_hits: near,
+                far_hits: far,
+                dram_lines: dram,
+                latency_ns: 0.0,
+                dram_bytes: 0.0,
+            },
+        );
+        c
+    }
+
+    #[test]
+    fn window_rate_normalizes_to_timer() {
+        let mut p = Profiler::new();
+        let c = counters_with(0.0, 600.0, 0.0, 0.0);
+        // 600 fills over 20 ms with a 10 ms timer => rate 300.
+        let s = p.sample_window(20_000_000, &c, 10_000_000, 8);
+        assert!((s.rate - 300.0).abs() < 1e-9, "rate={}", s.rate);
+        assert_eq!(s.fill_events, 600.0);
+    }
+
+    #[test]
+    fn second_window_sees_only_delta() {
+        let mut p = Profiler::new();
+        let c1 = counters_with(10.0, 100.0, 0.0, 5.0);
+        p.sample_window(10_000_000, &c1, 10_000_000, 4);
+        let c2 = counters_with(20.0, 150.0, 0.0, 9.0);
+        let s = p.sample_window(20_000_000, &c2, 10_000_000, 4);
+        assert!((s.fill_events - 50.0).abs() < 1e-9);
+        assert!((s.counts.local - 10.0).abs() < 1e-9);
+        assert!((s.counts.dram - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn concurrency_average() {
+        let mut p = Profiler::new();
+        p.sample_concurrency(0, 30);
+        p.sample_concurrency(10, 32);
+        p.sample_concurrency(20, 34);
+        assert!((p.avg_concurrency() - 32.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn remote_share_bounded() {
+        let mut p = Profiler::new();
+        let c = counters_with(50.0, 25.0, 0.0, 25.0);
+        p.sample_window(1000, &c, 1000, 1);
+        let share = p.recent_remote_share(4);
+        assert!((share - 0.5).abs() < 1e-9, "share={share}");
+    }
+
+    #[test]
+    fn empty_profiler_is_safe() {
+        let p = Profiler::new();
+        assert_eq!(p.avg_concurrency(), 0.0);
+        assert_eq!(p.recent_remote_share(3), 0.0);
+    }
+}

@@ -1,0 +1,268 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts and executes
+//! them from the rust request path (python is never invoked at runtime).
+//!
+//! Interchange is HLO *text* (`artifacts/*.hlo.txt` + `manifest.txt`):
+//! the bundled xla_extension 0.5.1 rejects jax≥0.5's serialized protos
+//! with 64-bit instruction ids, while the text parser reassigns ids (see
+//! DESIGN.md and /opt/xla-example/README.md).
+//!
+//! [`PjrtRuntime`] compiles every manifest entry once at startup;
+//! [`PjrtGrad`] adapts the `logreg_loss_grad_*` executables to the SGD
+//! workload's [`GradEngine`] so Fig. 10/11 run real XLA numerics.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::config::Config;
+use crate::workloads::sgd::{GradEngine, RustGrad};
+
+/// Parsed manifest entry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    /// Input shapes (empty vec = scalar).
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: Vec<Vec<usize>>,
+}
+
+/// Parse `inputs = 128x1024;128;scalar` shape lists.
+pub fn parse_shapes(s: &str) -> Vec<Vec<usize>> {
+    s.split(';')
+        .filter(|p| !p.trim().is_empty())
+        .map(|p| {
+            let p = p.trim();
+            if p == "scalar" {
+                vec![]
+            } else {
+                p.split('x')
+                    .map(|d| d.parse().expect("bad shape dim"))
+                    .collect()
+            }
+        })
+        .collect()
+}
+
+/// Load and parse `manifest.txt` from an artifact directory.
+pub fn load_manifest(dir: &str) -> Result<Vec<ArtifactSpec>> {
+    let path = format!("{dir}/manifest.txt");
+    let cfg = Config::load(&path).map_err(|e| anyhow!("{e}"))?;
+    let mut specs = Vec::new();
+    for section in cfg.sections() {
+        if section == "global" {
+            continue;
+        }
+        specs.push(ArtifactSpec {
+            name: section.to_string(),
+            file: cfg
+                .get(section, "file")
+                .context("manifest entry missing file")?
+                .to_string(),
+            inputs: parse_shapes(cfg.get(section, "inputs").unwrap_or("")),
+            outputs: parse_shapes(cfg.get(section, "outputs").unwrap_or("")),
+        });
+    }
+    Ok(specs)
+}
+
+/// A compiled executable + its spec.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with f32 inputs (row-major, shapes per the spec); returns
+    /// one f32 vec per output.
+    pub fn run_f32(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs.iter().zip(&self.spec.inputs) {
+            let expect: usize = shape.iter().product::<usize>().max(1);
+            if data.len() != expect {
+                bail!(
+                    "{}: input length {} != shape {:?}",
+                    self.spec.name,
+                    data.len(),
+                    shape
+                );
+            }
+            let lit = xla::Literal::vec1(data);
+            let lit = if shape.is_empty() {
+                lit.reshape(&[])?
+            } else {
+                lit.reshape(&shape.iter().map(|&d| d as i64).collect::<Vec<_>>())?
+            };
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unpack the tuple.
+        let parts = result.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+}
+
+/// The PJRT CPU runtime: one compiled executable per manifest entry.
+pub struct PjrtRuntime {
+    pub platform: String,
+    execs: HashMap<String, Executable>,
+}
+
+impl PjrtRuntime {
+    /// Compile every artifact in `dir`. Fails cleanly if the directory or
+    /// manifest is missing (callers fall back to the rust engines).
+    pub fn load(dir: &str) -> Result<Self> {
+        let specs = load_manifest(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let platform = client.platform_name();
+        let mut execs = HashMap::new();
+        for spec in specs {
+            let path = format!("{dir}/{}", spec.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing {path}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", spec.name))?;
+            execs.insert(spec.name.clone(), Executable { spec, exe });
+        }
+        Ok(Self { platform, execs })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Executable> {
+        self.execs.get(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.execs.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.execs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.execs.is_empty()
+    }
+
+    /// Default artifact directory (repo layout).
+    pub fn default_dir() -> String {
+        std::env::var("ARCAS_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+    }
+}
+
+/// [`GradEngine`] backed by the AOT `logreg_loss_grad_b{B}_f{F}`
+/// executable: the L2/L1 numerics on the rust request path.
+///
+/// Minibatches must match the compiled batch size; callers (the SGD
+/// workload) are configured accordingly. PJRT execution is serialized
+/// behind a mutex — the simulator charges virtual time independently of
+/// wall time, so this does not distort the experiments.
+pub struct PjrtGrad {
+    exec_name: String,
+    batch: usize,
+    feats: usize,
+    rt: Mutex<PjrtRuntime>,
+}
+
+// SAFETY: the xla crate's client/executable handles hold raw pointers and
+// `Rc`s, making them !Send/!Sync. All access from `PjrtGrad` goes through
+// the internal `Mutex`, so at most one thread touches the PJRT objects at
+// a time, and the `Rc`s are never cloned outside the lock. The simulator
+// is single-threaded; the host executor serializes on the same mutex.
+unsafe impl Send for PjrtGrad {}
+unsafe impl Sync for PjrtGrad {}
+
+impl PjrtGrad {
+    /// Pick an artifact matching `batch`/`feats`.
+    pub fn new(rt: PjrtRuntime, batch: usize, feats: usize) -> Result<Self> {
+        let name = format!("logreg_loss_grad_b{batch}_f{feats}");
+        if rt.get(&name).is_none() {
+            bail!("no artifact {name}; available: {:?}", rt.names());
+        }
+        Ok(Self {
+            exec_name: name,
+            batch,
+            feats,
+            rt: Mutex::new(rt),
+        })
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.batch, self.feats)
+    }
+}
+
+impl GradEngine for PjrtGrad {
+    fn loss_grad(&self, x: &[f32], y: &[f32], w: &[f32], nf: usize) -> (f64, Vec<f32>) {
+        if nf != self.feats || y.len() != self.batch {
+            // Shape mismatch (remainder minibatches, oversubscribed shard
+            // splits): fall back to the rust oracle — same semantics.
+            return RustGrad.loss_grad(x, y, w, nf);
+        }
+        let rt = self.rt.lock().unwrap();
+        let exe = rt.get(&self.exec_name).unwrap();
+        let outs = exe.run_f32(&[x, y, w]).expect("PJRT execution failed");
+        let loss = outs[0][0] as f64;
+        let grad = outs[1].clone();
+        (loss, grad)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_parsing() {
+        assert_eq!(
+            parse_shapes("128x1024;128;scalar"),
+            vec![vec![128, 1024], vec![128], vec![]]
+        );
+        assert_eq!(parse_shapes(""), Vec::<Vec<usize>>::new());
+        assert_eq!(parse_shapes("7"), vec![vec![7]]);
+    }
+
+    #[test]
+    fn manifest_parsing_from_text() {
+        let dir = std::env::temp_dir().join("arcas-manifest-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "[foo]\nfile = foo.hlo.txt\ninputs = 2x2;2\noutputs = scalar\n",
+        )
+        .unwrap();
+        let specs = load_manifest(dir.to_str().unwrap()).unwrap();
+        assert_eq!(specs.len(), 1);
+        assert_eq!(specs[0].name, "foo");
+        assert_eq!(specs[0].inputs, vec![vec![2, 2], vec![2]]);
+        assert_eq!(specs[0].outputs, vec![Vec::<usize>::new()]);
+    }
+
+    #[test]
+    fn missing_dir_is_clean_error() {
+        assert!(PjrtRuntime::load("/nonexistent/artifacts").is_err());
+    }
+
+    // Full PJRT round-trip tests live in rust/tests/integration_pjrt.rs
+    // (they need `make artifacts` to have run).
+}

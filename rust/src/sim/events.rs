@@ -1,0 +1,130 @@
+//! Generic timed event queue for the discrete-event engine.
+//!
+//! Used for scheduler timers (Algorithm 1 runs every `SCHEDULER_TIMER`),
+//! delayed task wake-ups and experiment-level sampling (Fig. 11's
+//! concurrency timeline).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// A timed event carrying a payload tag.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Event<T> {
+    pub at_ns: u64,
+    pub seq: u64,
+    pub payload: T,
+}
+
+impl<T: Eq> Ord for Event<T> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.at_ns, self.seq).cmp(&(other.at_ns, other.seq))
+    }
+}
+
+impl<T: Eq> PartialOrd for Event<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Min-heap of events ordered by (time, insertion sequence).
+#[derive(Clone, Debug, Default)]
+pub struct EventQueue<T: Eq> {
+    heap: BinaryHeap<Reverse<Event<T>>>,
+    seq: u64,
+}
+
+impl<T: Eq> EventQueue<T> {
+    pub fn new() -> Self {
+        Self {
+            heap: BinaryHeap::new(),
+            seq: 0,
+        }
+    }
+
+    pub fn push(&mut self, at_ns: u64, payload: T) {
+        self.seq += 1;
+        self.heap.push(Reverse(Event {
+            at_ns,
+            seq: self.seq,
+            payload,
+        }));
+    }
+
+    /// Next event if it is due at or before `now_ns`.
+    pub fn pop_due(&mut self, now_ns: u64) -> Option<Event<T>> {
+        if let Some(Reverse(e)) = self.heap.peek() {
+            if e.at_ns <= now_ns {
+                return self.heap.pop().map(|Reverse(e)| e);
+            }
+        }
+        None
+    }
+
+    /// Unconditional pop of the earliest event.
+    pub fn pop(&mut self) -> Option<Event<T>> {
+        self.heap.pop().map(|Reverse(e)| e)
+    }
+
+    pub fn peek_time(&self) -> Option<u64> {
+        self.heap.peek().map(|Reverse(e)| e.at_ns)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.heap.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_pop_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(30, "c");
+        q.push(10, "a");
+        q.push(20, "b");
+        assert_eq!(q.pop().unwrap().payload, "a");
+        assert_eq!(q.pop().unwrap().payload, "b");
+        assert_eq!(q.pop().unwrap().payload, "c");
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut q = EventQueue::new();
+        q.push(10, "first");
+        q.push(10, "second");
+        assert_eq!(q.pop().unwrap().payload, "first");
+        assert_eq!(q.pop().unwrap().payload, "second");
+    }
+
+    #[test]
+    fn pop_due_respects_now() {
+        let mut q = EventQueue::new();
+        q.push(100, 1u32);
+        assert!(q.pop_due(50).is_none());
+        assert_eq!(q.pop_due(100).unwrap().payload, 1);
+    }
+
+    #[test]
+    fn peek_len_clear() {
+        let mut q = EventQueue::new();
+        assert!(q.is_empty());
+        q.push(5, ());
+        q.push(1, ());
+        assert_eq!(q.peek_time(), Some(1));
+        assert_eq!(q.len(), 2);
+        q.clear();
+        assert!(q.is_empty());
+    }
+}

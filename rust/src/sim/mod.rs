@@ -1,0 +1,263 @@
+//! The simulated chiplet machine: discrete-event substrate.
+//!
+//! [`Machine`] composes the [`Topology`], the per-chiplet cache model, the
+//! memory-bandwidth model and the region registry, and keeps one virtual
+//! clock per core. Task execution charges virtual nanoseconds to the core
+//! a task currently runs on; the executor (in [`crate::sched`]) always
+//! advances the core with the smallest clock, which yields a
+//! deterministic, causally-consistent interleaving — the discrete-event
+//! replacement for running on real EPYC hardware.
+
+mod events;
+pub use events::{Event, EventQueue};
+
+use crate::cachesim::{Access, CacheSim, Outcome};
+use crate::mem::{MemoryManager, Placement, RegionId};
+use crate::memsim::MemSim;
+use crate::topology::Topology;
+
+/// The simulated machine.
+#[derive(Clone, Debug)]
+pub struct Machine {
+    pub topo: Topology,
+    pub cache: CacheSim,
+    pub membw: MemSim,
+    pub mm: MemoryManager,
+    clocks: Vec<u64>,
+}
+
+impl Machine {
+    pub fn new(topo: Topology) -> Self {
+        Self {
+            cache: CacheSim::new(&topo),
+            membw: MemSim::new(&topo),
+            mm: MemoryManager::new(),
+            clocks: vec![0; topo.num_cores()],
+            topo,
+        }
+    }
+
+    // --- memory management ---------------------------------------------
+
+    /// Allocate a region and register it with the cache model.
+    pub fn alloc(&mut self, label: &str, size: u64, placement: Placement) -> RegionId {
+        let id = self.mm.alloc(label, size, placement);
+        self.cache.register_region(id, size);
+        id
+    }
+
+    pub fn free(&mut self, id: RegionId) {
+        self.mm.free(id);
+        self.cache.drop_region(id);
+    }
+
+    // --- clocks ----------------------------------------------------------
+
+    #[inline]
+    pub fn now(&self, core: usize) -> u64 {
+        self.clocks[core]
+    }
+
+    /// Latest clock across all cores (= makespan when a run finishes).
+    pub fn max_time(&self) -> u64 {
+        *self.clocks.iter().max().unwrap_or(&0)
+    }
+
+    /// Earliest-clock core among `candidates` (executor's pick rule).
+    pub fn min_clock_core(&self, candidates: &[usize]) -> Option<usize> {
+        candidates
+            .iter()
+            .copied()
+            .min_by_key(|&c| self.clocks[c])
+    }
+
+    #[inline]
+    pub fn advance(&mut self, core: usize, ns: u64) {
+        self.clocks[core] += ns;
+    }
+
+    /// Synchronize `core`'s clock forward to at least `t` (barrier wake-up,
+    /// steal from a later core, timer alignment).
+    #[inline]
+    pub fn advance_to(&mut self, core: usize, t: u64) {
+        if self.clocks[core] < t {
+            self.clocks[core] = t;
+        }
+    }
+
+    /// Reset clocks and dynamic state between experiment repetitions
+    /// (allocations survive; caches and counters are cold again).
+    pub fn reset_dynamic(&mut self) {
+        self.clocks.iter_mut().for_each(|c| *c = 0);
+        self.cache.flush_all();
+        self.cache.counters.reset();
+        self.membw.reset();
+    }
+
+    // --- cost charging ---------------------------------------------------
+
+    /// Pure compute on `core` for `ns` virtual nanoseconds.
+    #[inline]
+    pub fn compute(&mut self, core: usize, ns: u64) {
+        self.advance(core, ns);
+    }
+
+    /// Model a memory access from `core`; charges the core's clock with
+    /// cache latency + DRAM bandwidth terms and returns the outcome.
+    pub fn access(&mut self, core: usize, acc: Access) -> Outcome {
+        let now = self.clocks[core] as f64;
+        let mut out = self.cache.access(core, acc);
+
+        // DRAM side: where is the region homed?
+        let core_numa = self.topo.numa_of_core(core);
+        let (home, local_frac) =
+            self.mm
+                .dram_home(acc.region, core_numa, self.topo.num_numa());
+        // Latency correction for remote-homed DRAM lines (the cache model
+        // assumed local-NUMA DRAM latency).
+        if local_frac < 1.0 {
+            let remote_lines = out.dram_lines * (1.0 - local_frac);
+            let extra = self.topo.lat.dram_remote_ns - self.topo.lat.dram_local_ns;
+            out.latency_ns += remote_lines * extra / acc.mlp.max(1.0);
+        }
+        // Bandwidth term, charged against the serving socket's channels
+        // and the issuing chiplet's IF link.
+        let bw_numa = if local_frac >= 1.0 { core_numa } else { home };
+        let chiplet = self.topo.chiplet_of(core);
+        let bw_ns = self.membw.charge(now, bw_numa, chiplet, out.dram_bytes);
+        let total = out.latency_ns + bw_ns;
+        out.latency_ns = total;
+        self.advance(core, total.round() as u64);
+        out
+    }
+
+    /// Point-to-point message cost between cores (RPC / steal / barrier
+    /// traffic). Charges the *sender*; returns the latency.
+    pub fn message(&mut self, from: usize, to: usize, bytes: u64) -> u64 {
+        let lat = self.topo.core_to_core_ns(from, to);
+        // Payload beyond a cache line streams at fabric bandwidth
+        // (~32 B/ns on Infinity Fabric).
+        let stream = (bytes.saturating_sub(64)) as f64 / 32.0;
+        let ns = (lat + stream).round() as u64;
+        self.advance(from, ns);
+        ns
+    }
+
+    /// Cost of an OS context switch on `core` (std::async baseline).
+    pub fn os_context_switch(&mut self, core: usize) {
+        let ns = self.topo.lat.os_context_switch_ns.round() as u64;
+        self.advance(core, ns);
+    }
+
+    /// Cost of a user-space coroutine switch on `core` (ARCAS tasks).
+    pub fn coroutine_switch(&mut self, core: usize) {
+        let ns = self.topo.lat.coroutine_switch_ns.round() as u64;
+        self.advance(core, ns);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn machine() -> Machine {
+        Machine::new(Topology::milan_2s())
+    }
+
+    #[test]
+    fn clocks_start_at_zero_and_advance() {
+        let mut m = machine();
+        assert_eq!(m.now(0), 0);
+        m.compute(0, 100);
+        assert_eq!(m.now(0), 100);
+        assert_eq!(m.now(1), 0);
+        assert_eq!(m.max_time(), 100);
+    }
+
+    #[test]
+    fn advance_to_never_rewinds() {
+        let mut m = machine();
+        m.compute(0, 100);
+        m.advance_to(0, 50);
+        assert_eq!(m.now(0), 100);
+        m.advance_to(0, 150);
+        assert_eq!(m.now(0), 150);
+    }
+
+    #[test]
+    fn min_clock_core_picks_earliest() {
+        let mut m = machine();
+        m.compute(0, 100);
+        m.compute(1, 50);
+        assert_eq!(m.min_clock_core(&[0, 1, 2]), Some(2));
+        assert_eq!(m.min_clock_core(&[0, 1]), Some(1));
+        assert_eq!(m.min_clock_core(&[]), None);
+    }
+
+    #[test]
+    fn access_charges_time() {
+        let mut m = machine();
+        let r = m.alloc("data", 8 << 20, Placement::Bind(0));
+        let out = m.access(0, Access::seq_read(r, 8 << 20));
+        assert!(out.latency_ns > 0.0);
+        assert!(m.now(0) > 0);
+    }
+
+    #[test]
+    fn remote_numa_dram_costs_more() {
+        let mut m1 = machine();
+        let local = m1.alloc("l", 8 << 20, Placement::Bind(0));
+        let a = m1.access(0, Access::seq_read(local, 8 << 20));
+
+        let mut m2 = machine();
+        let remote = m2.alloc("r", 8 << 20, Placement::Bind(1));
+        let b = m2.access(0, Access::seq_read(remote, 8 << 20));
+        assert!(
+            b.latency_ns > a.latency_ns,
+            "remote {} must exceed local {}",
+            b.latency_ns,
+            a.latency_ns
+        );
+    }
+
+    #[test]
+    fn message_cost_follows_topology() {
+        let mut m = machine();
+        let intra = m.message(0, 1, 64);
+        let inter = m.message(0, 9, 64);
+        let cross = m.message(0, 64, 64);
+        assert!(intra < inter && inter < cross);
+        // Sender clock advanced by all three.
+        assert_eq!(m.now(0), intra + inter + cross);
+    }
+
+    #[test]
+    fn large_message_pays_bandwidth() {
+        let mut m = machine();
+        let small = m.message(0, 8, 64);
+        let big = m.message(1, 9, 1 << 20);
+        assert!(big > small + 10_000, "big={big} small={small}");
+    }
+
+    #[test]
+    fn switch_costs_differ_by_regime() {
+        let mut m = machine();
+        m.coroutine_switch(0);
+        let coro = m.now(0);
+        m.os_context_switch(1);
+        let os = m.now(1);
+        assert!(os > coro * 10);
+    }
+
+    #[test]
+    fn reset_dynamic_clears_clocks_and_counters() {
+        let mut m = machine();
+        let r = m.alloc("d", 1 << 20, Placement::Bind(0));
+        m.access(0, Access::seq_read(r, 1 << 20));
+        m.reset_dynamic();
+        assert_eq!(m.max_time(), 0);
+        assert_eq!(m.cache.counters.total().total_ops(), 0.0);
+        // Region registration survives.
+        assert_eq!(m.cache.region_size(r), 1 << 20);
+    }
+}

@@ -1,0 +1,336 @@
+//! Lightweight coroutine task model (§4.4 "fine-grained task parallelism").
+//!
+//! ARCAS tasks combine user-level-thread features (own state, per-task
+//! scheduling, migration across chiplets) with coroutine behaviour:
+//! suspension at developer-defined points. Rust has no stable stackful
+//! coroutines, so a task is an explicit state machine implementing
+//! [`Coroutine::step`]; returning [`Step::Yield`] is the `yield` point at
+//! which the integrated profiler runs and the scheduler may migrate the
+//! task — exactly the suspend-at-defined-points semantics of the paper.
+//!
+//! A context switch is one virtual dispatch plus queue traffic, which is
+//! what gives ARCAS its advantage over the OS-thread baseline (Fig. 10/11).
+
+use crate::cachesim::{Access, Outcome};
+use crate::mem::RegionId;
+use crate::sim::Machine;
+
+pub type TaskId = usize;
+
+/// What a coroutine step tells the scheduler.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Step {
+    /// Suspend; reschedule me (possibly elsewhere).
+    Yield,
+    /// Suspend until every task in my group reaches the same barrier.
+    Barrier,
+    /// Finished.
+    Done,
+}
+
+/// A suspendable unit of work.
+pub trait Coroutine: Send {
+    fn step(&mut self, ctx: &mut TaskCtx<'_>) -> Step;
+}
+
+/// Execution context handed to a coroutine step: the gateway through which
+/// tasks touch the simulated machine (and the PJRT runtime, via
+/// workloads that capture an executable).
+pub struct TaskCtx<'a> {
+    pub machine: &'a mut Machine,
+    /// Core the task is currently running on.
+    pub core: usize,
+    pub task_id: TaskId,
+    /// Rank within the spawn group (Algorithm 2's `rank`).
+    pub rank: usize,
+    /// Spawn-group size (`THREAD_SIZE`).
+    pub group_size: usize,
+    /// Virtual time at step entry.
+    pub now_ns: u64,
+    /// Accumulated per-step outcome (for task stats).
+    pub step_outcome: Outcome,
+}
+
+impl<'a> TaskCtx<'a> {
+    /// Model a memory access; charges virtual time on the current core.
+    pub fn access(&mut self, acc: Access) -> Outcome {
+        let out = self.machine.access(self.core, acc);
+        self.step_outcome.local_hits += out.local_hits;
+        self.step_outcome.near_hits += out.near_hits;
+        self.step_outcome.far_hits += out.far_hits;
+        self.step_outcome.dram_lines += out.dram_lines;
+        self.step_outcome.latency_ns += out.latency_ns;
+        out
+    }
+
+    pub fn seq_read(&mut self, region: RegionId, bytes: u64) -> Outcome {
+        self.access(Access::seq_read(region, bytes))
+    }
+
+    pub fn seq_write(&mut self, region: RegionId, bytes: u64) -> Outcome {
+        self.access(Access::seq_write(region, bytes))
+    }
+
+    pub fn rand_read(&mut self, region: RegionId, ops: u64, span: u64) -> Outcome {
+        self.access(Access::rand_read(region, ops, span))
+    }
+
+    pub fn rand_write(&mut self, region: RegionId, ops: u64, span: u64) -> Outcome {
+        self.access(Access::rand_write(region, ops, span))
+    }
+
+    /// Pure compute for `ns` virtual nanoseconds.
+    pub fn compute_ns(&mut self, ns: u64) {
+        self.machine.compute(self.core, ns);
+    }
+
+    /// Compute cost modeled from FLOPs (Milan core ≈ 32 SP FLOP/cycle at
+    /// ~2.45 GHz sustained ⇒ ~78 FLOP/ns vectorized; we use a conservative
+    /// 48 FLOP/ns to account for real-world efficiency).
+    pub fn compute_flops(&mut self, flops: u64) {
+        const FLOPS_PER_NS: f64 = 48.0;
+        let ns = (flops as f64 / FLOPS_PER_NS).ceil() as u64;
+        self.machine.compute(self.core, ns.max(1));
+    }
+
+    /// Which chiplet the task currently runs on.
+    pub fn chiplet(&self) -> usize {
+        self.machine.topo.chiplet_of(self.core)
+    }
+
+    pub fn numa(&self) -> usize {
+        self.machine.topo.numa_of_core(self.core)
+    }
+}
+
+/// Lifecycle state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskState {
+    Ready,
+    Running,
+    /// Parked at a barrier.
+    Blocked,
+    Finished,
+}
+
+/// Per-task statistics (fed to the profiler at yield points).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TaskStats {
+    pub steps: u64,
+    pub yields: u64,
+    pub barriers: u64,
+    pub migrations: u64,
+    pub ns_run: u64,
+}
+
+/// A schedulable task: coroutine + placement + stats.
+pub struct Task {
+    pub id: TaskId,
+    pub rank: usize,
+    pub group_size: usize,
+    pub state: TaskState,
+    /// Current core assignment.
+    pub core: usize,
+    pub stats: TaskStats,
+    pub coro: Box<dyn Coroutine>,
+}
+
+impl Task {
+    pub fn new(id: TaskId, rank: usize, group_size: usize, coro: Box<dyn Coroutine>) -> Self {
+        Self {
+            id,
+            rank,
+            group_size,
+            state: TaskState::Ready,
+            core: 0,
+            stats: TaskStats::default(),
+            coro,
+        }
+    }
+}
+
+// --- common coroutine shapes ------------------------------------------
+
+/// Runs a closure once and finishes.
+pub struct FnTask<F: FnMut(&mut TaskCtx<'_>) + Send>(pub F);
+
+impl<F: FnMut(&mut TaskCtx<'_>) + Send> Coroutine for FnTask<F> {
+    fn step(&mut self, ctx: &mut TaskCtx<'_>) -> Step {
+        (self.0)(ctx);
+        Step::Done
+    }
+}
+
+/// Runs a closure `iters` times, yielding between iterations — the
+/// bread-and-butter shape for chunked workloads (each chunk is a
+/// scheduling + profiling point).
+pub struct IterTask<F: FnMut(&mut TaskCtx<'_>, u64) + Send> {
+    iters: u64,
+    next: u64,
+    f: F,
+}
+
+impl<F: FnMut(&mut TaskCtx<'_>, u64) + Send> IterTask<F> {
+    pub fn new(iters: u64, f: F) -> Self {
+        Self { iters, next: 0, f }
+    }
+}
+
+impl<F: FnMut(&mut TaskCtx<'_>, u64) + Send> Coroutine for IterTask<F> {
+    fn step(&mut self, ctx: &mut TaskCtx<'_>) -> Step {
+        if self.next >= self.iters {
+            return Step::Done;
+        }
+        (self.f)(ctx, self.next);
+        self.next += 1;
+        if self.next >= self.iters {
+            Step::Done
+        } else {
+            Step::Yield
+        }
+    }
+}
+
+/// Runs `iters` iterations with a barrier after each one (bulk-synchronous
+/// algorithms: PageRank sweeps, SGD epochs, BFS levels).
+pub struct BspTask<F: FnMut(&mut TaskCtx<'_>, u64) + Send> {
+    iters: u64,
+    next: u64,
+    f: F,
+}
+
+impl<F: FnMut(&mut TaskCtx<'_>, u64) + Send> BspTask<F> {
+    pub fn new(iters: u64, f: F) -> Self {
+        Self { iters, next: 0, f }
+    }
+}
+
+impl<F: FnMut(&mut TaskCtx<'_>, u64) + Send> Coroutine for BspTask<F> {
+    fn step(&mut self, ctx: &mut TaskCtx<'_>) -> Step {
+        if self.next >= self.iters {
+            return Step::Done;
+        }
+        (self.f)(ctx, self.next);
+        self.next += 1;
+        if self.next >= self.iters {
+            Step::Done
+        } else {
+            Step::Barrier
+        }
+    }
+}
+
+/// A generic state-machine driver: the closure returns the next [`Step`]
+/// explicitly (full control for irregular coroutines).
+pub struct StateTask<F: FnMut(&mut TaskCtx<'_>, u64) -> Step + Send> {
+    step_no: u64,
+    f: F,
+}
+
+impl<F: FnMut(&mut TaskCtx<'_>, u64) -> Step + Send> StateTask<F> {
+    pub fn new(f: F) -> Self {
+        Self { step_no: 0, f }
+    }
+}
+
+impl<F: FnMut(&mut TaskCtx<'_>, u64) -> Step + Send> Coroutine for StateTask<F> {
+    fn step(&mut self, ctx: &mut TaskCtx<'_>) -> Step {
+        let s = (self.f)(ctx, self.step_no);
+        self.step_no += 1;
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::Placement;
+    use crate::topology::Topology;
+
+    fn ctx_on<'a>(machine: &'a mut Machine, core: usize) -> TaskCtx<'a> {
+        TaskCtx {
+            machine,
+            core,
+            task_id: 0,
+            rank: 0,
+            group_size: 1,
+            now_ns: 0,
+            step_outcome: Outcome::default(),
+        }
+    }
+
+    #[test]
+    fn fn_task_runs_once() {
+        let mut m = Machine::new(Topology::milan_1s());
+        let mut hits = 0u32;
+        let mut t = FnTask(|ctx: &mut TaskCtx<'_>| {
+            ctx.compute_ns(10);
+            hits += 1;
+        });
+        let mut c = ctx_on(&mut m, 0);
+        assert_eq!(t.step(&mut c), Step::Done);
+        drop(c);
+        assert_eq!(hits, 1);
+        assert_eq!(m.now(0), 10);
+    }
+
+    #[test]
+    fn iter_task_yields_then_finishes() {
+        let mut m = Machine::new(Topology::milan_1s());
+        let mut t = IterTask::new(3, |ctx, _i| ctx.compute_ns(5));
+        let mut c = ctx_on(&mut m, 0);
+        assert_eq!(t.step(&mut c), Step::Yield);
+        assert_eq!(t.step(&mut c), Step::Yield);
+        assert_eq!(t.step(&mut c), Step::Done);
+        drop(c);
+        assert_eq!(m.now(0), 15);
+    }
+
+    #[test]
+    fn bsp_task_barriers_between_iterations() {
+        let mut m = Machine::new(Topology::milan_1s());
+        let mut t = BspTask::new(2, |ctx, _| ctx.compute_ns(1));
+        let mut c = ctx_on(&mut m, 0);
+        assert_eq!(t.step(&mut c), Step::Barrier);
+        assert_eq!(t.step(&mut c), Step::Done);
+    }
+
+    #[test]
+    fn zero_iter_tasks_finish_immediately() {
+        let mut m = Machine::new(Topology::milan_1s());
+        let mut t = IterTask::new(0, |_, _| {});
+        let mut b = BspTask::new(0, |_, _| {});
+        let mut c = ctx_on(&mut m, 0);
+        assert_eq!(t.step(&mut c), Step::Done);
+        assert_eq!(b.step(&mut c), Step::Done);
+    }
+
+    #[test]
+    fn ctx_access_charges_and_records() {
+        let mut m = Machine::new(Topology::milan_1s());
+        let r = m.alloc("d", 1 << 20, Placement::Bind(0));
+        let mut c = ctx_on(&mut m, 0);
+        let out = c.seq_read(r, 1 << 20);
+        assert!(out.total_ops() > 0.0);
+        assert!(c.step_outcome.latency_ns > 0.0);
+        drop(c);
+        assert!(m.now(0) > 0);
+    }
+
+    #[test]
+    fn compute_flops_scales() {
+        let mut m = Machine::new(Topology::milan_1s());
+        let mut c = ctx_on(&mut m, 0);
+        c.compute_flops(48_000);
+        drop(c);
+        assert_eq!(m.now(0), 1_000);
+    }
+
+    #[test]
+    fn chiplet_and_numa_helpers() {
+        let mut m = Machine::new(Topology::milan_2s());
+        let c = ctx_on(&mut m, 70);
+        assert_eq!(c.chiplet(), 8);
+        assert_eq!(c.numa(), 1);
+    }
+}

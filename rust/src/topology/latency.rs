@@ -1,0 +1,159 @@
+//! Latency classes and the calibrated latency model.
+//!
+//! Numbers are calibrated to the paper's own measurements (Fig. 3: ≈25 ns
+//! intra-chiplet, ≈80–90 ns inter-chiplet near group, ≥150 ns far group
+//! within a NUMA domain, higher cross-NUMA/socket) plus public EPYC Milan
+//! memory-latency data.
+
+/// Communication path classification between two cores.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LatencyClass {
+    SameCore,
+    /// Same CCD: via shared L3.
+    IntraChiplet,
+    /// Different CCD, same NUMA, same Infinity-Fabric quadrant.
+    InterChipletNear,
+    /// Different CCD, same NUMA, different quadrant.
+    InterChipletFar,
+    /// Different NUMA domain, same socket (NPS2/NPS4 only).
+    CrossNuma,
+    /// Different socket.
+    CrossSocket,
+}
+
+impl LatencyClass {
+    pub fn label(&self) -> &'static str {
+        match self {
+            LatencyClass::SameCore => "same-core",
+            LatencyClass::IntraChiplet => "intra-chiplet",
+            LatencyClass::InterChipletNear => "inter-chiplet-near",
+            LatencyClass::InterChipletFar => "inter-chiplet-far",
+            LatencyClass::CrossNuma => "cross-numa",
+            LatencyClass::CrossSocket => "cross-socket",
+        }
+    }
+}
+
+/// Calibrated latencies (ns) for one machine generation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LatencyModel {
+    pub same_core_ns: f64,
+    pub intra_chiplet_ns: f64,
+    pub inter_chiplet_near_ns: f64,
+    pub inter_chiplet_far_ns: f64,
+    pub cross_numa_ns: f64,
+    pub cross_socket_ns: f64,
+    /// L1/L2/L3 hit latencies (load-to-use).
+    pub l1_hit_ns: f64,
+    pub l2_hit_ns: f64,
+    pub l3_hit_ns: f64,
+    /// DRAM latency, local NUMA / remote socket.
+    pub dram_local_ns: f64,
+    pub dram_remote_ns: f64,
+    /// OS-thread costs for the std::async baseline cost model.
+    pub os_context_switch_ns: f64,
+    pub os_thread_spawn_ns: f64,
+    /// ARCAS coroutine switch cost (user-space, ~a virtual dispatch).
+    pub coroutine_switch_ns: f64,
+}
+
+impl LatencyModel {
+    /// AMD EPYC Milan (Zen 3), calibrated to the paper's Fig. 3.
+    pub fn milan() -> Self {
+        Self {
+            same_core_ns: 5.0,
+            intra_chiplet_ns: 25.0,
+            inter_chiplet_near_ns: 85.0,
+            inter_chiplet_far_ns: 155.0,
+            cross_numa_ns: 110.0,
+            cross_socket_ns: 220.0,
+            l1_hit_ns: 0.8,
+            l2_hit_ns: 3.0,
+            l3_hit_ns: 12.0,
+            dram_local_ns: 96.0,
+            dram_remote_ns: 195.0,
+            os_context_switch_ns: 1_800.0,
+            os_thread_spawn_ns: 12_000.0,
+            coroutine_switch_ns: 22.0,
+        }
+    }
+
+    /// EPYC Genoa (Zen 4): slightly faster fabric, DDR5.
+    pub fn genoa() -> Self {
+        Self {
+            intra_chiplet_ns: 22.0,
+            inter_chiplet_near_ns: 75.0,
+            inter_chiplet_far_ns: 130.0,
+            cross_socket_ns: 200.0,
+            dram_local_ns: 92.0,
+            dram_remote_ns: 185.0,
+            ..Self::milan()
+        }
+    }
+
+    /// Hypothetical monolithic die: uniform on-chip latency.
+    pub fn monolithic() -> Self {
+        Self {
+            intra_chiplet_ns: 40.0,
+            inter_chiplet_near_ns: 40.0,
+            inter_chiplet_far_ns: 40.0,
+            cross_numa_ns: 40.0,
+            l3_hit_ns: 20.0,
+            ..Self::milan()
+        }
+    }
+
+    #[inline]
+    pub fn class_ns(&self, class: LatencyClass) -> f64 {
+        match class {
+            LatencyClass::SameCore => self.same_core_ns,
+            LatencyClass::IntraChiplet => self.intra_chiplet_ns,
+            LatencyClass::InterChipletNear => self.inter_chiplet_near_ns,
+            LatencyClass::InterChipletFar => self.inter_chiplet_far_ns,
+            LatencyClass::CrossNuma => self.cross_numa_ns,
+            LatencyClass::CrossSocket => self.cross_socket_ns,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn milan_classes_are_ordered() {
+        let m = LatencyModel::milan();
+        assert!(m.same_core_ns < m.intra_chiplet_ns);
+        assert!(m.intra_chiplet_ns < m.inter_chiplet_near_ns);
+        assert!(m.inter_chiplet_near_ns < m.inter_chiplet_far_ns);
+        assert!(m.inter_chiplet_far_ns < m.cross_socket_ns);
+    }
+
+    #[test]
+    fn cache_hierarchy_ordered() {
+        let m = LatencyModel::milan();
+        assert!(m.l1_hit_ns < m.l2_hit_ns);
+        assert!(m.l2_hit_ns < m.l3_hit_ns);
+        assert!(m.l3_hit_ns < m.dram_local_ns);
+        assert!(m.dram_local_ns < m.dram_remote_ns);
+    }
+
+    #[test]
+    fn coroutine_vs_os_switch_gap() {
+        // §4.4 / Fig. 10-11's premise: user-space switching is orders of
+        // magnitude cheaper than OS context switching.
+        let m = LatencyModel::milan();
+        assert!(m.os_context_switch_ns / m.coroutine_switch_ns > 50.0);
+    }
+
+    #[test]
+    fn monolithic_is_uniform() {
+        let m = LatencyModel::monolithic();
+        assert_eq!(m.intra_chiplet_ns, m.inter_chiplet_far_ns);
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(LatencyClass::IntraChiplet.label(), "intra-chiplet");
+    }
+}

@@ -1,0 +1,409 @@
+//! Chiplet machine topology model.
+//!
+//! This is the substitute for the paper's physical testbed (dual-socket
+//! AMD EPYC Milan 7713). A [`Topology`] describes the core/chiplet/NUMA
+//! hierarchy, the partitioned L3, the memory channels and the latency
+//! classes measured in the paper's Fig. 3. Everything downstream (cache
+//! model, scheduler, Algorithms 1+2) is parametric in this description, so
+//! other machines (Genoa, single-socket, a hypothetical monolithic CPU)
+//! are config presets, not code changes.
+
+mod latency;
+pub use latency::{LatencyClass, LatencyModel};
+
+use crate::util::config::Config;
+
+/// A chiplet-based machine description.
+///
+/// Core numbering is hierarchical: cores `[0, cores_per_chiplet)` are
+/// chiplet 0, and chiplets are numbered socket-major — matching how Linux
+/// enumerates cores on EPYC (and what Algorithm 2's rank→core arithmetic
+/// assumes).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Topology {
+    pub name: String,
+    pub sockets: usize,
+    /// NUMA domains per socket (NPS1 ⇒ 1; the paper runs NPS1).
+    pub numa_per_socket: usize,
+    pub chiplets_per_numa: usize,
+    pub cores_per_chiplet: usize,
+    /// Per-chiplet (CCD) shared L3 in bytes.
+    pub l3_per_chiplet: u64,
+    /// Per-core private L2 in bytes.
+    pub l2_per_core: u64,
+    /// DDR channels per socket.
+    pub mem_channels_per_socket: usize,
+    /// Peak bandwidth per channel, bytes/ns (DDR4-3200 ≈ 25.6 GB/s).
+    pub mem_bw_per_channel: f64,
+    /// Per-CCD Infinity-Fabric link bandwidth to the IO die, bytes/ns.
+    /// DRAM traffic of all cores on a chiplet shares this link — why
+    /// DistributedCache keeps winning at huge working sets in Fig. 5
+    /// (steady-state ratio = mem_bw_per_socket / if_bw ≈ 2.5x, the
+    /// paper's measured peak). Calibrated to that ratio: GMI read+write
+    /// combined is higher than the often-quoted 32 B/s read number.
+    pub if_bw_per_chiplet: f64,
+    pub lat: LatencyModel,
+}
+
+impl Topology {
+    /// The paper's testbed: dual-socket AMD EPYC Milan 7713.
+    /// 2 sockets × 8 CCDs × 8 cores, 32 MB L3 per CCD, 8 × DDR4-3200.
+    pub fn milan_2s() -> Self {
+        Self {
+            name: "milan_2s".into(),
+            sockets: 2,
+            numa_per_socket: 1,
+            chiplets_per_numa: 8,
+            cores_per_chiplet: 8,
+            l3_per_chiplet: 32 << 20,
+            l2_per_core: 512 << 10,
+            mem_channels_per_socket: 8,
+            mem_bw_per_channel: 25.6,
+            if_bw_per_chiplet: 80.0,
+            lat: LatencyModel::milan(),
+        }
+    }
+
+    /// Single-socket Milan (used for the §2.3 microbenchmark and Fig. 12's
+    /// single-chiplet-count experiments).
+    pub fn milan_1s() -> Self {
+        Self {
+            name: "milan_1s".into(),
+            sockets: 1,
+            ..Self::milan_2s()
+        }
+    }
+
+    /// EPYC Genoa-like preset: 12 CCDs × 8 cores per socket, DDR5-4800.
+    pub fn genoa_1s() -> Self {
+        Self {
+            name: "genoa_1s".into(),
+            sockets: 1,
+            numa_per_socket: 1,
+            chiplets_per_numa: 12,
+            cores_per_chiplet: 8,
+            l3_per_chiplet: 32 << 20,
+            l2_per_core: 1 << 20,
+            mem_channels_per_socket: 12,
+            mem_bw_per_channel: 38.4,
+            if_bw_per_chiplet: 128.0,
+            lat: LatencyModel::genoa(),
+        }
+    }
+
+    /// A hypothetical monolithic 64-core CPU with one unified 256 MB LLC —
+    /// the ablation baseline: chiplet-awareness should not matter here.
+    pub fn monolithic_64() -> Self {
+        Self {
+            name: "monolithic_64".into(),
+            sockets: 1,
+            numa_per_socket: 1,
+            chiplets_per_numa: 1,
+            cores_per_chiplet: 64,
+            l3_per_chiplet: 256 << 20,
+            l2_per_core: 512 << 10,
+            mem_channels_per_socket: 8,
+            mem_bw_per_channel: 25.6,
+            if_bw_per_chiplet: 1.0e9, // monolithic: no per-chiplet link
+            lat: LatencyModel::monolithic(),
+        }
+    }
+
+    /// Look up a preset by name.
+    pub fn preset(name: &str) -> Option<Self> {
+        match name {
+            "milan_2s" => Some(Self::milan_2s()),
+            "milan_1s" => Some(Self::milan_1s()),
+            "genoa_1s" => Some(Self::genoa_1s()),
+            "monolithic_64" => Some(Self::monolithic_64()),
+            _ => None,
+        }
+    }
+
+    /// Build from a `[topology]` config section (preset plus overrides).
+    pub fn from_config(cfg: &Config) -> Self {
+        let base = cfg.str_or("topology", "preset", "milan_2s");
+        let mut t = Self::preset(&base).unwrap_or_else(|| Self::milan_2s());
+        t.sockets = cfg.usize_or("topology", "sockets", t.sockets);
+        t.numa_per_socket = cfg.usize_or("topology", "numa_per_socket", t.numa_per_socket);
+        t.chiplets_per_numa = cfg.usize_or("topology", "chiplets_per_numa", t.chiplets_per_numa);
+        t.cores_per_chiplet = cfg.usize_or("topology", "cores_per_chiplet", t.cores_per_chiplet);
+        t.l3_per_chiplet = cfg.u64_or("topology", "l3_per_chiplet", t.l3_per_chiplet);
+        t.l2_per_core = cfg.u64_or("topology", "l2_per_core", t.l2_per_core);
+        t.mem_channels_per_socket =
+            cfg.usize_or("topology", "mem_channels_per_socket", t.mem_channels_per_socket);
+        t.mem_bw_per_channel = cfg.f64_or("topology", "mem_bw_per_channel", t.mem_bw_per_channel);
+        t
+    }
+
+    /// Scale cache capacities by `f` (scaled-down datasets keep crossovers
+    /// at the same *relative* position — see DESIGN.md §1 scale note).
+    pub fn scale_caches(mut self, f: f64) -> Self {
+        self.l3_per_chiplet = ((self.l3_per_chiplet as f64) * f) as u64;
+        self.l2_per_core = ((self.l2_per_core as f64) * f).max(1.0) as u64;
+        self
+    }
+
+    // --- derived quantities -------------------------------------------
+
+    pub fn num_numa(&self) -> usize {
+        self.sockets * self.numa_per_socket
+    }
+
+    pub fn num_chiplets(&self) -> usize {
+        self.num_numa() * self.chiplets_per_numa
+    }
+
+    pub fn num_cores(&self) -> usize {
+        self.num_chiplets() * self.cores_per_chiplet
+    }
+
+    pub fn cores_per_numa(&self) -> usize {
+        self.chiplets_per_numa * self.cores_per_chiplet
+    }
+
+    pub fn cores_per_socket(&self) -> usize {
+        self.numa_per_socket * self.cores_per_numa()
+    }
+
+    pub fn total_l3(&self) -> u64 {
+        self.l3_per_chiplet * self.num_chiplets() as u64
+    }
+
+    /// Peak DRAM bandwidth per socket, bytes/ns.
+    pub fn mem_bw_per_socket(&self) -> f64 {
+        self.mem_channels_per_socket as f64 * self.mem_bw_per_channel
+    }
+
+    // --- hierarchy mapping --------------------------------------------
+
+    #[inline]
+    pub fn chiplet_of(&self, core: usize) -> usize {
+        debug_assert!(core < self.num_cores());
+        core / self.cores_per_chiplet
+    }
+
+    #[inline]
+    pub fn slot_of(&self, core: usize) -> usize {
+        core % self.cores_per_chiplet
+    }
+
+    #[inline]
+    pub fn numa_of_core(&self, core: usize) -> usize {
+        core / self.cores_per_numa()
+    }
+
+    #[inline]
+    pub fn numa_of_chiplet(&self, chiplet: usize) -> usize {
+        chiplet / self.chiplets_per_numa
+    }
+
+    #[inline]
+    pub fn socket_of_core(&self, core: usize) -> usize {
+        core / self.cores_per_socket()
+    }
+
+    #[inline]
+    pub fn socket_of_numa(&self, numa: usize) -> usize {
+        numa / self.numa_per_socket
+    }
+
+    /// Core ids belonging to `chiplet`.
+    pub fn cores_of_chiplet(&self, chiplet: usize) -> std::ops::Range<usize> {
+        let base = chiplet * self.cores_per_chiplet;
+        base..base + self.cores_per_chiplet
+    }
+
+    /// Chiplet ids belonging to `numa`.
+    pub fn chiplets_of_numa(&self, numa: usize) -> std::ops::Range<usize> {
+        let base = numa * self.chiplets_per_numa;
+        base..base + self.chiplets_per_numa
+    }
+
+    /// Classify the communication path between two cores.
+    pub fn latency_class(&self, a: usize, b: usize) -> LatencyClass {
+        if a == b {
+            return LatencyClass::SameCore;
+        }
+        if self.chiplet_of(a) == self.chiplet_of(b) {
+            return LatencyClass::IntraChiplet;
+        }
+        if self.socket_of_core(a) != self.socket_of_core(b) {
+            return LatencyClass::CrossSocket;
+        }
+        if self.numa_of_core(a) != self.numa_of_core(b) {
+            return LatencyClass::CrossNuma;
+        }
+        // Within a NUMA domain chiplets come in "near groups" sharing an
+        // Infinity-Fabric quadrant (half of the CCDs on Milan); the
+        // paper's Fig. 3 shows two latency steps within a NUMA domain
+        // (≈85 ns vs ≥150 ns).
+        let group = (self.chiplets_per_numa / 2).max(1);
+        let qa = self.chiplet_of(a) % self.chiplets_per_numa / group;
+        let qb = self.chiplet_of(b) % self.chiplets_per_numa / group;
+        if qa == qb {
+            LatencyClass::InterChipletNear
+        } else {
+            LatencyClass::InterChipletFar
+        }
+    }
+
+    /// Core-to-core communication latency in ns (cache-line transfer).
+    #[inline]
+    pub fn core_to_core_ns(&self, a: usize, b: usize) -> f64 {
+        self.lat.class_ns(self.latency_class(a, b))
+    }
+
+    /// Latency of a core reading from another chiplet's L3, ns.
+    pub fn l3_access_ns(&self, core: usize, owner_chiplet: usize) -> f64 {
+        let class = if self.chiplet_of(core) == owner_chiplet {
+            LatencyClass::IntraChiplet
+        } else if self.socket_of_numa(self.numa_of_chiplet(owner_chiplet))
+            != self.socket_of_core(core)
+        {
+            LatencyClass::CrossSocket
+        } else if self.numa_of_chiplet(owner_chiplet) != self.numa_of_core(core) {
+            LatencyClass::CrossNuma
+        } else {
+            let group = (self.chiplets_per_numa / 2).max(1);
+            let qa = self.chiplet_of(core) % self.chiplets_per_numa / group;
+            let qb = owner_chiplet % self.chiplets_per_numa / group;
+            if qa == qb {
+                LatencyClass::InterChipletNear
+            } else {
+                LatencyClass::InterChipletFar
+            }
+        };
+        match class {
+            LatencyClass::IntraChiplet => self.lat.l3_hit_ns,
+            other => self.lat.l3_hit_ns + self.lat.class_ns(other),
+        }
+    }
+
+    /// DRAM access latency from `core` to memory homed on `numa`, ns
+    /// (un-contended; the memsim adds queueing).
+    pub fn dram_access_ns(&self, core: usize, numa: usize) -> f64 {
+        if self.numa_of_core(core) == numa {
+            self.lat.dram_local_ns
+        } else if self.socket_of_core(core) == self.socket_of_numa(numa) {
+            self.lat.dram_local_ns + self.lat.cross_numa_ns
+        } else {
+            self.lat.dram_remote_ns
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{}: {} sockets x {} numa x {} chiplets x {} cores = {} cores; L3 {}/chiplet ({} total); {} ch x {:.1} B/ns",
+            self.name,
+            self.sockets,
+            self.numa_per_socket,
+            self.chiplets_per_numa,
+            self.cores_per_chiplet,
+            self.num_cores(),
+            crate::util::fmt_bytes(self.l3_per_chiplet),
+            crate::util::fmt_bytes(self.total_l3()),
+            self.mem_channels_per_socket,
+            self.mem_bw_per_channel,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn milan_shape() {
+        let t = Topology::milan_2s();
+        assert_eq!(t.num_cores(), 128);
+        assert_eq!(t.num_chiplets(), 16);
+        assert_eq!(t.num_numa(), 2);
+        assert_eq!(t.total_l3(), 512 << 20);
+        assert_eq!(t.cores_per_numa(), 64);
+    }
+
+    #[test]
+    fn hierarchy_mapping_roundtrips() {
+        let t = Topology::milan_2s();
+        for core in 0..t.num_cores() {
+            let ch = t.chiplet_of(core);
+            assert!(t.cores_of_chiplet(ch).contains(&core));
+            let numa = t.numa_of_core(core);
+            assert_eq!(t.numa_of_chiplet(ch), numa);
+            assert!(t.chiplets_of_numa(numa).contains(&ch));
+            assert_eq!(t.socket_of_core(core), t.socket_of_numa(numa));
+        }
+    }
+
+    #[test]
+    fn latency_hierarchy_matches_fig3() {
+        let t = Topology::milan_2s();
+        // core 0 & 1: same chiplet; 0 & 8: neighbour chiplet; 0 & 40: far
+        // chiplet same NUMA; 0 & 64: cross socket.
+        let intra = t.core_to_core_ns(0, 1);
+        let near = t.core_to_core_ns(0, 8);
+        let far = t.core_to_core_ns(0, 40);
+        let cross = t.core_to_core_ns(0, 64);
+        assert!(intra < near, "{intra} < {near}");
+        assert!(near < far, "{near} < {far}");
+        assert!(far < cross, "{far} < {cross}");
+        // Calibration: the paper's Fig. 3 groups.
+        assert!((20.0..35.0).contains(&intra), "intra={intra}");
+        assert!((75.0..100.0).contains(&near), "near={near}");
+        assert!((140.0..200.0).contains(&far), "far={far}");
+        assert!(cross >= 200.0, "cross={cross}");
+    }
+
+    #[test]
+    fn latency_class_symmetric() {
+        let t = Topology::milan_2s();
+        for &(a, b) in &[(0, 1), (0, 9), (3, 41), (2, 70), (127, 0)] {
+            assert_eq!(t.latency_class(a, b), t.latency_class(b, a));
+            assert_eq!(t.core_to_core_ns(a, b), t.core_to_core_ns(b, a));
+        }
+    }
+
+    #[test]
+    fn monolithic_has_flat_latency() {
+        let t = Topology::monolithic_64();
+        assert_eq!(t.num_chiplets(), 1);
+        assert_eq!(
+            t.latency_class(0, 63),
+            LatencyClass::IntraChiplet
+        );
+    }
+
+    #[test]
+    fn dram_latency_orders() {
+        let t = Topology::milan_2s();
+        let local = t.dram_access_ns(0, 0);
+        let remote = t.dram_access_ns(0, 1);
+        assert!(local < remote);
+    }
+
+    #[test]
+    fn l3_access_latency_orders() {
+        let t = Topology::milan_2s();
+        let own = t.l3_access_ns(0, 0);
+        let near = t.l3_access_ns(0, 1);
+        let far = t.l3_access_ns(0, 5);
+        let cross = t.l3_access_ns(0, 8);
+        assert!(own < near && near < far && far < cross);
+    }
+
+    #[test]
+    fn config_overrides() {
+        let cfg = Config::parse("[topology]\npreset = milan_1s\nchiplets_per_numa = 4\n").unwrap();
+        let t = Topology::from_config(&cfg);
+        assert_eq!(t.sockets, 1);
+        assert_eq!(t.chiplets_per_numa, 4);
+        assert_eq!(t.num_cores(), 32);
+    }
+
+    #[test]
+    fn cache_scaling() {
+        let t = Topology::milan_1s().scale_caches(0.125);
+        assert_eq!(t.l3_per_chiplet, 4 << 20);
+    }
+}

@@ -1,0 +1,142 @@
+//! Micro-benchmark timing harness (criterion substitute).
+//!
+//! `criterion` is not in the offline crate set. This harness provides the
+//! part we need: warmup, repeated timed runs, and a robust summary
+//! (median + MAD) printed in a stable format. Used by `micro_runtime` and
+//! the wall-clock side of the §Perf pass; the paper-figure benches report
+//! *virtual* time from the simulator and use this only for harness timing.
+
+use std::time::Instant;
+
+use super::stats::percentile;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub median_ns: f64,
+    pub p05_ns: f64,
+    pub p95_ns: f64,
+    pub mean_ns: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.median_ns / 1e9)
+    }
+}
+
+/// Timing harness.
+pub struct Bencher {
+    warmup_iters: u64,
+    samples: u64,
+    min_sample_ms: f64,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self {
+            warmup_iters: 3,
+            samples: 15,
+            min_sample_ms: 5.0,
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_samples(mut self, samples: u64) -> Self {
+        self.samples = samples.max(3);
+        self
+    }
+
+    pub fn quick() -> Self {
+        Self {
+            warmup_iters: 1,
+            samples: 5,
+            min_sample_ms: 1.0,
+            results: Vec::new(),
+        }
+    }
+
+    /// Run `f` repeatedly; `f` should perform one unit of work and return a
+    /// value (blackboxed to defeat dead-code elimination).
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        // Calibrate inner iteration count so each sample >= min_sample_ms.
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let single_ns = t0.elapsed().as_nanos().max(1) as f64;
+        let inner = ((self.min_sample_ms * 1e6 / single_ns).ceil() as u64).clamp(1, 1_000_000);
+
+        let mut per_iter = Vec::with_capacity(self.samples as usize);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..inner {
+                std::hint::black_box(f());
+            }
+            per_iter.push(t.elapsed().as_nanos() as f64 / inner as f64);
+        }
+        let median = percentile(&per_iter, 50.0);
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: inner * self.samples,
+            median_ns: median,
+            p05_ns: percentile(&per_iter, 5.0),
+            p95_ns: percentile(&per_iter, 95.0),
+            mean_ns: per_iter.iter().sum::<f64>() / per_iter.len() as f64,
+        };
+        println!(
+            "bench {:<40} {:>12.1} ns/iter (p05 {:>10.1}, p95 {:>10.1}, n={})",
+            res.name, res.median_ns, res.p05_ns, res.p95_ns, res.iters
+        );
+        self.results.push(res.clone());
+        res
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Measure one closure once, returning (result, elapsed ns).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, u64) {
+    let t = Instant::now();
+    let r = f();
+    (r, t.elapsed().as_nanos() as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let mut b = Bencher::quick();
+        let r = b.bench("noop-ish", || {
+            let mut s = 0u64;
+            for i in 0..100u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(r.median_ns > 0.0);
+        assert!(r.p05_ns <= r.p95_ns * 1.001);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn time_once_measures() {
+        let (v, ns) = time_once(|| (0..1000u64).sum::<u64>());
+        assert_eq!(v, 499500);
+        assert!(ns > 0);
+    }
+}

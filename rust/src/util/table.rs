@@ -1,0 +1,235 @@
+//! ASCII renderers for reproduced tables and figures.
+//!
+//! Every bench prints its result as (a) a formatted table or line-series
+//! matching the paper's rows/columns and (b) a machine-readable CSV block
+//! that can be piped into plotting tools.
+
+use std::fmt::Write as _;
+
+/// A simple table: header + rows of strings.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width mismatch in table {}",
+            self.title
+        );
+        self.rows.push(cells);
+    }
+
+    /// Render as an aligned ASCII table.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut s = String::new();
+        let _ = writeln!(s, "== {} ==", self.title);
+        let line: String = widths
+            .iter()
+            .map(|w| "-".repeat(w + 2))
+            .collect::<Vec<_>>()
+            .join("+");
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!(" {:<width$} ", c, width = widths[i]))
+                .collect::<Vec<_>>()
+                .join("|")
+        };
+        let _ = writeln!(s, "{}", fmt_row(&self.header));
+        let _ = writeln!(s, "{}", line);
+        for row in &self.rows {
+            let _ = writeln!(s, "{}", fmt_row(row));
+        }
+        s
+    }
+
+    /// Render as CSV (header + rows).
+    pub fn to_csv(&self) -> String {
+        let mut s = String::new();
+        let esc = |c: &str| {
+            if c.contains(',') || c.contains('"') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        let _ = writeln!(
+            s,
+            "{}",
+            self.header.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",")
+        );
+        for row in &self.rows {
+            let _ = writeln!(
+                s,
+                "{}",
+                row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",")
+            );
+        }
+        s
+    }
+
+    /// Print table and CSV block to stdout, and optionally persist the CSV
+    /// under `results/<slug>.csv`.
+    pub fn emit(&self, slug: &str) {
+        println!("{}", self.render());
+        println!("--- CSV ({slug}) ---\n{}", self.to_csv());
+        let _ = std::fs::create_dir_all("results");
+        let _ = std::fs::write(format!("results/{slug}.csv"), self.to_csv());
+    }
+}
+
+/// A named line series for figure reproductions (x -> multiple named ys).
+#[derive(Clone, Debug)]
+pub struct SeriesSet {
+    pub title: String,
+    pub x_label: String,
+    pub series_names: Vec<String>,
+    /// Rows of (x, y-per-series).
+    pub points: Vec<(f64, Vec<f64>)>,
+}
+
+impl SeriesSet {
+    pub fn new(title: &str, x_label: &str, series: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            x_label: x_label.to_string(),
+            series_names: series.iter().map(|s| s.to_string()).collect(),
+            points: Vec::new(),
+        }
+    }
+
+    pub fn point(&mut self, x: f64, ys: Vec<f64>) {
+        assert_eq!(ys.len(), self.series_names.len());
+        self.points.push((x, ys));
+    }
+
+    pub fn to_table(&self) -> Table {
+        let mut header = vec![self.x_label.as_str()];
+        header.extend(self.series_names.iter().map(|s| s.as_str()));
+        let mut t = Table::new(&self.title, &header);
+        for (x, ys) in &self.points {
+            let mut row = vec![trim_float(*x)];
+            row.extend(ys.iter().map(|y| format!("{:.4}", y)));
+            t.row(row);
+        }
+        t
+    }
+
+    /// Simple ASCII line chart (one char column per point, `#` per series
+    /// index letter) — enough to eyeball the shape of a figure.
+    pub fn render_ascii_plot(&self, height: usize) -> String {
+        if self.points.is_empty() {
+            return String::new();
+        }
+        let ymax = self
+            .points
+            .iter()
+            .flat_map(|(_, ys)| ys.iter().copied())
+            .fold(f64::NEG_INFINITY, f64::max)
+            .max(1e-12);
+        let mut grid = vec![vec![b' '; self.points.len()]; height];
+        for (si, _) in self.series_names.iter().enumerate() {
+            let glyph = b"abcdefghij"[si % 10];
+            for (pi, (_, ys)) in self.points.iter().enumerate() {
+                let y = ys[si].max(0.0) / ymax;
+                let row = ((1.0 - y) * (height - 1) as f64).round() as usize;
+                grid[row.min(height - 1)][pi] = glyph;
+            }
+        }
+        let mut s = String::new();
+        let _ = writeln!(s, ".. {} (ymax={:.3}) ..", self.title, ymax);
+        for row in grid {
+            let _ = writeln!(s, "|{}|", String::from_utf8_lossy(&row));
+        }
+        for (si, name) in self.series_names.iter().enumerate() {
+            let _ = writeln!(s, "  {} = {}", b"abcdefghij"[si % 10] as char, name);
+        }
+        s
+    }
+
+    pub fn emit(&self, slug: &str) {
+        self.to_table().emit(slug);
+        println!("{}", self.render_ascii_plot(12));
+    }
+}
+
+fn trim_float(x: f64) -> String {
+    if (x - x.round()).abs() < 1e-9 {
+        format!("{}", x.round() as i64)
+    } else {
+        format!("{:.4}", x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Tab 1", &["App", "ARCAS", "RING"]);
+        t.row(vec!["BFS".into(), "3".into(), "20876".into()]);
+        t.row(vec!["SSSP".into(), "6".into(), "230939".into()]);
+        let r = t.render();
+        assert!(r.contains("Tab 1"));
+        assert!(r.contains("BFS"));
+        assert!(r.contains("230939"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_mismatch_panics() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["x,y".into(), "q\"q".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+        assert!(csv.contains("\"q\"\"q\""));
+    }
+
+    #[test]
+    fn series_to_table() {
+        let mut s = SeriesSet::new("Fig 7 BFS", "cores", &["ARCAS", "RING"]);
+        s.point(1.0, vec![1.0, 1.0]);
+        s.point(64.0, vec![40.0, 22.0]);
+        let t = s.to_table();
+        assert_eq!(t.header, vec!["cores", "ARCAS", "RING"]);
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.rows[1][0], "64");
+    }
+
+    #[test]
+    fn ascii_plot_has_legend() {
+        let mut s = SeriesSet::new("f", "x", &["one"]);
+        s.point(0.0, vec![0.5]);
+        s.point(1.0, vec![1.0]);
+        let p = s.render_ascii_plot(5);
+        assert!(p.contains("a = one"));
+    }
+}

@@ -1,0 +1,207 @@
+//! Serial reference implementations of the five graph algorithms.
+//!
+//! These are the correctness oracles for the parallel ARCAS runners in
+//! [`super::runner`], and the `*_ref` functions double as the
+//! single-threaded baselines for scalability normalization.
+
+use super::csr::Csr;
+
+/// BFS distances (hops) from `src`; unreachable = `u32::MAX`.
+pub fn bfs_ref(g: &Csr, src: u32) -> Vec<u32> {
+    let n = g.num_vertices();
+    let mut dist = vec![u32::MAX; n];
+    let mut frontier = vec![src];
+    dist[src as usize] = 0;
+    let mut level = 0u32;
+    while !frontier.is_empty() {
+        let mut next = Vec::new();
+        for &v in &frontier {
+            for &u in g.neighbors(v) {
+                if dist[u as usize] == u32::MAX {
+                    dist[u as usize] = level + 1;
+                    next.push(u);
+                }
+            }
+        }
+        frontier = next;
+        level += 1;
+    }
+    dist
+}
+
+/// PageRank with damping 0.85, `iters` power iterations.
+pub fn pagerank_ref(g: &Csr, iters: usize) -> Vec<f64> {
+    let n = g.num_vertices();
+    let mut rank = vec![1.0 / n as f64; n];
+    let mut next = vec![0.0f64; n];
+    for _ in 0..iters {
+        next.iter_mut().for_each(|x| *x = 0.0);
+        let mut dangling = 0.0;
+        for v in 0..n as u32 {
+            let deg = g.degree(v);
+            if deg == 0 {
+                dangling += rank[v as usize];
+                continue;
+            }
+            let share = rank[v as usize] / deg as f64;
+            for &u in g.neighbors(v) {
+                next[u as usize] += share;
+            }
+        }
+        let base = 0.15 / n as f64 + 0.85 * dangling / n as f64;
+        for x in next.iter_mut() {
+            *x = base + 0.85 * *x;
+        }
+        std::mem::swap(&mut rank, &mut next);
+    }
+    rank
+}
+
+/// Connected components by label propagation (undirected semantics:
+/// assumes the CSR is symmetrized). Returns per-vertex component label.
+pub fn cc_ref(g: &Csr) -> Vec<u32> {
+    let n = g.num_vertices();
+    let mut label: Vec<u32> = (0..n as u32).collect();
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for v in 0..n as u32 {
+            for &u in g.neighbors(v) {
+                let (lv, lu) = (label[v as usize], label[u as usize]);
+                if lu < lv {
+                    label[v as usize] = lu;
+                    changed = true;
+                } else if lv < lu {
+                    label[u as usize] = lv;
+                    changed = true;
+                }
+            }
+        }
+    }
+    label
+}
+
+/// Single-source shortest paths (Dijkstra with a binary heap); weighted.
+pub fn sssp_ref(g: &Csr, src: u32) -> Vec<u64> {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    let n = g.num_vertices();
+    let mut dist = vec![u64::MAX; n];
+    let mut heap = BinaryHeap::new();
+    dist[src as usize] = 0;
+    heap.push(Reverse((0u64, src)));
+    while let Some(Reverse((d, v))) = heap.pop() {
+        if d > dist[v as usize] {
+            continue;
+        }
+        let (nbrs, ws) = g.neighbors_weighted(v);
+        for (&u, &w) in nbrs.iter().zip(ws) {
+            let nd = d + w as u64;
+            if nd < dist[u as usize] {
+                dist[u as usize] = nd;
+                heap.push(Reverse((nd, u)));
+            }
+        }
+    }
+    dist
+}
+
+/// Count distinct components from a label array.
+pub fn component_count(labels: &[u32]) -> usize {
+    let mut set: Vec<u32> = labels.to_vec();
+    set.sort_unstable();
+    set.dedup();
+    set.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::graph::kronecker::{kronecker, uniform};
+
+    fn path_graph() -> Csr {
+        // 0 - 1 - 2 - 3 (symmetric), weights 1,2,3
+        Csr::from_edges(
+            4,
+            &[(0, 1), (1, 0), (1, 2), (2, 1), (2, 3), (3, 2)],
+            Some(&[1, 1, 2, 2, 3, 3]),
+        )
+    }
+
+    #[test]
+    fn bfs_on_path() {
+        let d = bfs_ref(&path_graph(), 0);
+        assert_eq!(d, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn bfs_unreachable() {
+        let g = Csr::from_edges(3, &[(0, 1)], None);
+        let d = bfs_ref(&g, 0);
+        assert_eq!(d[2], u32::MAX);
+    }
+
+    #[test]
+    fn pagerank_sums_to_one() {
+        let g = kronecker(8, 4, 11);
+        let pr = pagerank_ref(&g, 20);
+        let sum: f64 = pr.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6, "sum={sum}");
+    }
+
+    #[test]
+    fn pagerank_hub_ranks_higher() {
+        // Star: everyone points to 0 (and back).
+        let mut edges = Vec::new();
+        for v in 1..10u32 {
+            edges.push((v, 0));
+            edges.push((0, v));
+        }
+        let g = Csr::from_edges(10, &edges, None);
+        let pr = pagerank_ref(&g, 30);
+        assert!(pr[0] > pr[1] * 3.0);
+    }
+
+    #[test]
+    fn cc_on_two_components() {
+        let g = Csr::from_edges(5, &[(0, 1), (1, 0), (2, 3), (3, 2)], None);
+        let labels = cc_ref(&g);
+        assert_eq!(labels[0], labels[1]);
+        assert_eq!(labels[2], labels[3]);
+        assert_ne!(labels[0], labels[2]);
+        assert_eq!(component_count(&labels), 3); // {0,1}, {2,3}, {4}
+    }
+
+    #[test]
+    fn sssp_on_weighted_path() {
+        let d = sssp_ref(&path_graph(), 0);
+        assert_eq!(d, vec![0, 1, 3, 6]);
+    }
+
+    #[test]
+    fn sssp_distances_lower_bound_bfs() {
+        // With weights >= 1, sssp dist >= bfs hops.
+        let g = uniform(256, 4, 5);
+        let b = bfs_ref(&g, 0);
+        let s = sssp_ref(&g, 0);
+        for v in 0..256 {
+            if b[v] != u32::MAX {
+                assert!(s[v] >= b[v] as u64);
+                assert!(s[v] != u64::MAX);
+            }
+        }
+    }
+
+    #[test]
+    fn kronecker_is_mostly_connected() {
+        let g = kronecker(10, 8, 3);
+        let labels = cc_ref(&g);
+        // The giant component should cover most vertices with ef=8.
+        let mut counts = std::collections::HashMap::new();
+        for &l in &labels {
+            *counts.entry(l).or_insert(0usize) += 1;
+        }
+        let giant = *counts.values().max().unwrap();
+        assert!(giant > g.num_vertices() / 2);
+    }
+}

@@ -1,0 +1,151 @@
+//! Compressed-sparse-row graph storage.
+
+/// A directed graph in CSR form (out-edges). Weights are optional and used
+//  by SSSP only.
+#[derive(Clone, Debug)]
+pub struct Csr {
+    /// `offsets[v]..offsets[v+1]` indexes `targets` for vertex `v`.
+    pub offsets: Vec<u64>,
+    pub targets: Vec<u32>,
+    /// Edge weights parallel to `targets` (empty = unweighted).
+    pub weights: Vec<u32>,
+}
+
+impl Csr {
+    /// Build from an edge list (u, v[, w]); self-loops kept, duplicates
+    /// kept (Graph500 semantics).
+    pub fn from_edges(n: usize, edges: &[(u32, u32)], weights: Option<&[u32]>) -> Self {
+        let mut deg = vec![0u64; n + 1];
+        for &(u, _) in edges {
+            deg[u as usize + 1] += 1;
+        }
+        for i in 0..n {
+            deg[i + 1] += deg[i];
+        }
+        let offsets = deg.clone();
+        let mut cursor = deg;
+        let mut targets = vec![0u32; edges.len()];
+        let mut w_out = if weights.is_some() {
+            vec![0u32; edges.len()]
+        } else {
+            Vec::new()
+        };
+        for (i, &(u, v)) in edges.iter().enumerate() {
+            let pos = cursor[u as usize] as usize;
+            targets[pos] = v;
+            if let Some(ws) = weights {
+                w_out[pos] = ws[i];
+            }
+            cursor[u as usize] += 1;
+        }
+        Self {
+            offsets,
+            targets,
+            weights: w_out,
+        }
+    }
+
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.targets.len()
+    }
+
+    #[inline]
+    pub fn neighbors(&self, v: u32) -> &[u32] {
+        let s = self.offsets[v as usize] as usize;
+        let e = self.offsets[v as usize + 1] as usize;
+        &self.targets[s..e]
+    }
+
+    #[inline]
+    pub fn neighbors_weighted(&self, v: u32) -> (&[u32], &[u32]) {
+        let s = self.offsets[v as usize] as usize;
+        let e = self.offsets[v as usize + 1] as usize;
+        (&self.targets[s..e], &self.weights[s..e])
+    }
+
+    #[inline]
+    pub fn degree(&self, v: u32) -> usize {
+        (self.offsets[v as usize + 1] - self.offsets[v as usize]) as usize
+    }
+
+    /// Memory footprint in bytes (what the cache model sees).
+    pub fn bytes(&self) -> u64 {
+        (self.offsets.len() * 8 + self.targets.len() * 4 + self.weights.len() * 4) as u64
+    }
+
+    /// Highest-degree vertex — the canonical BFS/SSSP source (Graph500
+    /// requires sampling sources with nonzero degree; Kronecker graphs
+    /// leave many isolated vertices after permutation).
+    pub fn max_degree_vertex(&self) -> u32 {
+        (0..self.num_vertices() as u32)
+            .max_by_key(|&v| self.degree(v))
+            .unwrap_or(0)
+    }
+
+    /// Reverse (transpose) graph — used by pull-style PageRank.
+    pub fn transpose(&self) -> Csr {
+        let n = self.num_vertices();
+        let edges: Vec<(u32, u32)> = (0..n as u32)
+            .flat_map(|u| self.neighbors(u).iter().map(move |&v| (v, u)))
+            .collect();
+        Csr::from_edges(n, &edges, None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> Csr {
+        // 0 -> 1, 0 -> 2, 1 -> 3, 2 -> 3
+        Csr::from_edges(4, &[(0, 1), (0, 2), (1, 3), (2, 3)], None)
+    }
+
+    #[test]
+    fn basic_shape() {
+        let g = diamond();
+        assert_eq!(g.num_vertices(), 4);
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.neighbors(3), &[] as &[u32]);
+        assert_eq!(g.degree(0), 2);
+        assert_eq!(g.degree(3), 0);
+    }
+
+    #[test]
+    fn weighted_edges_align() {
+        let g = Csr::from_edges(3, &[(0, 1), (0, 2), (1, 2)], Some(&[5, 7, 9]));
+        let (nbrs, ws) = g.neighbors_weighted(0);
+        assert_eq!(nbrs, &[1, 2]);
+        assert_eq!(ws, &[5, 7]);
+    }
+
+    #[test]
+    fn transpose_reverses() {
+        let g = diamond();
+        let t = g.transpose();
+        assert_eq!(t.neighbors(3), &[1, 2]);
+        assert_eq!(t.neighbors(0), &[] as &[u32]);
+        assert_eq!(t.num_edges(), g.num_edges());
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let g = diamond();
+        assert_eq!(g.bytes(), (5 * 8 + 4 * 4) as u64);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = Csr::from_edges(2, &[], None);
+        assert_eq!(g.num_vertices(), 2);
+        assert_eq!(g.num_edges(), 0);
+        assert_eq!(g.neighbors(1), &[] as &[u32]);
+    }
+}

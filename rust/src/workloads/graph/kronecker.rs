@@ -1,0 +1,149 @@
+//! Graph generators: Graph500 Kronecker (R-MAT) and uniform random.
+//!
+//! The paper's graph benchmarks use "a Kronecker graph model with 2^24
+//! vertices and 16×2^24 edges" — the Graph500 spec with edge factor 16 and
+//! initiator (A, B, C) = (0.57, 0.19, 0.19). The generator is
+//! deterministic from a seed.
+
+use super::csr::Csr;
+use crate::util::prng::Rng;
+
+/// Graph500 initiator parameters.
+pub const A: f64 = 0.57;
+pub const B: f64 = 0.19;
+pub const C: f64 = 0.19;
+
+/// Generate a Kronecker (R-MAT) edge list: `2^scale` vertices,
+/// `edge_factor * 2^scale` directed edges, weights in `[1, 255]`.
+pub fn kronecker_edges(scale: u32, edge_factor: usize, seed: u64) -> (Vec<(u32, u32)>, Vec<u32>) {
+    let n = 1u64 << scale;
+    let m = edge_factor as u64 * n;
+    let mut rng = Rng::new(seed);
+    let mut edges = Vec::with_capacity(m as usize);
+    let mut weights = Vec::with_capacity(m as usize);
+    let ab = A + B;
+    let c_norm = C / (1.0 - ab);
+    let a_norm = A / ab;
+    for _ in 0..m {
+        let (mut u, mut v) = (0u64, 0u64);
+        for bit in 0..scale {
+            let ii = rng.gen_f64() > ab;
+            let jj = rng.gen_f64()
+                > (c_norm * (ii as u64 as f64) + a_norm * (!ii as u64 as f64));
+            u |= (ii as u64) << bit;
+            v |= (jj as u64) << bit;
+        }
+        edges.push((u as u32, v as u32));
+        weights.push(1 + (rng.next_u64() % 255) as u32);
+    }
+    // Graph500 permutes vertex labels to break locality of the recursion.
+    let mut perm: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut perm);
+    for e in &mut edges {
+        e.0 = perm[e.0 as usize];
+        e.1 = perm[e.1 as usize];
+    }
+    (edges, weights)
+}
+
+/// Build a symmetrized Kronecker CSR (each edge inserted both ways, as the
+/// Graph500 benchmark does before BFS).
+pub fn kronecker(scale: u32, edge_factor: usize, seed: u64) -> Csr {
+    let (edges, weights) = kronecker_edges(scale, edge_factor, seed);
+    let n = 1usize << scale;
+    let mut sym = Vec::with_capacity(edges.len() * 2);
+    let mut wsym = Vec::with_capacity(edges.len() * 2);
+    for (i, &(u, v)) in edges.iter().enumerate() {
+        sym.push((u, v));
+        wsym.push(weights[i]);
+        sym.push((v, u));
+        wsym.push(weights[i]);
+    }
+    Csr::from_edges(n, &sym, Some(&wsym))
+}
+
+/// Uniform Erdős–Rényi-style random graph (degree-regular expectation).
+pub fn uniform(n: usize, edges_per_vertex: usize, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed);
+    let m = n * edges_per_vertex;
+    let mut edges = Vec::with_capacity(m * 2);
+    let mut weights = Vec::with_capacity(m * 2);
+    for u in 0..n as u32 {
+        for _ in 0..edges_per_vertex {
+            let v = rng.gen_range(n as u64) as u32;
+            let w = 1 + (rng.next_u64() % 255) as u32;
+            edges.push((u, v));
+            weights.push(w);
+            edges.push((v, u));
+            weights.push(w);
+        }
+    }
+    Csr::from_edges(n, &edges, Some(&weights))
+}
+
+/// Dataset size in bytes for a given scale/edge-factor, matching the
+/// paper's Fig. 9 sweep (19 MB at 2^16 ... 5,300 MB at 2^24).
+pub fn dataset_bytes(scale: u32, edge_factor: usize) -> u64 {
+    let n = 1u64 << scale;
+    let m = 2 * edge_factor as u64 * n; // symmetrized
+    (n + 1) * 8 + m * 8 // offsets + targets/weights
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let a = kronecker(10, 4, 42);
+        let b = kronecker(10, 4, 42);
+        assert_eq!(a.targets, b.targets);
+        let c = kronecker(10, 4, 43);
+        assert_ne!(a.targets, c.targets);
+    }
+
+    #[test]
+    fn size_matches_spec() {
+        let g = kronecker(10, 8, 1);
+        assert_eq!(g.num_vertices(), 1024);
+        assert_eq!(g.num_edges(), 2 * 8 * 1024); // symmetrized
+    }
+
+    #[test]
+    fn degree_distribution_is_skewed() {
+        // R-MAT graphs are heavy-tailed: the max degree should far exceed
+        // the mean.
+        let g = kronecker(12, 8, 7);
+        let n = g.num_vertices();
+        let mean = g.num_edges() as f64 / n as f64;
+        let max = (0..n as u32).map(|v| g.degree(v)).max().unwrap() as f64;
+        assert!(
+            max > mean * 8.0,
+            "max degree {max} should dwarf mean {mean}"
+        );
+    }
+
+    #[test]
+    fn uniform_is_flat() {
+        let g = uniform(1024, 8, 3);
+        let n = g.num_vertices();
+        let mean = g.num_edges() as f64 / n as f64;
+        let max = (0..n as u32).map(|v| g.degree(v)).max().unwrap() as f64;
+        assert!(max < mean * 4.0, "uniform max {max} vs mean {mean}");
+    }
+
+    #[test]
+    fn weights_in_range() {
+        let g = kronecker(8, 4, 5);
+        assert!(g.weights.iter().all(|&w| (1..=255).contains(&w)));
+        assert_eq!(g.weights.len(), g.num_edges());
+    }
+
+    #[test]
+    fn dataset_bytes_monotone() {
+        assert!(dataset_bytes(16, 16) < dataset_bytes(20, 16));
+        // Scale 24, ef 16 ~ 4.5 GB (paper: ~4 GB symmetric-ish).
+        let gb = dataset_bytes(24, 16) as f64 / 1e9;
+        assert!(gb > 2.0 && gb < 8.0, "gb={gb}");
+    }
+}

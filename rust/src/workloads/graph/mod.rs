@@ -1,0 +1,10 @@
+//! Graph-processing workloads (§5.2, §5.4): Kronecker generator, CSR
+//! storage, five graph algorithms + GUPS, each with a serial reference and
+//! a parallel ARCAS runner whose memory behaviour feeds the cache model.
+pub mod csr;
+pub mod kronecker;
+pub mod algos;
+pub mod runner;
+
+pub use csr::Csr;
+pub use runner::{run_bfs, run_cc, run_gups, run_pagerank, run_sssp, GraphRun};

@@ -1,0 +1,684 @@
+//! Parallel graph algorithms as ARCAS task groups.
+//!
+//! Each runner executes the *real* algorithm on the real graph (atomics,
+//! level-synchronous BSP) while mirroring its memory behaviour into the
+//! cache model: edge scans are random reads over the graph region, label
+//! updates are random writes over the state region. The algorithm result
+//! is checked against the serial references in [`super::algos`]; the
+//! virtual-time [`RunReport`] provides the paper's performance numbers.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::csr::Csr;
+use crate::mem::{Placement, RegionId};
+use crate::policy::Policy;
+use crate::sched::{RunReport, SimExecutor};
+use crate::sim::Machine;
+use crate::task::{StateTask, Step, TaskCtx};
+use crate::topology::Topology;
+
+const MAX_ROUNDS: usize = 4096;
+
+/// Vertex range owned by `rank` of `group`.
+#[inline]
+pub fn vertex_range(rank: usize, group: usize, n: usize) -> (usize, usize) {
+    let per = n.div_ceil(group);
+    let lo = (rank * per).min(n);
+    let hi = ((rank + 1) * per).min(n);
+    (lo, hi)
+}
+
+/// Regions shared by all graph runners.
+struct GraphRegions {
+    /// Whole-graph region (kept for residency inspection / future shared
+    /// accesses; the hot path charges the per-task slices instead).
+    #[allow(dead_code)]
+    graph: RegionId,
+    state: RegionId,
+    /// Per-task slice of the state array (each task's own vertex range):
+    /// the sequential-scan working set whose chiplet residency policies
+    /// fight over. Shared `state` remains the target of random
+    /// neighbour-label accesses.
+    slices: Vec<RegionId>,
+    /// Per-task slice of the CSR adjacency rows (each task re-scans its
+    /// own rows every round — the dominant cacheable stream).
+    graph_slices: Vec<RegionId>,
+    #[allow(dead_code)]
+    graph_bytes: u64,
+    state_bytes: u64,
+}
+
+fn alloc_regions(
+    machine: &mut Machine,
+    g: &Csr,
+    state_bytes: u64,
+    tasks: usize,
+) -> GraphRegions {
+    let graph_bytes = g.bytes();
+    let graph = machine.alloc("graph", graph_bytes, Placement::Interleave);
+    let state = machine.alloc("graph-state", state_bytes, Placement::Interleave);
+    let slice_bytes = (state_bytes / tasks as u64).max(64);
+    let slices = (0..tasks)
+        .map(|r| machine.alloc(&format!("state-slice-{r}"), slice_bytes, Placement::Interleave))
+        .collect();
+    let gslice_bytes = (graph_bytes / tasks as u64).max(64);
+    let graph_slices = (0..tasks)
+        .map(|r| machine.alloc(&format!("graph-slice-{r}"), gslice_bytes, Placement::Interleave))
+        .collect();
+    GraphRegions {
+        graph,
+        state,
+        slices,
+        graph_slices,
+        graph_bytes,
+        state_bytes,
+    }
+}
+
+/// Charge the cache model for one BSP step of a graph task.
+#[allow(clippy::too_many_arguments)]
+fn charge_step(
+    ctx: &mut TaskCtx<'_>,
+    r: &ChargePlan,
+    slice: RegionId,
+    gslice: RegionId,
+    range_len: usize,
+    scanned: u64,
+    updates: u64,
+) {
+    // Scan own state slice sequentially (slice-local working set).
+    ctx.seq_read(slice, (range_len as u64) * r.state_stride);
+    if scanned > 0 {
+        // Own adjacency rows: a re-scanned sequential stream (~8 B/edge:
+        // 4 B target + amortized offsets/weights).
+        ctx.seq_read(gslice, scanned * 8);
+        // Neighbour labels: random over the whole (shared) state array.
+        ctx.rand_read(r.state, scanned, r.state_bytes);
+    }
+    if updates > 0 {
+        ctx.rand_write(r.state, updates, r.state_bytes);
+    }
+    ctx.compute_flops(4 * scanned + range_len as u64);
+}
+
+#[derive(Clone, Copy)]
+struct ChargePlan {
+    state: RegionId,
+    state_bytes: u64,
+    state_stride: u64,
+}
+
+impl ChargePlan {
+    fn from(r: &GraphRegions, state_stride: u64) -> Self {
+        Self {
+            state: r.state,
+            state_bytes: r.state_bytes,
+            state_stride,
+        }
+    }
+}
+
+/// Result of one parallel graph run.
+pub struct GraphRun {
+    pub report: RunReport,
+    /// Total edges processed (TEPS numerator).
+    pub edges_processed: u64,
+}
+
+impl GraphRun {
+    /// Traversed edges per second (virtual time).
+    pub fn teps(&self) -> f64 {
+        self.report.throughput(self.edges_processed as f64)
+    }
+}
+
+// ====================================================================
+// BFS
+// ====================================================================
+
+/// Level-synchronous parallel BFS; returns distances + run info.
+pub fn run_bfs(
+    topo: &Topology,
+    policy: Box<dyn Policy>,
+    cores: usize,
+    graph: Arc<Csr>,
+    src: u32,
+) -> (GraphRun, Vec<u32>) {
+    let n = graph.num_vertices();
+    let mut machine = Machine::new(topo.clone());
+    let regs = alloc_regions(&mut machine, &graph, (n * 4) as u64, cores);
+    let plan = ChargePlan::from(&regs, 4);
+    let slices = regs.slices.clone();
+    let gslices = regs.graph_slices.clone();
+
+    let dist: Arc<Vec<AtomicU32>> = Arc::new((0..n).map(|_| AtomicU32::new(u32::MAX)).collect());
+    dist[src as usize].store(0, Ordering::Relaxed);
+    let level_updates: Arc<Vec<AtomicU64>> =
+        Arc::new((0..MAX_ROUNDS).map(|_| AtomicU64::new(0)).collect());
+    let edges_scanned = Arc::new(AtomicU64::new(0));
+
+    let mut ex = SimExecutor::new(machine, policy);
+    ex.spawn_group(cores, |rank| {
+        let graph = graph.clone();
+        let dist = dist.clone();
+        let level_updates = level_updates.clone();
+        let edges_scanned = edges_scanned.clone();
+        let slice = slices[rank];
+        let gslice = gslices[rank];
+        Box::new(StateTask::new(move |ctx, step| {
+            let level = step as usize;
+            if level >= MAX_ROUNDS - 1 {
+                return Step::Done;
+            }
+            if level > 0 && level_updates[level - 1].load(Ordering::Relaxed) == 0 {
+                return Step::Done;
+            }
+            let (lo, hi) = vertex_range(rank, ctx.group_size, n);
+            let (mut scanned, mut upd) = (0u64, 0u64);
+            for v in lo..hi {
+                if dist[v].load(Ordering::Relaxed) == level as u32 {
+                    for &u in graph.neighbors(v as u32) {
+                        scanned += 1;
+                        if dist[u as usize]
+                            .compare_exchange(
+                                u32::MAX,
+                                level as u32 + 1,
+                                Ordering::Relaxed,
+                                Ordering::Relaxed,
+                            )
+                            .is_ok()
+                        {
+                            upd += 1;
+                        }
+                    }
+                }
+            }
+            level_updates[level].fetch_add(upd, Ordering::Relaxed);
+            edges_scanned.fetch_add(scanned, Ordering::Relaxed);
+            charge_step(ctx, &plan, slice, gslice, hi - lo, scanned, upd);
+            Step::Barrier
+        }))
+    });
+    let report = ex.run();
+    let out = dist.iter().map(|d| d.load(Ordering::Relaxed)).collect();
+    (
+        GraphRun {
+            report,
+            edges_processed: edges_scanned.load(Ordering::Relaxed),
+        },
+        out,
+    )
+}
+
+// ====================================================================
+// Connected components (label propagation)
+// ====================================================================
+
+pub fn run_cc(
+    topo: &Topology,
+    policy: Box<dyn Policy>,
+    cores: usize,
+    graph: Arc<Csr>,
+) -> (GraphRun, Vec<u32>) {
+    let n = graph.num_vertices();
+    let mut machine = Machine::new(topo.clone());
+    let regs = alloc_regions(&mut machine, &graph, (n * 4) as u64, cores);
+    let plan = ChargePlan::from(&regs, 4);
+    let slices = regs.slices.clone();
+    let gslices = regs.graph_slices.clone();
+
+    let label: Arc<Vec<AtomicU32>> =
+        Arc::new((0..n).map(|v| AtomicU32::new(v as u32)).collect());
+    let round_updates: Arc<Vec<AtomicU64>> =
+        Arc::new((0..MAX_ROUNDS).map(|_| AtomicU64::new(0)).collect());
+    let edges_scanned = Arc::new(AtomicU64::new(0));
+
+    let mut ex = SimExecutor::new(machine, policy);
+    ex.spawn_group(cores, |rank| {
+        let graph = graph.clone();
+        let label = label.clone();
+        let round_updates = round_updates.clone();
+        let edges_scanned = edges_scanned.clone();
+        let slice = slices[rank];
+        let gslice = gslices[rank];
+        Box::new(StateTask::new(move |ctx, step| {
+            let round = step as usize;
+            if round >= MAX_ROUNDS - 1 {
+                return Step::Done;
+            }
+            if round > 0 && round_updates[round - 1].load(Ordering::Relaxed) == 0 {
+                return Step::Done;
+            }
+            let (lo, hi) = vertex_range(rank, ctx.group_size, n);
+            let (mut scanned, mut upd) = (0u64, 0u64);
+            for v in lo..hi {
+                let lv = label[v].load(Ordering::Relaxed);
+                let mut best = lv;
+                for &u in graph.neighbors(v as u32) {
+                    scanned += 1;
+                    let lu = label[u as usize].load(Ordering::Relaxed);
+                    if lu < best {
+                        best = lu;
+                    }
+                }
+                if best < lv {
+                    atomic_min_u32(&label[v], best);
+                    upd += 1;
+                    // Push the improvement to neighbours too (speeds up
+                    // convergence like the serial reference).
+                    for &u in graph.neighbors(v as u32) {
+                        if atomic_min_u32(&label[u as usize], best) {
+                            upd += 1;
+                        }
+                    }
+                }
+            }
+            round_updates[round].fetch_add(upd, Ordering::Relaxed);
+            edges_scanned.fetch_add(scanned, Ordering::Relaxed);
+            charge_step(ctx, &plan, slice, gslice, hi - lo, scanned, upd);
+            Step::Barrier
+        }))
+    });
+    let report = ex.run();
+    let out = label.iter().map(|l| l.load(Ordering::Relaxed)).collect();
+    (
+        GraphRun {
+            report,
+            edges_processed: edges_scanned.load(Ordering::Relaxed),
+        },
+        out,
+    )
+}
+
+/// CAS-min; returns true if it lowered the value.
+fn atomic_min_u32(a: &AtomicU32, v: u32) -> bool {
+    let mut cur = a.load(Ordering::Relaxed);
+    while v < cur {
+        match a.compare_exchange_weak(cur, v, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return true,
+            Err(c) => cur = c,
+        }
+    }
+    false
+}
+
+fn atomic_min_u64(a: &AtomicU64, v: u64) -> bool {
+    let mut cur = a.load(Ordering::Relaxed);
+    while v < cur {
+        match a.compare_exchange_weak(cur, v, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return true,
+            Err(c) => cur = c,
+        }
+    }
+    false
+}
+
+fn atomic_f64_add(a: &AtomicU64, v: f64) {
+    let mut cur = a.load(Ordering::Relaxed);
+    loop {
+        let new = (f64::from_bits(cur) + v).to_bits();
+        match a.compare_exchange_weak(cur, new, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(c) => cur = c,
+        }
+    }
+}
+
+// ====================================================================
+// PageRank (push-based, 3 BSP phases per iteration)
+// ====================================================================
+
+pub fn run_pagerank(
+    topo: &Topology,
+    policy: Box<dyn Policy>,
+    cores: usize,
+    graph: Arc<Csr>,
+    iters: usize,
+) -> (GraphRun, Vec<f64>) {
+    let n = graph.num_vertices();
+    let mut machine = Machine::new(topo.clone());
+    let regs = alloc_regions(&mut machine, &graph, (n * 16) as u64, cores); // two f64 arrays
+    let plan = ChargePlan::from(&regs, 16);
+    let slices = regs.slices.clone();
+    let gslices = regs.graph_slices.clone();
+
+    let rank_v: Arc<Vec<AtomicU64>> = Arc::new(
+        (0..n)
+            .map(|_| AtomicU64::new((1.0 / n as f64).to_bits()))
+            .collect(),
+    );
+    let next_v: Arc<Vec<AtomicU64>> = Arc::new((0..n).map(|_| AtomicU64::new(0)).collect());
+    let dangling: Arc<Vec<AtomicU64>> =
+        Arc::new((0..iters).map(|_| AtomicU64::new(0)).collect());
+    let edges_scanned = Arc::new(AtomicU64::new(0));
+
+    let mut ex = SimExecutor::new(machine, policy);
+    ex.spawn_group(cores, |rank| {
+        let graph = graph.clone();
+        let rank_v = rank_v.clone();
+        let next_v = next_v.clone();
+        let dangling = dangling.clone();
+        let edges_scanned = edges_scanned.clone();
+        let slice = slices[rank];
+        let gslice = gslices[rank];
+        Box::new(StateTask::new(move |ctx, step| {
+            let iter = (step / 3) as usize;
+            let phase = step % 3;
+            if iter >= iters {
+                return Step::Done;
+            }
+            let (lo, hi) = vertex_range(rank, ctx.group_size, n);
+            match phase {
+                0 => {
+                    // Zero the accumulator slice.
+                    for v in lo..hi {
+                        next_v[v].store(0, Ordering::Relaxed);
+                    }
+                    ctx.seq_write(slice, ((hi - lo) * 8) as u64);
+                }
+                1 => {
+                    // Scatter contributions.
+                    let mut scanned = 0u64;
+                    let mut local_dangling = 0.0f64;
+                    for v in lo..hi {
+                        let rv = f64::from_bits(rank_v[v].load(Ordering::Relaxed));
+                        let deg = graph.degree(v as u32);
+                        if deg == 0 {
+                            local_dangling += rv;
+                            continue;
+                        }
+                        let share = rv / deg as f64;
+                        for &u in graph.neighbors(v as u32) {
+                            scanned += 1;
+                            atomic_f64_add(&next_v[u as usize], share);
+                        }
+                    }
+                    if local_dangling != 0.0 {
+                        atomic_f64_add(&dangling[iter], local_dangling);
+                    }
+                    edges_scanned.fetch_add(scanned, Ordering::Relaxed);
+                    charge_step(ctx, &plan, slice, gslice, hi - lo, scanned, scanned);
+                }
+                _ => {
+                    // Apply damping + dangling mass; swap via copy-back.
+                    let d = f64::from_bits(dangling[iter].load(Ordering::Relaxed));
+                    let base = 0.15 / n as f64 + 0.85 * d / n as f64;
+                    for v in lo..hi {
+                        let nv = f64::from_bits(next_v[v].load(Ordering::Relaxed));
+                        rank_v[v].store((base + 0.85 * nv).to_bits(), Ordering::Relaxed);
+                    }
+                    ctx.seq_read(slice, ((hi - lo) * 8) as u64);
+                    ctx.seq_write(slice, ((hi - lo) * 8) as u64);
+                    ctx.compute_flops(2 * (hi - lo) as u64);
+                }
+            }
+            Step::Barrier
+        }))
+    });
+    let report = ex.run();
+    let out = rank_v
+        .iter()
+        .map(|r| f64::from_bits(r.load(Ordering::Relaxed)))
+        .collect();
+    (
+        GraphRun {
+            report,
+            edges_processed: edges_scanned.load(Ordering::Relaxed),
+        },
+        out,
+    )
+}
+
+// ====================================================================
+// SSSP (chunked Bellman-Ford)
+// ====================================================================
+
+pub fn run_sssp(
+    topo: &Topology,
+    policy: Box<dyn Policy>,
+    cores: usize,
+    graph: Arc<Csr>,
+    src: u32,
+) -> (GraphRun, Vec<u64>) {
+    let n = graph.num_vertices();
+    let mut machine = Machine::new(topo.clone());
+    let regs = alloc_regions(&mut machine, &graph, (n * 8) as u64, cores);
+    let plan = ChargePlan::from(&regs, 8);
+    let slices = regs.slices.clone();
+    let gslices = regs.graph_slices.clone();
+
+    let dist: Arc<Vec<AtomicU64>> = Arc::new((0..n).map(|_| AtomicU64::new(u64::MAX)).collect());
+    dist[src as usize].store(0, Ordering::Relaxed);
+    let round_updates: Arc<Vec<AtomicU64>> =
+        Arc::new((0..MAX_ROUNDS).map(|_| AtomicU64::new(0)).collect());
+    let edges_scanned = Arc::new(AtomicU64::new(0));
+
+    let mut ex = SimExecutor::new(machine, policy);
+    ex.spawn_group(cores, |rank| {
+        let graph = graph.clone();
+        let dist = dist.clone();
+        let round_updates = round_updates.clone();
+        let edges_scanned = edges_scanned.clone();
+        let slice = slices[rank];
+        let gslice = gslices[rank];
+        Box::new(StateTask::new(move |ctx, step| {
+            let round = step as usize;
+            if round >= MAX_ROUNDS - 1 {
+                return Step::Done;
+            }
+            if round > 0 && round_updates[round - 1].load(Ordering::Relaxed) == 0 {
+                return Step::Done;
+            }
+            let (lo, hi) = vertex_range(rank, ctx.group_size, n);
+            let (mut scanned, mut upd) = (0u64, 0u64);
+            for v in lo..hi {
+                let dv = dist[v].load(Ordering::Relaxed);
+                if dv == u64::MAX {
+                    continue;
+                }
+                let (nbrs, ws) = graph.neighbors_weighted(v as u32);
+                for (&u, &w) in nbrs.iter().zip(ws) {
+                    scanned += 1;
+                    if atomic_min_u64(&dist[u as usize], dv + w as u64) {
+                        upd += 1;
+                    }
+                }
+            }
+            round_updates[round].fetch_add(upd, Ordering::Relaxed);
+            edges_scanned.fetch_add(scanned, Ordering::Relaxed);
+            charge_step(ctx, &plan, slice, gslice, hi - lo, scanned, upd);
+            Step::Barrier
+        }))
+    });
+    let report = ex.run();
+    let out = dist.iter().map(|d| d.load(Ordering::Relaxed)).collect();
+    (
+        GraphRun {
+            report,
+            edges_processed: edges_scanned.load(Ordering::Relaxed),
+        },
+        out,
+    )
+}
+
+// ====================================================================
+// GUPS (RandomAccess)
+// ====================================================================
+
+/// HPCC RandomAccess: XOR-updates at random table locations. Returns the
+/// run and the number of updates performed (GUPS numerator).
+pub fn run_gups(
+    topo: &Topology,
+    policy: Box<dyn Policy>,
+    cores: usize,
+    table_words: usize,
+    updates_per_core: u64,
+    seed: u64,
+) -> (GraphRun, Arc<Vec<AtomicU64>>) {
+    let mut machine = Machine::new(topo.clone());
+    let bytes = (table_words * 8) as u64;
+    let table_r = machine.alloc("gups-table", bytes, Placement::Interleave);
+
+    let table: Arc<Vec<AtomicU64>> =
+        Arc::new((0..table_words).map(|i| AtomicU64::new(i as u64)).collect());
+    const CHUNK: u64 = 4096;
+    let chunks = updates_per_core.div_ceil(CHUNK);
+
+    let mut ex = SimExecutor::new(machine, policy);
+    ex.spawn_group(cores, |rank| {
+        let table = table.clone();
+        let mut rng = crate::util::Rng::new(seed ^ (rank as u64) << 32);
+        Box::new(StateTask::new(move |ctx, step| {
+            if step >= chunks {
+                return Step::Done;
+            }
+            let todo = CHUNK.min(updates_per_core - step * CHUNK);
+            for _ in 0..todo {
+                let idx = rng.gen_index(table.len());
+                let v = rng.next_u64();
+                table[idx].fetch_xor(v, Ordering::Relaxed);
+            }
+            ctx.access(
+                crate::cachesim::Access::rand_write(table_r, todo, bytes).with_mlp(4.0),
+            );
+            ctx.compute_flops(todo);
+            if step + 1 >= chunks {
+                Step::Done
+            } else {
+                Step::Yield
+            }
+        }))
+    });
+    let report = ex.run();
+    let total = cores as u64 * updates_per_core;
+    (
+        GraphRun {
+            report,
+            edges_processed: total,
+        },
+        table,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::{ArcasPolicy, LocalCachePolicy, RingPolicy};
+    use crate::workloads::graph::algos;
+    use crate::workloads::graph::kronecker::kronecker;
+
+    fn topo() -> Topology {
+        Topology::milan_1s()
+    }
+
+    fn test_graph() -> Arc<Csr> {
+        Arc::new(kronecker(10, 8, 42))
+    }
+
+    #[test]
+    fn parallel_bfs_matches_reference() {
+        let g = test_graph();
+        let (_, par) = run_bfs(&topo(), Box::new(LocalCachePolicy), 8, g.clone(), 0);
+        let ser = algos::bfs_ref(&g, 0);
+        assert_eq!(par, ser);
+    }
+
+    #[test]
+    fn parallel_cc_matches_reference_components() {
+        let g = test_graph();
+        let (_, par) = run_cc(&topo(), Box::new(LocalCachePolicy), 8, g.clone());
+        let ser = algos::cc_ref(&g);
+        // Labels may differ; component *partitions* must match.
+        let n = g.num_vertices();
+        let mut map = std::collections::HashMap::new();
+        for v in 0..n {
+            let e = map.entry(par[v]).or_insert(ser[v]);
+            assert_eq!(*e, ser[v], "vertex {v} crosses components");
+        }
+        assert_eq!(
+            algos::component_count(&par),
+            algos::component_count(&ser)
+        );
+    }
+
+    #[test]
+    fn parallel_pagerank_close_to_reference() {
+        let g = test_graph();
+        let (_, par) = run_pagerank(&topo(), Box::new(LocalCachePolicy), 8, g.clone(), 10);
+        let ser = algos::pagerank_ref(&g, 10);
+        for v in 0..g.num_vertices() {
+            assert!(
+                (par[v] - ser[v]).abs() < 1e-9,
+                "v={v} par={} ser={}",
+                par[v],
+                ser[v]
+            );
+        }
+    }
+
+    #[test]
+    fn parallel_sssp_matches_dijkstra() {
+        let g = test_graph();
+        let (_, par) = run_sssp(&topo(), Box::new(LocalCachePolicy), 8, g.clone(), 0);
+        let ser = algos::sssp_ref(&g, 0);
+        assert_eq!(par, ser);
+    }
+
+    #[test]
+    fn gups_preserves_xor_invariant_shape() {
+        let (run, table) = run_gups(&topo(), Box::new(LocalCachePolicy), 4, 1 << 12, 10_000, 9);
+        assert_eq!(run.edges_processed, 40_000);
+        assert!(run.report.makespan_ns > 0);
+        // Table was actually modified.
+        let changed = table
+            .iter()
+            .enumerate()
+            .filter(|(i, v)| v.load(Ordering::Relaxed) != *i as u64)
+            .count();
+        assert!(changed > table.len() / 2);
+    }
+
+    #[test]
+    fn arcas_beats_ring_on_bfs() {
+        // The headline claim (Fig. 7): chiplet-aware placement outperforms
+        // NUMA-aware RING at higher core counts on the 2-socket machine.
+        let g = Arc::new(kronecker(11, 8, 7));
+        let t = Topology::milan_2s();
+        let arcas_policy = ArcasPolicy::new(&t).with_timer(20_000);
+        let (arcas, _) = run_bfs(&t, Box::new(arcas_policy), 32, g.clone(), 0);
+        let (ring, _) = run_bfs(&t, Box::new(RingPolicy::new()), 32, g.clone(), 0);
+        assert!(
+            arcas.report.makespan_ns < ring.report.makespan_ns,
+            "arcas={} ring={}",
+            arcas.report.makespan_ns,
+            ring.report.makespan_ns
+        );
+    }
+
+    #[test]
+    fn bfs_scales_with_cores() {
+        let g = test_graph();
+        let (c1, _) = run_bfs(&topo(), Box::new(LocalCachePolicy), 1, g.clone(), 0);
+        let (c8, _) = run_bfs(&topo(), Box::new(LocalCachePolicy), 8, g.clone(), 0);
+        assert!(
+            c8.report.makespan_ns < c1.report.makespan_ns,
+            "8 cores {} must beat 1 core {}",
+            c8.report.makespan_ns,
+            c1.report.makespan_ns
+        );
+    }
+
+    #[test]
+    fn vertex_ranges_partition() {
+        let n = 1000;
+        let g = 7;
+        let mut covered = 0;
+        for r in 0..g {
+            let (lo, hi) = vertex_range(r, g, n);
+            covered += hi - lo;
+        }
+        assert_eq!(covered, n);
+        assert_eq!(vertex_range(g - 1, g, n).1, n);
+    }
+}

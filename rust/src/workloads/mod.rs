@@ -1,0 +1,6 @@
+//! Evaluation workloads (paper §5).
+pub mod graph;
+pub mod streamcluster;
+pub mod sgd;
+pub mod olap;
+pub mod oltp;

@@ -1,0 +1,249 @@
+//! TPC-H-shaped columnar data generator.
+//!
+//! Column layouts, key relationships (orderkey/partkey/suppkey FKs), value
+//! distributions and date ranges follow the TPC-H spec; text columns are
+//! replaced by small integer dictionaries (the engine never touches
+//! strings on the hot path, matching columnar execution). `sf = 1.0`
+//! means 6 M lineitem rows; the reproduction defaults to `sf = 0.05–0.1`.
+
+use crate::util::prng::Rng;
+
+/// Days since 1992-01-01; the TPC-H date domain spans 7 years.
+pub const DATE_MAX: u16 = 2556;
+
+#[derive(Clone, Debug, Default)]
+pub struct Lineitem {
+    pub orderkey: Vec<u64>,
+    pub partkey: Vec<u32>,
+    pub suppkey: Vec<u32>,
+    pub quantity: Vec<f32>,
+    pub extendedprice: Vec<f32>,
+    pub discount: Vec<f32>,
+    pub tax: Vec<f32>,
+    pub returnflag: Vec<u8>,
+    pub linestatus: Vec<u8>,
+    pub shipdate: Vec<u16>,
+    pub commitdate: Vec<u16>,
+    pub receiptdate: Vec<u16>,
+    pub shipmode: Vec<u8>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Orders {
+    pub orderkey: Vec<u64>,
+    pub custkey: Vec<u32>,
+    pub orderdate: Vec<u16>,
+    pub orderpriority: Vec<u8>,
+    pub totalprice: Vec<f32>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Customer {
+    pub custkey: Vec<u32>,
+    pub nationkey: Vec<u8>,
+    pub mktsegment: Vec<u8>,
+    pub acctbal: Vec<f32>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Part {
+    pub partkey: Vec<u32>,
+    pub brand: Vec<u8>,
+    pub container: Vec<u8>,
+    pub size: Vec<u8>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Supplier {
+    pub suppkey: Vec<u32>,
+    pub nationkey: Vec<u8>,
+}
+
+/// The database.
+#[derive(Clone, Debug)]
+pub struct Db {
+    pub sf: f64,
+    pub lineitem: Lineitem,
+    pub orders: Orders,
+    pub customer: Customer,
+    pub part: Part,
+    pub supplier: Supplier,
+}
+
+/// Table identifiers for region/cost bookkeeping.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Table {
+    Lineitem,
+    Orders,
+    Customer,
+    Part,
+    Supplier,
+}
+
+impl Db {
+    /// Generate a scaled TPC-H database (deterministic from `seed`).
+    pub fn generate(sf: f64, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let n_orders = ((1_500_000.0 * sf) as usize).max(64);
+        let n_li = n_orders * 4; // avg 4 lineitems per order
+        let n_cust = ((150_000.0 * sf) as usize).max(16);
+        let n_part = ((200_000.0 * sf) as usize).max(16);
+        let n_supp = ((10_000.0 * sf) as usize).max(8);
+
+        let mut orders = Orders::default();
+        for ok in 0..n_orders as u64 {
+            orders.orderkey.push(ok);
+            orders.custkey.push(rng.gen_range(n_cust as u64) as u32);
+            orders.orderdate.push(rng.gen_range(DATE_MAX as u64) as u16);
+            orders.orderpriority.push(rng.gen_range(5) as u8);
+            orders.totalprice.push(1000.0 + 100_000.0 * rng.gen_f32());
+        }
+
+        let mut li = Lineitem::default();
+        for _ in 0..n_li {
+            let o = rng.gen_range(n_orders as u64);
+            li.orderkey.push(o);
+            li.partkey.push(rng.gen_range(n_part as u64) as u32);
+            li.suppkey.push(rng.gen_range(n_supp as u64) as u32);
+            li.quantity.push(1.0 + (rng.gen_range(50)) as f32);
+            li.extendedprice.push(900.0 + 104_000.0 * rng.gen_f32());
+            li.discount.push((rng.gen_range(11)) as f32 / 100.0);
+            li.tax.push((rng.gen_range(9)) as f32 / 100.0);
+            let od = orders.orderdate[o as usize];
+            let ship = od.saturating_add(1 + rng.gen_range(121) as u16).min(DATE_MAX);
+            li.shipdate.push(ship);
+            li.commitdate
+                .push(ship.saturating_add(rng.gen_range(60) as u16).min(DATE_MAX));
+            li.receiptdate
+                .push(ship.saturating_add(1 + rng.gen_range(30) as u16).min(DATE_MAX));
+            li.returnflag.push(rng.gen_range(3) as u8);
+            li.linestatus.push(rng.gen_range(2) as u8);
+            li.shipmode.push(rng.gen_range(7) as u8);
+        }
+
+        let mut customer = Customer::default();
+        for ck in 0..n_cust as u32 {
+            customer.custkey.push(ck);
+            customer.nationkey.push(rng.gen_range(25) as u8);
+            customer.mktsegment.push(rng.gen_range(5) as u8);
+            customer.acctbal.push(-999.0 + 10_999.0 * rng.gen_f32());
+        }
+
+        let mut part = Part::default();
+        for pk in 0..n_part as u32 {
+            part.partkey.push(pk);
+            part.brand.push(rng.gen_range(25) as u8);
+            part.container.push(rng.gen_range(40) as u8);
+            part.size.push(1 + rng.gen_range(50) as u8);
+        }
+
+        let mut supplier = Supplier::default();
+        for sk in 0..n_supp as u32 {
+            supplier.suppkey.push(sk);
+            supplier.nationkey.push(rng.gen_range(25) as u8);
+        }
+
+        Self {
+            sf,
+            lineitem: li,
+            orders,
+            customer,
+            part,
+            supplier,
+        }
+    }
+
+    pub fn rows(&self, t: Table) -> usize {
+        match t {
+            Table::Lineitem => self.lineitem.orderkey.len(),
+            Table::Orders => self.orders.orderkey.len(),
+            Table::Customer => self.customer.custkey.len(),
+            Table::Part => self.part.partkey.len(),
+            Table::Supplier => self.supplier.suppkey.len(),
+        }
+    }
+
+    /// Approximate bytes per row touched by a typical query on `t`
+    /// (the columnar scan footprint).
+    pub fn row_bytes(&self, t: Table) -> u64 {
+        match t {
+            Table::Lineitem => 40,
+            Table::Orders => 20,
+            Table::Customer => 12,
+            Table::Part => 8,
+            Table::Supplier => 5,
+        }
+    }
+
+    pub fn table_bytes(&self, t: Table) -> u64 {
+        self.rows(t) as u64 * self.row_bytes(t)
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        [
+            Table::Lineitem,
+            Table::Orders,
+            Table::Customer,
+            Table::Part,
+            Table::Supplier,
+        ]
+        .iter()
+        .map(|&t| self.table_bytes(t))
+        .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = Db::generate(0.001, 1);
+        let b = Db::generate(0.001, 1);
+        assert_eq!(a.lineitem.orderkey, b.lineitem.orderkey);
+        assert_eq!(a.orders.custkey, b.orders.custkey);
+    }
+
+    #[test]
+    fn row_ratios_follow_tpch() {
+        let db = Db::generate(0.01, 2);
+        let li = db.rows(Table::Lineitem);
+        let ord = db.rows(Table::Orders);
+        assert_eq!(li, 4 * ord);
+        assert!(db.rows(Table::Customer) < ord);
+    }
+
+    #[test]
+    fn fk_integrity() {
+        let db = Db::generate(0.002, 3);
+        let n_ord = db.rows(Table::Orders) as u64;
+        let n_part = db.rows(Table::Part) as u32;
+        let n_supp = db.rows(Table::Supplier) as u32;
+        let n_cust = db.rows(Table::Customer) as u32;
+        assert!(db.lineitem.orderkey.iter().all(|&k| k < n_ord));
+        assert!(db.lineitem.partkey.iter().all(|&k| k < n_part));
+        assert!(db.lineitem.suppkey.iter().all(|&k| k < n_supp));
+        assert!(db.orders.custkey.iter().all(|&k| k < n_cust));
+    }
+
+    #[test]
+    fn value_domains() {
+        let db = Db::generate(0.002, 4);
+        assert!(db.lineitem.discount.iter().all(|&d| (0.0..=0.10).contains(&d)));
+        assert!(db.lineitem.quantity.iter().all(|&q| (1.0..=50.0).contains(&q)));
+        assert!(db.lineitem.shipdate.iter().all(|&d| d <= DATE_MAX));
+        // Shipdate after orderdate.
+        for i in 0..db.rows(Table::Lineitem) {
+            let od = db.orders.orderdate[db.lineitem.orderkey[i] as usize];
+            assert!(db.lineitem.shipdate[i] >= od);
+        }
+    }
+
+    #[test]
+    fn bytes_scale_with_sf() {
+        let small = Db::generate(0.001, 5).total_bytes();
+        let big = Db::generate(0.004, 5).total_bytes();
+        assert!(big > small * 3);
+    }
+}

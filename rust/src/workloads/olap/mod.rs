@@ -1,0 +1,14 @@
+//! OLAP mini-engine: TPC-H-shaped columnar analytics on ARCAS tasks
+//! (§5.5, Fig. 12). The DuckDB substitute.
+//!
+//! - [`data`] — scaled TPC-H data generator (columnar, FK-consistent),
+//! - [`queries`] — all 22 query shapes as operator specs,
+//! - [`exec`] — morsel-parallel build/probe/merge execution with real
+//!   hash joins and aggregation, plus a serial oracle.
+pub mod data;
+pub mod queries;
+pub mod exec;
+
+pub use data::{Db, Table};
+pub use exec::{run_query, run_query_serial, QueryResult};
+pub use queries::{all_queries, QuerySpec};

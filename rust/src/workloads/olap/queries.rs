@@ -1,0 +1,151 @@
+//! The 22 TPC-H query shapes as operator specs.
+//!
+//! Each query is reduced to the operator mix that drives its memory
+//! behaviour (the property Fig. 12 exercises): which tables are scanned,
+//! how selective the filters are, which hash joins feed the probe
+//! pipeline over the fact table, and how large the group-by state is.
+//! Selectivities come from the TPC-H spec's predicate definitions.
+//! Aggregates are computed for real over the generated columns — the
+//! simplification is in predicate shape, not in execution.
+
+use super::data::Table;
+
+/// One hash join feeding the probe pipeline.
+#[derive(Clone, Copy, Debug)]
+pub struct JoinSpec {
+    /// Build side.
+    pub build: Table,
+    /// Which probe-side key column to match on.
+    pub key: KeyCol,
+    /// Fraction of the build side that passes its filters.
+    pub selectivity: f64,
+}
+
+/// Probe-side key columns (lineitem FKs + orders custkey).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KeyCol {
+    Orderkey,
+    Partkey,
+    Suppkey,
+    Custkey,
+}
+
+/// A TPC-H-shaped query plan.
+#[derive(Clone, Debug)]
+pub struct QuerySpec {
+    pub id: usize,
+    pub name: &'static str,
+    /// Table streamed through the probe pipeline.
+    pub probe: Table,
+    /// Selectivity of the probe-side filters (e.g. shipdate ranges).
+    pub probe_selectivity: f64,
+    /// Hash joins (build order = vector order).
+    pub joins: Vec<JoinSpec>,
+    /// Number of distinct groups in the final aggregation.
+    pub groups: usize,
+    /// Extra per-row arithmetic weight (expressions, case-when chains).
+    pub flops_per_row: u64,
+}
+
+fn j(build: Table, key: KeyCol, selectivity: f64) -> JoinSpec {
+    JoinSpec {
+        build,
+        key,
+        selectivity,
+    }
+}
+
+/// All 22 query shapes. Group counts are for SF≈1 and are scaled by the
+/// engine with the database's actual row counts.
+pub fn all_queries() -> Vec<QuerySpec> {
+    use KeyCol::*;
+    use Table::*;
+    vec![
+        QuerySpec { id: 1, name: "Q1 pricing summary", probe: Lineitem, probe_selectivity: 0.986, joins: vec![], groups: 4, flops_per_row: 8 },
+        QuerySpec { id: 2, name: "Q2 min cost supplier", probe: Lineitem, probe_selectivity: 0.02, joins: vec![j(Part, Partkey, 0.004), j(Supplier, Suppkey, 1.0)], groups: 100, flops_per_row: 2 },
+        QuerySpec { id: 3, name: "Q3 shipping priority", probe: Lineitem, probe_selectivity: 0.54, joins: vec![j(Orders, Orderkey, 0.24)], groups: 1_150_000, flops_per_row: 3 },
+        QuerySpec { id: 4, name: "Q4 order priority", probe: Lineitem, probe_selectivity: 0.63, joins: vec![j(Orders, Orderkey, 0.038)], groups: 5, flops_per_row: 1 },
+        QuerySpec { id: 5, name: "Q5 local supplier volume", probe: Lineitem, probe_selectivity: 1.0, joins: vec![j(Orders, Orderkey, 0.15), j(Supplier, Suppkey, 0.2), j(Customer, Custkey, 0.2)], groups: 5, flops_per_row: 3 },
+        QuerySpec { id: 6, name: "Q6 forecast revenue", probe: Lineitem, probe_selectivity: 0.019, joins: vec![], groups: 1, flops_per_row: 2 },
+        QuerySpec { id: 7, name: "Q7 volume shipping", probe: Lineitem, probe_selectivity: 0.29, joins: vec![j(Orders, Orderkey, 1.0), j(Supplier, Suppkey, 0.04), j(Customer, Custkey, 0.04)], groups: 4, flops_per_row: 3 },
+        QuerySpec { id: 8, name: "Q8 market share", probe: Lineitem, probe_selectivity: 1.0, joins: vec![j(Part, Partkey, 0.007), j(Orders, Orderkey, 0.29), j(Customer, Custkey, 0.2)], groups: 2, flops_per_row: 4 },
+        QuerySpec { id: 9, name: "Q9 product profit", probe: Lineitem, probe_selectivity: 1.0, joins: vec![j(Part, Partkey, 0.055), j(Orders, Orderkey, 1.0), j(Supplier, Suppkey, 1.0)], groups: 175, flops_per_row: 4 },
+        QuerySpec { id: 10, name: "Q10 returned items", probe: Lineitem, probe_selectivity: 0.33, joins: vec![j(Orders, Orderkey, 0.031), j(Customer, Custkey, 1.0)], groups: 38_000, flops_per_row: 3 },
+        QuerySpec { id: 11, name: "Q11 important stock", probe: Lineitem, probe_selectivity: 0.3, joins: vec![j(Supplier, Suppkey, 0.04)], groups: 30_000, flops_per_row: 2 },
+        QuerySpec { id: 12, name: "Q12 shipping modes", probe: Lineitem, probe_selectivity: 0.0086, joins: vec![j(Orders, Orderkey, 1.0)], groups: 2, flops_per_row: 3 },
+        QuerySpec { id: 13, name: "Q13 customer distribution", probe: Orders, probe_selectivity: 0.98, joins: vec![j(Customer, Custkey, 1.0)], groups: 42, flops_per_row: 1 },
+        QuerySpec { id: 14, name: "Q14 promotion effect", probe: Lineitem, probe_selectivity: 0.0125, joins: vec![j(Part, Partkey, 1.0)], groups: 1, flops_per_row: 4 },
+        QuerySpec { id: 15, name: "Q15 top supplier", probe: Lineitem, probe_selectivity: 0.0375, joins: vec![j(Supplier, Suppkey, 1.0)], groups: 10_000, flops_per_row: 2 },
+        QuerySpec { id: 16, name: "Q16 part/supplier rel", probe: Lineitem, probe_selectivity: 0.2, joins: vec![j(Part, Partkey, 0.14), j(Supplier, Suppkey, 0.99)], groups: 18_000, flops_per_row: 1 },
+        QuerySpec { id: 17, name: "Q17 small-qty revenue", probe: Lineitem, probe_selectivity: 1.0, joins: vec![j(Part, Partkey, 0.001)], groups: 200, flops_per_row: 3 },
+        QuerySpec { id: 18, name: "Q18 large volume customer", probe: Lineitem, probe_selectivity: 1.0, joins: vec![j(Orders, Orderkey, 1.0), j(Customer, Custkey, 1.0)], groups: 1_500_000, flops_per_row: 2 },
+        QuerySpec { id: 19, name: "Q19 discounted revenue", probe: Lineitem, probe_selectivity: 0.02, joins: vec![j(Part, Partkey, 0.002)], groups: 1, flops_per_row: 6 },
+        QuerySpec { id: 20, name: "Q20 potential promotion", probe: Lineitem, probe_selectivity: 0.0375, joins: vec![j(Part, Partkey, 0.011), j(Supplier, Suppkey, 1.0)], groups: 400, flops_per_row: 2 },
+        QuerySpec { id: 21, name: "Q21 late suppliers", probe: Lineitem, probe_selectivity: 0.5, joins: vec![j(Orders, Orderkey, 0.49), j(Supplier, Suppkey, 0.04), j(Orders, Orderkey, 0.5)], groups: 10_000, flops_per_row: 4 },
+        QuerySpec { id: 22, name: "Q22 global sales opp", probe: Orders, probe_selectivity: 1.0, joins: vec![j(Customer, Custkey, 0.25)], groups: 7, flops_per_row: 2 },
+    ]
+}
+
+impl QuerySpec {
+    /// Is this a join-heavy query (the class the paper says benefits most
+    /// from spreading — Q3, Q4, Q5, Q7, Q9, Q10, Q21)?
+    pub fn join_heavy(&self) -> bool {
+        self.joins
+            .iter()
+            .any(|jn| matches!(jn.build, Table::Orders) && jn.selectivity > 0.1)
+            || self.joins.len() >= 3
+    }
+
+    /// Small-working-set query (Q1, Q2, Q6, Q11 class)?
+    pub fn small_working_set(&self, li_rows: usize) -> bool {
+        let probe_rows = self.probe_selectivity * li_rows as f64;
+        self.joins.iter().map(|jn| jn.selectivity).sum::<f64>() < 0.05
+            || probe_rows < li_rows as f64 * 0.05
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn twenty_two_queries() {
+        let qs = all_queries();
+        assert_eq!(qs.len(), 22);
+        for (i, q) in qs.iter().enumerate() {
+            assert_eq!(q.id, i + 1);
+            assert!(q.groups >= 1);
+            assert!((0.0..=1.0).contains(&q.probe_selectivity));
+            for jn in &q.joins {
+                assert!((0.0..=1.0).contains(&jn.selectivity));
+            }
+        }
+    }
+
+    #[test]
+    fn classification_matches_paper_examples() {
+        let qs = all_queries();
+        // Paper: Q3, Q5, Q7, Q9, Q21 are join-heavy winners.
+        for id in [3, 5, 7, 9, 21] {
+            assert!(qs[id - 1].join_heavy(), "Q{id} should be join-heavy");
+        }
+        // Paper: Q1, Q6 have small working sets / no joins.
+        assert!(qs[0].small_working_set(6_000_000) || qs[0].joins.is_empty());
+        assert!(qs[5].small_working_set(6_000_000));
+    }
+
+    #[test]
+    fn key_columns_match_tables() {
+        // Sanity: orderkey joins build Orders, partkey builds Part, etc.
+        for q in all_queries() {
+            for jn in &q.joins {
+                match jn.key {
+                    KeyCol::Orderkey => assert_eq!(jn.build, Table::Orders),
+                    KeyCol::Partkey => assert_eq!(jn.build, Table::Part),
+                    KeyCol::Suppkey => assert_eq!(jn.build, Table::Supplier),
+                    KeyCol::Custkey => assert_eq!(jn.build, Table::Customer),
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,362 @@
+//! OLTP engine (ERMIA-style, memory-optimized) with YCSB and TPC-C-lite
+//! drivers (§5.6, Fig. 13).
+//!
+//! Short transactions with optimistic version checks, a shared commit
+//! counter and a sequential log. The paper's (null) result — LocalCache ≈
+//! DistributedCache for OLTP — emerges from the cost structure: per-txn
+//! data footprints are a few cache lines, while every commit pays the
+//! shared commit-counter ping-pong and log append, which no cache
+//! placement policy can hide.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::mem::{Placement, RegionId};
+use crate::policy::Policy;
+use crate::sched::{RunReport, SimExecutor};
+use crate::sim::Machine;
+use crate::task::{StateTask, Step};
+use crate::topology::Topology;
+use crate::util::prng::Rng;
+
+/// Which benchmark drives the engine.
+#[derive(Clone, Debug)]
+pub enum OltpWorkload {
+    /// YCSB: single table, `read_frac` reads vs read-modify-writes
+    /// (paper: 45% read / 55% RMW on 50 M records — scaled).
+    Ycsb { records: usize, read_frac: f64 },
+    /// TPC-C-lite: `warehouses` warehouses, standard transaction mix
+    /// (45% NewOrder, 43% Payment, 12% others), home-warehouse access.
+    TpcC { warehouses: usize },
+}
+
+impl OltpWorkload {
+    pub fn ycsb_scaled(scale: f64) -> Self {
+        OltpWorkload::Ycsb {
+            records: ((50_000_000.0 * scale) as usize).max(1024),
+            read_frac: 0.45,
+        }
+    }
+
+    pub fn tpcc_scaled(scale: f64) -> Self {
+        OltpWorkload::TpcC {
+            warehouses: ((50.0 * scale).ceil() as usize).max(2),
+        }
+    }
+}
+
+/// Result of an OLTP run.
+#[derive(Clone, Debug)]
+pub struct OltpRun {
+    pub report: RunReport,
+    pub commits: u64,
+    pub aborts: u64,
+}
+
+impl OltpRun {
+    pub fn commits_per_sec(&self) -> f64 {
+        self.commits as f64 / (self.report.makespan_ns.max(1) as f64 / 1e9)
+    }
+}
+
+/// In-memory record store: one versioned word per record.
+struct Store {
+    records: Vec<AtomicU64>,
+    region: RegionId,
+    bytes: u64,
+}
+
+impl Store {
+    fn new(machine: &mut Machine, label: &str, n: usize, rec_bytes: u64) -> Self {
+        let bytes = (n as u64 * rec_bytes).max(64);
+        let region = machine.alloc(label, bytes, Placement::Interleave);
+        Self {
+            records: (0..n).map(|i| AtomicU64::new(i as u64)).collect(),
+            region,
+            bytes,
+        }
+    }
+
+    #[inline]
+    fn read(&self, i: usize) -> u64 {
+        self.records[i % self.records.len()].load(Ordering::Relaxed)
+    }
+
+    /// Optimistic RMW: returns false on version conflict (abort).
+    #[inline]
+    fn rmw(&self, i: usize, delta: u64) -> bool {
+        let slot = &self.records[i % self.records.len()];
+        let cur = slot.load(Ordering::Relaxed);
+        slot.compare_exchange(
+            cur,
+            cur.wrapping_add(delta),
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+        )
+        .is_ok()
+    }
+}
+
+const TXNS_PER_STEP: u64 = 64;
+
+/// Run an OLTP benchmark: `cores` clients, `txns_per_core` transactions
+/// each.
+pub fn run_oltp(
+    topo: &Topology,
+    policy: Box<dyn Policy>,
+    cores: usize,
+    workload: &OltpWorkload,
+    txns_per_core: u64,
+    seed: u64,
+) -> OltpRun {
+    let mut machine = Machine::new(topo.clone());
+
+    // Stores per workload.
+    let (main, stock, orders_store) = match workload {
+        OltpWorkload::Ycsb { records, .. } => (
+            Arc::new(Store::new(&mut machine, "ycsb-table", *records, 100)),
+            None,
+            None,
+        ),
+        OltpWorkload::TpcC { warehouses } => {
+            // warehouse+district+customer rolled into `main`;
+            // stock separate (largest table); orders append-only.
+            let cust = warehouses * 3_000;
+            (
+                Arc::new(Store::new(&mut machine, "tpcc-wh-dist-cust", cust, 64)),
+                Some(Arc::new(Store::new(
+                    &mut machine,
+                    "tpcc-stock",
+                    warehouses * 10_000,
+                    32,
+                ))),
+                Some(Arc::new(Store::new(
+                    &mut machine,
+                    "tpcc-orders",
+                    (txns_per_core as usize * cores).max(1024),
+                    48,
+                ))),
+            )
+        }
+    };
+    // Shared commit infrastructure: counter line + log.
+    let commit_region = machine.alloc("commit-counter", 64, Placement::Bind(0));
+    let log_region = machine.alloc("txn-log", 64 << 20, Placement::Bind(0));
+    let commit_counter = Arc::new(AtomicU64::new(0));
+    let commits = Arc::new(AtomicU64::new(0));
+    let aborts = Arc::new(AtomicU64::new(0));
+
+    let steps = txns_per_core.div_ceil(TXNS_PER_STEP);
+    let workload = workload.clone();
+
+    let mut ex = SimExecutor::new(machine, policy);
+    ex.spawn_group(cores, |rank| {
+        let main = main.clone();
+        let stock = stock.clone();
+        let orders_store = orders_store.clone();
+        let commit_counter = commit_counter.clone();
+        let commits = commits.clone();
+        let aborts = aborts.clone();
+        let workload = workload.clone();
+        let mut rng = Rng::new(seed ^ ((rank as u64) << 40));
+        Box::new(StateTask::new(move |ctx, step| {
+            if step >= steps {
+                return Step::Done;
+            }
+            let todo = TXNS_PER_STEP.min(txns_per_core - step * TXNS_PER_STEP);
+            let mut ok = 0u64;
+            let mut failed = 0u64;
+            let mut reads = 0u64;
+            let mut writes = 0u64;
+            for _ in 0..todo {
+                let committed = match &workload {
+                    OltpWorkload::Ycsb { records, read_frac } => {
+                        let key = rng.gen_zipf(*records as u64, 0.99) as usize;
+                        if rng.gen_bool(*read_frac) {
+                            let _ = main.read(key);
+                            reads += 1;
+                            true
+                        } else {
+                            reads += 1;
+                            writes += 1;
+                            main.rmw(key, 1)
+                        }
+                    }
+                    OltpWorkload::TpcC { warehouses } => {
+                        let wh = rank % warehouses; // home warehouse
+                        let kind = rng.gen_f64();
+                        if kind < 0.45 {
+                            // NewOrder: district seq + 5-15 stock updates
+                            // + order insert.
+                            let items = 5 + rng.gen_range(11);
+                            let mut all = main.rmw(wh * 3_000, 1);
+                            for _ in 0..items {
+                                let s = wh * 10_000 + rng.gen_index(10_000);
+                                all &= stock.as_ref().unwrap().rmw(s, 1);
+                                reads += 1;
+                                writes += 1;
+                            }
+                            let o = commit_counter.load(Ordering::Relaxed) as usize;
+                            let _ = orders_store.as_ref().unwrap().rmw(o, 1);
+                            writes += 2;
+                            all
+                        } else if kind < 0.88 {
+                            // Payment: wh + district + customer updates.
+                            let c = wh * 3_000 + rng.gen_index(3_000);
+                            let a = main.rmw(wh * 3_000, 1);
+                            let b = main.rmw(c, 1);
+                            reads += 3;
+                            writes += 3;
+                            a && b
+                        } else if kind < 0.92 {
+                            // OrderStatus: reads only.
+                            let c = wh * 3_000 + rng.gen_index(3_000);
+                            let _ = main.read(c);
+                            reads += 4;
+                            true
+                        } else if kind < 0.97 {
+                            // Delivery: update 10 orders.
+                            for _ in 0..10 {
+                                let o = rng.gen_index(
+                                    orders_store.as_ref().unwrap().records.len(),
+                                );
+                                let _ = orders_store.as_ref().unwrap().rmw(o, 1);
+                            }
+                            reads += 10;
+                            writes += 10;
+                            true
+                        } else {
+                            // StockLevel: scan 200 stock records.
+                            for _ in 0..200 {
+                                let s = wh * 10_000 + rng.gen_index(10_000);
+                                let _ = stock.as_ref().unwrap().read(s);
+                            }
+                            reads += 200;
+                            true
+                        }
+                    }
+                };
+                if committed {
+                    commit_counter.fetch_add(1, Ordering::Relaxed);
+                    ok += 1;
+                } else {
+                    failed += 1;
+                }
+            }
+            commits.fetch_add(ok, Ordering::Relaxed);
+            aborts.fetch_add(failed, Ordering::Relaxed);
+
+            // --- cost model for this chunk.
+            if reads > 0 {
+                ctx.access(
+                    crate::cachesim::Access::rand_read(main.region, reads, main.bytes)
+                        .with_mlp(1.5),
+                );
+            }
+            if writes > 0 {
+                let (wr, wb) = match &stock {
+                    Some(s) => (s.region, s.bytes),
+                    None => (main.region, main.bytes),
+                };
+                ctx.access(
+                    crate::cachesim::Access::rand_write(wr, writes, wb).with_mlp(1.5),
+                );
+            }
+            // Commit path: counter ping-pong + log append + latch wait.
+            if ok > 0 {
+                ctx.rand_write(commit_region, ok, 64);
+                ctx.seq_write(log_region, ok * 128);
+                // Serialization: ~600 ns latch + fsync-amortized delay.
+                ctx.compute_ns(ok * 600);
+            }
+            ctx.compute_flops(todo * 300);
+            if step + 1 >= steps {
+                Step::Done
+            } else {
+                Step::Yield
+            }
+        }))
+    });
+    let report = ex.run();
+    OltpRun {
+        report,
+        commits: commits.load(Ordering::Relaxed),
+        aborts: aborts.load(Ordering::Relaxed),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::{DistributedCachePolicy, LocalCachePolicy};
+
+    fn topo() -> Topology {
+        Topology::milan_1s()
+    }
+
+    #[test]
+    fn ycsb_commits_all_reads() {
+        let wl = OltpWorkload::Ycsb {
+            records: 10_000,
+            read_frac: 1.0,
+        };
+        let run = run_oltp(&topo(), Box::new(LocalCachePolicy), 4, &wl, 1_000, 1);
+        assert_eq!(run.commits, 4_000);
+        assert_eq!(run.aborts, 0);
+        assert!(run.commits_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn ycsb_rmw_mix_mostly_commits() {
+        let wl = OltpWorkload::Ycsb {
+            records: 10_000,
+            read_frac: 0.45,
+        };
+        let run = run_oltp(&topo(), Box::new(LocalCachePolicy), 8, &wl, 2_000, 2);
+        let total = run.commits + run.aborts;
+        assert_eq!(total, 16_000);
+        assert!(
+            run.commits as f64 > total as f64 * 0.95,
+            "commits={} aborts={}",
+            run.commits,
+            run.aborts
+        );
+    }
+
+    #[test]
+    fn tpcc_executes_standard_mix() {
+        let wl = OltpWorkload::TpcC { warehouses: 4 };
+        let run = run_oltp(&topo(), Box::new(LocalCachePolicy), 4, &wl, 1_000, 3);
+        assert!(run.commits > 3_500, "commits={}", run.commits);
+    }
+
+    #[test]
+    fn local_vs_distributed_is_a_null_result() {
+        // Fig. 13: OLTP throughput is commit-bound; the two static cache
+        // policies must land within ~20% of each other.
+        let wl = OltpWorkload::Ycsb {
+            records: 100_000,
+            read_frac: 0.45,
+        };
+        let local = run_oltp(&topo(), Box::new(LocalCachePolicy), 8, &wl, 4_000, 4);
+        let dist = run_oltp(&topo(), Box::new(DistributedCachePolicy), 8, &wl, 4_000, 4);
+        let ratio = local.commits_per_sec() / dist.commits_per_sec();
+        assert!(
+            (0.8..1.25).contains(&ratio),
+            "local={:.0} dist={:.0} ratio={ratio:.3}",
+            local.commits_per_sec(),
+            dist.commits_per_sec()
+        );
+    }
+
+    #[test]
+    fn throughput_scales_with_cores_some() {
+        let wl = OltpWorkload::Ycsb {
+            records: 100_000,
+            read_frac: 0.45,
+        };
+        let c1 = run_oltp(&topo(), Box::new(LocalCachePolicy), 1, &wl, 4_000, 5);
+        let c8 = run_oltp(&topo(), Box::new(LocalCachePolicy), 8, &wl, 4_000, 5);
+        assert!(c8.commits_per_sec() > c1.commits_per_sec() * 2.0);
+    }
+}

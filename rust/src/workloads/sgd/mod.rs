@@ -1,0 +1,545 @@
+//! Statistical analytics: SGD for logistic regression on a
+//! DimmWitted-style engine (§5.4.2, Fig. 10, Fig. 11).
+//!
+//! The engine supports DimmWitted's three native model-replication
+//! strategies (per-core, per-NUMA-node, per-machine) plus the
+//! ARCAS-managed variant; the std::async baseline is the same sharding
+//! run under [`crate::policy::OsAsyncPolicy`] with task-per-shard
+//! explosion (the paper counts 641 threads on 32 cores).
+//!
+//! The numeric hot spot — minibatch logistic loss + gradient — is
+//! abstracted behind [`GradEngine`]: [`RustGrad`] is the portable
+//! implementation, and `runtime::PjrtGrad` (L2/L1 path) runs the AOT
+//! JAX/Pallas artifact through PJRT with identical semantics.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::mem::{Placement, RegionId};
+use crate::policy::Policy;
+use crate::sched::{RunReport, SimExecutor};
+use crate::sim::Machine;
+use crate::task::{StateTask, Step};
+use crate::topology::Topology;
+use crate::util::prng::Rng;
+
+/// SGD configuration.
+#[derive(Clone, Debug)]
+pub struct SgdConfig {
+    pub n_samples: usize,
+    pub n_features: usize,
+    pub minibatch: usize,
+    pub epochs: usize,
+    pub lr: f32,
+    pub seed: u64,
+}
+
+impl SgdConfig {
+    pub fn tiny() -> Self {
+        Self {
+            n_samples: 512,
+            n_features: 64,
+            minibatch: 64,
+            epochs: 8,
+            lr: 4.0,
+            seed: 13,
+        }
+    }
+
+    /// Paper-shaped (10,000 × 8,192 ≈ 320 MB f32) scaled by `scale`.
+    pub fn bench(scale: f64) -> Self {
+        Self {
+            n_samples: (10_000.0 * scale).max(64.0) as usize,
+            n_features: (8_192.0 * scale.sqrt()).max(64.0) as usize,
+            minibatch: 128,
+            epochs: 3,
+            lr: 0.2,
+            seed: 77,
+        }
+    }
+
+    pub fn data_bytes(&self) -> u64 {
+        (self.n_samples * self.n_features * 4) as u64
+    }
+}
+
+/// Synthetic linearly-separable-ish dataset.
+pub struct SgdData {
+    pub x: Arc<Vec<f32>>,
+    pub y: Arc<Vec<f32>>,
+    pub w_true: Vec<f32>,
+}
+
+pub fn generate_data(cfg: &SgdConfig) -> SgdData {
+    let mut rng = Rng::new(cfg.seed);
+    let nf = cfg.n_features;
+    let w_true: Vec<f32> = (0..nf).map(|_| rng.gen_normal() as f32).collect();
+    let mut x = Vec::with_capacity(cfg.n_samples * nf);
+    let mut y = Vec::with_capacity(cfg.n_samples);
+    for _ in 0..cfg.n_samples {
+        let mut dot = 0.0f32;
+        for f in 0..nf {
+            let v = rng.gen_normal() as f32 / (nf as f32).sqrt();
+            dot += v * w_true[f];
+            x.push(v);
+        }
+        y.push(if dot > 0.0 { 1.0 } else { 0.0 });
+    }
+    SgdData {
+        x: Arc::new(x),
+        y: Arc::new(y),
+        w_true,
+    }
+}
+
+/// The numeric hot spot: minibatch logistic loss + gradient.
+pub trait GradEngine: Send + Sync {
+    /// `x`: `batch × nf` row-major; returns (mean loss, gradient[nf]).
+    fn loss_grad(&self, x: &[f32], y: &[f32], w: &[f32], nf: usize) -> (f64, Vec<f32>);
+
+    fn name(&self) -> &'static str {
+        "rust"
+    }
+}
+
+/// Portable pure-Rust engine (and the oracle the PJRT path is checked
+/// against).
+pub struct RustGrad;
+
+impl GradEngine for RustGrad {
+    fn loss_grad(&self, x: &[f32], y: &[f32], w: &[f32], nf: usize) -> (f64, Vec<f32>) {
+        let batch = y.len();
+        let mut grad = vec![0.0f32; nf];
+        let mut loss = 0.0f64;
+        for i in 0..batch {
+            let row = &x[i * nf..(i + 1) * nf];
+            let mut z = 0.0f32;
+            for f in 0..nf {
+                z += row[f] * w[f];
+            }
+            let p = 1.0 / (1.0 + (-z).exp());
+            let eps = 1e-7f32;
+            let pc = p.clamp(eps, 1.0 - eps);
+            loss -= (y[i] * pc.ln() + (1.0 - y[i]) * (1.0 - pc).ln()) as f64;
+            let err = p - y[i];
+            for f in 0..nf {
+                grad[f] += err * row[f];
+            }
+        }
+        let inv = 1.0 / batch as f32;
+        grad.iter_mut().for_each(|g| *g *= inv);
+        (loss / batch as f64, grad)
+    }
+}
+
+/// DimmWitted model-replication strategies (§5.4.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DwStrategy {
+    /// One model replica per core/task; averaged per epoch.
+    PerCore,
+    /// One replica per NUMA node (shared within the node).
+    PerNode,
+    /// A single machine-wide model (maximal sharing/contention).
+    PerMachine,
+}
+
+/// What Fig. 10 measures.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SgdMode {
+    /// Forward pass only (Fig. 10a, "logistic loss").
+    Loss,
+    /// Forward + gradient + model update (Fig. 10b).
+    Grad,
+}
+
+/// Result of an SGD run.
+#[derive(Clone, Debug)]
+pub struct SgdRun {
+    pub report: RunReport,
+    pub loss_trace: Vec<f64>,
+    pub final_loss: f64,
+    pub bytes_processed: u64,
+}
+
+impl SgdRun {
+    /// The paper's throughput metric: GB/s of training data streamed.
+    pub fn gbps(&self) -> f64 {
+        self.bytes_processed as f64 / self.report.makespan_ns.max(1) as f64
+    }
+}
+
+struct ModelStore {
+    /// One weight vector per replica.
+    replicas: Vec<Mutex<Vec<f32>>>,
+    /// Task rank → replica index.
+    assign: Vec<usize>,
+    regions: Vec<RegionId>,
+}
+
+/// Run SGD with `tasks` workers under `policy`.
+///
+/// `tasks` may exceed the core count (the std::async configuration
+/// explodes shards into OS threads); `engine` computes the actual math.
+#[allow(clippy::too_many_arguments)]
+pub fn run_sgd(
+    topo: &Topology,
+    policy: Box<dyn Policy>,
+    tasks: usize,
+    cfg: &SgdConfig,
+    data: &SgdData,
+    strategy: DwStrategy,
+    mode: SgdMode,
+    engine: Arc<dyn GradEngine>,
+) -> SgdRun {
+    let nf = cfg.n_features;
+    let n = cfg.n_samples;
+    let mut machine = Machine::new(topo.clone());
+
+    // Per-task shard regions (shards stream through L3 repeatedly across
+    // epochs — the cacheable working set).
+    let shard_bytes = cfg.data_bytes() / tasks as u64;
+    let shard_regions: Vec<_> = (0..tasks)
+        .map(|r| {
+            let numa = topo.numa_of_core(r % topo.num_cores());
+            machine.alloc(
+                &format!("sgd-shard-{r}"),
+                shard_bytes.max(64),
+                Placement::Bind(numa),
+            )
+        })
+        .collect();
+
+    // Model replicas per strategy.
+    let n_replicas = match strategy {
+        DwStrategy::PerCore => tasks,
+        DwStrategy::PerNode => topo.num_numa(),
+        DwStrategy::PerMachine => 1,
+    };
+    let model_bytes = (nf * 4) as u64;
+    let model = Arc::new(ModelStore {
+        replicas: (0..n_replicas)
+            .map(|_| Mutex::new(vec![0.0f32; nf]))
+            .collect(),
+        assign: (0..tasks)
+            .map(|r| match strategy {
+                DwStrategy::PerCore => r,
+                DwStrategy::PerNode => topo.numa_of_core(r % topo.num_cores()),
+                DwStrategy::PerMachine => 0,
+            })
+            .collect(),
+        regions: (0..n_replicas)
+            .map(|i| {
+                let numa = match strategy {
+                    DwStrategy::PerNode => i,
+                    _ => 0,
+                };
+                machine.alloc(
+                    &format!("sgd-model-{i}"),
+                    model_bytes,
+                    Placement::Bind(numa.min(topo.num_numa() - 1)),
+                )
+            })
+            .collect(),
+    });
+
+    let epoch_loss: Arc<Vec<AtomicU64>> =
+        Arc::new((0..cfg.epochs).map(|_| AtomicU64::new(0)).collect());
+
+    let per_task = n.div_ceil(tasks);
+    let mb = cfg.minibatch.min(per_task.max(1));
+    let batches_per_epoch = per_task.div_ceil(mb).max(1);
+    // Steps: epochs × (batches + 1 sync step).
+    let steps_per_epoch = batches_per_epoch as u64 + 1;
+    let total_steps = cfg.epochs as u64 * steps_per_epoch;
+    let lr = cfg.lr;
+    let epochs = cfg.epochs;
+
+    let mut ex = SimExecutor::new(machine, policy);
+    ex.spawn_group(tasks, |rank| {
+        let x = data.x.clone();
+        let y = data.y.clone();
+        let model = model.clone();
+        let engine = engine.clone();
+        let epoch_loss = epoch_loss.clone();
+        let shard_region = shard_regions[rank];
+        Box::new(StateTask::new(move |ctx, step| {
+            if step >= total_steps {
+                return Step::Done;
+            }
+            let epoch = (step / steps_per_epoch) as usize;
+            let sub = step % steps_per_epoch;
+            let lo = (rank * per_task).min(n);
+            let hi = ((rank + 1) * per_task).min(n);
+            if sub < batches_per_epoch as u64 {
+                // --- one minibatch.
+                let b_lo = lo + (sub as usize) * mb;
+                if b_lo >= hi {
+                    return Step::Yield; // shard shorter than schedule
+                }
+                let b_hi = (b_lo + mb).min(hi);
+                let bx = &x[b_lo * nf..b_hi * nf];
+                let by = &y[b_lo..b_hi];
+                let replica = model.assign[rank];
+                let (loss, grad) = {
+                    let w = model.replicas[replica].lock().unwrap();
+                    engine.loss_grad(bx, by, &w, nf)
+                };
+                // Accumulate epoch loss.
+                let slot = &epoch_loss[epoch.min(epochs - 1)];
+                let mut cur = slot.load(Ordering::Relaxed);
+                loop {
+                    let new = (f64::from_bits(cur) + loss).to_bits();
+                    match slot.compare_exchange_weak(
+                        cur,
+                        new,
+                        Ordering::Relaxed,
+                        Ordering::Relaxed,
+                    ) {
+                        Ok(_) => break,
+                        Err(c) => cur = c,
+                    }
+                }
+                // --- model costs.
+                let batch_bytes = ((b_hi - b_lo) * nf * 4) as u64;
+                ctx.seq_read(shard_region, batch_bytes);
+                let m_region = model.regions[replica];
+                ctx.seq_read(m_region, model_bytes);
+                ctx.compute_flops((2 * (b_hi - b_lo) * nf) as u64);
+                if mode == SgdMode::Grad {
+                    // Apply the update.
+                    {
+                        let mut w = model.replicas[replica].lock().unwrap();
+                        for f in 0..nf {
+                            w[f] -= lr * grad[f];
+                        }
+                    }
+                    ctx.seq_write(m_region, model_bytes);
+                    ctx.compute_flops((2 * (b_hi - b_lo) * nf) as u64);
+                    // Shared replicas serialize their updates: every writer
+                    // must pull the model's cache lines to exclusive state
+                    // (one inter-chiplet transfer per line), and expected
+                    // queue wait grows with the number of co-writers — the
+                    // convoy that stops per-machine/per-node scaling in the
+                    // paper's Fig. 10.
+                    let sharers = ctx.group_size / model.replicas.len().max(1);
+                    if sharers > 1 {
+                        let lines = model_bytes / 64;
+                        let xfer =
+                            ctx.machine.topo.lat.inter_chiplet_near_ns as u64;
+                        ctx.compute_ns(lines * xfer * (sharers as u64 - 1) / 4);
+                    }
+                }
+                Step::Yield
+            } else {
+                // --- epoch sync: average per-core replicas (rank 0).
+                if rank == 0 && mode == SgdMode::Grad && model.replicas.len() > 1 {
+                    let k = model.replicas.len();
+                    let mut avg = vec![0.0f32; nf];
+                    for r in model.replicas.iter() {
+                        let w = r.lock().unwrap();
+                        for f in 0..nf {
+                            avg[f] += w[f];
+                        }
+                    }
+                    avg.iter_mut().for_each(|v| *v /= k as f32);
+                    for r in model.replicas.iter() {
+                        *r.lock().unwrap() = avg.clone();
+                    }
+                    // Reads every replica region + broadcast write.
+                    for &reg in &model.regions {
+                        ctx.seq_read(reg, model_bytes);
+                        ctx.seq_write(reg, model_bytes);
+                    }
+                    ctx.compute_flops((k * nf) as u64);
+                }
+                if step + 1 >= total_steps {
+                    Step::Done
+                } else {
+                    Step::Barrier
+                }
+            }
+        }))
+    });
+    let report = ex.run();
+    let loss_trace: Vec<f64> = epoch_loss
+        .iter()
+        .map(|l| f64::from_bits(l.load(Ordering::Relaxed)))
+        .collect();
+    let final_loss = *loss_trace.last().unwrap_or(&0.0);
+    SgdRun {
+        report,
+        bytes_processed: cfg.data_bytes() * cfg.epochs as u64
+            * if mode == SgdMode::Grad { 2 } else { 1 },
+        loss_trace,
+        final_loss,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::{ArcasPolicy, OsAsyncPolicy, ShoalPolicy};
+
+    fn topo() -> Topology {
+        Topology::milan_1s()
+    }
+
+    #[test]
+    fn data_is_deterministic_and_labeled() {
+        let cfg = SgdConfig::tiny();
+        let d = generate_data(&cfg);
+        assert_eq!(d.x.len(), cfg.n_samples * cfg.n_features);
+        assert_eq!(d.y.len(), cfg.n_samples);
+        let pos = d.y.iter().filter(|&&v| v == 1.0).count();
+        // Roughly balanced labels.
+        assert!(pos > cfg.n_samples / 5 && pos < cfg.n_samples * 4 / 5);
+    }
+
+    #[test]
+    fn rust_grad_matches_finite_differences() {
+        let cfg = SgdConfig {
+            n_samples: 8,
+            n_features: 5,
+            ..SgdConfig::tiny()
+        };
+        let d = generate_data(&cfg);
+        let w: Vec<f32> = (0..5).map(|i| 0.1 * i as f32).collect();
+        let eng = RustGrad;
+        let (l0, g) = eng.loss_grad(&d.x[..8 * 5], &d.y[..8], &w, 5);
+        let eps = 1e-3f32;
+        for f in 0..5 {
+            let mut wp = w.clone();
+            wp[f] += eps;
+            let (lp, _) = eng.loss_grad(&d.x[..8 * 5], &d.y[..8], &wp, 5);
+            let fd = (lp - l0) / eps as f64;
+            assert!(
+                (fd - g[f] as f64).abs() < 2e-2,
+                "f={f} fd={fd} g={}",
+                g[f]
+            );
+        }
+    }
+
+    #[test]
+    fn loss_decreases_over_epochs() {
+        let cfg = SgdConfig::tiny();
+        let d = generate_data(&cfg);
+        let run = run_sgd(
+            &topo(),
+            Box::new(ShoalPolicy::new()),
+            4,
+            &cfg,
+            &d,
+            DwStrategy::PerCore,
+            SgdMode::Grad,
+            Arc::new(RustGrad),
+        );
+        assert!(
+            run.loss_trace.last().unwrap() < &(run.loss_trace[0] * 0.9),
+            "trace={:?}",
+            run.loss_trace
+        );
+    }
+
+    #[test]
+    fn strategies_produce_different_contention() {
+        // Tasks must sit on *different chiplets* for the shared-model
+        // invalidation ping-pong to show; the model must also be large
+        // enough to dominate the traffic.
+        let cfg = SgdConfig {
+            n_samples: 128,
+            n_features: 16_384,
+            minibatch: 4,
+            epochs: 4,
+            lr: 0.1,
+            seed: 13,
+        };
+        let d = generate_data(&cfg);
+        let per_core = run_sgd(
+            &topo(),
+            Box::new(crate::policy::DistributedCachePolicy),
+            8,
+            &cfg,
+            &d,
+            DwStrategy::PerCore,
+            SgdMode::Grad,
+            Arc::new(RustGrad),
+        );
+        let per_machine = run_sgd(
+            &topo(),
+            Box::new(crate::policy::DistributedCachePolicy),
+            8,
+            &cfg,
+            &d,
+            DwStrategy::PerMachine,
+            SgdMode::Grad,
+            Arc::new(RustGrad),
+        );
+        // Shared model => coherence invalidations => more remote traffic.
+        let pc_remote = per_core.report.counts.fill_events() + per_core.report.counts.dram;
+        let pm_remote =
+            per_machine.report.counts.fill_events() + per_machine.report.counts.dram;
+        assert!(
+            pm_remote > pc_remote,
+            "per-machine {pm_remote} vs per-core {pc_remote}"
+        );
+    }
+
+    #[test]
+    fn os_async_slower_than_coroutines() {
+        let cfg = SgdConfig::tiny();
+        let d = generate_data(&cfg);
+        let coro = run_sgd(
+            &topo(),
+            Box::new(ArcasPolicy::new(&topo()).with_timer(50_000)),
+            8,
+            &cfg,
+            &d,
+            DwStrategy::PerCore,
+            SgdMode::Grad,
+            Arc::new(RustGrad),
+        );
+        // std::async: shard explosion into OS threads.
+        let os = run_sgd(
+            &topo(),
+            Box::new(OsAsyncPolicy::new()),
+            64,
+            &cfg,
+            &d,
+            DwStrategy::PerCore,
+            SgdMode::Grad,
+            Arc::new(RustGrad),
+        );
+        assert!(
+            os.report.makespan_ns > coro.report.makespan_ns,
+            "os={} coro={}",
+            os.report.makespan_ns,
+            coro.report.makespan_ns
+        );
+        assert!(os.peak_threads() >= 64);
+        assert!(coro.report.peak_concurrency <= 8 + 2);
+    }
+
+    impl SgdRun {
+        fn peak_threads(&self) -> usize {
+            self.report.peak_concurrency
+        }
+    }
+
+    #[test]
+    fn gbps_is_positive() {
+        let cfg = SgdConfig::tiny();
+        let d = generate_data(&cfg);
+        let run = run_sgd(
+            &topo(),
+            Box::new(ShoalPolicy::new()),
+            4,
+            &cfg,
+            &d,
+            DwStrategy::PerNode,
+            SgdMode::Loss,
+            Arc::new(RustGrad),
+        );
+        assert!(run.gbps() > 0.0);
+    }
+}

@@ -1,0 +1,395 @@
+//! StreamCluster (PARSEC) — streaming k-median clustering (§5.3, Fig. 8,
+//! Tab. 2).
+//!
+//! Points arrive in batches; each batch runs a few local-search
+//! iterations: assign every point to its nearest center, then open new
+//! centers at high-cost points when that reduces total cost. The hot
+//! memory behaviour is the one the paper exploits: each worker *re-reads
+//! its slice of the current batch* every local-search iteration — so a
+//! policy that spreads 16 workers across 8 chiplets caches the whole
+//! batch in 8×32 MB of L3, while Shoal's sequential placement squeezes it
+//! through 2×32 MB and spills to DRAM (Tab. 2's 7× main-memory gap).
+//!
+//! Per-slice regions make that locality visible to the cache model.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::mem::Placement;
+use crate::policy::Policy;
+use crate::sched::{RunReport, SimExecutor};
+use crate::sim::Machine;
+use crate::task::{StateTask, Step};
+use crate::topology::Topology;
+use crate::util::prng::Rng;
+
+/// StreamCluster configuration (paper defaults scaled by the caller).
+#[derive(Clone, Debug)]
+pub struct ScConfig {
+    pub n_points: usize,
+    pub dims: usize,
+    pub batch_size: usize,
+    /// Target center range (paper: 10–20).
+    pub k_min: usize,
+    pub k_max: usize,
+    /// Cap on intermediate centers (paper: 5000).
+    pub max_centers: usize,
+    /// Local-search iterations per batch.
+    pub local_iters: usize,
+    pub seed: u64,
+}
+
+impl ScConfig {
+    /// Small config for tests.
+    pub fn tiny() -> Self {
+        Self {
+            n_points: 2_000,
+            dims: 16,
+            batch_size: 1_000,
+            k_min: 5,
+            k_max: 10,
+            max_centers: 100,
+            local_iters: 3,
+            seed: 42,
+        }
+    }
+
+    /// Scaled-down PARSEC `native`-shaped input for benches.
+    pub fn bench(scale: f64) -> Self {
+        Self {
+            n_points: (200_000.0 * scale) as usize,
+            dims: 64,
+            batch_size: (40_000.0 * scale) as usize,
+            k_min: 10,
+            k_max: 20,
+            max_centers: 5_000,
+            local_iters: 4,
+            seed: 7,
+        }
+    }
+
+    pub fn point_bytes(&self) -> u64 {
+        (self.dims * 4) as u64
+    }
+
+    pub fn batch_bytes(&self) -> u64 {
+        self.batch_size as u64 * self.point_bytes()
+    }
+}
+
+/// Generate clustered points: Gaussian blobs in `[0,1]^dims`.
+pub fn generate_points(cfg: &ScConfig) -> Vec<f32> {
+    let mut rng = Rng::new(cfg.seed);
+    let k_true = (cfg.k_min + cfg.k_max) / 2;
+    let centers: Vec<f32> = (0..k_true * cfg.dims).map(|_| rng.gen_f32()).collect();
+    let mut pts = Vec::with_capacity(cfg.n_points * cfg.dims);
+    for _ in 0..cfg.n_points {
+        let c = rng.gen_index(k_true);
+        for d in 0..cfg.dims {
+            pts.push(centers[c * cfg.dims + d] + 0.05 * rng.gen_normal() as f32);
+        }
+    }
+    pts
+}
+
+#[inline]
+fn dist2(a: &[f32], b: &[f32]) -> f32 {
+    let mut s = 0.0f32;
+    for i in 0..a.len() {
+        let d = a[i] - b[i];
+        s += d * d;
+    }
+    s
+}
+
+/// Result of a streamcluster run.
+#[derive(Clone, Debug)]
+pub struct ScResult {
+    pub report: RunReport,
+    pub final_cost: f64,
+    pub n_centers: usize,
+    /// Cost after each (batch, iter) assignment phase.
+    pub cost_trace: Vec<f64>,
+}
+
+/// Serial reference: same algorithm, single-threaded (cost oracle).
+pub fn serial_cost(cfg: &ScConfig, points: &[f32]) -> (f64, usize) {
+    let mut centers: Vec<f32> = points[..cfg.dims].to_vec(); // first point
+    let n = cfg.n_points.min(points.len() / cfg.dims);
+    let mut rng = Rng::new(cfg.seed ^ 0xC0FFEE);
+    for _ in 0..cfg.local_iters {
+        let mut worst: (f32, usize) = (-1.0, 0);
+        let k = centers.len() / cfg.dims;
+        for p in 0..n {
+            let pt = &points[p * cfg.dims..(p + 1) * cfg.dims];
+            let best = (0..k)
+                .map(|c| dist2(pt, &centers[c * cfg.dims..(c + 1) * cfg.dims]))
+                .fold(f32::INFINITY, f32::min);
+            if best > worst.0 {
+                worst = (best, p);
+            }
+        }
+        if centers.len() / cfg.dims < cfg.k_max && rng.gen_bool(0.9) {
+            centers.extend_from_slice(&points[worst.1 * cfg.dims..(worst.1 + 1) * cfg.dims]);
+        }
+    }
+    let k = centers.len() / cfg.dims;
+    let mut cost = 0.0f64;
+    for p in 0..n {
+        let pt = &points[p * cfg.dims..(p + 1) * cfg.dims];
+        let best = (0..k)
+            .map(|c| dist2(pt, &centers[c * cfg.dims..(c + 1) * cfg.dims]))
+            .fold(f32::INFINITY, f32::min);
+        cost += best as f64;
+    }
+    (cost, k)
+}
+
+/// Run parallel StreamCluster under `policy` on `cores` workers.
+pub fn run_streamcluster(
+    topo: &Topology,
+    policy: Box<dyn Policy>,
+    cores: usize,
+    cfg: &ScConfig,
+    points: Arc<Vec<f32>>,
+) -> ScResult {
+    let dims = cfg.dims;
+    let n_batches = cfg.n_points.div_ceil(cfg.batch_size).max(1);
+    let mut machine = Machine::new(topo.clone());
+
+    // Per-worker slice regions: slice locality is the experiment.
+    let slice_bytes = cfg.batch_bytes() / cores as u64;
+    let slice_regions: Vec<_> = (0..cores)
+        .map(|r| {
+            machine.alloc(
+                &format!("sc-slice-{r}"),
+                slice_bytes.max(64),
+                Placement::Interleave,
+            )
+        })
+        .collect();
+    let centers_region = machine.alloc(
+        "sc-centers",
+        (cfg.max_centers * dims * 4) as u64,
+        Placement::Interleave,
+    );
+
+    // Shared center set (snapshot-swapped between phases).
+    let centers: Arc<RwLock<Arc<Vec<f32>>>> =
+        Arc::new(RwLock::new(Arc::new(points[..dims].to_vec())));
+    // Per-iteration aggregated cost (f64 bits) and worst-point proposals.
+    let iters_total = n_batches * cfg.local_iters;
+    let costs: Arc<Vec<AtomicU64>> =
+        Arc::new((0..iters_total).map(|_| AtomicU64::new(0)).collect());
+    let proposals: Arc<Mutex<Vec<(f32, usize)>>> = Arc::new(Mutex::new(Vec::new()));
+    let k_max = cfg.k_max;
+    let max_centers = cfg.max_centers;
+    let local_iters = cfg.local_iters;
+    let batch_size = cfg.batch_size;
+    let n_points = cfg.n_points;
+
+    let mut ex = SimExecutor::new(machine, policy);
+    ex.spawn_group(cores, |rank| {
+        let points = points.clone();
+        let centers = centers.clone();
+        let costs = costs.clone();
+        let proposals = proposals.clone();
+        let slice_region = slice_regions[rank];
+        Box::new(StateTask::new(move |ctx, step| {
+            // Two phases per local iteration: 0 = assign, 1 = reconcile.
+            let global_iter = (step / 2) as usize;
+            let phase = step % 2;
+            if global_iter >= iters_total {
+                return Step::Done;
+            }
+            let batch = global_iter / local_iters;
+            let b_lo = batch * batch_size;
+            let b_hi = ((batch + 1) * batch_size).min(n_points);
+            let b_n = b_hi - b_lo;
+            // This worker's slice of the batch.
+            let per = b_n.div_ceil(ctx.group_size);
+            let lo = b_lo + (rank * per).min(b_n);
+            let hi = b_lo + ((rank + 1) * per).min(b_n);
+
+            if phase == 0 {
+                // --- assignment: re-read my slice + the centers.
+                let snap = centers.read().unwrap().clone();
+                let k = snap.len() / dims;
+                let mut cost = 0.0f64;
+                let mut worst: (f32, usize) = (-1.0, lo);
+                for p in lo..hi {
+                    let pt = &points[p * dims..(p + 1) * dims];
+                    let mut best = f32::INFINITY;
+                    for c in 0..k {
+                        let d = dist2(pt, &snap[c * dims..(c + 1) * dims]);
+                        if d < best {
+                            best = d;
+                        }
+                    }
+                    cost += best as f64;
+                    if best > worst.0 {
+                        worst = (best, p);
+                    }
+                }
+                // Aggregate (atomic f64 add) + propose my worst point.
+                let slot = &costs[global_iter];
+                let mut cur = slot.load(Ordering::Relaxed);
+                loop {
+                    let new = (f64::from_bits(cur) + cost).to_bits();
+                    match slot.compare_exchange_weak(
+                        cur,
+                        new,
+                        Ordering::Relaxed,
+                        Ordering::Relaxed,
+                    ) {
+                        Ok(_) => break,
+                        Err(c) => cur = c,
+                    }
+                }
+                if worst.0 >= 0.0 {
+                    proposals.lock().unwrap().push(worst);
+                }
+                // --- model: slice re-read (the cacheable working set),
+                // centers random-read, distance flops.
+                let slice_read = ((hi - lo) * dims * 4) as u64;
+                ctx.seq_read(slice_region, slice_read);
+                ctx.rand_read(
+                    centers_region,
+                    (((hi - lo) * k.max(1)) as u64 / 8).max(1),
+                    (k.max(1) * dims * 4) as u64,
+                );
+                ctx.compute_flops((3 * (hi - lo) * k.max(1) * dims) as u64);
+            } else if rank == 0 {
+                // --- reconcile (rank 0): open a center at the globally
+                // worst point if there is headroom.
+                let mut props = proposals.lock().unwrap();
+                if let Some(&(_, p)) = props
+                    .iter()
+                    .max_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
+                {
+                    let mut guard = centers.write().unwrap();
+                    let k = guard.len() / dims;
+                    if k < k_max.min(max_centers) {
+                        let mut next = guard.as_ref().clone();
+                        next.extend_from_slice(&points[p * dims..(p + 1) * dims]);
+                        *guard = Arc::new(next);
+                    }
+                }
+                props.clear();
+                ctx.seq_write(centers_region, (dims * 4) as u64);
+                ctx.compute_ns(500);
+            } else {
+                ctx.compute_ns(50);
+            }
+            Step::Barrier
+        }))
+    });
+    let report = ex.run();
+    let final_k = centers.read().unwrap().len() / dims;
+    let cost_trace: Vec<f64> = costs
+        .iter()
+        .map(|c| f64::from_bits(c.load(Ordering::Relaxed)))
+        .collect();
+    let final_cost = *cost_trace.last().unwrap_or(&0.0);
+    ScResult {
+        report,
+        final_cost,
+        n_centers: final_k,
+        cost_trace,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::{ArcasPolicy, LocalCachePolicy, ShoalPolicy};
+
+    fn topo() -> Topology {
+        Topology::milan_1s()
+    }
+
+    #[test]
+    fn points_generation_is_deterministic_and_bounded() {
+        let cfg = ScConfig::tiny();
+        let a = generate_points(&cfg);
+        let b = generate_points(&cfg);
+        assert_eq!(a.len(), cfg.n_points * cfg.dims);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn centers_open_and_stay_bounded() {
+        let cfg = ScConfig::tiny();
+        let pts = Arc::new(generate_points(&cfg));
+        let res = run_streamcluster(&topo(), Box::new(LocalCachePolicy), 4, &cfg, pts);
+        assert!(res.n_centers > 1, "centers must open");
+        assert!(res.n_centers <= cfg.k_max);
+        assert!(res.final_cost.is_finite() && res.final_cost > 0.0);
+        assert_eq!(res.cost_trace.len(), 2 * cfg.local_iters); // 2 batches
+    }
+
+    #[test]
+    fn cost_improves_within_first_batch() {
+        let cfg = ScConfig::tiny();
+        let pts = Arc::new(generate_points(&cfg));
+        let res = run_streamcluster(&topo(), Box::new(LocalCachePolicy), 4, &cfg, pts);
+        let first = res.cost_trace[0];
+        let last = res.cost_trace[cfg.local_iters - 1];
+        assert!(last <= first * 1.001, "first={first} last={last}");
+    }
+
+    #[test]
+    fn parallel_cost_matches_serial_order_of_magnitude() {
+        let cfg = ScConfig::tiny();
+        let pts = generate_points(&cfg);
+        let (ser_cost, _) = serial_cost(&cfg, &pts);
+        let res = run_streamcluster(
+            &topo(),
+            Box::new(LocalCachePolicy),
+            4,
+            &cfg,
+            Arc::new(pts),
+        );
+        let ratio = res.final_cost / ser_cost.max(1e-9);
+        assert!(
+            (0.05..20.0).contains(&ratio),
+            "par={} ser={ser_cost}",
+            res.final_cost
+        );
+    }
+
+    #[test]
+    fn arcas_beats_shoal_at_16_cores() {
+        // Fig. 8's biggest gap: 16 cores. Batch sized so it fits 8 chiplets'
+        // L3 (8×256 KiB) but not the 2 chiplets Shoal fills (scaled caches
+        // keep the test fast): batch = 1 MiB.
+        let t = Topology::milan_1s().scale_caches(1.0 / 128.0); // 256 KiB/chiplet
+        let mut cfg = ScConfig::tiny();
+        cfg.n_points = 8_000;
+        cfg.batch_size = 4_000;
+        cfg.dims = 64; // batch = 1 MiB
+        cfg.local_iters = 6;
+        let pts = Arc::new(generate_points(&cfg));
+        let shoal = run_streamcluster(&t, Box::new(ShoalPolicy::new()), 16, &cfg, pts.clone());
+        let arcas = run_streamcluster(
+            &t,
+            Box::new(ArcasPolicy::new(&t).with_timer(20_000)),
+            16,
+            &cfg,
+            pts,
+        );
+        assert!(
+            arcas.report.makespan_ns < shoal.report.makespan_ns,
+            "arcas={} shoal={}",
+            arcas.report.makespan_ns,
+            shoal.report.makespan_ns
+        );
+    }
+
+    #[test]
+    fn dist2_is_squared_euclidean() {
+        assert_eq!(dist2(&[0.0, 0.0], &[3.0, 4.0]), 25.0);
+        assert_eq!(dist2(&[1.0], &[1.0]), 0.0);
+    }
+}

@@ -1,0 +1,147 @@
+//! PJRT round-trip integration: load the AOT JAX/Pallas artifacts,
+//! execute through the xla crate's CPU client, and check real numerics
+//! against the rust oracle.
+//!
+//! Requires `make artifacts` (skipped with a notice otherwise).
+
+use arcas::runtime::{load_manifest, PjrtGrad, PjrtRuntime};
+use arcas::workloads::sgd::{GradEngine, RustGrad};
+
+fn artifacts_dir() -> Option<String> {
+    let dir = PjrtRuntime::default_dir();
+    if std::path::Path::new(&format!("{dir}/manifest.txt")).exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn manifest_lists_expected_entries() {
+    let Some(dir) = artifacts_dir() else { return };
+    let specs = load_manifest(&dir).unwrap();
+    let names: Vec<_> = specs.iter().map(|s| s.name.as_str()).collect();
+    assert!(names.contains(&"logreg_loss_grad_b64_f64"), "{names:?}");
+    assert!(names.contains(&"sgd_step_b128_f1024"));
+    assert!(names.contains(&"pdist_n256_k16_d16"));
+    for s in &specs {
+        assert!(!s.inputs.is_empty());
+        assert!(!s.outputs.is_empty());
+    }
+}
+
+#[test]
+fn runtime_compiles_all_artifacts() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::load(&dir).unwrap();
+    assert!(rt.len() >= 8, "names={:?}", rt.names());
+    assert!(!rt.platform.is_empty());
+}
+
+#[test]
+fn pjrt_loss_grad_matches_rust_oracle() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::load(&dir).unwrap();
+    let (b, f) = (64usize, 64usize);
+    let engine = PjrtGrad::new(rt, b, f).unwrap();
+
+    // Deterministic inputs.
+    let mut rng = arcas::util::Rng::new(2024);
+    let x: Vec<f32> = (0..b * f)
+        .map(|_| rng.gen_normal() as f32 / (f as f32).sqrt())
+        .collect();
+    let y: Vec<f32> = (0..b).map(|_| if rng.gen_bool(0.5) { 1.0 } else { 0.0 }).collect();
+    let w: Vec<f32> = (0..f).map(|_| rng.gen_normal() as f32 * 0.1).collect();
+
+    let (loss_p, grad_p) = engine.loss_grad(&x, &y, &w, f);
+    let (loss_r, grad_r) = RustGrad.loss_grad(&x, &y, &w, f);
+
+    assert!(
+        (loss_p - loss_r).abs() < 1e-4 * loss_r.abs().max(1.0),
+        "pjrt loss {loss_p} vs rust {loss_r}"
+    );
+    assert_eq!(grad_p.len(), grad_r.len());
+    for i in 0..f {
+        assert!(
+            (grad_p[i] - grad_r[i]).abs() < 1e-3,
+            "grad[{i}]: pjrt {} vs rust {}",
+            grad_p[i],
+            grad_r[i]
+        );
+    }
+}
+
+#[test]
+fn pjrt_sgd_step_reduces_loss() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::load(&dir).unwrap();
+    let exe = rt.get("sgd_step_b64_f64").expect("artifact");
+    let (b, f) = (64usize, 64usize);
+
+    let mut rng = arcas::util::Rng::new(7);
+    let w_true: Vec<f32> = (0..f).map(|_| rng.gen_normal() as f32).collect();
+    let x: Vec<f32> = (0..b * f)
+        .map(|_| rng.gen_normal() as f32 / (f as f32).sqrt())
+        .collect();
+    let y: Vec<f32> = (0..b)
+        .map(|i| {
+            let dot: f32 = (0..f).map(|j| x[i * f + j] * w_true[j]).sum();
+            if dot > 0.0 {
+                1.0
+            } else {
+                0.0
+            }
+        })
+        .collect();
+
+    let mut w = vec![0.0f32; f];
+    let lr = [4.0f32];
+    let mut losses = Vec::new();
+    for _ in 0..5 {
+        let outs = exe.run_f32(&[&x, &y, &w, &lr]).unwrap();
+        losses.push(outs[0][0]);
+        w = outs[1].clone();
+    }
+    assert!(
+        losses[4] < losses[0] * 0.9,
+        "losses must decrease: {losses:?}"
+    );
+}
+
+#[test]
+fn pjrt_pdist_matches_rust() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::load(&dir).unwrap();
+    let exe = rt.get("pdist_n256_k16_d16").expect("artifact");
+    let (n, k, d) = (256usize, 16usize, 16usize);
+    let mut rng = arcas::util::Rng::new(5);
+    let p: Vec<f32> = (0..n * d).map(|_| rng.gen_f32()).collect();
+    let c: Vec<f32> = (0..k * d).map(|_| rng.gen_f32()).collect();
+    let out = exe.run_f32(&[&p, &c]).unwrap();
+    assert_eq!(out[0].len(), n * k);
+    for i in 0..n {
+        for j in 0..k {
+            let mut s = 0.0f32;
+            for dd in 0..d {
+                let diff = p[i * d + dd] - c[j * d + dd];
+                s += diff * diff;
+            }
+            let got = out[0][i * k + j];
+            assert!(
+                (got - s).abs() < 1e-3 * s.max(1.0),
+                "({i},{j}): pjrt {got} vs rust {s}"
+            );
+        }
+    }
+}
+
+#[test]
+fn wrong_input_shapes_are_rejected() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::load(&dir).unwrap();
+    let exe = rt.get("pdist_n256_k16_d16").unwrap();
+    let short = vec![0.0f32; 8];
+    assert!(exe.run_f32(&[&short, &short]).is_err());
+    assert!(exe.run_f32(&[&short]).is_err());
+}

