@@ -1,0 +1,34 @@
+# ARCAS reproduction — tooling entry points.
+#
+#   make verify     tier-1 gate: release build + full test suite
+#   make fmt        rustfmt check (no writes)
+#   make clippy     clippy with warnings denied
+#   make ci         everything CI runs, in order
+#   make artifacts  AOT-lower the JAX/Pallas kernels to HLO text (needs
+#                   python + jax; the rust build runs fine without them)
+#   make bench-smoke  quick pass over two figure benches
+
+.PHONY: verify build test fmt clippy ci artifacts bench-smoke
+
+verify: build test
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+fmt:
+	cargo fmt --all -- --check
+
+clippy:
+	cargo clippy --all-targets -- -D warnings
+
+ci: fmt clippy verify
+
+artifacts:
+	cd python/compile && python3 aot.py --out-dir ../../artifacts
+
+bench-smoke:
+	cargo bench --bench fig13_oltp -- --quick --scale 0.002
+	cargo bench --bench fig05_local_vs_dist -- --quick

@@ -26,8 +26,8 @@ fn run_one(topo: &Topology, policy: Box<dyn Policy>, size: u64, iters: u64) -> u
         .map(|r| machine.alloc(&format!("chunk-{r}"), chunk, Placement::Interleave))
         .collect();
     let regions = Arc::new(regions);
-    let mut ex = arcas::sched::SimExecutor::new(machine, policy);
-    ex.spawn_group(CORES, |rank| {
+    // Executor boilerplate lives in the engine layer now.
+    arcas::sched::run_group(machine, policy, CORES, |rank| {
         let regions = regions.clone();
         Box::new(BspTask::new(iters, move |ctx, _| {
             ctx.seq_write(regions[rank], chunk);
@@ -41,8 +41,8 @@ fn run_one(topo: &Topology, policy: Box<dyn Policy>, size: u64, iters: u64) -> u
                 ctx.machine.message(core, 0, 64);
             }
         }))
-    });
-    ex.run().makespan_ns
+    })
+    .makespan_ns
 }
 
 fn main() {

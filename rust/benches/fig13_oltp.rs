@@ -4,10 +4,14 @@
 //!
 //! Paper shape: a *null* result — the two policies are nearly identical
 //! at every core count, because OLTP is commit/synchronization-bound.
+//!
+//! The workloads come from the scenario registry and run through
+//! `engine::Driver` — the same code path `arcas run --scenario ycsb`
+//! takes.
 
+use arcas::engine::Driver;
 use arcas::harness;
 use arcas::util::table::SeriesSet;
-use arcas::workloads::oltp::{run_oltp, OltpWorkload};
 
 fn main() {
     let args = harness::bench_cli("fig13_oltp", "OLTP Local vs Distributed").parse();
@@ -17,19 +21,14 @@ fn main() {
     let txns: u64 = if args.flag("quick") { 5_000 } else { 20_000 };
     let cores = harness::core_sweep(&args, &[4, 8, 16, 32, 64]);
     let workloads = [
-        (
-            "a: YCSB",
-            OltpWorkload::ycsb_scaled(args.f64("scale")),
-            "fig13a_ycsb",
-        ),
-        (
-            "b: TPC-C",
-            OltpWorkload::tpcc_scaled(args.f64("scale") * 50.0),
-            "fig13b_tpcc",
-        ),
+        ("a: YCSB", "ycsb", 1.0, "fig13a_ycsb"),
+        ("b: TPC-C", "tpcc", 50.0, "fig13b_tpcc"),
     ];
 
-    for (label, wl, slug) in workloads {
+    for (label, scenario, scale_mul, slug) in workloads {
+        let mut params = harness::scenario_params(&args);
+        params.scale *= scale_mul;
+        params.iters = Some(txns);
         let mut series = SeriesSet::new(
             &format!("Fig 13{label}: commits/s"),
             "cores",
@@ -40,23 +39,13 @@ fn main() {
             if c > topo.num_cores() {
                 continue;
             }
-            let local = run_oltp(
-                &topo,
-                harness::baseline("local", &topo),
-                c,
-                &wl,
-                txns,
-                args.u64("seed"),
-            );
-            let dist = run_oltp(
-                &topo,
-                harness::baseline("distributed", &topo),
-                c,
-                &wl,
-                txns,
-                args.u64("seed"),
-            );
-            let (l, d) = (local.commits_per_sec(), dist.commits_per_sec());
+            let run_one = |policy: &str| {
+                let mut s = harness::scenario_with(scenario, &params);
+                Driver::new(&topo, harness::baseline(policy, &topo), c).run(s.as_mut())
+            };
+            let local = run_one("local");
+            let dist = run_one("distributed");
+            let (l, d) = (local.throughput(), dist.throughput());
             max_dev = max_dev.max((l / d - 1.0).abs());
             println!(
                 "{label} cores {c:>3}: Local {l:>12.0}  Distributed {d:>12.0}  ({:+.1}%)",

@@ -11,7 +11,7 @@ use arcas::controller::placement_map;
 use arcas::deque::Deque;
 use arcas::mem::Placement;
 use arcas::policy::LocalCachePolicy;
-use arcas::sched::{HostExecutor, SimExecutor};
+use arcas::sched::HostExecutor;
 use arcas::sim::Machine;
 use arcas::task::IterTask;
 use arcas::topology::Topology;
@@ -45,14 +45,13 @@ fn main() {
         m.access(0, arcas::cachesim::Access::rand_read(r, 1000, 64 << 20))
     });
 
-    // --- simulator dispatch rate.
+    // --- simulator dispatch rate (through the engine's executor seam).
     let res = b.bench("sim dispatch (1k coroutine steps)", || {
         let machine = Machine::new(Topology::milan_1s());
-        let mut ex = SimExecutor::new(machine, Box::new(LocalCachePolicy));
-        ex.spawn_group(8, |_| {
+        arcas::sched::run_group(machine, Box::new(LocalCachePolicy), 8, |_| {
             Box::new(IterTask::new(125, |ctx, _| ctx.compute_ns(100)))
-        });
-        ex.run().dispatches
+        })
+        .dispatches
     });
     println!(
         "  => {:.1} M simulated dispatches/s",

@@ -28,7 +28,7 @@
 use crate::controller::Approach;
 use crate::mem::{Placement, RegionId};
 use crate::policy::{self, ArcasPolicy, Policy};
-use crate::sched::{RunReport, SimExecutor};
+use crate::sched::RunReport;
 use crate::sim::Machine;
 use crate::task::{Coroutine, FnTask, IterTask, TaskCtx};
 use crate::topology::Topology;
@@ -141,7 +141,8 @@ impl Arcas {
 
     /// Run a group of `n` coroutines (full control over yield points).
     /// Consumes the machine state for the run and restores it after,
-    /// carrying cache residency forward.
+    /// carrying cache residency forward. Execution goes through the
+    /// engine's single executor seam ([`crate::engine::execute`]).
     pub fn run(
         &mut self,
         n: usize,
@@ -149,10 +150,14 @@ impl Arcas {
     ) -> RunReport {
         assert!(!self.finalized, "runtime already finalized");
         let machine = std::mem::replace(&mut self.machine, Machine::new(self.cfg.topology.clone()));
-        let mut ex = SimExecutor::new(machine, self.build_policy()).with_timer(self.cfg.timer_ns);
-        ex.spawn_group(n, make);
-        let report = ex.run();
-        self.machine = ex.machine;
+        let (report, machine) = crate::engine::execute(
+            machine,
+            self.build_policy(),
+            Some(self.cfg.timer_ns),
+            n,
+            make,
+        );
+        self.machine = machine;
         report
     }
 

@@ -1,0 +1,276 @@
+//! Unified workload engine: the scenario-driver layer.
+//!
+//! Every evaluation workload used to hand-roll the same executor
+//! boilerplate — build a [`Machine`], allocate regions, spawn a task
+//! group, run, extract a [`RunReport`]. This module extracts that
+//! skeleton once:
+//!
+//! - [`Scenario`] — what a workload *is*: region setup on a machine,
+//!   a coroutine per rank, optional result verification, and
+//!   workload-level metrics derived from the run report.
+//! - [`Driver`] — what the runtime *does* with one: owns topology →
+//!   machine construction, policy wiring, `spawn_group`, the run loop,
+//!   and report collection. It is the single seam where an executor
+//!   backend is chosen (today [`SimExecutor`] via [`execute`]; a future
+//!   `HostExecutor` backend slots in here without touching workloads).
+//! - [`registry`] — a name-keyed catalogue of every scenario
+//!   (`bfs`, `pagerank`, …, `tpch`, `ycsb`) so the CLI, harness and
+//!   benches enumerate workload×policy combinations through one code
+//!   path: `arcas run --scenario bfs --policy arcas --cores 32`.
+//!
+//! The legacy per-workload entry points (`run_bfs`, `run_query`,
+//! `run_oltp`, …) survive as thin wrappers over scenarios, so their
+//! deterministic reports are unchanged. See `rust/src/engine/README.md`
+//! for the architecture notes and a porting guide.
+
+pub mod registry;
+
+pub use registry::{by_name, registry, ScenarioParams, ScenarioSpec};
+
+use crate::policy::Policy;
+use crate::sched::{RunReport, SimExecutor};
+use crate::sim::Machine;
+use crate::task::Coroutine;
+use crate::topology::Topology;
+
+/// Workload-level metrics extracted from a finished run: the primary
+/// work-item count (edges, bytes, commits, rows…) that turns a makespan
+/// into a throughput, plus named workload-specific extras.
+#[derive(Clone, Debug, Default)]
+pub struct ScenarioMetrics {
+    /// Primary work-item count processed by the run.
+    pub items: f64,
+    /// Human-readable unit for `items` (e.g. "edges", "commits").
+    pub unit: &'static str,
+    /// Named workload-specific extras (final loss, abort count, …).
+    pub extras: Vec<(&'static str, f64)>,
+}
+
+impl ScenarioMetrics {
+    pub fn new(items: f64, unit: &'static str) -> Self {
+        Self {
+            items,
+            unit,
+            extras: Vec::new(),
+        }
+    }
+
+    pub fn with(mut self, key: &'static str, value: f64) -> Self {
+        self.extras.push((key, value));
+        self
+    }
+
+    pub fn get(&self, key: &str) -> Option<f64> {
+        self.extras.iter().find(|(k, _)| *k == key).map(|&(_, v)| v)
+    }
+
+    /// Items per second of virtual time.
+    pub fn throughput(&self, report: &RunReport) -> f64 {
+        report.throughput(self.items)
+    }
+}
+
+/// A runnable workload: the four hooks the [`Driver`] needs.
+///
+/// Scenarios are single-shot: `setup` → one `spawn` per rank → run →
+/// (`verify`) → `metrics`. Build a fresh scenario per run when sweeping
+/// policies or core counts.
+pub trait Scenario {
+    /// Short kebab-case name (diagnostics; the registry holds the
+    /// canonical names).
+    fn name(&self) -> &'static str;
+
+    /// Allocate regions and initialize shared state on the machine.
+    /// `tasks` is the spawn-group size the driver will use.
+    fn setup(&mut self, machine: &mut Machine, tasks: usize);
+
+    /// Build the coroutine for `rank`. Called once per rank, in rank
+    /// order, after `setup`.
+    fn spawn(&mut self, rank: usize) -> Box<dyn Coroutine>;
+
+    /// Post-run correctness hook: assert the parallel result against the
+    /// workload's serial reference. Only called when the driver was
+    /// configured with [`Driver::with_verify`].
+    fn verify(&self) {}
+
+    /// Workload-level metrics for the finished run.
+    fn metrics(&self, report: &RunReport) -> ScenarioMetrics;
+}
+
+/// Report + metrics of one driven run, plus the machine the run left
+/// behind (warm caches, registered regions) for repetition runs via
+/// [`Driver::on_machine`].
+#[derive(Clone, Debug)]
+pub struct ScenarioRun {
+    pub report: RunReport,
+    pub metrics: ScenarioMetrics,
+    pub machine: Machine,
+}
+
+impl ScenarioRun {
+    /// Items per second of virtual time (primary throughput).
+    pub fn throughput(&self) -> f64 {
+        self.metrics.throughput(&self.report)
+    }
+}
+
+/// Owns machine construction, policy wiring and the run loop for one
+/// scenario execution — the one place executor boilerplate lives.
+pub struct Driver {
+    machine: Machine,
+    policy: Box<dyn Policy>,
+    tasks: usize,
+    timer_ns: Option<u64>,
+    verify: bool,
+}
+
+impl Driver {
+    /// Fresh machine from `topo`; `tasks` coroutine workers under
+    /// `policy`.
+    pub fn new(topo: &Topology, policy: Box<dyn Policy>, tasks: usize) -> Self {
+        Self::on_machine(Machine::new(topo.clone()), policy, tasks)
+    }
+
+    /// Drive an existing machine (warm caches / pre-allocated regions).
+    pub fn on_machine(machine: Machine, policy: Box<dyn Policy>, tasks: usize) -> Self {
+        Self {
+            machine,
+            policy,
+            tasks,
+            timer_ns: None,
+            verify: false,
+        }
+    }
+
+    /// Override the scheduler timer (policies with their own preferred
+    /// cadence still win, as in the executor).
+    pub fn with_timer(mut self, timer_ns: u64) -> Self {
+        self.timer_ns = Some(timer_ns);
+        self
+    }
+
+    /// Run the scenario's `verify` hook after the run.
+    pub fn with_verify(mut self, on: bool) -> Self {
+        self.verify = on;
+        self
+    }
+
+    /// Set up, spawn and run `scenario` to completion.
+    pub fn run(self, scenario: &mut dyn Scenario) -> ScenarioRun {
+        let Driver {
+            mut machine,
+            policy,
+            tasks,
+            timer_ns,
+            verify,
+        } = self;
+        scenario.setup(&mut machine, tasks);
+        let (report, machine) =
+            execute(machine, policy, timer_ns, tasks, |rank| scenario.spawn(rank));
+        if verify {
+            scenario.verify();
+        }
+        let metrics = scenario.metrics(&report);
+        ScenarioRun {
+            report,
+            metrics,
+            machine,
+        }
+    }
+}
+
+/// Run `n` coroutines over `machine` under `policy` and hand the machine
+/// back (cache residency carries across runs for callers that reuse it).
+///
+/// This is the **only** `SimExecutor` construction site: the seam where
+/// a different executor backend (e.g. a host-thread pool or a sharded
+/// multi-machine driver) would be selected.
+pub fn execute(
+    machine: Machine,
+    policy: Box<dyn Policy>,
+    timer_ns: Option<u64>,
+    n: usize,
+    make: impl FnMut(usize) -> Box<dyn Coroutine>,
+) -> (RunReport, Machine) {
+    let mut ex = SimExecutor::new(machine, policy);
+    if let Some(t) = timer_ns {
+        ex = ex.with_timer(t);
+    }
+    ex.spawn_group(n, make);
+    let report = ex.run();
+    (report, ex.machine)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::LocalCachePolicy;
+    use crate::task::{FnTask, TaskCtx};
+
+    struct NoopScenario {
+        ran_setup: bool,
+        verified: std::cell::Cell<bool>,
+    }
+
+    impl Scenario for NoopScenario {
+        fn name(&self) -> &'static str {
+            "noop"
+        }
+
+        fn setup(&mut self, _machine: &mut Machine, _tasks: usize) {
+            self.ran_setup = true;
+        }
+
+        fn spawn(&mut self, _rank: usize) -> Box<dyn Coroutine> {
+            Box::new(FnTask(|ctx: &mut TaskCtx<'_>| ctx.compute_ns(100)))
+        }
+
+        fn verify(&self) {
+            self.verified.set(true);
+        }
+
+        fn metrics(&self, _report: &RunReport) -> ScenarioMetrics {
+            ScenarioMetrics::new(4.0, "noops").with("answer", 42.0)
+        }
+    }
+
+    #[test]
+    fn driver_runs_setup_spawn_verify_metrics() {
+        let topo = Topology::milan_1s();
+        let mut s = NoopScenario {
+            ran_setup: false,
+            verified: std::cell::Cell::new(false),
+        };
+        let run = Driver::new(&topo, Box::new(LocalCachePolicy), 4)
+            .with_verify(true)
+            .run(&mut s);
+        assert!(s.ran_setup);
+        assert!(s.verified.get());
+        assert_eq!(run.report.dispatches, 4);
+        assert!(run.report.makespan_ns >= 100);
+        assert_eq!(run.metrics.items, 4.0);
+        assert_eq!(run.metrics.get("answer"), Some(42.0));
+        assert!(run.throughput() > 0.0);
+    }
+
+    #[test]
+    fn verify_is_opt_in() {
+        let topo = Topology::milan_1s();
+        let mut s = NoopScenario {
+            ran_setup: false,
+            verified: std::cell::Cell::new(false),
+        };
+        let _ = Driver::new(&topo, Box::new(LocalCachePolicy), 2).run(&mut s);
+        assert!(!s.verified.get());
+    }
+
+    #[test]
+    fn execute_hands_the_machine_back() {
+        let machine = Machine::new(Topology::milan_1s());
+        let (report, machine) = execute(machine, Box::new(LocalCachePolicy), None, 2, |_| {
+            Box::new(FnTask(|ctx: &mut TaskCtx<'_>| ctx.compute_ns(50)))
+        });
+        assert_eq!(report.dispatches, 2);
+        assert!(machine.max_time() >= 50);
+    }
+}

@@ -1,0 +1,323 @@
+//! Name-keyed scenario registry.
+//!
+//! One catalogue of every workload the runtime can drive, so the CLI
+//! (`arcas run --scenario <name>`), the harness and the benches
+//! enumerate workload×policy combinations through a single code path.
+//! Adding a workload = implementing [`Scenario`] and appending one entry
+//! here (see `rust/src/engine/README.md`).
+//!
+//! Build functions regenerate their dataset on every call (scenarios are
+//! single-run). That is fine for the CLI and cheap workloads; sweeps
+//! over heavy shared data (a big Kronecker graph across 12 core counts)
+//! should construct the typed scenario directly with an `Arc`'d dataset,
+//! as `fig07_graph_scaling` does.
+
+use std::sync::Arc;
+
+use super::Scenario;
+use crate::workloads::graph::{
+    kronecker::kronecker, BfsScenario, CcScenario, GupsScenario, PagerankScenario, SsspScenario,
+};
+use crate::workloads::olap::{all_queries, Db, OlapScenario};
+use crate::workloads::oltp::{OltpScenario, OltpWorkload};
+use crate::workloads::sgd::{
+    generate_data, DwStrategy, RustGrad, SgdConfig, SgdMode, SgdScenario,
+};
+use crate::workloads::streamcluster::{generate_points, ScConfig, ScScenario};
+
+/// Knobs every registry build function understands. `scale` follows the
+/// harness convention: a fraction of the paper's dataset sizes (1.0 =
+/// paper scale), not an absolute size.
+#[derive(Clone, Debug)]
+pub struct ScenarioParams {
+    /// Dataset scale factor vs the paper's sizes.
+    pub scale: f64,
+    /// PRNG seed for data generation.
+    pub seed: u64,
+    /// Workload-specific intensity knob: PageRank iterations, GUPS
+    /// updates/core, OLTP transactions/core, SGD epochs. `None` = the
+    /// scenario's default.
+    pub iters: Option<u64>,
+    /// Workload-specific selector: TPC-H query (`"q6"`), SGD replication
+    /// strategy (`"percore"|"pernode"|"permachine"`).
+    pub variant: Option<String>,
+}
+
+impl Default for ScenarioParams {
+    fn default() -> Self {
+        Self {
+            scale: 0.02,
+            seed: 42,
+            iters: None,
+            variant: None,
+        }
+    }
+}
+
+/// One registry entry: a named, documented scenario constructor.
+pub struct ScenarioSpec {
+    pub name: &'static str,
+    pub aliases: &'static [&'static str],
+    /// Workload family (graph | streamcluster | sgd | olap | oltp).
+    pub family: &'static str,
+    pub about: &'static str,
+    build: fn(&ScenarioParams) -> Box<dyn Scenario>,
+}
+
+impl ScenarioSpec {
+    /// Construct a fresh (single-run) scenario for `params`.
+    pub fn build(&self, params: &ScenarioParams) -> Box<dyn Scenario> {
+        (self.build)(params)
+    }
+}
+
+/// Graph scale exponent for a dataset fraction (paper: 2^24 vertices).
+fn graph_scale(p: &ScenarioParams) -> u32 {
+    ((16_777_216.0 * p.scale) as u64).max(1024).ilog2()
+}
+
+fn build_bfs(p: &ScenarioParams) -> Box<dyn Scenario> {
+    let g = Arc::new(kronecker(graph_scale(p), 16, p.seed));
+    let src = g.max_degree_vertex();
+    Box::new(BfsScenario::new(g, src))
+}
+
+fn build_pagerank(p: &ScenarioParams) -> Box<dyn Scenario> {
+    let g = Arc::new(kronecker(graph_scale(p), 16, p.seed));
+    let iters = p.iters.unwrap_or(10) as usize;
+    Box::new(PagerankScenario::new(g, iters))
+}
+
+fn build_cc(p: &ScenarioParams) -> Box<dyn Scenario> {
+    let g = Arc::new(kronecker(graph_scale(p), 16, p.seed));
+    Box::new(CcScenario::new(g))
+}
+
+fn build_sssp(p: &ScenarioParams) -> Box<dyn Scenario> {
+    let g = Arc::new(kronecker(graph_scale(p), 16, p.seed));
+    let src = g.max_degree_vertex();
+    Box::new(SsspScenario::new(g, src))
+}
+
+fn build_gups(p: &ScenarioParams) -> Box<dyn Scenario> {
+    let table_words = 1usize << graph_scale(p);
+    let updates = p.iters.unwrap_or(100_000);
+    Box::new(GupsScenario::new(table_words, updates, p.seed))
+}
+
+fn build_streamcluster(p: &ScenarioParams) -> Box<dyn Scenario> {
+    let mut cfg = ScConfig::bench(p.scale);
+    cfg.seed = p.seed;
+    cfg.n_points = cfg.n_points.max(256);
+    cfg.batch_size = cfg.batch_size.clamp(64, cfg.n_points);
+    if let Some(it) = p.iters {
+        cfg.local_iters = (it as usize).max(1);
+    }
+    let pts = Arc::new(generate_points(&cfg));
+    Box::new(ScScenario::new(cfg, pts))
+}
+
+fn sgd_strategy(p: &ScenarioParams) -> DwStrategy {
+    match p.variant.as_deref() {
+        Some("pernode") => DwStrategy::PerNode,
+        Some("permachine") => DwStrategy::PerMachine,
+        _ => DwStrategy::PerCore,
+    }
+}
+
+fn build_sgd(p: &ScenarioParams) -> Box<dyn Scenario> {
+    let mut cfg = SgdConfig::bench(p.scale);
+    cfg.seed = p.seed;
+    if let Some(it) = p.iters {
+        cfg.epochs = (it as usize).max(1);
+    }
+    let data = generate_data(&cfg);
+    Box::new(SgdScenario::new(
+        cfg,
+        &data,
+        sgd_strategy(p),
+        SgdMode::Grad,
+        Arc::new(RustGrad),
+    ))
+}
+
+fn build_sgd_loss(p: &ScenarioParams) -> Box<dyn Scenario> {
+    let mut cfg = SgdConfig::bench(p.scale);
+    cfg.seed = p.seed;
+    if let Some(it) = p.iters {
+        cfg.epochs = (it as usize).max(1);
+    }
+    let data = generate_data(&cfg);
+    Box::new(SgdScenario::new(
+        cfg,
+        &data,
+        sgd_strategy(p),
+        SgdMode::Loss,
+        Arc::new(RustGrad),
+    ))
+}
+
+fn build_tpch(p: &ScenarioParams) -> Box<dyn Scenario> {
+    let db = Arc::new(Db::generate(p.scale, p.seed));
+    let queries = all_queries();
+    // Strict: running a different query than requested would silently
+    // corrupt recorded results.
+    let id = match p.variant.as_deref() {
+        None => 6,
+        Some(v) => {
+            let parsed = v
+                .trim_start_matches(|c| c == 'q' || c == 'Q')
+                .parse::<usize>()
+                .ok()
+                .filter(|id| (1..=queries.len()).contains(id));
+            parsed.unwrap_or_else(|| {
+                panic!("tpch variant {v:?} is not q1..q{}", queries.len())
+            })
+        }
+    };
+    let spec = queries[id - 1].clone();
+    Box::new(OlapScenario::new(db, spec))
+}
+
+fn build_ycsb(p: &ScenarioParams) -> Box<dyn Scenario> {
+    let wl = OltpWorkload::ycsb_scaled(p.scale);
+    Box::new(OltpScenario::new(wl, p.iters.unwrap_or(20_000), p.seed))
+}
+
+fn build_tpcc(p: &ScenarioParams) -> Box<dyn Scenario> {
+    let wl = OltpWorkload::tpcc_scaled(p.scale);
+    Box::new(OltpScenario::new(wl, p.iters.unwrap_or(20_000), p.seed))
+}
+
+static REGISTRY: &[ScenarioSpec] = &[
+    ScenarioSpec {
+        name: "bfs",
+        aliases: &[],
+        family: "graph",
+        about: "level-synchronous BFS on a Kronecker graph (TEPS)",
+        build: build_bfs,
+    },
+    ScenarioSpec {
+        name: "pagerank",
+        aliases: &["pr"],
+        family: "graph",
+        about: "push-based PageRank, 3 BSP phases/iteration",
+        build: build_pagerank,
+    },
+    ScenarioSpec {
+        name: "cc",
+        aliases: &[],
+        family: "graph",
+        about: "connected components via label propagation",
+        build: build_cc,
+    },
+    ScenarioSpec {
+        name: "sssp",
+        aliases: &[],
+        family: "graph",
+        about: "chunked Bellman-Ford single-source shortest paths",
+        build: build_sssp,
+    },
+    ScenarioSpec {
+        name: "gups",
+        aliases: &[],
+        family: "graph",
+        about: "HPCC RandomAccess XOR updates (GUPS)",
+        build: build_gups,
+    },
+    ScenarioSpec {
+        name: "streamcluster",
+        aliases: &["sc"],
+        family: "streamcluster",
+        about: "PARSEC streaming k-median clustering",
+        build: build_streamcluster,
+    },
+    ScenarioSpec {
+        name: "sgd",
+        aliases: &[],
+        family: "sgd",
+        about: "DimmWitted-style SGD, logistic regression (gradient mode)",
+        build: build_sgd,
+    },
+    ScenarioSpec {
+        name: "sgd-loss",
+        aliases: &[],
+        family: "sgd",
+        about: "DimmWitted-style SGD, forward pass only (loss mode)",
+        build: build_sgd_loss,
+    },
+    ScenarioSpec {
+        name: "tpch",
+        aliases: &["olap"],
+        family: "olap",
+        about: "one TPC-H-shaped query on the mini OLAP engine (--variant q1..q22)",
+        build: build_tpch,
+    },
+    ScenarioSpec {
+        name: "ycsb",
+        aliases: &[],
+        family: "oltp",
+        about: "YCSB key-value mix on the ERMIA-style OLTP engine",
+        build: build_ycsb,
+    },
+    ScenarioSpec {
+        name: "tpcc",
+        aliases: &[],
+        family: "oltp",
+        about: "TPC-C-lite transaction mix on the OLTP engine",
+        build: build_tpcc,
+    },
+];
+
+/// Every registered scenario.
+pub fn registry() -> &'static [ScenarioSpec] {
+    REGISTRY
+}
+
+/// Resolve a scenario by canonical name or alias.
+pub fn by_name(name: &str) -> Option<&'static ScenarioSpec> {
+    REGISTRY
+        .iter()
+        .find(|s| s.name == name || s.aliases.contains(&name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_resolve_and_aliases_map() {
+        for spec in registry() {
+            assert!(by_name(spec.name).is_some(), "{}", spec.name);
+            for a in spec.aliases {
+                assert_eq!(by_name(a).unwrap().name, spec.name);
+            }
+        }
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn names_are_unique() {
+        let mut seen = std::collections::BTreeSet::new();
+        for spec in registry() {
+            assert!(seen.insert(spec.name), "duplicate name {}", spec.name);
+            for a in spec.aliases {
+                assert!(seen.insert(*a), "duplicate alias {a}");
+            }
+        }
+    }
+
+    #[test]
+    fn graph_scale_tracks_the_paper_size() {
+        let p = ScenarioParams {
+            scale: 1.0,
+            ..Default::default()
+        };
+        assert_eq!(graph_scale(&p), 24);
+        let tiny = ScenarioParams {
+            scale: 1e-9,
+            ..Default::default()
+        };
+        assert_eq!(graph_scale(&tiny), 10); // floor at 1024 vertices
+    }
+}

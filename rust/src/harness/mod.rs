@@ -6,6 +6,7 @@
 //! Fig. 4 (the cores-vs-memory-channels trend).
 
 use crate::controller::Approach;
+use crate::engine::{self, Scenario, ScenarioParams};
 use crate::policy::{self, ArcasPolicy, Policy};
 use crate::topology::Topology;
 use crate::util::cli::{Args, Cli};
@@ -68,6 +69,29 @@ pub fn arcas_with(topo: &Topology, args: &Args, approach: Approach) -> Box<dyn P
 /// Any baseline by name.
 pub fn baseline(name: &str, topo: &Topology) -> Box<dyn Policy> {
     policy::by_name(name, topo).unwrap_or_else(|| panic!("unknown policy {name}"))
+}
+
+/// Registry parameters derived from the standard bench CLI
+/// (`--scale`/`--seed`; intensity and variant stay per-bench).
+pub fn scenario_params(args: &Args) -> ScenarioParams {
+    ScenarioParams {
+        scale: args.f64("scale"),
+        seed: args.u64("seed"),
+        ..Default::default()
+    }
+}
+
+/// Build a fresh registry scenario for the bench CLI args. Scenarios are
+/// single-run: call once per (policy, core-count) point.
+pub fn scenario(name: &str, args: &Args) -> Box<dyn Scenario> {
+    scenario_with(name, &scenario_params(args))
+}
+
+/// Build a fresh registry scenario from explicit params.
+pub fn scenario_with(name: &str, params: &ScenarioParams) -> Box<dyn Scenario> {
+    engine::by_name(name)
+        .unwrap_or_else(|| panic!("unknown scenario {name}"))
+        .build(params)
 }
 
 /// Fig. 4 curated data: (year, representative high-end server CPU,

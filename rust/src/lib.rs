@@ -10,6 +10,11 @@
 //!   Milan 7713 testbed,
 //! - the ARCAS runtime proper ([`task`], [`deque`], [`sched`],
 //!   [`profiler`], [`controller`], [`policy`], [`mem`], [`api`]),
+//! - the unified workload [`engine`]: the [`engine::Scenario`] trait,
+//!   the [`engine::Driver`] that owns machine construction and the run
+//!   loop (the single executor seam), and the name-keyed
+//!   [`engine::registry`] through which the CLI, harness and benches
+//!   enumerate every workload×policy combination,
 //! - all baseline systems the paper compares against (RING, Shoal,
 //!   DimmWitted native strategies, std::async, static Local/Distributed
 //!   cache policies) in [`policy`] and [`workloads`],
@@ -33,6 +38,7 @@ pub mod controller;
 pub mod policy;
 pub mod mem;
 pub mod api;
+pub mod engine;
 pub mod runtime;
 pub mod workloads;
 pub mod harness;

@@ -2,19 +2,17 @@
 //!
 //! Subcommands:
 //!   topology   — print a machine preset and its latency classes
-//!   run        — run one workload under a policy and print the report
+//!   run        — run one scenario under a policy and print the report
+//!   scenarios  — list the scenario registry
 //!   artifacts  — list + smoke-test the AOT PJRT artifacts
 //!   policies   — list available scheduling policies
 
-use std::sync::Arc;
-
-use arcas::harness;
+use arcas::engine::{self, Driver, ScenarioParams};
 use arcas::policy;
 use arcas::sched::RunReport;
 use arcas::topology::Topology;
 use arcas::util::cli::Cli;
 use arcas::util::table::Table;
-use arcas::workloads::{graph, oltp, sgd, streamcluster};
 
 fn main() {
     let mut args: Vec<String> = std::env::args().skip(1).collect();
@@ -26,14 +24,16 @@ fn main() {
     match cmd.as_str() {
         "topology" => cmd_topology(args),
         "run" => cmd_run(args),
+        "scenarios" => cmd_scenarios(),
         "artifacts" => cmd_artifacts(),
         "policies" => cmd_policies(),
         _ => {
             println!(
                 "arcas — Adaptive Runtime System for Chiplet-Aware Scheduling\n\n\
-                 USAGE: arcas <topology|run|artifacts|policies> [options]\n\n\
+                 USAGE: arcas <topology|run|scenarios|artifacts|policies> [options]\n\n\
                    topology [preset]       print machine layout + latency classes\n\
-                   run [options]           run a workload (see `arcas run --help`)\n\
+                   run [options]           run a scenario (see `arcas run --help`)\n\
+                   scenarios               list the scenario registry\n\
                    artifacts               list + smoke-test AOT artifacts\n\
                    policies                list scheduling policies\n\n\
                  Figures/tables of the paper: `cargo bench --bench fig07_graph_scaling` etc."
@@ -93,111 +93,103 @@ fn print_report(name: &str, r: &RunReport) {
 }
 
 fn cmd_run(args: Vec<String>) {
-    let cli = Cli::new("arcas run", "run one workload under a policy")
-        .opt("workload", "bfs", "bfs|pr|cc|sssp|gups|streamcluster|sgd|ycsb|tpcc")
+    let names: Vec<&str> = engine::registry().iter().map(|s| s.name).collect();
+    let cli = Cli::new("arcas run", "run one scenario under a policy")
+        .opt("scenario", "bfs", &names.join("|"))
+        .opt_nodefault("workload", "deprecated alias for --scenario")
         .opt("policy", "arcas", "arcas|ring|shoal|local|distributed|os_async")
         .opt("cores", "16", "worker count")
-        .opt("scale", "12", "graph scale (2^N vertices) or workload scale")
+        .opt("scale", "0.02", "dataset scale factor vs the paper's sizes")
+        .opt_nodefault("iters", "intensity knob (PR iterations, txns/core, SGD epochs)")
+        .opt_nodefault("variant", "scenario variant (tpch q1..q22, sgd percore|pernode|permachine)")
         .opt("topology", "milan_2s", "machine preset")
         .opt("timer-us", "100", "ARCAS controller timer (us)")
-        .opt("seed", "42", "PRNG seed");
+        .opt("seed", "42", "PRNG seed")
+        .flag("verify", "check results against the serial references");
     let a = cli.parse_from(args).unwrap_or_else(|msg| {
         eprintln!("{msg}");
         std::process::exit(2);
     });
     let topo = Topology::preset(&a.str("topology")).unwrap_or_else(Topology::milan_2s);
     let cores = a.usize("cores");
-    let seed = a.u64("seed");
-    let mk_policy = || -> Box<dyn policy::Policy> {
-        if a.str("policy") == "arcas" {
-            Box::new(policy::ArcasPolicy::new(&topo).with_timer(a.u64("timer-us") * 1000))
-        } else {
-            policy::by_name(&a.str("policy"), &topo).unwrap_or_else(|| {
-                eprintln!("unknown policy");
+    let policy: Box<dyn policy::Policy> = if a.str("policy") == "arcas" {
+        Box::new(policy::ArcasPolicy::new(&topo).with_timer(a.u64("timer-us") * 1000))
+    } else {
+        policy::by_name(&a.str("policy"), &topo).unwrap_or_else(|| {
+            eprintln!("unknown policy {}", a.str("policy"));
+            std::process::exit(2);
+        })
+    };
+
+    // One code path for every workload×policy combination: resolve the
+    // scenario in the registry, build it, drive it.
+    let name = match a.get("workload") {
+        Some(w) => {
+            // The old `--workload` CLI took `--scale` as a 2^N vertex
+            // exponent; the registry takes a dataset *fraction*. Warn so
+            // pre-refactor invocations don't silently build huge graphs.
+            eprintln!(
+                "warning: --workload is deprecated (use --scenario); note that --scale \
+                 is now a dataset fraction of the paper's sizes (e.g. 0.02), not a 2^N exponent"
+            );
+            w.to_string()
+        }
+        None => a.str("scenario"),
+    };
+    let Some(spec) = engine::by_name(&name) else {
+        eprintln!(
+            "unknown scenario {name} (available: {})",
+            names.join(", ")
+        );
+        std::process::exit(2);
+    };
+    let params = ScenarioParams {
+        scale: a.f64("scale"),
+        seed: a.u64("seed"),
+        iters: a.get("iters").map(|v| {
+            v.parse().unwrap_or_else(|_| {
+                eprintln!("--iters {v} is not a number");
                 std::process::exit(2);
             })
-        }
+        }),
+        variant: a.get("variant").map(str::to_string),
     };
-    let wl = a.str("workload");
-    match wl.as_str() {
-        "bfs" | "pr" | "cc" | "sssp" | "gups" => {
-            let scale = a.u64("scale") as u32;
-            if wl == "gups" {
-                let (run, _) =
-                    graph::run_gups(&topo, mk_policy(), cores, 1 << scale, 100_000, seed);
-                print_report("GUPS", &run.report);
-                println!("  GUPS              {:.4} Gup/s", run.teps() / 1e9);
-                return;
-            }
-            let g = Arc::new(graph::kronecker::kronecker(scale, 16, seed));
-            println!(
-                "graph: 2^{scale} vertices, {} edges ({})",
-                g.num_edges(),
-                arcas::util::fmt_bytes(g.bytes())
-            );
-            let src = g.max_degree_vertex();
-            let (run, _result_size) = match wl.as_str() {
-                "bfs" => {
-                    let (r, d) = graph::run_bfs(&topo, mk_policy(), cores, g, src);
-                    (r, d.iter().filter(|&&x| x != u32::MAX).count())
-                }
-                "pr" => {
-                    let (r, pr) = graph::run_pagerank(&topo, mk_policy(), cores, g, 10);
-                    (r, pr.len())
-                }
-                "cc" => {
-                    let (r, l) = graph::run_cc(&topo, mk_policy(), cores, g);
-                    (r, graph::algos::component_count(&l))
-                }
-                _ => {
-                    let (r, d) = graph::run_sssp(&topo, mk_policy(), cores, g, src);
-                    (r, d.iter().filter(|&&x| x != u64::MAX).count())
-                }
-            };
-            print_report(&wl, &run.report);
-            println!("  TEPS              {:.3} M/s", run.teps() / 1e6);
-        }
-        "streamcluster" => {
-            let cfg = streamcluster::ScConfig::bench(0.05);
-            let pts = Arc::new(streamcluster::generate_points(&cfg));
-            let res = streamcluster::run_streamcluster(&topo, mk_policy(), cores, &cfg, pts);
-            print_report("streamcluster", &res.report);
-            println!("  centers           {}", res.n_centers);
-            println!("  final cost        {:.1}", res.final_cost);
-        }
-        "sgd" => {
-            let cfg = sgd::SgdConfig::bench(0.05);
-            let data = sgd::generate_data(&cfg);
-            let run = sgd::run_sgd(
-                &topo,
-                mk_policy(),
-                cores,
-                &cfg,
-                &data,
-                sgd::DwStrategy::PerCore,
-                sgd::SgdMode::Grad,
-                Arc::new(sgd::RustGrad),
-            );
-            print_report("sgd", &run.report);
-            println!("  throughput        {:.1} GB/s", run.gbps());
-            println!("  loss trace        {:?}", run.loss_trace);
-        }
-        "ycsb" | "tpcc" => {
-            let wl_spec = if wl == "ycsb" {
-                oltp::OltpWorkload::ycsb_scaled(0.01)
-            } else {
-                oltp::OltpWorkload::tpcc_scaled(0.2)
-            };
-            let run = oltp::run_oltp(&topo, mk_policy(), cores, &wl_spec, 20_000, seed);
-            print_report(&wl, &run.report);
-            println!("  commits/s         {:.0}", run.commits_per_sec());
-            println!("  aborts            {}", run.aborts);
-        }
-        other => {
-            eprintln!("unknown workload {other}");
-            std::process::exit(2);
-        }
+    let mut scenario = spec.build(&params);
+    println!(
+        "scenario {} [{}]: {} | {} cores on {}",
+        spec.name, spec.family, spec.about, cores, topo.name
+    );
+    let run = Driver::new(&topo, policy, cores)
+        .with_verify(a.flag("verify"))
+        .run(scenario.as_mut());
+    print_report(spec.name, &run.report);
+    println!(
+        "  throughput        {:.3} M {}/s",
+        run.throughput() / 1e6,
+        run.metrics.unit
+    );
+    for (key, value) in &run.metrics.extras {
+        println!("  {key:<17} {value:.4}");
     }
+    if a.flag("verify") {
+        println!("  verified          ok (matches the serial reference)");
+    }
+}
+
+fn cmd_scenarios() {
+    let mut tab = Table::new(
+        "scenario registry (arcas run --scenario <name>)",
+        &["name", "family", "aliases", "description"],
+    );
+    for s in engine::registry() {
+        tab.row(vec![
+            s.name.to_string(),
+            s.family.to_string(),
+            s.aliases.join(","),
+            s.about.to_string(),
+        ]);
+    }
+    println!("{}", tab.render());
 }
 
 fn cmd_artifacts() {
@@ -225,5 +217,5 @@ fn cmd_policies() {
         let p = policy::by_name(name, &topo).unwrap();
         println!("  {:<12} {}", name, p.name());
     }
-    let _ = harness::cores_vs_channels();
+    let _ = arcas::harness::cores_vs_channels();
 }

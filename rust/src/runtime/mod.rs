@@ -6,17 +6,73 @@
 //! with 64-bit instruction ids, while the text parser reassigns ids (see
 //! DESIGN.md and /opt/xla-example/README.md).
 //!
+//! The manifest/shape front-end is dependency-free and always built; the
+//! backend that actually compiles and executes HLO needs the `xla`
+//! bindings, which are not in the offline crate set. It lives behind the
+//! `pjrt` cargo feature (see `rust/Cargo.toml`): without it,
+//! [`PjrtRuntime::load`] reports a clean error and every caller falls
+//! back to the pure-rust numeric oracles ([`RustGrad`] et al.), so the
+//! full experiment suite still runs.
+//!
 //! [`PjrtRuntime`] compiles every manifest entry once at startup;
 //! [`PjrtGrad`] adapts the `logreg_loss_grad_*` executables to the SGD
 //! workload's [`GradEngine`] so Fig. 10/11 run real XLA numerics.
 
-use std::collections::HashMap;
 use std::sync::Mutex;
-
-use anyhow::{anyhow, bail, Context, Result};
 
 use crate::util::config::Config;
 use crate::workloads::sgd::{GradEngine, RustGrad};
+
+#[cfg(feature = "pjrt")]
+mod xla_backend;
+#[cfg(feature = "pjrt")]
+pub use xla_backend::{Executable, PjrtRuntime};
+#[cfg(not(feature = "pjrt"))]
+mod stub_backend;
+#[cfg(not(feature = "pjrt"))]
+pub use stub_backend::{Executable, PjrtRuntime};
+
+/// Runtime-layer error: a message plus optional context chain, rendered
+/// as `context: cause` (the offline crate set has no `anyhow`).
+#[derive(Debug)]
+pub struct RuntimeError {
+    msg: String,
+}
+
+impl RuntimeError {
+    pub fn new(msg: impl Into<String>) -> Self {
+        Self { msg: msg.into() }
+    }
+
+    /// Prefix the error with `context` (anyhow's `.context()` shape).
+    pub fn context(self, context: impl std::fmt::Display) -> Self {
+        Self {
+            msg: format!("{context}: {}", self.msg),
+        }
+    }
+}
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+impl From<String> for RuntimeError {
+    fn from(msg: String) -> Self {
+        Self { msg }
+    }
+}
+
+impl From<&str> for RuntimeError {
+    fn from(msg: &str) -> Self {
+        Self { msg: msg.to_string() }
+    }
+}
+
+pub type Result<T> = std::result::Result<T, RuntimeError>;
 
 /// Parsed manifest entry.
 #[derive(Clone, Debug, PartialEq)]
@@ -29,141 +85,54 @@ pub struct ArtifactSpec {
 }
 
 /// Parse `inputs = 128x1024;128;scalar` shape lists.
-pub fn parse_shapes(s: &str) -> Vec<Vec<usize>> {
-    s.split(';')
-        .filter(|p| !p.trim().is_empty())
-        .map(|p| {
-            let p = p.trim();
-            if p == "scalar" {
-                vec![]
-            } else {
-                p.split('x')
-                    .map(|d| d.parse().expect("bad shape dim"))
-                    .collect()
-            }
-        })
-        .collect()
+///
+/// A malformed dimension is an error (a bad manifest must not take the
+/// runtime down — callers fall back to the rust engines).
+pub fn parse_shapes(s: &str) -> Result<Vec<Vec<usize>>> {
+    let mut shapes = Vec::new();
+    for part in s.split(';').filter(|p| !p.trim().is_empty()) {
+        let part = part.trim();
+        if part == "scalar" {
+            shapes.push(Vec::new());
+            continue;
+        }
+        let mut dims = Vec::new();
+        for d in part.split('x') {
+            let dim: usize = d.trim().parse().map_err(|_| {
+                RuntimeError::new(format!("bad shape dim {d:?} in {s:?}"))
+            })?;
+            dims.push(dim);
+        }
+        shapes.push(dims);
+    }
+    Ok(shapes)
 }
 
 /// Load and parse `manifest.txt` from an artifact directory.
 pub fn load_manifest(dir: &str) -> Result<Vec<ArtifactSpec>> {
     let path = format!("{dir}/manifest.txt");
-    let cfg = Config::load(&path).map_err(|e| anyhow!("{e}"))?;
+    let cfg = Config::load(&path).map_err(RuntimeError::from)?;
     let mut specs = Vec::new();
     for section in cfg.sections() {
         if section == "global" {
             continue;
         }
+        let file = cfg
+            .get(section, "file")
+            .ok_or_else(|| RuntimeError::new(format!("manifest entry [{section}] missing file")))?
+            .to_string();
+        let inputs = parse_shapes(cfg.get(section, "inputs").unwrap_or(""))
+            .map_err(|e| e.context(format!("manifest entry [{section}] inputs")))?;
+        let outputs = parse_shapes(cfg.get(section, "outputs").unwrap_or(""))
+            .map_err(|e| e.context(format!("manifest entry [{section}] outputs")))?;
         specs.push(ArtifactSpec {
             name: section.to_string(),
-            file: cfg
-                .get(section, "file")
-                .context("manifest entry missing file")?
-                .to_string(),
-            inputs: parse_shapes(cfg.get(section, "inputs").unwrap_or("")),
-            outputs: parse_shapes(cfg.get(section, "outputs").unwrap_or("")),
+            file,
+            inputs,
+            outputs,
         });
     }
     Ok(specs)
-}
-
-/// A compiled executable + its spec.
-pub struct Executable {
-    pub spec: ArtifactSpec,
-    exe: xla::PjRtLoadedExecutable,
-}
-
-impl Executable {
-    /// Execute with f32 inputs (row-major, shapes per the spec); returns
-    /// one f32 vec per output.
-    pub fn run_f32(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
-        if inputs.len() != self.spec.inputs.len() {
-            bail!(
-                "{}: expected {} inputs, got {}",
-                self.spec.name,
-                self.spec.inputs.len(),
-                inputs.len()
-            );
-        }
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (data, shape) in inputs.iter().zip(&self.spec.inputs) {
-            let expect: usize = shape.iter().product::<usize>().max(1);
-            if data.len() != expect {
-                bail!(
-                    "{}: input length {} != shape {:?}",
-                    self.spec.name,
-                    data.len(),
-                    shape
-                );
-            }
-            let lit = xla::Literal::vec1(data);
-            let lit = if shape.is_empty() {
-                lit.reshape(&[])?
-            } else {
-                lit.reshape(&shape.iter().map(|&d| d as i64).collect::<Vec<_>>())?
-            };
-            literals.push(lit);
-        }
-        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True: unpack the tuple.
-        let parts = result.to_tuple()?;
-        let mut out = Vec::with_capacity(parts.len());
-        for p in parts {
-            out.push(p.to_vec::<f32>()?);
-        }
-        Ok(out)
-    }
-}
-
-/// The PJRT CPU runtime: one compiled executable per manifest entry.
-pub struct PjrtRuntime {
-    pub platform: String,
-    execs: HashMap<String, Executable>,
-}
-
-impl PjrtRuntime {
-    /// Compile every artifact in `dir`. Fails cleanly if the directory or
-    /// manifest is missing (callers fall back to the rust engines).
-    pub fn load(dir: &str) -> Result<Self> {
-        let specs = load_manifest(dir)?;
-        let client = xla::PjRtClient::cpu()?;
-        let platform = client.platform_name();
-        let mut execs = HashMap::new();
-        for spec in specs {
-            let path = format!("{dir}/{}", spec.file);
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .with_context(|| format!("parsing {path}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .with_context(|| format!("compiling {}", spec.name))?;
-            execs.insert(spec.name.clone(), Executable { spec, exe });
-        }
-        Ok(Self { platform, execs })
-    }
-
-    pub fn get(&self, name: &str) -> Option<&Executable> {
-        self.execs.get(name)
-    }
-
-    pub fn names(&self) -> Vec<&str> {
-        let mut v: Vec<&str> = self.execs.keys().map(|s| s.as_str()).collect();
-        v.sort_unstable();
-        v
-    }
-
-    pub fn len(&self) -> usize {
-        self.execs.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.execs.is_empty()
-    }
-
-    /// Default artifact directory (repo layout).
-    pub fn default_dir() -> String {
-        std::env::var("ARCAS_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
-    }
 }
 
 /// [`GradEngine`] backed by the AOT `logreg_loss_grad_b{B}_f{F}`
@@ -185,6 +154,7 @@ pub struct PjrtGrad {
 // the internal `Mutex`, so at most one thread touches the PJRT objects at
 // a time, and the `Rc`s are never cloned outside the lock. The simulator
 // is single-threaded; the host executor serializes on the same mutex.
+// (The stub backend holds no handles at all.)
 unsafe impl Send for PjrtGrad {}
 unsafe impl Sync for PjrtGrad {}
 
@@ -193,7 +163,10 @@ impl PjrtGrad {
     pub fn new(rt: PjrtRuntime, batch: usize, feats: usize) -> Result<Self> {
         let name = format!("logreg_loss_grad_b{batch}_f{feats}");
         if rt.get(&name).is_none() {
-            bail!("no artifact {name}; available: {:?}", rt.names());
+            return Err(RuntimeError::new(format!(
+                "no artifact {name}; available: {:?}",
+                rt.names()
+            )));
         }
         Ok(Self {
             exec_name: name,
@@ -235,11 +208,19 @@ mod tests {
     #[test]
     fn shape_parsing() {
         assert_eq!(
-            parse_shapes("128x1024;128;scalar"),
+            parse_shapes("128x1024;128;scalar").unwrap(),
             vec![vec![128, 1024], vec![128], vec![]]
         );
-        assert_eq!(parse_shapes(""), Vec::<Vec<usize>>::new());
-        assert_eq!(parse_shapes("7"), vec![vec![7]]);
+        assert_eq!(parse_shapes("").unwrap(), Vec::<Vec<usize>>::new());
+        assert_eq!(parse_shapes("7").unwrap(), vec![vec![7]]);
+    }
+
+    #[test]
+    fn malformed_shape_is_an_error_not_a_panic() {
+        let err = parse_shapes("128xbogus").unwrap_err();
+        assert!(err.to_string().contains("bogus"), "{err}");
+        assert!(parse_shapes("12x-4").is_err());
+        assert!(parse_shapes("x").is_err());
     }
 
     #[test]
@@ -259,10 +240,25 @@ mod tests {
     }
 
     #[test]
+    fn malformed_manifest_propagates_the_shape_error() {
+        let dir = std::env::temp_dir().join("arcas-manifest-bad-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "[foo]\nfile = foo.hlo.txt\ninputs = 2xoops\noutputs = scalar\n",
+        )
+        .unwrap();
+        let err = load_manifest(dir.to_str().unwrap()).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("[foo]"), "{msg}");
+        assert!(msg.contains("oops"), "{msg}");
+    }
+
+    #[test]
     fn missing_dir_is_clean_error() {
         assert!(PjrtRuntime::load("/nonexistent/artifacts").is_err());
     }
 
     // Full PJRT round-trip tests live in rust/tests/integration_pjrt.rs
-    // (they need `make artifacts` to have run).
+    // (they need `make artifacts` and the `pjrt` feature).
 }

@@ -1,0 +1,72 @@
+//! Stub PJRT backend — the default in the offline build.
+//!
+//! The `xla` bindings are not in the offline crate set, so this backend
+//! keeps the public surface of the real one ([`PjrtRuntime`],
+//! [`Executable`]) while refusing to load: callers detect the error and
+//! fall back to the pure-rust engines. Enable the `pjrt` cargo feature
+//! (and add the `xla` dependency) for the real thing.
+
+use super::{ArtifactSpec, Result, RuntimeError};
+
+/// A compiled executable + its spec (stub: never constructed — loading
+/// fails first — but the type keeps call sites compiling unchanged).
+pub struct Executable {
+    pub spec: ArtifactSpec,
+}
+
+impl Executable {
+    /// Execute with f32 inputs (row-major, shapes per the spec); returns
+    /// one f32 vec per output.
+    pub fn run_f32(&self, _inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        Err(RuntimeError::new(
+            "PJRT backend unavailable (built without the `pjrt` feature)",
+        ))
+    }
+}
+
+/// The PJRT CPU runtime front: in the stub build, [`PjrtRuntime::load`]
+/// validates the manifest and then reports the missing backend.
+pub struct PjrtRuntime {
+    pub platform: String,
+    execs: Vec<Executable>,
+}
+
+impl PjrtRuntime {
+    /// Whether a real PJRT backend was compiled in.
+    pub const fn backend_available() -> bool {
+        false
+    }
+
+    /// Compile every artifact in `dir`. The stub validates the manifest
+    /// (so a malformed one is still reported precisely) and then fails
+    /// cleanly; callers fall back to the rust engines.
+    pub fn load(dir: &str) -> Result<Self> {
+        let specs = super::load_manifest(dir)?;
+        Err(RuntimeError::new(format!(
+            "cannot compile {} artifact(s) from {dir}: built without the `pjrt` \
+             feature (the offline crate set has no `xla` bindings)",
+            specs.len()
+        )))
+    }
+
+    pub fn get(&self, _name: &str) -> Option<&Executable> {
+        None
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        Vec::new()
+    }
+
+    pub fn len(&self) -> usize {
+        self.execs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.execs.is_empty()
+    }
+
+    /// Default artifact directory (repo layout).
+    pub fn default_dir() -> String {
+        std::env::var("ARCAS_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+    }
+}

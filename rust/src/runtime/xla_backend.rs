@@ -1,0 +1,123 @@
+//! Real PJRT backend over the `xla` bindings (xla_extension).
+//!
+//! Only built with the `pjrt` cargo feature, which additionally requires
+//! adding `xla` to `[dependencies]` (it is not in the offline crate set —
+//! see `rust/Cargo.toml`).
+
+use std::collections::HashMap;
+
+use super::{ArtifactSpec, Result, RuntimeError};
+
+fn err(e: impl std::fmt::Display) -> RuntimeError {
+    RuntimeError::new(e.to_string())
+}
+
+/// A compiled executable + its spec.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with f32 inputs (row-major, shapes per the spec); returns
+    /// one f32 vec per output.
+    pub fn run_f32(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(RuntimeError::new(format!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs.iter().zip(&self.spec.inputs) {
+            let expect: usize = shape.iter().product::<usize>().max(1);
+            if data.len() != expect {
+                return Err(RuntimeError::new(format!(
+                    "{}: input length {} != shape {:?}",
+                    self.spec.name,
+                    data.len(),
+                    shape
+                )));
+            }
+            let lit = xla::Literal::vec1(data);
+            let lit = if shape.is_empty() {
+                lit.reshape(&[]).map_err(err)?
+            } else {
+                lit.reshape(&shape.iter().map(|&d| d as i64).collect::<Vec<_>>())
+                    .map_err(err)?
+            };
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(err)?[0][0]
+            .to_literal_sync()
+            .map_err(err)?;
+        // aot.py lowers with return_tuple=True: unpack the tuple.
+        let parts = result.to_tuple().map_err(err)?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f32>().map_err(err)?);
+        }
+        Ok(out)
+    }
+}
+
+/// The PJRT CPU runtime: one compiled executable per manifest entry.
+pub struct PjrtRuntime {
+    pub platform: String,
+    execs: HashMap<String, Executable>,
+}
+
+impl PjrtRuntime {
+    /// Whether a real PJRT backend was compiled in.
+    pub const fn backend_available() -> bool {
+        true
+    }
+
+    /// Compile every artifact in `dir`. Fails cleanly if the directory or
+    /// manifest is missing (callers fall back to the rust engines).
+    pub fn load(dir: &str) -> Result<Self> {
+        let specs = super::load_manifest(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(err)?;
+        let platform = client.platform_name();
+        let mut execs = HashMap::new();
+        for spec in specs {
+            let path = format!("{dir}/{}", spec.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| RuntimeError::new(format!("parsing {path}: {e}")))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| RuntimeError::new(format!("compiling {}: {e}", spec.name)))?;
+            execs.insert(spec.name.clone(), Executable { spec, exe });
+        }
+        Ok(Self { platform, execs })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Executable> {
+        self.execs.get(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.execs.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.execs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.execs.is_empty()
+    }
+
+    /// Default artifact directory (repo layout).
+    pub fn default_dir() -> String {
+        std::env::var("ARCAS_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+    }
+}

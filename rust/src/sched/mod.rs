@@ -460,17 +460,16 @@ impl SimExecutor {
     }
 }
 
-/// Convenience: run `n` tasks of shape `make` under `policy` on a fresh
-/// machine, returning the report.
+/// Convenience: run `n` tasks of shape `make` under `policy` on `machine`,
+/// returning the report. Routed through [`crate::engine::execute`] — the
+/// single seam where the executor backend is chosen.
 pub fn run_group(
     machine: Machine,
     policy: Box<dyn Policy>,
     n: usize,
     make: impl FnMut(usize) -> Box<dyn Coroutine>,
 ) -> RunReport {
-    let mut ex = SimExecutor::new(machine, policy);
-    ex.spawn_group(n, make);
-    ex.run()
+    crate::engine::execute(machine, policy, None, n, make).0
 }
 
 #[cfg(test)]
@@ -579,15 +578,19 @@ mod tests {
         let mut m = machine();
         let r = m.alloc("shared", 64 << 20, Placement::Bind(0));
         let policy = ArcasPolicy::new(&m.topo).with_timer(100_000);
-        let mut ex = SimExecutor::new(m, Box::new(policy)).with_timer(100_000);
-        ex.spawn_group(8, |_| {
+        let report = run_group(m, Box::new(policy), 8, |_| {
             Box::new(IterTask::new(200, move |ctx, _| {
                 ctx.rand_read(r, 200, 64 << 20);
             }))
         });
-        let report = ex.run();
         assert!(report.makespan_ns > 0);
-        assert!(ex.profiler().samples.len() > 0, "timer must have fired");
+        // Each fired timer records a concurrency sample on top of the
+        // start/end samples the run always takes.
+        assert!(
+            report.concurrency.len() > 2,
+            "timer must have fired (samples={})",
+            report.concurrency.len()
+        );
     }
 
     #[test]
@@ -607,12 +610,23 @@ mod tests {
 
     #[test]
     fn shoal_uses_sequential_cores() {
-        let m = machine();
-        let mut ex = SimExecutor::new(m, Box::new(ShoalPolicy::new()));
-        ex.spawn_group(4, |_| {
-            Box::new(FnTask(|ctx: &mut TaskCtx<'_>| ctx.compute_ns(10)))
+        // Shoal's strict task→core order is the placement the executor
+        // adopts verbatim at spawn time: observe the core each rank
+        // actually runs on (equal-length tasks => no steals to blur it).
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        let ran_on: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..4).map(|_| AtomicUsize::new(usize::MAX)).collect());
+        let report = run_group(machine(), Box::new(ShoalPolicy::new()), 4, |rank| {
+            let ran_on = ran_on.clone();
+            Box::new(FnTask(move |ctx: &mut TaskCtx<'_>| {
+                ran_on[rank].store(ctx.core, Ordering::Relaxed);
+                ctx.compute_ns(10);
+            }))
         });
-        assert_eq!(ex.placement, vec![0, 1, 2, 3]);
+        assert_eq!(report.dispatches, 4);
+        let cores: Vec<usize> = ran_on.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        assert_eq!(cores, vec![0, 1, 2, 3]);
     }
 
     #[test]

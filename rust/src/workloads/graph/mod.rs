@@ -7,4 +7,7 @@ pub mod algos;
 pub mod runner;
 
 pub use csr::Csr;
-pub use runner::{run_bfs, run_cc, run_gups, run_pagerank, run_sssp, GraphRun};
+pub use runner::{
+    run_bfs, run_cc, run_gups, run_pagerank, run_sssp, BfsScenario, CcScenario, GraphRun,
+    GupsScenario, PagerankScenario, SsspScenario,
+};

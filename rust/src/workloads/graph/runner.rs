@@ -6,16 +6,22 @@
 //! updates are random writes over the state region. The algorithm result
 //! is checked against the serial references in [`super::algos`]; the
 //! virtual-time [`RunReport`] provides the paper's performance numbers.
+//!
+//! Every algorithm is a [`Scenario`] driven by [`crate::engine::Driver`];
+//! the `run_*` functions are thin wrappers that preserve the original
+//! entry-point signatures (and their deterministic reports).
 
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::Arc;
 
+use super::algos;
 use super::csr::Csr;
+use crate::engine::{Driver, Scenario, ScenarioMetrics};
 use crate::mem::{Placement, RegionId};
 use crate::policy::Policy;
-use crate::sched::{RunReport, SimExecutor};
+use crate::sched::RunReport;
 use crate::sim::Machine;
-use crate::task::{StateTask, Step, TaskCtx};
+use crate::task::{Coroutine, StateTask, Step, TaskCtx};
 use crate::topology::Topology;
 
 const MAX_ROUNDS: usize = 4096;
@@ -133,39 +139,98 @@ impl GraphRun {
     }
 }
 
+/// Post-`setup` state shared by the BSP graph scenarios.
+struct GraphState {
+    plan: ChargePlan,
+    slices: Vec<RegionId>,
+    gslices: Vec<RegionId>,
+    edges_scanned: Arc<AtomicU64>,
+}
+
+impl GraphState {
+    fn new(machine: &mut Machine, g: &Csr, state_bytes: u64, tasks: usize, stride: u64) -> Self {
+        let regs = alloc_regions(machine, g, state_bytes, tasks);
+        Self {
+            plan: ChargePlan::from(&regs, stride),
+            slices: regs.slices,
+            gslices: regs.graph_slices,
+            edges_scanned: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    fn edges(&self) -> u64 {
+        self.edges_scanned.load(Ordering::Relaxed)
+    }
+}
+
+fn graph_metrics(edges: u64, report: &RunReport) -> ScenarioMetrics {
+    ScenarioMetrics::new(edges as f64, "edges").with("teps", report.throughput(edges as f64))
+}
+
 // ====================================================================
 // BFS
 // ====================================================================
 
-/// Level-synchronous parallel BFS; returns distances + run info.
-pub fn run_bfs(
-    topo: &Topology,
-    policy: Box<dyn Policy>,
-    cores: usize,
+/// Level-synchronous parallel BFS as a [`Scenario`].
+pub struct BfsScenario {
     graph: Arc<Csr>,
     src: u32,
-) -> (GraphRun, Vec<u32>) {
-    let n = graph.num_vertices();
-    let mut machine = Machine::new(topo.clone());
-    let regs = alloc_regions(&mut machine, &graph, (n * 4) as u64, cores);
-    let plan = ChargePlan::from(&regs, 4);
-    let slices = regs.slices.clone();
-    let gslices = regs.graph_slices.clone();
+    st: Option<GraphState>,
+    dist: Option<Arc<Vec<AtomicU32>>>,
+    level_updates: Option<Arc<Vec<AtomicU64>>>,
+}
 
-    let dist: Arc<Vec<AtomicU32>> = Arc::new((0..n).map(|_| AtomicU32::new(u32::MAX)).collect());
-    dist[src as usize].store(0, Ordering::Relaxed);
-    let level_updates: Arc<Vec<AtomicU64>> =
-        Arc::new((0..MAX_ROUNDS).map(|_| AtomicU64::new(0)).collect());
-    let edges_scanned = Arc::new(AtomicU64::new(0));
+impl BfsScenario {
+    pub fn new(graph: Arc<Csr>, src: u32) -> Self {
+        Self {
+            graph,
+            src,
+            st: None,
+            dist: None,
+            level_updates: None,
+        }
+    }
 
-    let mut ex = SimExecutor::new(machine, policy);
-    ex.spawn_group(cores, |rank| {
-        let graph = graph.clone();
-        let dist = dist.clone();
-        let level_updates = level_updates.clone();
-        let edges_scanned = edges_scanned.clone();
-        let slice = slices[rank];
-        let gslice = gslices[rank];
+    /// Total edges scanned (TEPS numerator); valid after the run.
+    pub fn edges_processed(&self) -> u64 {
+        self.st.as_ref().map_or(0, GraphState::edges)
+    }
+
+    /// Final distances (`u32::MAX` = unreached); valid after the run.
+    pub fn distances(&self) -> Vec<u32> {
+        self.dist
+            .as_ref()
+            .map(|d| d.iter().map(|x| x.load(Ordering::Relaxed)).collect())
+            .unwrap_or_default()
+    }
+}
+
+impl Scenario for BfsScenario {
+    fn name(&self) -> &'static str {
+        "bfs"
+    }
+
+    fn setup(&mut self, machine: &mut Machine, tasks: usize) {
+        let n = self.graph.num_vertices();
+        self.st = Some(GraphState::new(machine, &self.graph, (n * 4) as u64, tasks, 4));
+        let dist: Arc<Vec<AtomicU32>> =
+            Arc::new((0..n).map(|_| AtomicU32::new(u32::MAX)).collect());
+        dist[self.src as usize].store(0, Ordering::Relaxed);
+        self.dist = Some(dist);
+        self.level_updates =
+            Some(Arc::new((0..MAX_ROUNDS).map(|_| AtomicU64::new(0)).collect()));
+    }
+
+    fn spawn(&mut self, rank: usize) -> Box<dyn Coroutine> {
+        let st = self.st.as_ref().expect("setup() before spawn()");
+        let graph = self.graph.clone();
+        let n = graph.num_vertices();
+        let dist = self.dist.as_ref().unwrap().clone();
+        let level_updates = self.level_updates.as_ref().unwrap().clone();
+        let edges_scanned = st.edges_scanned.clone();
+        let slice = st.slices[rank];
+        let gslice = st.gslices[rank];
+        let plan = st.plan;
         Box::new(StateTask::new(move |ctx, step| {
             let level = step as usize;
             if level >= MAX_ROUNDS - 1 {
@@ -199,15 +264,37 @@ pub fn run_bfs(
             charge_step(ctx, &plan, slice, gslice, hi - lo, scanned, upd);
             Step::Barrier
         }))
-    });
-    let report = ex.run();
-    let out = dist.iter().map(|d| d.load(Ordering::Relaxed)).collect();
+    }
+
+    fn verify(&self) {
+        assert_eq!(
+            self.distances(),
+            algos::bfs_ref(&self.graph, self.src),
+            "BFS distances diverge from the serial reference"
+        );
+    }
+
+    fn metrics(&self, report: &RunReport) -> ScenarioMetrics {
+        graph_metrics(self.edges_processed(), report)
+    }
+}
+
+/// Level-synchronous parallel BFS; returns distances + run info.
+pub fn run_bfs(
+    topo: &Topology,
+    policy: Box<dyn Policy>,
+    cores: usize,
+    graph: Arc<Csr>,
+    src: u32,
+) -> (GraphRun, Vec<u32>) {
+    let mut s = BfsScenario::new(graph, src);
+    let run = Driver::new(topo, policy, cores).run(&mut s);
     (
         GraphRun {
-            report,
-            edges_processed: edges_scanned.load(Ordering::Relaxed),
+            report: run.report,
+            edges_processed: s.edges_processed(),
         },
-        out,
+        s.distances(),
     )
 }
 
@@ -215,33 +302,62 @@ pub fn run_bfs(
 // Connected components (label propagation)
 // ====================================================================
 
-pub fn run_cc(
-    topo: &Topology,
-    policy: Box<dyn Policy>,
-    cores: usize,
+/// Label-propagation connected components as a [`Scenario`].
+pub struct CcScenario {
     graph: Arc<Csr>,
-) -> (GraphRun, Vec<u32>) {
-    let n = graph.num_vertices();
-    let mut machine = Machine::new(topo.clone());
-    let regs = alloc_regions(&mut machine, &graph, (n * 4) as u64, cores);
-    let plan = ChargePlan::from(&regs, 4);
-    let slices = regs.slices.clone();
-    let gslices = regs.graph_slices.clone();
+    st: Option<GraphState>,
+    label: Option<Arc<Vec<AtomicU32>>>,
+    round_updates: Option<Arc<Vec<AtomicU64>>>,
+}
 
-    let label: Arc<Vec<AtomicU32>> =
-        Arc::new((0..n).map(|v| AtomicU32::new(v as u32)).collect());
-    let round_updates: Arc<Vec<AtomicU64>> =
-        Arc::new((0..MAX_ROUNDS).map(|_| AtomicU64::new(0)).collect());
-    let edges_scanned = Arc::new(AtomicU64::new(0));
+impl CcScenario {
+    pub fn new(graph: Arc<Csr>) -> Self {
+        Self {
+            graph,
+            st: None,
+            label: None,
+            round_updates: None,
+        }
+    }
 
-    let mut ex = SimExecutor::new(machine, policy);
-    ex.spawn_group(cores, |rank| {
-        let graph = graph.clone();
-        let label = label.clone();
-        let round_updates = round_updates.clone();
-        let edges_scanned = edges_scanned.clone();
-        let slice = slices[rank];
-        let gslice = gslices[rank];
+    pub fn edges_processed(&self) -> u64 {
+        self.st.as_ref().map_or(0, GraphState::edges)
+    }
+
+    /// Final component labels; valid after the run.
+    pub fn labels(&self) -> Vec<u32> {
+        self.label
+            .as_ref()
+            .map(|l| l.iter().map(|x| x.load(Ordering::Relaxed)).collect())
+            .unwrap_or_default()
+    }
+}
+
+impl Scenario for CcScenario {
+    fn name(&self) -> &'static str {
+        "cc"
+    }
+
+    fn setup(&mut self, machine: &mut Machine, tasks: usize) {
+        let n = self.graph.num_vertices();
+        self.st = Some(GraphState::new(machine, &self.graph, (n * 4) as u64, tasks, 4));
+        self.label = Some(Arc::new(
+            (0..n).map(|v| AtomicU32::new(v as u32)).collect(),
+        ));
+        self.round_updates =
+            Some(Arc::new((0..MAX_ROUNDS).map(|_| AtomicU64::new(0)).collect()));
+    }
+
+    fn spawn(&mut self, rank: usize) -> Box<dyn Coroutine> {
+        let st = self.st.as_ref().expect("setup() before spawn()");
+        let graph = self.graph.clone();
+        let n = graph.num_vertices();
+        let label = self.label.as_ref().unwrap().clone();
+        let round_updates = self.round_updates.as_ref().unwrap().clone();
+        let edges_scanned = st.edges_scanned.clone();
+        let slice = st.slices[rank];
+        let gslice = st.gslices[rank];
+        let plan = st.plan;
         Box::new(StateTask::new(move |ctx, step| {
             let round = step as usize;
             if round >= MAX_ROUNDS - 1 {
@@ -279,15 +395,45 @@ pub fn run_cc(
             charge_step(ctx, &plan, slice, gslice, hi - lo, scanned, upd);
             Step::Barrier
         }))
-    });
-    let report = ex.run();
-    let out = label.iter().map(|l| l.load(Ordering::Relaxed)).collect();
+    }
+
+    fn verify(&self) {
+        // Labels may differ from the reference; component *partitions*
+        // must match.
+        let par = self.labels();
+        let ser = algos::cc_ref(&self.graph);
+        let mut map = std::collections::HashMap::new();
+        for v in 0..self.graph.num_vertices() {
+            let e = map.entry(par[v]).or_insert(ser[v]);
+            assert_eq!(*e, ser[v], "vertex {v} crosses components");
+        }
+        assert_eq!(
+            algos::component_count(&par),
+            algos::component_count(&ser),
+            "component count diverges from the serial reference"
+        );
+    }
+
+    fn metrics(&self, report: &RunReport) -> ScenarioMetrics {
+        graph_metrics(self.edges_processed(), report)
+            .with("components", algos::component_count(&self.labels()) as f64)
+    }
+}
+
+pub fn run_cc(
+    topo: &Topology,
+    policy: Box<dyn Policy>,
+    cores: usize,
+    graph: Arc<Csr>,
+) -> (GraphRun, Vec<u32>) {
+    let mut s = CcScenario::new(graph);
+    let run = Driver::new(topo, policy, cores).run(&mut s);
     (
         GraphRun {
-            report,
-            edges_processed: edges_scanned.load(Ordering::Relaxed),
+            report: run.report,
+            edges_processed: s.edges_processed(),
         },
-        out,
+        s.labels(),
     )
 }
 
@@ -329,39 +475,77 @@ fn atomic_f64_add(a: &AtomicU64, v: f64) {
 // PageRank (push-based, 3 BSP phases per iteration)
 // ====================================================================
 
-pub fn run_pagerank(
-    topo: &Topology,
-    policy: Box<dyn Policy>,
-    cores: usize,
+/// Push-based PageRank as a [`Scenario`].
+pub struct PagerankScenario {
     graph: Arc<Csr>,
     iters: usize,
-) -> (GraphRun, Vec<f64>) {
-    let n = graph.num_vertices();
-    let mut machine = Machine::new(topo.clone());
-    let regs = alloc_regions(&mut machine, &graph, (n * 16) as u64, cores); // two f64 arrays
-    let plan = ChargePlan::from(&regs, 16);
-    let slices = regs.slices.clone();
-    let gslices = regs.graph_slices.clone();
+    st: Option<GraphState>,
+    rank_v: Option<Arc<Vec<AtomicU64>>>,
+    next_v: Option<Arc<Vec<AtomicU64>>>,
+    dangling: Option<Arc<Vec<AtomicU64>>>,
+}
 
-    let rank_v: Arc<Vec<AtomicU64>> = Arc::new(
-        (0..n)
-            .map(|_| AtomicU64::new((1.0 / n as f64).to_bits()))
-            .collect(),
-    );
-    let next_v: Arc<Vec<AtomicU64>> = Arc::new((0..n).map(|_| AtomicU64::new(0)).collect());
-    let dangling: Arc<Vec<AtomicU64>> =
-        Arc::new((0..iters).map(|_| AtomicU64::new(0)).collect());
-    let edges_scanned = Arc::new(AtomicU64::new(0));
+impl PagerankScenario {
+    pub fn new(graph: Arc<Csr>, iters: usize) -> Self {
+        Self {
+            graph,
+            iters,
+            st: None,
+            rank_v: None,
+            next_v: None,
+            dangling: None,
+        }
+    }
 
-    let mut ex = SimExecutor::new(machine, policy);
-    ex.spawn_group(cores, |rank| {
-        let graph = graph.clone();
-        let rank_v = rank_v.clone();
-        let next_v = next_v.clone();
-        let dangling = dangling.clone();
-        let edges_scanned = edges_scanned.clone();
-        let slice = slices[rank];
-        let gslice = gslices[rank];
+    pub fn edges_processed(&self) -> u64 {
+        self.st.as_ref().map_or(0, GraphState::edges)
+    }
+
+    /// Final PageRank vector; valid after the run.
+    pub fn ranks(&self) -> Vec<f64> {
+        self.rank_v
+            .as_ref()
+            .map(|r| {
+                r.iter()
+                    .map(|x| f64::from_bits(x.load(Ordering::Relaxed)))
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+}
+
+impl Scenario for PagerankScenario {
+    fn name(&self) -> &'static str {
+        "pagerank"
+    }
+
+    fn setup(&mut self, machine: &mut Machine, tasks: usize) {
+        let n = self.graph.num_vertices();
+        // two f64 arrays
+        self.st = Some(GraphState::new(machine, &self.graph, (n * 16) as u64, tasks, 16));
+        self.rank_v = Some(Arc::new(
+            (0..n)
+                .map(|_| AtomicU64::new((1.0 / n as f64).to_bits()))
+                .collect(),
+        ));
+        self.next_v = Some(Arc::new((0..n).map(|_| AtomicU64::new(0)).collect()));
+        self.dangling = Some(Arc::new(
+            (0..self.iters).map(|_| AtomicU64::new(0)).collect(),
+        ));
+    }
+
+    fn spawn(&mut self, rank: usize) -> Box<dyn Coroutine> {
+        let st = self.st.as_ref().expect("setup() before spawn()");
+        let graph = self.graph.clone();
+        let n = graph.num_vertices();
+        let iters = self.iters;
+        let rank_v = self.rank_v.as_ref().unwrap().clone();
+        let next_v = self.next_v.as_ref().unwrap().clone();
+        let dangling = self.dangling.as_ref().unwrap().clone();
+        let edges_scanned = st.edges_scanned.clone();
+        let slice = st.slices[rank];
+        let gslice = st.gslices[rank];
+        let plan = st.plan;
         Box::new(StateTask::new(move |ctx, step| {
             let iter = (step / 3) as usize;
             let phase = step % 3;
@@ -415,18 +599,41 @@ pub fn run_pagerank(
             }
             Step::Barrier
         }))
-    });
-    let report = ex.run();
-    let out = rank_v
-        .iter()
-        .map(|r| f64::from_bits(r.load(Ordering::Relaxed)))
-        .collect();
+    }
+
+    fn verify(&self) {
+        let par = self.ranks();
+        let ser = algos::pagerank_ref(&self.graph, self.iters);
+        for v in 0..self.graph.num_vertices() {
+            assert!(
+                (par[v] - ser[v]).abs() < 1e-9,
+                "pagerank diverges at v={v}: par={} ser={}",
+                par[v],
+                ser[v]
+            );
+        }
+    }
+
+    fn metrics(&self, report: &RunReport) -> ScenarioMetrics {
+        graph_metrics(self.edges_processed(), report)
+    }
+}
+
+pub fn run_pagerank(
+    topo: &Topology,
+    policy: Box<dyn Policy>,
+    cores: usize,
+    graph: Arc<Csr>,
+    iters: usize,
+) -> (GraphRun, Vec<f64>) {
+    let mut s = PagerankScenario::new(graph, iters);
+    let run = Driver::new(topo, policy, cores).run(&mut s);
     (
         GraphRun {
-            report,
-            edges_processed: edges_scanned.load(Ordering::Relaxed),
+            report: run.report,
+            edges_processed: s.edges_processed(),
         },
-        out,
+        s.ranks(),
     )
 }
 
@@ -434,34 +641,65 @@ pub fn run_pagerank(
 // SSSP (chunked Bellman-Ford)
 // ====================================================================
 
-pub fn run_sssp(
-    topo: &Topology,
-    policy: Box<dyn Policy>,
-    cores: usize,
+/// Chunked Bellman-Ford SSSP as a [`Scenario`].
+pub struct SsspScenario {
     graph: Arc<Csr>,
     src: u32,
-) -> (GraphRun, Vec<u64>) {
-    let n = graph.num_vertices();
-    let mut machine = Machine::new(topo.clone());
-    let regs = alloc_regions(&mut machine, &graph, (n * 8) as u64, cores);
-    let plan = ChargePlan::from(&regs, 8);
-    let slices = regs.slices.clone();
-    let gslices = regs.graph_slices.clone();
+    st: Option<GraphState>,
+    dist: Option<Arc<Vec<AtomicU64>>>,
+    round_updates: Option<Arc<Vec<AtomicU64>>>,
+}
 
-    let dist: Arc<Vec<AtomicU64>> = Arc::new((0..n).map(|_| AtomicU64::new(u64::MAX)).collect());
-    dist[src as usize].store(0, Ordering::Relaxed);
-    let round_updates: Arc<Vec<AtomicU64>> =
-        Arc::new((0..MAX_ROUNDS).map(|_| AtomicU64::new(0)).collect());
-    let edges_scanned = Arc::new(AtomicU64::new(0));
+impl SsspScenario {
+    pub fn new(graph: Arc<Csr>, src: u32) -> Self {
+        Self {
+            graph,
+            src,
+            st: None,
+            dist: None,
+            round_updates: None,
+        }
+    }
 
-    let mut ex = SimExecutor::new(machine, policy);
-    ex.spawn_group(cores, |rank| {
-        let graph = graph.clone();
-        let dist = dist.clone();
-        let round_updates = round_updates.clone();
-        let edges_scanned = edges_scanned.clone();
-        let slice = slices[rank];
-        let gslice = gslices[rank];
+    pub fn edges_processed(&self) -> u64 {
+        self.st.as_ref().map_or(0, GraphState::edges)
+    }
+
+    /// Final distances (`u64::MAX` = unreached); valid after the run.
+    pub fn distances(&self) -> Vec<u64> {
+        self.dist
+            .as_ref()
+            .map(|d| d.iter().map(|x| x.load(Ordering::Relaxed)).collect())
+            .unwrap_or_default()
+    }
+}
+
+impl Scenario for SsspScenario {
+    fn name(&self) -> &'static str {
+        "sssp"
+    }
+
+    fn setup(&mut self, machine: &mut Machine, tasks: usize) {
+        let n = self.graph.num_vertices();
+        self.st = Some(GraphState::new(machine, &self.graph, (n * 8) as u64, tasks, 8));
+        let dist: Arc<Vec<AtomicU64>> =
+            Arc::new((0..n).map(|_| AtomicU64::new(u64::MAX)).collect());
+        dist[self.src as usize].store(0, Ordering::Relaxed);
+        self.dist = Some(dist);
+        self.round_updates =
+            Some(Arc::new((0..MAX_ROUNDS).map(|_| AtomicU64::new(0)).collect()));
+    }
+
+    fn spawn(&mut self, rank: usize) -> Box<dyn Coroutine> {
+        let st = self.st.as_ref().expect("setup() before spawn()");
+        let graph = self.graph.clone();
+        let n = graph.num_vertices();
+        let dist = self.dist.as_ref().unwrap().clone();
+        let round_updates = self.round_updates.as_ref().unwrap().clone();
+        let edges_scanned = st.edges_scanned.clone();
+        let slice = st.slices[rank];
+        let gslice = st.gslices[rank];
+        let plan = st.plan;
         Box::new(StateTask::new(move |ctx, step| {
             let round = step as usize;
             if round >= MAX_ROUNDS - 1 {
@@ -490,15 +728,36 @@ pub fn run_sssp(
             charge_step(ctx, &plan, slice, gslice, hi - lo, scanned, upd);
             Step::Barrier
         }))
-    });
-    let report = ex.run();
-    let out = dist.iter().map(|d| d.load(Ordering::Relaxed)).collect();
+    }
+
+    fn verify(&self) {
+        assert_eq!(
+            self.distances(),
+            algos::sssp_ref(&self.graph, self.src),
+            "SSSP distances diverge from the serial reference"
+        );
+    }
+
+    fn metrics(&self, report: &RunReport) -> ScenarioMetrics {
+        graph_metrics(self.edges_processed(), report)
+    }
+}
+
+pub fn run_sssp(
+    topo: &Topology,
+    policy: Box<dyn Policy>,
+    cores: usize,
+    graph: Arc<Csr>,
+    src: u32,
+) -> (GraphRun, Vec<u64>) {
+    let mut s = SsspScenario::new(graph, src);
+    let run = Driver::new(topo, policy, cores).run(&mut s);
     (
         GraphRun {
-            report,
-            edges_processed: edges_scanned.load(Ordering::Relaxed),
+            report: run.report,
+            edges_processed: s.edges_processed(),
         },
-        out,
+        s.distances(),
     )
 }
 
@@ -506,29 +765,62 @@ pub fn run_sssp(
 // GUPS (RandomAccess)
 // ====================================================================
 
-/// HPCC RandomAccess: XOR-updates at random table locations. Returns the
-/// run and the number of updates performed (GUPS numerator).
-pub fn run_gups(
-    topo: &Topology,
-    policy: Box<dyn Policy>,
-    cores: usize,
+/// HPCC RandomAccess (XOR-updates at random table locations) as a
+/// [`Scenario`].
+pub struct GupsScenario {
     table_words: usize,
     updates_per_core: u64,
     seed: u64,
-) -> (GraphRun, Arc<Vec<AtomicU64>>) {
-    let mut machine = Machine::new(topo.clone());
-    let bytes = (table_words * 8) as u64;
-    let table_r = machine.alloc("gups-table", bytes, Placement::Interleave);
+    tasks: usize,
+    table: Option<Arc<Vec<AtomicU64>>>,
+    region: Option<(RegionId, u64)>,
+}
 
-    let table: Arc<Vec<AtomicU64>> =
-        Arc::new((0..table_words).map(|i| AtomicU64::new(i as u64)).collect());
-    const CHUNK: u64 = 4096;
-    let chunks = updates_per_core.div_ceil(CHUNK);
+impl GupsScenario {
+    pub fn new(table_words: usize, updates_per_core: u64, seed: u64) -> Self {
+        Self {
+            table_words,
+            updates_per_core,
+            seed,
+            tasks: 0,
+            table: None,
+            region: None,
+        }
+    }
 
-    let mut ex = SimExecutor::new(machine, policy);
-    ex.spawn_group(cores, |rank| {
-        let table = table.clone();
-        let mut rng = crate::util::Rng::new(seed ^ (rank as u64) << 32);
+    /// Total updates performed (GUPS numerator); valid after the run.
+    pub fn updates(&self) -> u64 {
+        self.tasks as u64 * self.updates_per_core
+    }
+
+    /// The updated table; valid after the run.
+    pub fn table(&self) -> Arc<Vec<AtomicU64>> {
+        self.table.as_ref().expect("run first").clone()
+    }
+}
+
+impl Scenario for GupsScenario {
+    fn name(&self) -> &'static str {
+        "gups"
+    }
+
+    fn setup(&mut self, machine: &mut Machine, tasks: usize) {
+        self.tasks = tasks;
+        let bytes = (self.table_words * 8) as u64;
+        let table_r = machine.alloc("gups-table", bytes, Placement::Interleave);
+        self.region = Some((table_r, bytes));
+        self.table = Some(Arc::new(
+            (0..self.table_words).map(|i| AtomicU64::new(i as u64)).collect(),
+        ));
+    }
+
+    fn spawn(&mut self, rank: usize) -> Box<dyn Coroutine> {
+        const CHUNK: u64 = 4096;
+        let (table_r, bytes) = self.region.expect("setup() before spawn()");
+        let table = self.table.as_ref().unwrap().clone();
+        let updates_per_core = self.updates_per_core;
+        let chunks = updates_per_core.div_ceil(CHUNK);
+        let mut rng = crate::util::Rng::new(self.seed ^ (rank as u64) << 32);
         Box::new(StateTask::new(move |ctx, step| {
             if step >= chunks {
                 return Step::Done;
@@ -549,15 +841,46 @@ pub fn run_gups(
                 Step::Yield
             }
         }))
-    });
-    let report = ex.run();
-    let total = cores as u64 * updates_per_core;
+    }
+
+    fn verify(&self) {
+        if self.updates() == 0 {
+            return;
+        }
+        // XOR updates must have actually landed in the table.
+        let table = self.table.as_ref().expect("run first");
+        let changed = table
+            .iter()
+            .enumerate()
+            .filter(|(i, v)| v.load(Ordering::Relaxed) != *i as u64)
+            .count();
+        assert!(changed > 0, "GUPS table untouched after {} updates", self.updates());
+    }
+
+    fn metrics(&self, report: &RunReport) -> ScenarioMetrics {
+        ScenarioMetrics::new(self.updates() as f64, "updates")
+            .with("gups", report.throughput(self.updates() as f64) / 1e9)
+    }
+}
+
+/// HPCC RandomAccess: XOR-updates at random table locations. Returns the
+/// run and the updated table (GUPS numerator in `edges_processed`).
+pub fn run_gups(
+    topo: &Topology,
+    policy: Box<dyn Policy>,
+    cores: usize,
+    table_words: usize,
+    updates_per_core: u64,
+    seed: u64,
+) -> (GraphRun, Arc<Vec<AtomicU64>>) {
+    let mut s = GupsScenario::new(table_words, updates_per_core, seed);
+    let run = Driver::new(topo, policy, cores).run(&mut s);
     (
         GraphRun {
-            report,
-            edges_processed: total,
+            report: run.report,
+            edges_processed: s.updates(),
         },
-        table,
+        s.table(),
     )
 }
 
@@ -667,6 +990,17 @@ mod tests {
             c8.report.makespan_ns,
             c1.report.makespan_ns
         );
+    }
+
+    #[test]
+    fn scenario_verify_accepts_correct_runs() {
+        let g = test_graph();
+        let mut s = BfsScenario::new(g.clone(), 0);
+        let run = Driver::new(&topo(), Box::new(LocalCachePolicy), 8)
+            .with_verify(true)
+            .run(&mut s);
+        assert!(run.report.makespan_ns > 0);
+        assert!(run.metrics.get("teps").unwrap() > 0.0);
     }
 
     #[test]

@@ -17,11 +17,12 @@ use std::sync::{Arc, Mutex};
 
 use super::data::{Db, Table};
 use super::queries::{KeyCol, QuerySpec};
-use crate::mem::Placement;
+use crate::engine::{Driver, Scenario, ScenarioMetrics};
+use crate::mem::{Placement, RegionId};
 use crate::policy::Policy;
-use crate::sched::{RunReport, SimExecutor};
+use crate::sched::RunReport;
 use crate::sim::Machine;
-use crate::task::{StateTask, Step};
+use crate::task::{Coroutine, StateTask, Step};
 use crate::topology::Topology;
 
 const HASH_SHARDS: usize = 64;
@@ -120,66 +121,121 @@ pub fn scaled_groups(spec: &QuerySpec, db: &Db) -> usize {
     }
 }
 
-/// Execute one query under `policy` with `cores` workers.
-pub fn run_query(
-    topo: &Topology,
-    policy: Box<dyn Policy>,
-    cores: usize,
+/// One TPC-H-shaped query on the morsel-parallel engine as a
+/// [`Scenario`].
+pub struct OlapScenario {
     db: Arc<Db>,
-    spec: &QuerySpec,
-) -> QueryResult {
-    let mut machine = Machine::new(topo.clone());
+    spec: QuerySpec,
+    st: Option<OlapState>,
+}
 
-    // Regions: one per scanned table + per-join hash + group state.
-    let probe_region = machine.alloc(
-        "probe-table",
-        db.table_bytes(spec.probe),
-        Placement::Interleave,
-    );
-    let join_regions: Vec<_> = spec
-        .joins
-        .iter()
-        .enumerate()
-        .map(|(i, jn)| {
-            let build_rows = (db.rows(jn.build) as f64 * jn.selectivity).ceil() as u64;
-            (
-                machine.alloc(
-                    &format!("build-scan-{i}"),
-                    db.table_bytes(jn.build),
-                    Placement::Interleave,
-                ),
-                machine.alloc(
-                    &format!("join-hash-{i}"),
+/// Post-`setup` shared state.
+struct OlapState {
+    probe_region: RegionId,
+    join_regions: Vec<(RegionId, RegionId, u64)>,
+    group_region: RegionId,
+    group_bytes: u64,
+    joins: Arc<Vec<JoinState>>,
+    global_agg: Arc<Mutex<HashMap<u64, f64>>>,
+    rows_out: Arc<AtomicU64>,
+}
+
+impl OlapScenario {
+    pub fn new(db: Arc<Db>, spec: QuerySpec) -> Self {
+        Self { db, spec, st: None }
+    }
+
+    /// Rows passing all predicates; valid after the run.
+    pub fn rows_out(&self) -> u64 {
+        self.st
+            .as_ref()
+            .map_or(0, |st| st.rows_out.load(Ordering::Relaxed))
+    }
+
+    /// Assemble the legacy result type from a finished run.
+    pub fn into_result(self, report: RunReport) -> QueryResult {
+        let (agg_sum, groups_touched) = self
+            .st
+            .as_ref()
+            .map(|st| {
+                let agg = st.global_agg.lock().unwrap();
+                (agg.values().sum(), agg.len())
+            })
+            .unwrap_or((0.0, 0));
+        QueryResult {
+            id: self.spec.id,
+            rows_out: self.rows_out(),
+            agg_sum,
+            groups_touched,
+            report,
+        }
+    }
+}
+
+impl Scenario for OlapScenario {
+    fn name(&self) -> &'static str {
+        "olap"
+    }
+
+    fn setup(&mut self, machine: &mut Machine, _tasks: usize) {
+        let (db, spec) = (&self.db, &self.spec);
+        // Regions: one per scanned table + per-join hash + group state.
+        let probe_region = machine.alloc(
+            "probe-table",
+            db.table_bytes(spec.probe),
+            Placement::Interleave,
+        );
+        let join_regions: Vec<_> = spec
+            .joins
+            .iter()
+            .enumerate()
+            .map(|(i, jn)| {
+                let build_rows = (db.rows(jn.build) as f64 * jn.selectivity).ceil() as u64;
+                (
+                    machine.alloc(
+                        &format!("build-scan-{i}"),
+                        db.table_bytes(jn.build),
+                        Placement::Interleave,
+                    ),
+                    machine.alloc(
+                        &format!("join-hash-{i}"),
+                        (build_rows * 16).max(64),
+                        Placement::Interleave,
+                    ),
                     (build_rows * 16).max(64),
-                    Placement::Interleave,
-                ),
-                (build_rows * 16).max(64),
-            )
-        })
-        .collect();
-    let groups = scaled_groups(spec, &db);
-    let group_bytes = (groups as u64 * 16).max(64);
-    let group_region = machine.alloc("group-state", group_bytes, Placement::Interleave);
+                )
+            })
+            .collect();
+        let groups = scaled_groups(spec, db);
+        let group_bytes = (groups as u64 * 16).max(64);
+        let group_region = machine.alloc("group-state", group_bytes, Placement::Interleave);
 
-    let joins: Arc<Vec<JoinState>> =
-        Arc::new(spec.joins.iter().map(|_| JoinState::new()).collect());
-    let global_agg: Arc<Mutex<HashMap<u64, f64>>> = Arc::new(Mutex::new(HashMap::new()));
-    let rows_out = Arc::new(AtomicU64::new(0));
+        self.st = Some(OlapState {
+            probe_region,
+            join_regions,
+            group_region,
+            group_bytes,
+            joins: Arc::new(spec.joins.iter().map(|_| JoinState::new()).collect()),
+            global_agg: Arc::new(Mutex::new(HashMap::new())),
+            rows_out: Arc::new(AtomicU64::new(0)),
+        });
+    }
 
-    let n_joins = spec.joins.len();
-    // Phases: n_joins build steps, 1 probe step, 1 merge step.
-    let total_steps = (n_joins + 2) as u64;
-    let spec = spec.clone();
-    let salt = spec.id as u64 * 0x1234_5678;
-
-    let mut ex = SimExecutor::new(machine, policy);
-    ex.spawn_group(cores, |rank| {
-        let db = db.clone();
-        let joins = joins.clone();
-        let global_agg = global_agg.clone();
-        let rows_out = rows_out.clone();
-        let spec = spec.clone();
-        let join_regions = join_regions.clone();
+    fn spawn(&mut self, rank: usize) -> Box<dyn Coroutine> {
+        let st = self.st.as_ref().expect("setup() before spawn()");
+        let n_joins = self.spec.joins.len();
+        // Phases: n_joins build steps, 1 probe step, 1 merge step.
+        let total_steps = (n_joins + 2) as u64;
+        let salt = self.spec.id as u64 * 0x1234_5678;
+        let probe_region = st.probe_region;
+        let group_region = st.group_region;
+        let group_bytes = st.group_bytes;
+        let db = self.db.clone();
+        let joins = st.joins.clone();
+        let global_agg = st.global_agg.clone();
+        let rows_out = st.rows_out.clone();
+        let spec = self.spec.clone();
+        let join_regions = st.join_regions.clone();
         // Per-task aggregation state, merged in the final phase.
         let mut local_agg: HashMap<u64, f64> = HashMap::new();
         let mut local_rows = 0u64;
@@ -258,16 +314,46 @@ pub fn run_query(
                 Step::Done
             }
         }))
-    });
-    let report = ex.run();
-    let agg = global_agg.lock().unwrap();
-    QueryResult {
-        id: spec.id,
-        rows_out: rows_out.load(Ordering::Relaxed),
-        agg_sum: agg.values().sum(),
-        groups_touched: agg.len(),
-        report,
     }
+
+    fn verify(&self) {
+        let (rows_ref, sum_ref) = run_query_serial(&self.db, &self.spec);
+        let st = self.st.as_ref().expect("run first");
+        let agg_sum: f64 = st.global_agg.lock().unwrap().values().sum();
+        assert_eq!(
+            self.rows_out(),
+            rows_ref,
+            "Q{}: parallel row count diverges from the serial oracle",
+            self.spec.id
+        );
+        assert!(
+            (agg_sum - sum_ref).abs() <= sum_ref.abs() * 1e-9 + 1e-6,
+            "Q{}: aggregate {} vs serial {}",
+            self.spec.id,
+            agg_sum,
+            sum_ref
+        );
+    }
+
+    fn metrics(&self, report: &RunReport) -> ScenarioMetrics {
+        let scanned = self.db.rows(self.spec.probe) as f64;
+        ScenarioMetrics::new(scanned, "rows")
+            .with("rows_out", self.rows_out() as f64)
+            .with("rows_per_s", report.throughput(scanned))
+    }
+}
+
+/// Execute one query under `policy` with `cores` workers.
+pub fn run_query(
+    topo: &Topology,
+    policy: Box<dyn Policy>,
+    cores: usize,
+    db: Arc<Db>,
+    spec: &QuerySpec,
+) -> QueryResult {
+    let mut s = OlapScenario::new(db, spec.clone());
+    let run = Driver::new(topo, policy, cores).run(&mut s);
+    s.into_result(run.report)
 }
 
 /// Serial reference: same semantics, single-threaded (correctness oracle

@@ -10,5 +10,5 @@ pub mod queries;
 pub mod exec;
 
 pub use data::{Db, Table};
-pub use exec::{run_query, run_query_serial, QueryResult};
+pub use exec::{run_query, run_query_serial, OlapScenario, QueryResult};
 pub use queries::{all_queries, QuerySpec};

@@ -11,11 +11,12 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
+use crate::engine::{Driver, Scenario, ScenarioMetrics};
 use crate::mem::{Placement, RegionId};
 use crate::policy::Policy;
-use crate::sched::{RunReport, SimExecutor};
+use crate::sched::RunReport;
 use crate::sim::Machine;
-use crate::task::{StateTask, Step};
+use crate::task::{Coroutine, StateTask, Step};
 use crate::topology::Topology;
 use crate::util::prng::Rng;
 
@@ -99,66 +100,120 @@ impl Store {
 
 const TXNS_PER_STEP: u64 = 64;
 
-/// Run an OLTP benchmark: `cores` clients, `txns_per_core` transactions
-/// each.
-pub fn run_oltp(
-    topo: &Topology,
-    policy: Box<dyn Policy>,
-    cores: usize,
-    workload: &OltpWorkload,
+/// The ERMIA-style OLTP engine (YCSB / TPC-C-lite) as a [`Scenario`].
+pub struct OltpScenario {
+    workload: OltpWorkload,
     txns_per_core: u64,
     seed: u64,
-) -> OltpRun {
-    let mut machine = Machine::new(topo.clone());
+    tasks: usize,
+    st: Option<OltpState>,
+}
 
-    // Stores per workload.
-    let (main, stock, orders_store) = match workload {
-        OltpWorkload::Ycsb { records, .. } => (
-            Arc::new(Store::new(&mut machine, "ycsb-table", *records, 100)),
-            None,
-            None,
-        ),
-        OltpWorkload::TpcC { warehouses } => {
-            // warehouse+district+customer rolled into `main`;
-            // stock separate (largest table); orders append-only.
-            let cust = warehouses * 3_000;
-            (
-                Arc::new(Store::new(&mut machine, "tpcc-wh-dist-cust", cust, 64)),
-                Some(Arc::new(Store::new(
-                    &mut machine,
-                    "tpcc-stock",
-                    warehouses * 10_000,
-                    32,
-                ))),
-                Some(Arc::new(Store::new(
-                    &mut machine,
-                    "tpcc-orders",
-                    (txns_per_core as usize * cores).max(1024),
-                    48,
-                ))),
-            )
+/// Post-`setup` shared state.
+struct OltpState {
+    main: Arc<Store>,
+    stock: Option<Arc<Store>>,
+    orders_store: Option<Arc<Store>>,
+    commit_region: RegionId,
+    log_region: RegionId,
+    commit_counter: Arc<AtomicU64>,
+    commits: Arc<AtomicU64>,
+    aborts: Arc<AtomicU64>,
+    steps: u64,
+}
+
+impl OltpScenario {
+    pub fn new(workload: OltpWorkload, txns_per_core: u64, seed: u64) -> Self {
+        Self {
+            workload,
+            txns_per_core,
+            seed,
+            tasks: 0,
+            st: None,
         }
-    };
-    // Shared commit infrastructure: counter line + log.
-    let commit_region = machine.alloc("commit-counter", 64, Placement::Bind(0));
-    let log_region = machine.alloc("txn-log", 64 << 20, Placement::Bind(0));
-    let commit_counter = Arc::new(AtomicU64::new(0));
-    let commits = Arc::new(AtomicU64::new(0));
-    let aborts = Arc::new(AtomicU64::new(0));
+    }
 
-    let steps = txns_per_core.div_ceil(TXNS_PER_STEP);
-    let workload = workload.clone();
+    /// Committed transactions; valid after the run.
+    pub fn commits(&self) -> u64 {
+        self.st
+            .as_ref()
+            .map_or(0, |st| st.commits.load(Ordering::Relaxed))
+    }
 
-    let mut ex = SimExecutor::new(machine, policy);
-    ex.spawn_group(cores, |rank| {
-        let main = main.clone();
-        let stock = stock.clone();
-        let orders_store = orders_store.clone();
-        let commit_counter = commit_counter.clone();
-        let commits = commits.clone();
-        let aborts = aborts.clone();
-        let workload = workload.clone();
-        let mut rng = Rng::new(seed ^ ((rank as u64) << 40));
+    /// Aborted transactions; valid after the run.
+    pub fn aborts(&self) -> u64 {
+        self.st
+            .as_ref()
+            .map_or(0, |st| st.aborts.load(Ordering::Relaxed))
+    }
+}
+
+impl Scenario for OltpScenario {
+    fn name(&self) -> &'static str {
+        "oltp"
+    }
+
+    fn setup(&mut self, machine: &mut Machine, tasks: usize) {
+        self.tasks = tasks;
+        let txns_per_core = self.txns_per_core;
+        // Stores per workload.
+        let (main, stock, orders_store) = match &self.workload {
+            OltpWorkload::Ycsb { records, .. } => (
+                Arc::new(Store::new(machine, "ycsb-table", *records, 100)),
+                None,
+                None,
+            ),
+            OltpWorkload::TpcC { warehouses } => {
+                // warehouse+district+customer rolled into `main`;
+                // stock separate (largest table); orders append-only.
+                let cust = warehouses * 3_000;
+                (
+                    Arc::new(Store::new(machine, "tpcc-wh-dist-cust", cust, 64)),
+                    Some(Arc::new(Store::new(
+                        machine,
+                        "tpcc-stock",
+                        warehouses * 10_000,
+                        32,
+                    ))),
+                    Some(Arc::new(Store::new(
+                        machine,
+                        "tpcc-orders",
+                        (txns_per_core as usize * tasks).max(1024),
+                        48,
+                    ))),
+                )
+            }
+        };
+        // Shared commit infrastructure: counter line + log.
+        let commit_region = machine.alloc("commit-counter", 64, Placement::Bind(0));
+        let log_region = machine.alloc("txn-log", 64 << 20, Placement::Bind(0));
+        self.st = Some(OltpState {
+            main,
+            stock,
+            orders_store,
+            commit_region,
+            log_region,
+            commit_counter: Arc::new(AtomicU64::new(0)),
+            commits: Arc::new(AtomicU64::new(0)),
+            aborts: Arc::new(AtomicU64::new(0)),
+            steps: txns_per_core.div_ceil(TXNS_PER_STEP),
+        });
+    }
+
+    fn spawn(&mut self, rank: usize) -> Box<dyn Coroutine> {
+        let st = self.st.as_ref().expect("setup() before spawn()");
+        let txns_per_core = self.txns_per_core;
+        let steps = st.steps;
+        let commit_region = st.commit_region;
+        let log_region = st.log_region;
+        let main = st.main.clone();
+        let stock = st.stock.clone();
+        let orders_store = st.orders_store.clone();
+        let commit_counter = st.commit_counter.clone();
+        let commits = st.commits.clone();
+        let aborts = st.aborts.clone();
+        let workload = self.workload.clone();
+        let mut rng = Rng::new(self.seed ^ ((rank as u64) << 40));
         Box::new(StateTask::new(move |ctx, step| {
             if step >= steps {
                 return Step::Done;
@@ -276,12 +331,40 @@ pub fn run_oltp(
                 Step::Yield
             }
         }))
-    });
-    let report = ex.run();
+    }
+
+    fn verify(&self) {
+        let total = self.commits() + self.aborts();
+        let expect = self.tasks as u64 * self.txns_per_core;
+        assert_eq!(
+            total, expect,
+            "every transaction must commit or abort ({total} of {expect})"
+        );
+    }
+
+    fn metrics(&self, report: &RunReport) -> ScenarioMetrics {
+        ScenarioMetrics::new(self.commits() as f64, "commits")
+            .with("commits_per_s", report.throughput(self.commits() as f64))
+            .with("aborts", self.aborts() as f64)
+    }
+}
+
+/// Run an OLTP benchmark: `cores` clients, `txns_per_core` transactions
+/// each.
+pub fn run_oltp(
+    topo: &Topology,
+    policy: Box<dyn Policy>,
+    cores: usize,
+    workload: &OltpWorkload,
+    txns_per_core: u64,
+    seed: u64,
+) -> OltpRun {
+    let mut s = OltpScenario::new(workload.clone(), txns_per_core, seed);
+    let run = Driver::new(topo, policy, cores).run(&mut s);
     OltpRun {
-        report,
-        commits: commits.load(Ordering::Relaxed),
-        aborts: aborts.load(Ordering::Relaxed),
+        report: run.report,
+        commits: s.commits(),
+        aborts: s.aborts(),
     }
 }
 

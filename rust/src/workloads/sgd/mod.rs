@@ -15,11 +15,12 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crate::engine::{Driver, Scenario, ScenarioMetrics};
 use crate::mem::{Placement, RegionId};
 use crate::policy::Policy;
-use crate::sched::{RunReport, SimExecutor};
+use crate::sched::RunReport;
 use crate::sim::Machine;
-use crate::task::{StateTask, Step};
+use crate::task::{Coroutine, StateTask, Step};
 use crate::topology::Topology;
 use crate::util::prng::Rng;
 
@@ -176,92 +177,183 @@ struct ModelStore {
     regions: Vec<RegionId>,
 }
 
-/// Run SGD with `tasks` workers under `policy`.
-///
-/// `tasks` may exceed the core count (the std::async configuration
-/// explodes shards into OS threads); `engine` computes the actual math.
-#[allow(clippy::too_many_arguments)]
-pub fn run_sgd(
-    topo: &Topology,
-    policy: Box<dyn Policy>,
-    tasks: usize,
-    cfg: &SgdConfig,
-    data: &SgdData,
+/// DimmWitted-style SGD as a [`Scenario`].
+pub struct SgdScenario {
+    cfg: SgdConfig,
+    x: Arc<Vec<f32>>,
+    y: Arc<Vec<f32>>,
     strategy: DwStrategy,
     mode: SgdMode,
     engine: Arc<dyn GradEngine>,
-) -> SgdRun {
-    let nf = cfg.n_features;
-    let n = cfg.n_samples;
-    let mut machine = Machine::new(topo.clone());
+    st: Option<SgdState>,
+}
 
-    // Per-task shard regions (shards stream through L3 repeatedly across
-    // epochs — the cacheable working set).
-    let shard_bytes = cfg.data_bytes() / tasks as u64;
-    let shard_regions: Vec<_> = (0..tasks)
-        .map(|r| {
-            let numa = topo.numa_of_core(r % topo.num_cores());
-            machine.alloc(
-                &format!("sgd-shard-{r}"),
-                shard_bytes.max(64),
-                Placement::Bind(numa),
-            )
-        })
-        .collect();
+/// Post-`setup` shared state and derived schedule constants.
+struct SgdState {
+    shard_regions: Vec<RegionId>,
+    model: Arc<ModelStore>,
+    epoch_loss: Arc<Vec<AtomicU64>>,
+    per_task: usize,
+    mb: usize,
+    batches_per_epoch: usize,
+    steps_per_epoch: u64,
+    total_steps: u64,
+    model_bytes: u64,
+}
 
-    // Model replicas per strategy.
-    let n_replicas = match strategy {
-        DwStrategy::PerCore => tasks,
-        DwStrategy::PerNode => topo.num_numa(),
-        DwStrategy::PerMachine => 1,
-    };
-    let model_bytes = (nf * 4) as u64;
-    let model = Arc::new(ModelStore {
-        replicas: (0..n_replicas)
-            .map(|_| Mutex::new(vec![0.0f32; nf]))
-            .collect(),
-        assign: (0..tasks)
-            .map(|r| match strategy {
-                DwStrategy::PerCore => r,
-                DwStrategy::PerNode => topo.numa_of_core(r % topo.num_cores()),
-                DwStrategy::PerMachine => 0,
+impl SgdScenario {
+    pub fn new(
+        cfg: SgdConfig,
+        data: &SgdData,
+        strategy: DwStrategy,
+        mode: SgdMode,
+        engine: Arc<dyn GradEngine>,
+    ) -> Self {
+        Self {
+            cfg,
+            x: data.x.clone(),
+            y: data.y.clone(),
+            strategy,
+            mode,
+            engine,
+            st: None,
+        }
+    }
+
+    /// Per-epoch aggregated minibatch loss; valid after the run.
+    pub fn loss_trace(&self) -> Vec<f64> {
+        self.st
+            .as_ref()
+            .map(|st| {
+                st.epoch_loss
+                    .iter()
+                    .map(|l| f64::from_bits(l.load(Ordering::Relaxed)))
+                    .collect()
             })
-            .collect(),
-        regions: (0..n_replicas)
-            .map(|i| {
-                let numa = match strategy {
-                    DwStrategy::PerNode => i,
-                    _ => 0,
-                };
+            .unwrap_or_default()
+    }
+
+    /// Training bytes streamed (the paper's throughput numerator).
+    pub fn bytes_processed(&self) -> u64 {
+        self.cfg.data_bytes()
+            * self.cfg.epochs as u64
+            * if self.mode == SgdMode::Grad { 2 } else { 1 }
+    }
+
+    /// Assemble the legacy result type from a finished run.
+    pub fn into_run(self, report: RunReport) -> SgdRun {
+        let loss_trace = self.loss_trace();
+        let final_loss = *loss_trace.last().unwrap_or(&0.0);
+        SgdRun {
+            bytes_processed: self.bytes_processed(),
+            report,
+            loss_trace,
+            final_loss,
+        }
+    }
+}
+
+impl Scenario for SgdScenario {
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+
+    fn setup(&mut self, machine: &mut Machine, tasks: usize) {
+        let cfg = &self.cfg;
+        let nf = cfg.n_features;
+        let n = cfg.n_samples;
+        let topo = machine.topo.clone();
+
+        // Per-task shard regions (shards stream through L3 repeatedly
+        // across epochs — the cacheable working set).
+        let shard_bytes = cfg.data_bytes() / tasks as u64;
+        let shard_regions: Vec<_> = (0..tasks)
+            .map(|r| {
+                let numa = topo.numa_of_core(r % topo.num_cores());
                 machine.alloc(
-                    &format!("sgd-model-{i}"),
-                    model_bytes,
-                    Placement::Bind(numa.min(topo.num_numa() - 1)),
+                    &format!("sgd-shard-{r}"),
+                    shard_bytes.max(64),
+                    Placement::Bind(numa),
                 )
             })
-            .collect(),
-    });
+            .collect();
 
-    let epoch_loss: Arc<Vec<AtomicU64>> =
-        Arc::new((0..cfg.epochs).map(|_| AtomicU64::new(0)).collect());
+        // Model replicas per strategy.
+        let strategy = self.strategy;
+        let n_replicas = match strategy {
+            DwStrategy::PerCore => tasks,
+            DwStrategy::PerNode => topo.num_numa(),
+            DwStrategy::PerMachine => 1,
+        };
+        let model_bytes = (nf * 4) as u64;
+        let model = Arc::new(ModelStore {
+            replicas: (0..n_replicas)
+                .map(|_| Mutex::new(vec![0.0f32; nf]))
+                .collect(),
+            assign: (0..tasks)
+                .map(|r| match strategy {
+                    DwStrategy::PerCore => r,
+                    DwStrategy::PerNode => topo.numa_of_core(r % topo.num_cores()),
+                    DwStrategy::PerMachine => 0,
+                })
+                .collect(),
+            regions: (0..n_replicas)
+                .map(|i| {
+                    let numa = match strategy {
+                        DwStrategy::PerNode => i,
+                        _ => 0,
+                    };
+                    machine.alloc(
+                        &format!("sgd-model-{i}"),
+                        model_bytes,
+                        Placement::Bind(numa.min(topo.num_numa() - 1)),
+                    )
+                })
+                .collect(),
+        });
 
-    let per_task = n.div_ceil(tasks);
-    let mb = cfg.minibatch.min(per_task.max(1));
-    let batches_per_epoch = per_task.div_ceil(mb).max(1);
-    // Steps: epochs × (batches + 1 sync step).
-    let steps_per_epoch = batches_per_epoch as u64 + 1;
-    let total_steps = cfg.epochs as u64 * steps_per_epoch;
-    let lr = cfg.lr;
-    let epochs = cfg.epochs;
+        let epoch_loss: Arc<Vec<AtomicU64>> =
+            Arc::new((0..cfg.epochs).map(|_| AtomicU64::new(0)).collect());
 
-    let mut ex = SimExecutor::new(machine, policy);
-    ex.spawn_group(tasks, |rank| {
-        let x = data.x.clone();
-        let y = data.y.clone();
-        let model = model.clone();
-        let engine = engine.clone();
-        let epoch_loss = epoch_loss.clone();
-        let shard_region = shard_regions[rank];
+        let per_task = n.div_ceil(tasks);
+        let mb = cfg.minibatch.min(per_task.max(1));
+        let batches_per_epoch = per_task.div_ceil(mb).max(1);
+        // Steps: epochs × (batches + 1 sync step).
+        let steps_per_epoch = batches_per_epoch as u64 + 1;
+        let total_steps = cfg.epochs as u64 * steps_per_epoch;
+
+        self.st = Some(SgdState {
+            shard_regions,
+            model,
+            epoch_loss,
+            per_task,
+            mb,
+            batches_per_epoch,
+            steps_per_epoch,
+            total_steps,
+            model_bytes,
+        });
+    }
+
+    fn spawn(&mut self, rank: usize) -> Box<dyn Coroutine> {
+        let st = self.st.as_ref().expect("setup() before spawn()");
+        let nf = self.cfg.n_features;
+        let n = self.cfg.n_samples;
+        let lr = self.cfg.lr;
+        let epochs = self.cfg.epochs;
+        let mode = self.mode;
+        let per_task = st.per_task;
+        let mb = st.mb;
+        let batches_per_epoch = st.batches_per_epoch;
+        let steps_per_epoch = st.steps_per_epoch;
+        let total_steps = st.total_steps;
+        let model_bytes = st.model_bytes;
+        let x = self.x.clone();
+        let y = self.y.clone();
+        let model = st.model.clone();
+        let engine = self.engine.clone();
+        let epoch_loss = st.epoch_loss.clone();
+        let shard_region = st.shard_regions[rank];
         Box::new(StateTask::new(move |ctx, step| {
             if step >= total_steps {
                 return Step::Done;
@@ -359,20 +451,46 @@ pub fn run_sgd(
                 }
             }
         }))
-    });
-    let report = ex.run();
-    let loss_trace: Vec<f64> = epoch_loss
-        .iter()
-        .map(|l| f64::from_bits(l.load(Ordering::Relaxed)))
-        .collect();
-    let final_loss = *loss_trace.last().unwrap_or(&0.0);
-    SgdRun {
-        report,
-        bytes_processed: cfg.data_bytes() * cfg.epochs as u64
-            * if mode == SgdMode::Grad { 2 } else { 1 },
-        loss_trace,
-        final_loss,
     }
+
+    fn verify(&self) {
+        let trace = self.loss_trace();
+        assert!(!trace.is_empty(), "no epochs recorded");
+        assert!(
+            trace.iter().all(|l| l.is_finite()),
+            "loss diverged: {trace:?}"
+        );
+    }
+
+    fn metrics(&self, report: &RunReport) -> ScenarioMetrics {
+        let bytes = self.bytes_processed() as f64;
+        ScenarioMetrics::new(bytes, "bytes")
+            .with("gbps", bytes / report.makespan_ns.max(1) as f64)
+            .with(
+                "final_loss",
+                self.loss_trace().last().copied().unwrap_or(0.0),
+            )
+    }
+}
+
+/// Run SGD with `tasks` workers under `policy`.
+///
+/// `tasks` may exceed the core count (the std::async configuration
+/// explodes shards into OS threads); `engine` computes the actual math.
+#[allow(clippy::too_many_arguments)]
+pub fn run_sgd(
+    topo: &Topology,
+    policy: Box<dyn Policy>,
+    tasks: usize,
+    cfg: &SgdConfig,
+    data: &SgdData,
+    strategy: DwStrategy,
+    mode: SgdMode,
+    engine: Arc<dyn GradEngine>,
+) -> SgdRun {
+    let mut s = SgdScenario::new(cfg.clone(), data, strategy, mode, engine);
+    let run = Driver::new(topo, policy, tasks).run(&mut s);
+    s.into_run(run.report)
 }
 
 #[cfg(test)]

@@ -15,11 +15,12 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
-use crate::mem::Placement;
+use crate::engine::{Driver, Scenario, ScenarioMetrics};
+use crate::mem::{Placement, RegionId};
 use crate::policy::Policy;
-use crate::sched::{RunReport, SimExecutor};
+use crate::sched::RunReport;
 use crate::sim::Machine;
-use crate::task::{StateTask, Step};
+use crate::task::{Coroutine, StateTask, Step};
 use crate::topology::Topology;
 use crate::util::prng::Rng;
 
@@ -145,56 +146,124 @@ pub fn serial_cost(cfg: &ScConfig, points: &[f32]) -> (f64, usize) {
     (cost, k)
 }
 
-/// Run parallel StreamCluster under `policy` on `cores` workers.
-pub fn run_streamcluster(
-    topo: &Topology,
-    policy: Box<dyn Policy>,
-    cores: usize,
-    cfg: &ScConfig,
+/// Streaming k-median clustering as a [`Scenario`].
+pub struct ScScenario {
+    cfg: ScConfig,
     points: Arc<Vec<f32>>,
-) -> ScResult {
-    let dims = cfg.dims;
-    let n_batches = cfg.n_points.div_ceil(cfg.batch_size).max(1);
-    let mut machine = Machine::new(topo.clone());
+    st: Option<ScState>,
+}
 
-    // Per-worker slice regions: slice locality is the experiment.
-    let slice_bytes = cfg.batch_bytes() / cores as u64;
-    let slice_regions: Vec<_> = (0..cores)
-        .map(|r| {
-            machine.alloc(
-                &format!("sc-slice-{r}"),
-                slice_bytes.max(64),
-                Placement::Interleave,
-            )
-        })
-        .collect();
-    let centers_region = machine.alloc(
-        "sc-centers",
-        (cfg.max_centers * dims * 4) as u64,
-        Placement::Interleave,
-    );
+/// Post-`setup` shared state.
+struct ScState {
+    slice_regions: Vec<RegionId>,
+    centers_region: RegionId,
+    centers: Arc<RwLock<Arc<Vec<f32>>>>,
+    costs: Arc<Vec<AtomicU64>>,
+    proposals: Arc<Mutex<Vec<(f32, usize)>>>,
+    iters_total: usize,
+}
 
-    // Shared center set (snapshot-swapped between phases).
-    let centers: Arc<RwLock<Arc<Vec<f32>>>> =
-        Arc::new(RwLock::new(Arc::new(points[..dims].to_vec())));
-    // Per-iteration aggregated cost (f64 bits) and worst-point proposals.
-    let iters_total = n_batches * cfg.local_iters;
-    let costs: Arc<Vec<AtomicU64>> =
-        Arc::new((0..iters_total).map(|_| AtomicU64::new(0)).collect());
-    let proposals: Arc<Mutex<Vec<(f32, usize)>>> = Arc::new(Mutex::new(Vec::new()));
-    let k_max = cfg.k_max;
-    let max_centers = cfg.max_centers;
-    let local_iters = cfg.local_iters;
-    let batch_size = cfg.batch_size;
-    let n_points = cfg.n_points;
+impl ScScenario {
+    pub fn new(cfg: ScConfig, points: Arc<Vec<f32>>) -> Self {
+        Self {
+            cfg,
+            points,
+            st: None,
+        }
+    }
 
-    let mut ex = SimExecutor::new(machine, policy);
-    ex.spawn_group(cores, |rank| {
-        let points = points.clone();
-        let centers = centers.clone();
-        let costs = costs.clone();
-        let proposals = proposals.clone();
-        let slice_region = slice_regions[rank];
+    /// Number of centers opened; valid after the run.
+    pub fn n_centers(&self) -> usize {
+        self.st
+            .as_ref()
+            .map_or(0, |st| st.centers.read().unwrap().len() / self.cfg.dims)
+    }
+
+    /// Cost after each (batch, iter) assignment phase; valid after the run.
+    pub fn cost_trace(&self) -> Vec<f64> {
+        self.st
+            .as_ref()
+            .map(|st| {
+                st.costs
+                    .iter()
+                    .map(|c| f64::from_bits(c.load(Ordering::Relaxed)))
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    /// Assemble the legacy result type from a finished run.
+    pub fn into_result(self, report: RunReport) -> ScResult {
+        let cost_trace = self.cost_trace();
+        let final_cost = *cost_trace.last().unwrap_or(&0.0);
+        ScResult {
+            report,
+            final_cost,
+            n_centers: self.n_centers(),
+            cost_trace,
+        }
+    }
+}
+
+impl Scenario for ScScenario {
+    fn name(&self) -> &'static str {
+        "streamcluster"
+    }
+
+    fn setup(&mut self, machine: &mut Machine, tasks: usize) {
+        let cfg = &self.cfg;
+        let dims = cfg.dims;
+        let n_batches = cfg.n_points.div_ceil(cfg.batch_size).max(1);
+
+        // Per-worker slice regions: slice locality is the experiment.
+        let slice_bytes = cfg.batch_bytes() / tasks as u64;
+        let slice_regions: Vec<_> = (0..tasks)
+            .map(|r| {
+                machine.alloc(
+                    &format!("sc-slice-{r}"),
+                    slice_bytes.max(64),
+                    Placement::Interleave,
+                )
+            })
+            .collect();
+        let centers_region = machine.alloc(
+            "sc-centers",
+            (cfg.max_centers * dims * 4) as u64,
+            Placement::Interleave,
+        );
+
+        // Shared center set (snapshot-swapped between phases).
+        let centers: Arc<RwLock<Arc<Vec<f32>>>> =
+            Arc::new(RwLock::new(Arc::new(self.points[..dims].to_vec())));
+        // Per-iteration aggregated cost (f64 bits) and worst-point proposals.
+        let iters_total = n_batches * cfg.local_iters;
+        let costs: Arc<Vec<AtomicU64>> =
+            Arc::new((0..iters_total).map(|_| AtomicU64::new(0)).collect());
+        self.st = Some(ScState {
+            slice_regions,
+            centers_region,
+            centers,
+            costs,
+            proposals: Arc::new(Mutex::new(Vec::new())),
+            iters_total,
+        });
+    }
+
+    fn spawn(&mut self, rank: usize) -> Box<dyn Coroutine> {
+        let st = self.st.as_ref().expect("setup() before spawn()");
+        let dims = self.cfg.dims;
+        let k_max = self.cfg.k_max;
+        let max_centers = self.cfg.max_centers;
+        let local_iters = self.cfg.local_iters;
+        let batch_size = self.cfg.batch_size;
+        let n_points = self.cfg.n_points;
+        let iters_total = st.iters_total;
+        let centers_region = st.centers_region;
+        let points = self.points.clone();
+        let centers = st.centers.clone();
+        let costs = st.costs.clone();
+        let proposals = st.proposals.clone();
+        let slice_region = st.slice_regions[rank];
         Box::new(StateTask::new(move |ctx, step| {
             // Two phases per local iteration: 0 = assign, 1 = reconcile.
             let global_iter = (step / 2) as usize;
@@ -283,20 +352,41 @@ pub fn run_streamcluster(
             }
             Step::Barrier
         }))
-    });
-    let report = ex.run();
-    let final_k = centers.read().unwrap().len() / dims;
-    let cost_trace: Vec<f64> = costs
-        .iter()
-        .map(|c| f64::from_bits(c.load(Ordering::Relaxed)))
-        .collect();
-    let final_cost = *cost_trace.last().unwrap_or(&0.0);
-    ScResult {
-        report,
-        final_cost,
-        n_centers: final_k,
-        cost_trace,
     }
+
+    fn verify(&self) {
+        let k = self.n_centers();
+        assert!(k >= 1 && k <= self.cfg.k_max.max(1), "center count {k} out of range");
+        let trace = self.cost_trace();
+        let final_cost = trace.last().copied().unwrap_or(0.0);
+        assert!(
+            final_cost.is_finite() && final_cost >= 0.0,
+            "clustering cost must be finite, got {final_cost}"
+        );
+    }
+
+    fn metrics(&self, report: &RunReport) -> ScenarioMetrics {
+        // Every point is re-assigned once per local-search iteration of
+        // its batch.
+        let assigned = (self.cfg.n_points * self.cfg.local_iters) as f64;
+        ScenarioMetrics::new(assigned, "assignments")
+            .with("final_cost", self.cost_trace().last().copied().unwrap_or(0.0))
+            .with("centers", self.n_centers() as f64)
+            .with("points_per_s", report.throughput(self.cfg.n_points as f64))
+    }
+}
+
+/// Run parallel StreamCluster under `policy` on `cores` workers.
+pub fn run_streamcluster(
+    topo: &Topology,
+    policy: Box<dyn Policy>,
+    cores: usize,
+    cfg: &ScConfig,
+    points: Arc<Vec<f32>>,
+) -> ScResult {
+    let mut s = ScScenario::new(cfg.clone(), points);
+    let run = Driver::new(topo, policy, cores).run(&mut s);
+    s.into_result(run.report)
 }
 
 #[cfg(test)]

@@ -1,0 +1,213 @@
+//! Golden tests for the scenario-driver layer.
+//!
+//! Two invariants pin the refactor:
+//! 1. **Determinism** — each ported workload family produces an
+//!    identical `RunReport` (makespan, access counters, steals, …) on
+//!    repeated runs with the same inputs, so the figures the harness
+//!    prints are bit-reproducible.
+//! 2. **Wrapper ≡ Driver** — the legacy `run_*` entry points and a
+//!    hand-driven `engine::Driver` over the same scenario produce the
+//!    same report, so nothing rides outside the engine.
+//!
+//! Plus: every registry scenario resolves and runs (with verification)
+//! on a 2-chiplet toy topology.
+
+use std::sync::Arc;
+
+use arcas::engine::{self, Driver, ScenarioParams};
+use arcas::policy::by_name;
+use arcas::sched::RunReport;
+use arcas::topology::Topology;
+use arcas::workloads::graph::{self, kronecker::kronecker, BfsScenario};
+use arcas::workloads::olap::{all_queries, run_query, Db, OlapScenario};
+use arcas::workloads::oltp::{run_oltp, OltpScenario, OltpWorkload};
+use arcas::workloads::sgd::{
+    generate_data, run_sgd, DwStrategy, RustGrad, SgdConfig, SgdMode, SgdScenario,
+};
+use arcas::workloads::streamcluster::{generate_points, run_streamcluster, ScConfig, ScScenario};
+
+fn topo() -> Topology {
+    Topology::milan_1s()
+}
+
+/// The deterministic fields of a report (everything except wall time).
+fn key(r: &RunReport) -> (u64, u64, u64, u64, u64, String, String) {
+    (
+        r.makespan_ns,
+        r.dispatches,
+        r.steals,
+        r.migrations,
+        r.barrier_epochs,
+        format!("{:?}", r.counts),
+        format!("{:.3}", r.dram_bytes),
+    )
+}
+
+#[test]
+fn graph_wrappers_are_deterministic() {
+    let g = Arc::new(kronecker(10, 8, 42));
+    let (a, da) = graph::run_bfs(&topo(), by_name("local", &topo()).unwrap(), 8, g.clone(), 0);
+    let (b, db) = graph::run_bfs(&topo(), by_name("local", &topo()).unwrap(), 8, g.clone(), 0);
+    assert_eq!(key(&a.report), key(&b.report));
+    assert_eq!(a.edges_processed, b.edges_processed);
+    assert_eq!(da, db);
+
+    let (a, _) = graph::run_sssp(&topo(), by_name("ring", &topo()).unwrap(), 8, g.clone(), 0);
+    let (b, _) = graph::run_sssp(&topo(), by_name("ring", &topo()).unwrap(), 8, g.clone(), 0);
+    assert_eq!(key(&a.report), key(&b.report));
+}
+
+#[test]
+fn bfs_wrapper_equals_hand_driven_scenario() {
+    let g = Arc::new(kronecker(10, 8, 7));
+    let (wrapped, dist_w) =
+        graph::run_bfs(&topo(), by_name("local", &topo()).unwrap(), 8, g.clone(), 0);
+
+    let mut s = BfsScenario::new(g.clone(), 0);
+    let driven = Driver::new(&topo(), by_name("local", &topo()).unwrap(), 8).run(&mut s);
+    assert_eq!(key(&wrapped.report), key(&driven.report));
+    assert_eq!(wrapped.edges_processed, s.edges_processed());
+    assert_eq!(dist_w, s.distances());
+    assert_eq!(driven.metrics.items, s.edges_processed() as f64);
+}
+
+#[test]
+fn streamcluster_wrapper_equals_hand_driven_scenario() {
+    let cfg = ScConfig::tiny();
+    let pts = Arc::new(generate_points(&cfg));
+    let wrapped = run_streamcluster(
+        &topo(),
+        by_name("local", &topo()).unwrap(),
+        4,
+        &cfg,
+        pts.clone(),
+    );
+    let mut s = ScScenario::new(cfg.clone(), pts);
+    let driven = Driver::new(&topo(), by_name("local", &topo()).unwrap(), 4).run(&mut s);
+    assert_eq!(key(&wrapped.report), key(&driven.report));
+    assert_eq!(wrapped.n_centers, s.n_centers());
+    assert_eq!(wrapped.cost_trace, s.cost_trace());
+}
+
+#[test]
+fn sgd_wrapper_equals_hand_driven_scenario_and_is_deterministic() {
+    let cfg = SgdConfig::tiny();
+    let data = generate_data(&cfg);
+    let run1 = run_sgd(
+        &topo(),
+        by_name("shoal", &topo()).unwrap(),
+        4,
+        &cfg,
+        &data,
+        DwStrategy::PerCore,
+        SgdMode::Grad,
+        Arc::new(RustGrad),
+    );
+    let run2 = run_sgd(
+        &topo(),
+        by_name("shoal", &topo()).unwrap(),
+        4,
+        &cfg,
+        &data,
+        DwStrategy::PerCore,
+        SgdMode::Grad,
+        Arc::new(RustGrad),
+    );
+    assert_eq!(key(&run1.report), key(&run2.report));
+    assert_eq!(run1.loss_trace, run2.loss_trace);
+
+    let mut s = SgdScenario::new(
+        cfg.clone(),
+        &data,
+        DwStrategy::PerCore,
+        SgdMode::Grad,
+        Arc::new(RustGrad),
+    );
+    let driven = Driver::new(&topo(), by_name("shoal", &topo()).unwrap(), 4).run(&mut s);
+    assert_eq!(key(&run1.report), key(&driven.report));
+    assert_eq!(run1.loss_trace, s.loss_trace());
+    assert_eq!(run1.bytes_processed, s.bytes_processed());
+}
+
+#[test]
+fn oltp_wrapper_equals_hand_driven_scenario() {
+    let wl = OltpWorkload::Ycsb {
+        records: 10_000,
+        read_frac: 0.45,
+    };
+    let wrapped = run_oltp(&topo(), by_name("local", &topo()).unwrap(), 4, &wl, 1_000, 3);
+    let mut s = OltpScenario::new(wl.clone(), 1_000, 3);
+    let driven = Driver::new(&topo(), by_name("local", &topo()).unwrap(), 4).run(&mut s);
+    assert_eq!(key(&wrapped.report), key(&driven.report));
+    assert_eq!(wrapped.commits, s.commits());
+    assert_eq!(wrapped.aborts, s.aborts());
+    assert_eq!(
+        driven.metrics.get("commits_per_s").unwrap(),
+        wrapped.commits_per_sec()
+    );
+}
+
+#[test]
+fn olap_wrapper_equals_hand_driven_scenario() {
+    let db = Arc::new(Db::generate(0.002, 99));
+    let q6 = &all_queries()[5];
+    let wrapped = run_query(&topo(), by_name("local", &topo()).unwrap(), 8, db.clone(), q6);
+    let mut s = OlapScenario::new(db.clone(), q6.clone());
+    let driven = Driver::new(&topo(), by_name("local", &topo()).unwrap(), 8)
+        .with_verify(true)
+        .run(&mut s);
+    assert_eq!(key(&wrapped.report), key(&driven.report));
+    assert_eq!(wrapped.rows_out, s.rows_out());
+}
+
+#[test]
+fn every_registry_scenario_runs_verified_on_a_toy_topology() {
+    // 2 chiplets × 8 cores: the smallest machine with a chiplet boundary.
+    let mut toy = Topology::milan_1s();
+    toy.chiplets_per_numa = 2;
+    toy.name = "toy_2c".into();
+    assert_eq!(toy.num_chiplets(), 2);
+
+    let params = ScenarioParams {
+        scale: 0.002,
+        seed: 11,
+        iters: Some(4),
+        variant: None,
+    };
+    for spec in engine::registry() {
+        let mut s = spec.build(&params);
+        let run = Driver::new(&toy, by_name("local", &toy).unwrap(), 4)
+            .with_verify(true)
+            .run(s.as_mut());
+        assert!(
+            run.report.makespan_ns > 0,
+            "{}: empty run on the toy topology",
+            spec.name
+        );
+        assert!(
+            run.report.dispatches > 0,
+            "{}: nothing dispatched",
+            spec.name
+        );
+        assert!(run.metrics.items >= 0.0, "{}", spec.name);
+    }
+}
+
+#[test]
+fn registry_runs_under_every_policy_on_the_toy_topology() {
+    let mut toy = Topology::milan_1s();
+    toy.chiplets_per_numa = 2;
+    let params = ScenarioParams {
+        scale: 0.002,
+        seed: 5,
+        iters: Some(2),
+        variant: None,
+    };
+    for policy in ["arcas", "ring", "shoal", "local", "distributed", "os_async"] {
+        let mut s = engine::by_name("bfs").unwrap().build(&params);
+        let run = Driver::new(&toy, by_name(policy, &toy).unwrap(), 8)
+            .with_verify(true)
+            .run(s.as_mut());
+        assert!(run.report.makespan_ns > 0, "bfs under {policy}");
+    }
+}

@@ -8,6 +8,10 @@ use arcas::runtime::{load_manifest, PjrtGrad, PjrtRuntime};
 use arcas::workloads::sgd::{GradEngine, RustGrad};
 
 fn artifacts_dir() -> Option<String> {
+    if !PjrtRuntime::backend_available() {
+        eprintln!("SKIP: built without the `pjrt` feature (no xla backend)");
+        return None;
+    }
     let dir = PjrtRuntime::default_dir();
     if std::path::Path::new(&format!("{dir}/manifest.txt")).exists() {
         Some(dir)

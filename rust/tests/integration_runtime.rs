@@ -5,7 +5,7 @@ use arcas::api::{Arcas, ArcasConfig};
 use arcas::controller::Approach;
 use arcas::mem::Placement;
 use arcas::policy::ArcasPolicy;
-use arcas::sched::SimExecutor;
+use arcas::sched::run_group;
 use arcas::sim::Machine;
 use arcas::task::{IterTask, TaskCtx};
 use arcas::topology::Topology;
@@ -40,13 +40,11 @@ fn adaptive_controller_spreads_under_cache_pressure() {
     let policy = ArcasPolicy::new(&topo)
         .with_timer(20_000)
         .with_spread_probe();
-    let mut ex = SimExecutor::new(machine, Box::new(policy));
-    ex.spawn_group(8, |_| {
+    let report = run_group(machine, Box::new(policy), 8, |_| {
         Box::new(IterTask::new(300, move |ctx: &mut TaskCtx<'_>, _| {
             ctx.rand_read(region, 400, 64 << 20);
         }))
     });
-    let report = ex.run();
     assert!(report.makespan_ns > 0);
 }
 
@@ -70,13 +68,12 @@ fn approaches_bias_final_spread() {
         let policy = ArcasPolicy::new(&topo)
             .with_timer(20_000)
             .with_approach(approach);
-        let mut ex = SimExecutor::new(machine, Box::new(policy));
-        ex.spawn_group(8, |_| {
+        run_group(machine, Box::new(policy), 8, |_| {
             Box::new(IterTask::new(200, move |ctx: &mut TaskCtx<'_>, _| {
                 ctx.rand_read(region, 300, 16 << 20);
             }))
-        });
-        ex.run().spread_rate
+        })
+        .spread_rate
     };
     let loc = run(Approach::LocationCentric);
     let cache = run(Approach::CacheSizeCentric);
@@ -115,13 +112,12 @@ fn monolithic_topology_neutralizes_chiplet_awareness() {
     let run = |policy: Box<dyn arcas::policy::Policy>| -> u64 {
         let mut machine = Machine::new(topo.clone());
         let region = machine.alloc("ws", 32 << 20, Placement::Bind(0));
-        let mut ex = SimExecutor::new(machine, policy);
-        ex.spawn_group(16, |_| {
+        run_group(machine, policy, 16, |_| {
             Box::new(IterTask::new(50, move |ctx: &mut TaskCtx<'_>, _| {
                 ctx.rand_read(region, 200, 32 << 20);
             }))
-        });
-        ex.run().makespan_ns
+        })
+        .makespan_ns
     };
     let arcas_t = run(Box::new(ArcasPolicy::new(&topo).with_timer(50_000)));
     let shoal_t = run(Box::new(arcas::policy::ShoalPolicy::new()));
