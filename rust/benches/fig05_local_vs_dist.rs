@@ -18,7 +18,13 @@ use arcas::util::table::SeriesSet;
 
 const CORES: usize = 8;
 
-fn run_one(topo: &Topology, policy: Box<dyn Policy>, size: u64, iters: u64) -> u64 {
+fn run_one(
+    topo: &Topology,
+    backend: arcas::engine::ExecBackend,
+    policy: Box<dyn Policy>,
+    size: u64,
+    iters: u64,
+) -> u64 {
     let mut machine = Machine::new(topo.clone());
     // Per-core chunk regions of the shared vector.
     let chunk = (size / CORES as u64).max(64);
@@ -26,8 +32,9 @@ fn run_one(topo: &Topology, policy: Box<dyn Policy>, size: u64, iters: u64) -> u
         .map(|r| machine.alloc(&format!("chunk-{r}"), chunk, Placement::Interleave))
         .collect();
     let regions = Arc::new(regions);
-    // Executor boilerplate lives in the engine layer now.
-    arcas::sched::run_group(machine, policy, CORES, |rank| {
+    // Executor boilerplate lives in the engine layer now; `--backend
+    // host` replays the same sweep on real threads.
+    arcas::engine::execute_on(backend, machine, policy, None, CORES, |rank| {
         let regions = regions.clone();
         Box::new(BspTask::new(iters, move |ctx, _| {
             ctx.seq_write(regions[rank], chunk);
@@ -42,16 +49,18 @@ fn run_one(topo: &Topology, policy: Box<dyn Policy>, size: u64, iters: u64) -> u
             }
         }))
     })
+    .0
     .makespan_ns
 }
 
 fn main() {
-    let args = harness::bench_cli(
+    let args = harness::with_backend_opt(harness::bench_cli(
         "fig05_local_vs_dist",
         "LocalCache vs DistributedCache write sweep",
-    )
+    ))
     .parse();
     let topo = harness::bench_topology(&args);
+    let backend = harness::backend(&args);
     harness::print_header("Fig 5: LocalCache vs DistributedCache", &args, &topo);
     let l3 = topo.l3_per_chiplet;
     println!("# L3/chiplet = {}", arcas::util::fmt_bytes(l3));
@@ -70,8 +79,8 @@ fn main() {
     );
     let mut crossover = None;
     for &size in &sizes {
-        let t_local = run_one(&topo, Box::new(LocalCachePolicy), size, iters);
-        let t_dist = run_one(&topo, Box::new(DistributedCachePolicy), size, iters);
+        let t_local = run_one(&topo, backend, Box::new(LocalCachePolicy), size, iters);
+        let t_dist = run_one(&topo, backend, Box::new(DistributedCachePolicy), size, iters);
         let speedup = t_local as f64 / t_dist as f64;
         if speedup > 1.0 && crossover.is_none() {
             crossover = Some(size);

@@ -75,4 +75,24 @@ fn main() {
         "  => {:.0} ns/job dispatch overhead",
         res.median_ns / 1000.0
     );
+
+    // --- host *backend* through the engine seam: a full group run on
+    // real threads (pool spawn + 100 coroutine steps + teardown), the
+    // end-to-end cost `arcas run --backend host` pays per run.
+    let res = b.bench("host backend group run (100 steps)", || {
+        let machine = Machine::new(Topology::milan_1s());
+        let (r, _) = arcas::engine::execute_on(
+            arcas::engine::ExecBackend::Host,
+            machine,
+            Box::new(LocalCachePolicy),
+            None,
+            4,
+            |_| Box::new(IterTask::new(25, |ctx, _| ctx.compute_ns(100))),
+        );
+        r.dispatches
+    });
+    println!(
+        "  => {:.1} us/host-backed run (incl. pool spawn)",
+        res.median_ns / 1e3
+    );
 }

@@ -26,6 +26,7 @@
 //! ```
 
 use crate::controller::Approach;
+use crate::engine::ExecBackend;
 use crate::mem::{Placement, RegionId};
 use crate::policy::{self, ArcasPolicy, Policy};
 use crate::sched::RunReport;
@@ -42,6 +43,9 @@ pub struct ArcasConfig {
     pub timer_ns: u64,
     pub threshold: f64,
     pub approach: Approach,
+    /// Executor backend every [`Arcas::run`]/[`Arcas::all_do`] group runs
+    /// on: the deterministic simulator (default) or real host threads.
+    pub backend: ExecBackend,
 }
 
 impl Default for ArcasConfig {
@@ -52,6 +56,7 @@ impl Default for ArcasConfig {
             timer_ns: crate::controller::DEFAULT_SCHEDULER_TIMER_NS,
             threshold: crate::controller::DEFAULT_RMT_CHIP_ACCESS_RATE,
             approach: Approach::Balanced,
+            backend: ExecBackend::Sim,
         }
     }
 }
@@ -78,6 +83,10 @@ impl ArcasConfig {
                 "cache_size" => Approach::CacheSizeCentric,
                 _ => Approach::Balanced,
             },
+            backend: cfg
+                .str_or("scheduler", "backend", "sim")
+                .parse()
+                .unwrap_or_else(|e| panic!("[scheduler] backend: {e}")),
         }
     }
 }
@@ -142,7 +151,8 @@ impl Arcas {
     /// Run a group of `n` coroutines (full control over yield points).
     /// Consumes the machine state for the run and restores it after,
     /// carrying cache residency forward. Execution goes through the
-    /// engine's single executor seam ([`crate::engine::execute`]).
+    /// engine's single executor seam ([`crate::engine::execute_on`]) on
+    /// the configured backend.
     pub fn run(
         &mut self,
         n: usize,
@@ -150,7 +160,8 @@ impl Arcas {
     ) -> RunReport {
         assert!(!self.finalized, "runtime already finalized");
         let machine = std::mem::replace(&mut self.machine, Machine::new(self.cfg.topology.clone()));
-        let (report, machine) = crate::engine::execute(
+        let (report, machine) = crate::engine::execute_on(
+            self.cfg.backend,
             machine,
             self.build_policy(),
             Some(self.cfg.timer_ns),
@@ -301,5 +312,34 @@ mod tests {
         assert_eq!(ac.topology.sockets, 1);
         assert_eq!(ac.policy, "ring");
         assert_eq!(ac.timer_ns, 5_000_000);
+        assert_eq!(ac.backend, ExecBackend::Sim);
+    }
+
+    #[test]
+    fn config_selects_the_host_backend() {
+        let cfg = Config::parse("[scheduler]\nbackend = host\n").unwrap();
+        assert_eq!(ArcasConfig::from_config(&cfg).backend, ExecBackend::Host);
+    }
+
+    #[test]
+    fn all_do_runs_on_the_host_backend() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        use std::sync::Arc;
+        let mut rt = Arcas::init_with(ArcasConfig {
+            topology: Topology::milan_1s(),
+            policy: "local".into(),
+            backend: ExecBackend::Host,
+            ..Default::default()
+        });
+        let hits = Arc::new(AtomicU64::new(0));
+        let h = hits.clone();
+        let report = rt.all_do(8, move |ctx, _| {
+            h.fetch_add(1, Ordering::Relaxed);
+            ctx.compute_ns(100);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 8);
+        assert_eq!(report.dispatches, 8);
+        assert!(report.wall_ns > 0);
+        rt.finalize();
     }
 }

@@ -1,0 +1,315 @@
+//! Host-threaded execution backend behind [`crate::engine::execute_on`].
+//!
+//! [`execute_host`] runs a spawn group's per-rank coroutines to
+//! completion on the [`HostExecutor`] work-stealing pool: each coroutine
+//! step is one pool job on a real worker thread, with the chiplet-aware
+//! steal order from the [`Topology`] deciding which worker picks it up.
+//!
+//! ## Semantics vs the simulator
+//!
+//! - **Placement**: the policy's `initial_placement` maps each rank to a
+//!   home core; jobs are submitted to that core's worker inbox (worker
+//!   *i* = core *i*; the pool covers up to the highest home core, so
+//!   spread-out policies keep their spread). Steals move a step — and
+//!   its virtual-time charges — to the thief's core, like the
+//!   simulator's migration-on-steal.
+//! - **Yield**: the step's job ends and the rank is resubmitted to its
+//!   home worker, so thieves can rebalance at every yield point.
+//! - **Barrier**: non-blocking. A rank parking at a barrier releases its
+//!   worker thread (no thread ever blocks inside a job, so groups larger
+//!   than the pool cannot deadlock); the last arrival advances every
+//!   worker core's virtual clock to the epoch maximum (the simulator's
+//!   `release_barrier` rule, keeping BSP makespans comparable) and
+//!   resubmits every parked rank.
+//! - **Machine model**: the simulated [`Machine`] is shared behind a
+//!   mutex, and a coroutine step needs `&mut Machine` for its whole
+//!   body — so **entire steps are serialized**, the workload's real
+//!   computation included; only submission, stealing, parking and
+//!   barrier traffic run concurrently. Host runs therefore prove
+//!   thread-safety and scheduling behaviour, not speedup: `wall_ns`
+//!   measures the serialized execution, `avg_concurrency`/
+//!   `peak_concurrency` report the pool size (live threads), not
+//!   achieved step parallelism. Lifting this means sharding the
+//!   cache/membw counters per chiplet so steps charge concurrently —
+//!   tracked in ROADMAP.md. Policy timers / adaptive migration are
+//!   simulator-only and do not fire here.
+//! - **Determinism**: step interleaving is *not* deterministic. Scenario
+//!   results still verify because workload state is atomics/locks and
+//!   barrier rounds are properly synchronized (the conformance suite in
+//!   `rust/tests/backend_conformance.rs` pins this for every registry
+//!   scenario).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::cachesim::Outcome;
+use crate::policy::Policy;
+use crate::sched::{current_worker, HostExecutor, RunReport, Submitter};
+use crate::sim::Machine;
+use crate::task::{Coroutine, Step, TaskCtx};
+
+/// Ranks parked at the group barrier, plus finished count: the barrier
+/// releases when every unfinished rank is parked (same rule as the
+/// simulator's `release_barrier`).
+struct BarrierState {
+    waiting: Vec<usize>,
+    finished: usize,
+    epochs: u64,
+}
+
+/// A rank's parking slot: `None` while a step is in flight on a worker.
+type RankSlot = Mutex<Option<Box<dyn Coroutine>>>;
+
+/// Shared state of one host-backed run.
+struct HostRun {
+    machine: Mutex<Machine>,
+    /// Per-rank coroutine parking slots.
+    ranks: Vec<RankSlot>,
+    /// rank → home core from the policy's initial placement.
+    placement: Vec<usize>,
+    barrier: Mutex<BarrierState>,
+    dispatches: AtomicU64,
+    n_workers: usize,
+}
+
+/// Run `n` coroutines over `machine` on a [`HostExecutor`] pool sized to
+/// cover the policy's placement — highest home core + 1 (worker *i* =
+/// core *i*, so a rank homed on core 48 really lands on worker 48 and
+/// spread-out policies stay spread out on real threads). Returns the
+/// report and hands the machine back (cache residency carries across
+/// runs, as on the sim backend).
+pub(crate) fn execute_host(
+    machine: Machine,
+    mut policy: Box<dyn Policy>,
+    n: usize,
+    mut make: impl FnMut(usize) -> Box<dyn Coroutine>,
+) -> (RunReport, Machine) {
+    assert!(n > 0, "spawn at least one rank");
+    let wall_start = std::time::Instant::now();
+    let topo = machine.topo.clone();
+    let placement = policy.initial_placement(&topo, n);
+    assert_eq!(placement.len(), n);
+    let n_workers = (placement.iter().copied().max().unwrap_or(0) + 1)
+        .min(topo.num_cores())
+        .max(1);
+
+    let run = Arc::new(HostRun {
+        machine: Mutex::new(machine),
+        ranks: (0..n).map(|rank| Mutex::new(Some(make(rank)))).collect(),
+        placement,
+        barrier: Mutex::new(BarrierState {
+            waiting: Vec::new(),
+            finished: 0,
+            epochs: 0,
+        }),
+        dispatches: AtomicU64::new(0),
+        n_workers,
+    });
+
+    let pool = HostExecutor::new(n_workers, &topo, false);
+    let sub = pool.submitter();
+    for rank in 0..n {
+        submit_rank(&run, &sub, rank);
+    }
+    pool.wait_all();
+    let host_steals = pool.steal_count() as u64;
+    drop(pool);
+    drop(sub);
+
+    let Ok(run) = Arc::try_unwrap(run) else {
+        panic!("pool drained but a worker still holds the run");
+    };
+    let machine = run.machine.into_inner().unwrap();
+    let barrier = run.barrier.into_inner().unwrap();
+    assert_eq!(barrier.finished, n, "every rank must run to completion");
+
+    let report = RunReport {
+        policy: policy.name().to_string(),
+        makespan_ns: machine.max_time(),
+        counts: machine.cache.counters.total(),
+        dispatches: run.dispatches.load(Ordering::Relaxed),
+        steals: host_steals,
+        migrations: 0,
+        barrier_epochs: barrier.epochs,
+        avg_concurrency: n_workers as f64,
+        peak_concurrency: n_workers,
+        concurrency: Vec::new(),
+        decisions: Vec::new(),
+        dram_bytes: (0..machine.topo.sockets)
+            .map(|s| machine.membw.total_bytes(s))
+            .sum(),
+        spread_rate: policy.spread_rate(),
+        wall_ns: wall_start.elapsed().as_nanos() as u64,
+        host_steals,
+    };
+    (report, machine)
+}
+
+/// Enqueue one step of `rank` on its home worker.
+fn submit_rank(run: &Arc<HostRun>, sub: &Submitter, rank: usize) {
+    let worker = run.placement[rank] % run.n_workers;
+    let run = run.clone();
+    let sub2 = sub.clone();
+    sub.execute_on(worker, move || step_rank(run, sub2, rank));
+}
+
+/// One pool job: step `rank`'s coroutine once, then yield/park/finish.
+fn step_rank(run: Arc<HostRun>, sub: Submitter, rank: usize) {
+    let mut coro = run.ranks[rank]
+        .lock()
+        .unwrap()
+        .take()
+        .expect("rank stepped while already in flight");
+    // Charge the worker actually running the step (worker i = core i), so
+    // steals move virtual-time charges exactly like the simulator.
+    let core = current_worker().expect("step_rank runs on a pool worker");
+    let step = {
+        let mut m = run.machine.lock().unwrap();
+        let now = m.now(core);
+        let mut ctx = TaskCtx {
+            machine: &mut *m,
+            core,
+            task_id: rank,
+            rank,
+            group_size: run.ranks.len(),
+            now_ns: now,
+            step_outcome: Outcome::default(),
+        };
+        coro.step(&mut ctx)
+    };
+    run.dispatches.fetch_add(1, Ordering::Relaxed);
+    match step {
+        Step::Yield => {
+            *run.ranks[rank].lock().unwrap() = Some(coro);
+            submit_rank(&run, &sub, rank);
+        }
+        Step::Barrier => {
+            // Park the coroutine *before* registering at the barrier: a
+            // racing release must find the slot occupied.
+            *run.ranks[rank].lock().unwrap() = Some(coro);
+            let woken = {
+                let mut b = run.barrier.lock().unwrap();
+                b.waiting.push(rank);
+                barrier_release(&mut b, run.ranks.len())
+            };
+            release_ranks(&run, &sub, woken);
+        }
+        Step::Done => {
+            drop(coro);
+            let woken = {
+                let mut b = run.barrier.lock().unwrap();
+                b.finished += 1;
+                barrier_release(&mut b, run.ranks.len())
+            };
+            release_ranks(&run, &sub, woken);
+        }
+    }
+}
+
+/// Resume a released barrier epoch: synchronize the worker cores'
+/// virtual clocks to the epoch max (every rank resumes at the latest
+/// clock, like the simulator's `release_barrier`), then resubmit.
+fn release_ranks(run: &Arc<HostRun>, sub: &Submitter, woken: Vec<usize>) {
+    if woken.is_empty() {
+        return;
+    }
+    {
+        let mut m = run.machine.lock().unwrap();
+        let t_max = (0..run.n_workers).map(|c| m.now(c)).max().unwrap_or(0);
+        for c in 0..run.n_workers {
+            m.advance_to(c, t_max);
+        }
+    }
+    for r in woken {
+        submit_rank(run, sub, r);
+    }
+}
+
+/// If every unfinished rank is parked, take them all for resubmission.
+fn barrier_release(b: &mut BarrierState, n: usize) -> Vec<usize> {
+    if !b.waiting.is_empty() && b.waiting.len() + b.finished == n {
+        b.epochs += 1;
+        std::mem::take(&mut b.waiting)
+    } else {
+        Vec::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::LocalCachePolicy;
+    use crate::task::{BspTask, FnTask, IterTask};
+    use crate::topology::Topology;
+
+    fn machine() -> Machine {
+        Machine::new(Topology::milan_1s())
+    }
+
+    #[test]
+    fn single_task_completes_on_host() {
+        let (report, _) = execute_host(machine(), Box::new(LocalCachePolicy), 1, |_| {
+            Box::new(FnTask(|ctx: &mut TaskCtx<'_>| ctx.compute_ns(1000)))
+        });
+        assert_eq!(report.dispatches, 1);
+        assert!(report.makespan_ns >= 1000);
+        assert!(report.wall_ns > 0);
+    }
+
+    #[test]
+    fn yields_step_the_expected_number_of_times() {
+        let (report, _) = execute_host(machine(), Box::new(LocalCachePolicy), 4, |_| {
+            Box::new(IterTask::new(10, |ctx, _| ctx.compute_ns(100)))
+        });
+        // 4 tasks x 10 steps.
+        assert_eq!(report.dispatches, 40);
+    }
+
+    #[test]
+    fn barriers_release_groups_larger_than_the_pool() {
+        // 32 ranks on an 8-core (1-chiplet) machine bound the pool at 8
+        // workers: blocking barriers would deadlock; the parking barrier
+        // must release every epoch.
+        use std::sync::atomic::AtomicUsize;
+        let mut topo = Topology::milan_1s();
+        topo.chiplets_per_numa = 1;
+        assert_eq!(topo.num_cores(), 8);
+        let hits = Arc::new(AtomicUsize::new(0));
+        let (report, _) = execute_host(Machine::new(topo), Box::new(LocalCachePolicy), 32, |_| {
+            let hits = hits.clone();
+            Box::new(BspTask::new(3, move |ctx, _| {
+                hits.fetch_add(1, Ordering::Relaxed);
+                ctx.compute_ns(10);
+            }))
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 32 * 3);
+        assert_eq!(report.barrier_epochs, 2);
+    }
+
+    #[test]
+    fn barrier_synchronizes_virtual_clocks_like_the_simulator() {
+        // Phase 1: rank 0 slow; phase 2: rank 1 slow. With clock sync at
+        // the barrier the phases cannot overlap in virtual time, so the
+        // makespan must cover both slow phases (the simulator's rule).
+        let (report, _) = execute_host(machine(), Box::new(LocalCachePolicy), 2, |rank| {
+            Box::new(BspTask::new(2, move |ctx, iter| {
+                let slow = (iter == 0) == (rank == 0);
+                ctx.compute_ns(if slow { 1_000_000 } else { 1_000 });
+            }))
+        });
+        assert_eq!(report.barrier_epochs, 1);
+        assert!(
+            report.makespan_ns >= 2_000_000,
+            "phases overlapped in virtual time: makespan={}",
+            report.makespan_ns
+        );
+    }
+
+    #[test]
+    fn machine_comes_back_warm() {
+        let (_, machine) = execute_host(machine(), Box::new(LocalCachePolicy), 2, |_| {
+            Box::new(FnTask(|ctx: &mut TaskCtx<'_>| ctx.compute_ns(50)))
+        });
+        assert!(machine.max_time() >= 50);
+    }
+}

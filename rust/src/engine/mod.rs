@@ -11,8 +11,10 @@
 //! - [`Driver`] — what the runtime *does* with one: owns topology →
 //!   machine construction, policy wiring, `spawn_group`, the run loop,
 //!   and report collection. It is the single seam where an executor
-//!   backend is chosen (today [`SimExecutor`] via [`execute`]; a future
-//!   `HostExecutor` backend slots in here without touching workloads).
+//!   backend is chosen: [`ExecBackend::Sim`] (the deterministic
+//!   [`SimExecutor`]) or [`ExecBackend::Host`] (real threads on the
+//!   `HostExecutor` work-stealing pool), both behind [`execute_on`]
+//!   without touching workloads.
 //! - [`registry`] — a name-keyed catalogue of every scenario
 //!   (`bfs`, `pagerank`, …, `tpch`, `ycsb`) so the CLI, harness and
 //!   benches enumerate workload×policy combinations through one code
@@ -23,15 +25,64 @@
 //! deterministic reports are unchanged. See `rust/src/engine/README.md`
 //! for the architecture notes and a porting guide.
 
+mod host_backend;
 pub mod registry;
+pub mod runcfg;
 
-pub use registry::{by_name, registry, ScenarioParams, ScenarioSpec};
+pub use registry::{by_name, registry, scenarios_table, ScenarioParams, ScenarioSpec};
+pub use runcfg::RunConfig;
 
 use crate::policy::Policy;
 use crate::sched::{RunReport, SimExecutor};
 use crate::sim::Machine;
 use crate::task::Coroutine;
 use crate::topology::Topology;
+
+/// Which executor runs a spawn group — the choice made at the
+/// [`execute_on`] seam and threaded through [`Driver::with_backend`],
+/// `arcas run --backend`, [`crate::api::ArcasConfig::backend`] and the
+/// bench harness.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ExecBackend {
+    /// Deterministic virtual-time simulator ([`SimExecutor`]) — the
+    /// paper-figure path, byte-for-byte reproducible reports.
+    #[default]
+    Sim,
+    /// Real OS threads: the `HostExecutor` work-stealing pool steps each
+    /// coroutine on a worker thread (chiplet-aware steal order); reports
+    /// add real `wall_ns` / `host_steals` next to the simulated makespan.
+    Host,
+}
+
+impl ExecBackend {
+    /// Every selectable backend, in CLI order.
+    pub const ALL: [ExecBackend; 2] = [ExecBackend::Sim, ExecBackend::Host];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ExecBackend::Sim => "sim",
+            ExecBackend::Host => "host",
+        }
+    }
+}
+
+impl std::fmt::Display for ExecBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for ExecBackend {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "sim" => Ok(ExecBackend::Sim),
+            "host" => Ok(ExecBackend::Host),
+            other => Err(format!("unknown backend {other:?} (expected sim|host)")),
+        }
+    }
+}
 
 /// Workload-level metrics extracted from a finished run: the primary
 /// work-item count (edges, bytes, commits, rows…) that turns a makespan
@@ -122,6 +173,7 @@ pub struct Driver {
     tasks: usize,
     timer_ns: Option<u64>,
     verify: bool,
+    backend: ExecBackend,
 }
 
 impl Driver {
@@ -132,6 +184,10 @@ impl Driver {
     }
 
     /// Drive an existing machine (warm caches / pre-allocated regions).
+    /// Reports from warm machines are per-run: the driver subtracts the
+    /// machine's pre-run clock, access counters and DRAM totals, so
+    /// `--repeat` repetitions each report their own makespan,
+    /// throughput and traffic.
     pub fn on_machine(machine: Machine, policy: Box<dyn Policy>, tasks: usize) -> Self {
         Self {
             machine,
@@ -139,7 +195,14 @@ impl Driver {
             tasks,
             timer_ns: None,
             verify: false,
+            backend: ExecBackend::Sim,
         }
+    }
+
+    /// Select the executor backend (default [`ExecBackend::Sim`]).
+    pub fn with_backend(mut self, backend: ExecBackend) -> Self {
+        self.backend = backend;
+        self
     }
 
     /// Override the scheduler timer (policies with their own preferred
@@ -163,10 +226,27 @@ impl Driver {
             tasks,
             timer_ns,
             verify,
+            backend,
         } = self;
+        // Warm machines carry virtual time and counters from earlier
+        // runs; report this run's makespan / accesses / DRAM traffic,
+        // not the cumulative totals (all-zero baselines on fresh
+        // machines, so cold reports are unchanged).
+        let t0 = machine.max_time();
+        let counts0 = machine.cache.counters.total();
+        let dram0: f64 = (0..machine.topo.sockets)
+            .map(|s| machine.membw.total_bytes(s))
+            .sum();
         scenario.setup(&mut machine, tasks);
-        let (report, machine) =
-            execute(machine, policy, timer_ns, tasks, |rank| scenario.spawn(rank));
+        let (mut report, machine) = execute_on(backend, machine, policy, timer_ns, tasks, |rank| {
+            scenario.spawn(rank)
+        });
+        report.makespan_ns = report.makespan_ns.saturating_sub(t0);
+        report.counts.local -= counts0.local;
+        report.counts.near -= counts0.near;
+        report.counts.far -= counts0.far;
+        report.counts.dram -= counts0.dram;
+        report.dram_bytes -= dram0;
         if verify {
             scenario.verify();
         }
@@ -179,12 +259,40 @@ impl Driver {
     }
 }
 
-/// Run `n` coroutines over `machine` under `policy` and hand the machine
-/// back (cache residency carries across runs for callers that reuse it).
+/// Run `n` coroutines over `machine` under `policy` on the chosen
+/// backend and hand the machine back (cache residency carries across
+/// runs for callers that reuse it).
 ///
-/// This is the **only** `SimExecutor` construction site: the seam where
-/// a different executor backend (e.g. a host-thread pool or a sharded
-/// multi-machine driver) would be selected.
+/// This is the **only** executor construction site: [`ExecBackend::Sim`]
+/// builds the deterministic [`SimExecutor`]; [`ExecBackend::Host`] runs
+/// the group on the real `HostExecutor` thread pool (which ignores
+/// `timer_ns` — policy timers and adaptive migration are
+/// simulator-only). A future sharded multi-machine driver slots in here.
+pub fn execute_on(
+    backend: ExecBackend,
+    machine: Machine,
+    policy: Box<dyn Policy>,
+    timer_ns: Option<u64>,
+    n: usize,
+    make: impl FnMut(usize) -> Box<dyn Coroutine>,
+) -> (RunReport, Machine) {
+    match backend {
+        ExecBackend::Sim => {
+            let mut ex = SimExecutor::new(machine, policy);
+            if let Some(t) = timer_ns {
+                ex = ex.with_timer(t);
+            }
+            ex.spawn_group(n, make);
+            let report = ex.run();
+            (report, ex.machine)
+        }
+        ExecBackend::Host => host_backend::execute_host(machine, policy, n, make),
+    }
+}
+
+/// [`execute_on`] pinned to the simulator backend — the historical seam
+/// signature, kept so `sched::run_group`, `api::Arcas::run` and the
+/// benches stay byte-for-byte reproducible by default.
 pub fn execute(
     machine: Machine,
     policy: Box<dyn Policy>,
@@ -192,13 +300,50 @@ pub fn execute(
     n: usize,
     make: impl FnMut(usize) -> Box<dyn Coroutine>,
 ) -> (RunReport, Machine) {
-    let mut ex = SimExecutor::new(machine, policy);
-    if let Some(t) = timer_ns {
-        ex = ex.with_timer(t);
+    execute_on(ExecBackend::Sim, machine, policy, timer_ns, n, make)
+}
+
+/// Drive `repeat` back-to-back runs of a (freshly built each time)
+/// scenario over **one** machine, so later repetitions see warm caches —
+/// the `Driver::on_machine` repetition story behind `arcas run --repeat`.
+///
+/// `policy` and `scenario` are factories because both are consumed per
+/// run. Returns one [`ScenarioRun`] per repetition (each with its own
+/// per-run makespan; see [`Driver::on_machine`]). Each run retains its
+/// machine (callers inspect residency), so repetitions clone it forward
+/// — between runs, outside both the virtual and wall-clock timed
+/// windows.
+#[allow(clippy::too_many_arguments)]
+pub fn run_repeated(
+    topo: &Topology,
+    repeat: usize,
+    tasks: usize,
+    backend: ExecBackend,
+    verify: bool,
+    timer_ns: Option<u64>,
+    mut policy: impl FnMut() -> Box<dyn Policy>,
+    mut scenario: impl FnMut() -> Box<dyn Scenario>,
+) -> Vec<ScenarioRun> {
+    assert!(repeat >= 1, "repeat must be >= 1");
+    let mut machine = Some(Machine::new(topo.clone()));
+    let mut runs = Vec::with_capacity(repeat);
+    for i in 0..repeat {
+        let mut s = scenario();
+        let mut driver = Driver::on_machine(machine.take().unwrap(), policy(), tasks)
+            .with_backend(backend)
+            .with_verify(verify);
+        if let Some(t) = timer_ns {
+            driver = driver.with_timer(t);
+        }
+        let run = driver.run(s.as_mut());
+        // The run keeps its machine (callers inspect residency); clone it
+        // forward only while more repetitions need it.
+        if i + 1 < repeat {
+            machine = Some(run.machine.clone());
+        }
+        runs.push(run);
     }
-    ex.spawn_group(n, make);
-    let report = ex.run();
-    (report, ex.machine)
+    runs
 }
 
 #[cfg(test)]
@@ -262,6 +407,61 @@ mod tests {
         };
         let _ = Driver::new(&topo, Box::new(LocalCachePolicy), 2).run(&mut s);
         assert!(!s.verified.get());
+    }
+
+    #[test]
+    fn driver_runs_on_the_host_backend() {
+        let topo = Topology::milan_1s();
+        let mut s = NoopScenario {
+            ran_setup: false,
+            verified: std::cell::Cell::new(false),
+        };
+        let run = Driver::new(&topo, Box::new(LocalCachePolicy), 4)
+            .with_backend(ExecBackend::Host)
+            .with_verify(true)
+            .run(&mut s);
+        assert!(s.verified.get());
+        assert_eq!(run.report.dispatches, 4);
+        assert!(run.report.wall_ns > 0);
+    }
+
+    #[test]
+    fn repeated_runs_reuse_the_machine_and_report_per_run_makespans() {
+        let topo = Topology::milan_1s();
+        let runs = run_repeated(
+            &topo,
+            3,
+            4,
+            ExecBackend::Sim,
+            true,
+            None,
+            || Box::new(LocalCachePolicy),
+            || {
+                Box::new(NoopScenario {
+                    ran_setup: false,
+                    verified: std::cell::Cell::new(false),
+                })
+            },
+        );
+        assert_eq!(runs.len(), 3);
+        for run in &runs {
+            // Per-run makespan (~100ns of compute), not the cumulative
+            // warm-machine clock.
+            assert!(run.report.makespan_ns >= 100);
+            assert!(run.report.makespan_ns < 100_000);
+        }
+        // The machine really was reused: its clock accumulates.
+        assert!(runs[2].machine.max_time() > runs[0].report.makespan_ns);
+    }
+
+    #[test]
+    fn backend_parses_and_prints() {
+        assert_eq!("sim".parse::<ExecBackend>().unwrap(), ExecBackend::Sim);
+        assert_eq!("HOST".parse::<ExecBackend>().unwrap(), ExecBackend::Host);
+        assert!("gpu".parse::<ExecBackend>().is_err());
+        for b in ExecBackend::ALL {
+            assert_eq!(b.to_string().parse::<ExecBackend>().unwrap(), b);
+        }
     }
 
     #[test]

@@ -281,6 +281,25 @@ pub fn by_name(name: &str) -> Option<&'static ScenarioSpec> {
         .find(|s| s.name == name || s.aliases.contains(&name))
 }
 
+/// The `arcas scenarios` listing: one row per registry entry. Rendered
+/// here (not in `main.rs`) so tests can pin that every registered name
+/// shows up in the CLI output.
+pub fn scenarios_table() -> String {
+    let mut tab = crate::util::table::Table::new(
+        "scenario registry (arcas run --scenario <name>)",
+        &["name", "family", "aliases", "description"],
+    );
+    for s in registry() {
+        tab.row(vec![
+            s.name.to_string(),
+            s.family.to_string(),
+            s.aliases.join(","),
+            s.about.to_string(),
+        ]);
+    }
+    tab.render()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,0 +1,158 @@
+//! Parsed configuration of `arcas run` — kept in the library (not
+//! `main.rs`) so argument validation is unit-testable: unknown backends
+//! and `--repeat 0` are rejected here with actionable messages.
+
+use super::{registry, ExecBackend, ScenarioParams};
+use crate::util::cli::Cli;
+
+/// Everything `arcas run` needs, validated.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub scenario: String,
+    pub policy: String,
+    pub cores: usize,
+    /// Executor backend (`--backend sim|host`).
+    pub backend: ExecBackend,
+    /// Warm-cache repetitions over one machine (`--repeat N`, N >= 1).
+    pub repeat: usize,
+    pub verify: bool,
+    pub topology: String,
+    pub timer_us: u64,
+    pub params: ScenarioParams,
+    /// Set when the deprecated `--workload` alias was used.
+    pub deprecated_workload: bool,
+}
+
+impl RunConfig {
+    /// The `arcas run` option set (also the `--help` source of truth).
+    pub fn cli() -> Cli {
+        let names: Vec<&str> = registry().iter().map(|s| s.name).collect();
+        Cli::new("arcas run", "run one scenario under a policy")
+            .opt("scenario", "bfs", &names.join("|"))
+            .opt_nodefault("workload", "deprecated alias for --scenario")
+            .opt("policy", "arcas", "arcas|ring|shoal|local|distributed|os_async")
+            .opt("cores", "16", "worker count")
+            .opt("backend", "sim", "executor backend: sim (virtual time) | host (real threads)")
+            .opt("repeat", "1", "run N times on one machine (warm caches after run 1)")
+            .opt("scale", "0.02", "dataset scale factor vs the paper's sizes")
+            .opt_nodefault("iters", "intensity knob (PR iterations, txns/core, SGD epochs)")
+            .opt_nodefault(
+                "variant",
+                "scenario variant (tpch q1..q22, sgd percore|pernode|permachine)",
+            )
+            .opt("topology", "milan_2s", "machine preset")
+            .opt("timer-us", "100", "ARCAS controller timer (us)")
+            .opt("seed", "42", "PRNG seed")
+            .flag("verify", "check results against the serial references")
+    }
+
+    /// Parse + validate `arcas run` arguments.
+    pub fn from_args<I: IntoIterator<Item = String>>(args: I) -> Result<Self, String> {
+        let a = Self::cli().parse_from(args)?;
+        let backend: ExecBackend = a.str("backend").parse()?;
+        let repeat: usize = a
+            .str("repeat")
+            .parse()
+            .map_err(|_| format!("--repeat {} is not a number", a.str("repeat")))?;
+        if repeat == 0 {
+            return Err("--repeat must be >= 1 (each repetition reuses the warm machine)".into());
+        }
+        let cores: usize = a
+            .str("cores")
+            .parse()
+            .map_err(|_| format!("--cores {} is not a number", a.str("cores")))?;
+        if cores == 0 {
+            return Err("--cores must be >= 1".into());
+        }
+        let iters = match a.get("iters") {
+            Some(v) => Some(
+                v.parse()
+                    .map_err(|_| format!("--iters {v} is not a number"))?,
+            ),
+            None => None,
+        };
+        let scale: f64 = a
+            .str("scale")
+            .parse()
+            .map_err(|_| format!("--scale {} is not a number", a.str("scale")))?;
+        let (scenario, deprecated_workload) = match a.get("workload") {
+            Some(w) => (w.to_string(), true),
+            None => (a.str("scenario"), false),
+        };
+        Ok(Self {
+            scenario,
+            policy: a.str("policy"),
+            cores,
+            backend,
+            repeat,
+            verify: a.flag("verify"),
+            topology: a.str("topology"),
+            timer_us: a.u64("timer-us"),
+            params: ScenarioParams {
+                scale,
+                seed: a.u64("seed"),
+                iters,
+                variant: a.get("variant").map(str::to_string),
+            },
+            deprecated_workload,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn from(args: &[&str]) -> Result<RunConfig, String> {
+        RunConfig::from_args(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn defaults() {
+        let c = from(&[]).unwrap();
+        assert_eq!(c.scenario, "bfs");
+        assert_eq!(c.backend, ExecBackend::Sim);
+        assert_eq!(c.repeat, 1);
+        assert_eq!(c.cores, 16);
+        assert!(!c.verify);
+        assert!(!c.deprecated_workload);
+    }
+
+    #[test]
+    fn backend_and_repeat_parse() {
+        let c = from(&["--backend", "host", "--repeat", "5", "--verify"]).unwrap();
+        assert_eq!(c.backend, ExecBackend::Host);
+        assert_eq!(c.repeat, 5);
+        assert!(c.verify);
+    }
+
+    #[test]
+    fn unknown_backend_is_rejected() {
+        let err = from(&["--backend", "gpu"]).unwrap_err();
+        assert!(err.contains("unknown backend"), "{err}");
+    }
+
+    #[test]
+    fn repeat_zero_is_rejected() {
+        let err = from(&["--repeat", "0"]).unwrap_err();
+        assert!(err.contains("--repeat must be >= 1"), "{err}");
+        assert!(from(&["--repeat", "many"]).is_err());
+    }
+
+    #[test]
+    fn workload_alias_flags_deprecation() {
+        let c = from(&["--workload", "gups"]).unwrap();
+        assert_eq!(c.scenario, "gups");
+        assert!(c.deprecated_workload);
+    }
+
+    #[test]
+    fn help_documents_backend_and_repeat() {
+        let help = RunConfig::cli()
+            .parse_from(["--help".to_string()])
+            .unwrap_err();
+        assert!(help.contains("--backend"));
+        assert!(help.contains("--repeat"));
+        assert!(help.contains("sim (virtual time) | host (real threads)"));
+    }
+}

@@ -6,7 +6,7 @@
 //! Fig. 4 (the cores-vs-memory-channels trend).
 
 use crate::controller::Approach;
-use crate::engine::{self, Scenario, ScenarioParams};
+use crate::engine::{self, ExecBackend, Scenario, ScenarioParams};
 use crate::policy::{self, ArcasPolicy, Policy};
 use crate::topology::Topology;
 use crate::util::cli::{Args, Cli};
@@ -22,6 +22,26 @@ pub fn bench_cli(name: &str, about: &str) -> Cli {
         .opt("topology", "milan_2s", "machine preset (milan_2s|milan_1s|genoa_1s|monolithic_64)")
         .flag("quick", "smaller sweep for smoke runs")
         .flag("bench", "(passed by `cargo bench`; ignored)")
+}
+
+/// Add `--backend sim|host` to a bench CLI. Opt-in per bench: only
+/// benches that actually route execution through the backend seam
+/// declare it (a bench that ignored the flag would silently lie).
+pub fn with_backend_opt(cli: Cli) -> Cli {
+    cli.opt(
+        "backend",
+        "sim",
+        "executor backend: sim (virtual time) | host (real threads)",
+    )
+}
+
+/// Executor backend from bench args: `--backend sim|host` where the
+/// bench declared it (see [`with_backend_opt`]), sim otherwise.
+pub fn backend(args: &Args) -> ExecBackend {
+    match args.get("backend") {
+        Some(s) => s.parse().unwrap_or_else(|e: String| panic!("{e}")),
+        None => ExecBackend::Sim,
+    }
 }
 
 /// Resolve topology + cache scaling from bench args.
@@ -161,6 +181,34 @@ mod tests {
         let topo = bench_topology(&args);
         assert_eq!(arcas(&topo, &args).name(), "ARCAS");
         assert_eq!(baseline("ring", &topo).name(), "RING");
+    }
+
+    fn parse_with_backend(extra: &[&str]) -> Args {
+        with_backend_opt(bench_cli("t", "test"))
+            .parse_from(extra.iter().map(|s| s.to_string()))
+            .unwrap()
+    }
+
+    #[test]
+    fn backend_resolves_from_args() {
+        // Undeclared (bench without the opt) and declared-default both
+        // mean the simulator.
+        assert_eq!(backend(&parse(&[])), ExecBackend::Sim);
+        assert_eq!(backend(&parse_with_backend(&[])), ExecBackend::Sim);
+        assert_eq!(
+            backend(&parse_with_backend(&["--backend", "host"])),
+            ExecBackend::Host
+        );
+        // Benches that ignore the backend reject the flag outright.
+        assert!(bench_cli("t", "test")
+            .parse_from(["--backend".to_string(), "host".to_string()])
+            .is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown backend")]
+    fn backend_rejects_unknown_names() {
+        let _ = backend(&parse_with_backend(&["--backend", "quantum"]));
     }
 
     #[test]

@@ -12,9 +12,11 @@
 //!   [`profiler`], [`controller`], [`policy`], [`mem`], [`api`]),
 //! - the unified workload [`engine`]: the [`engine::Scenario`] trait,
 //!   the [`engine::Driver`] that owns machine construction and the run
-//!   loop (the single executor seam), and the name-keyed
-//!   [`engine::registry`] through which the CLI, harness and benches
-//!   enumerate every workload×policy combination,
+//!   loop, the [`engine::ExecBackend`] seam selecting the deterministic
+//!   simulator or the real host-thread pool (`arcas run --backend
+//!   sim|host`, with `--repeat N` warm-cache repetitions), and the
+//!   name-keyed [`engine::registry`] through which the CLI, harness and
+//!   benches enumerate every workload×policy×backend combination,
 //! - all baseline systems the paper compares against (RING, Shoal,
 //!   DimmWitted native strategies, std::async, static Local/Distributed
 //!   cache policies) in [`policy`] and [`workloads`],

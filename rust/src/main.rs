@@ -7,11 +7,10 @@
 //!   artifacts  — list + smoke-test the AOT PJRT artifacts
 //!   policies   — list available scheduling policies
 
-use arcas::engine::{self, Driver, ScenarioParams};
+use arcas::engine::{self, RunConfig};
 use arcas::policy;
 use arcas::sched::RunReport;
 use arcas::topology::Topology;
-use arcas::util::cli::Cli;
 use arcas::util::table::Table;
 
 fn main() {
@@ -90,78 +89,80 @@ fn print_report(name: &str, r: &RunReport) {
         "  avg threads       {:.2} (peak {})",
         r.avg_concurrency, r.peak_concurrency
     );
+    println!("  wall clock        {}", arcas::util::fmt_ns(r.wall_ns));
+    if r.host_steals > 0 {
+        println!("  host steals       {}", r.host_steals);
+    }
 }
 
 fn cmd_run(args: Vec<String>) {
-    let names: Vec<&str> = engine::registry().iter().map(|s| s.name).collect();
-    let cli = Cli::new("arcas run", "run one scenario under a policy")
-        .opt("scenario", "bfs", &names.join("|"))
-        .opt_nodefault("workload", "deprecated alias for --scenario")
-        .opt("policy", "arcas", "arcas|ring|shoal|local|distributed|os_async")
-        .opt("cores", "16", "worker count")
-        .opt("scale", "0.02", "dataset scale factor vs the paper's sizes")
-        .opt_nodefault("iters", "intensity knob (PR iterations, txns/core, SGD epochs)")
-        .opt_nodefault("variant", "scenario variant (tpch q1..q22, sgd percore|pernode|permachine)")
-        .opt("topology", "milan_2s", "machine preset")
-        .opt("timer-us", "100", "ARCAS controller timer (us)")
-        .opt("seed", "42", "PRNG seed")
-        .flag("verify", "check results against the serial references");
-    let a = cli.parse_from(args).unwrap_or_else(|msg| {
+    // Parsing + validation (unknown backend, --repeat 0, …) live in the
+    // library so they are unit-tested; this function only wires and prints.
+    let rc = RunConfig::from_args(args).unwrap_or_else(|msg| {
         eprintln!("{msg}");
         std::process::exit(2);
     });
-    let topo = Topology::preset(&a.str("topology")).unwrap_or_else(Topology::milan_2s);
-    let cores = a.usize("cores");
-    let policy: Box<dyn policy::Policy> = if a.str("policy") == "arcas" {
-        Box::new(policy::ArcasPolicy::new(&topo).with_timer(a.u64("timer-us") * 1000))
-    } else {
-        policy::by_name(&a.str("policy"), &topo).unwrap_or_else(|| {
-            eprintln!("unknown policy {}", a.str("policy"));
-            std::process::exit(2);
-        })
+    if rc.deprecated_workload {
+        // The old `--workload` CLI took `--scale` as a 2^N vertex
+        // exponent; the registry takes a dataset *fraction*. Warn so
+        // pre-refactor invocations don't silently build huge graphs.
+        eprintln!(
+            "warning: --workload is deprecated (use --scenario); note that --scale \
+             is now a dataset fraction of the paper's sizes (e.g. 0.02), not a 2^N exponent"
+        );
+    }
+    let topo = Topology::preset(&rc.topology).unwrap_or_else(Topology::milan_2s);
+    if policy::by_name(&rc.policy, &topo).is_none() {
+        eprintln!("unknown policy {}", rc.policy);
+        std::process::exit(2);
+    }
+    // Rebuilt per repetition: a policy is consumed by each run.
+    let make_policy = || -> Box<dyn policy::Policy> {
+        if rc.policy == "arcas" {
+            Box::new(policy::ArcasPolicy::new(&topo).with_timer(rc.timer_us * 1000))
+        } else {
+            policy::by_name(&rc.policy, &topo).unwrap()
+        }
     };
 
-    // One code path for every workload×policy combination: resolve the
-    // scenario in the registry, build it, drive it.
-    let name = match a.get("workload") {
-        Some(w) => {
-            // The old `--workload` CLI took `--scale` as a 2^N vertex
-            // exponent; the registry takes a dataset *fraction*. Warn so
-            // pre-refactor invocations don't silently build huge graphs.
-            eprintln!(
-                "warning: --workload is deprecated (use --scenario); note that --scale \
-                 is now a dataset fraction of the paper's sizes (e.g. 0.02), not a 2^N exponent"
-            );
-            w.to_string()
-        }
-        None => a.str("scenario"),
-    };
-    let Some(spec) = engine::by_name(&name) else {
+    // One code path for every workload×policy×backend combination:
+    // resolve the scenario in the registry, build it, drive it.
+    let Some(spec) = engine::by_name(&rc.scenario) else {
+        let names: Vec<&str> = engine::registry().iter().map(|s| s.name).collect();
         eprintln!(
-            "unknown scenario {name} (available: {})",
+            "unknown scenario {} (available: {})",
+            rc.scenario,
             names.join(", ")
         );
         std::process::exit(2);
     };
-    let params = ScenarioParams {
-        scale: a.f64("scale"),
-        seed: a.u64("seed"),
-        iters: a.get("iters").map(|v| {
-            v.parse().unwrap_or_else(|_| {
-                eprintln!("--iters {v} is not a number");
-                std::process::exit(2);
-            })
-        }),
-        variant: a.get("variant").map(str::to_string),
-    };
-    let mut scenario = spec.build(&params);
     println!(
-        "scenario {} [{}]: {} | {} cores on {}",
-        spec.name, spec.family, spec.about, cores, topo.name
+        "scenario {} [{}]: {} | {} cores on {} | {} backend",
+        spec.name, spec.family, spec.about, rc.cores, topo.name, rc.backend
     );
-    let run = Driver::new(&topo, policy, cores)
-        .with_verify(a.flag("verify"))
-        .run(scenario.as_mut());
+    let runs = engine::run_repeated(
+        &topo,
+        rc.repeat,
+        rc.cores,
+        rc.backend,
+        rc.verify,
+        None,
+        make_policy,
+        || spec.build(&rc.params),
+    );
+    if rc.repeat > 1 {
+        for (i, run) in runs.iter().enumerate() {
+            println!(
+                "  rep {i}: makespan {} | wall {} | {:.3} M {}/s{}",
+                arcas::util::fmt_ns(run.report.makespan_ns),
+                arcas::util::fmt_ns(run.report.wall_ns),
+                run.throughput() / 1e6,
+                run.metrics.unit,
+                if i == 0 { " (cold)" } else { " (warm)" },
+            );
+        }
+    }
+    let run = runs.last().expect("repeat >= 1");
     print_report(spec.name, &run.report);
     println!(
         "  throughput        {:.3} M {}/s",
@@ -171,25 +172,13 @@ fn cmd_run(args: Vec<String>) {
     for (key, value) in &run.metrics.extras {
         println!("  {key:<17} {value:.4}");
     }
-    if a.flag("verify") {
+    if rc.verify {
         println!("  verified          ok (matches the serial reference)");
     }
 }
 
 fn cmd_scenarios() {
-    let mut tab = Table::new(
-        "scenario registry (arcas run --scenario <name>)",
-        &["name", "family", "aliases", "description"],
-    );
-    for s in engine::registry() {
-        tab.row(vec![
-            s.name.to_string(),
-            s.family.to_string(),
-            s.aliases.join(","),
-            s.about.to_string(),
-        ]);
-    }
-    println!("{}", tab.render());
+    println!("{}", engine::scenarios_table());
 }
 
 fn cmd_artifacts() {

@@ -5,7 +5,32 @@
 //! work-stealing pool: per-worker Chase–Lev deques, chiplet-aware steal
 //! order derived from a [`Topology`] (worker *i* is treated as core *i*),
 //! and optional `sched_setaffinity` pinning on Linux.
+//!
+//! ## Submission path
+//!
+//! Chase–Lev push/pop are *owner-only* operations, so external
+//! submissions never touch a worker's deque directly. Instead every
+//! worker has a mutex-protected **inbox**: [`HostExecutor::execute`] /
+//! [`Submitter::execute`] push the job's slot id into an inbox (any
+//! thread, any number of concurrent submitters), and the owning worker
+//! drains its inbox into its own deque between jobs. Idle workers steal
+//! from other deques first (lock-free, chiplet-aware order) and fall back
+//! to raiding other inboxes, so targeted jobs cannot starve behind a
+//! long-running victim.
+//!
+//! Job payloads live in a slot table with a free list: a slot is recycled
+//! as soon as its job has been taken by a worker, so a long-lived pool's
+//! memory is bounded by the *peak in-flight* job count, not by the total
+//! number of jobs ever submitted.
+//!
+//! [`Submitter`] is a cheap clone-able handle onto the pool's shared
+//! state. Jobs may capture one and submit follow-up work from inside the
+//! pool (nested `execute`); [`HostExecutor::wait_all`] only returns once
+//! such chains have fully drained. `wait_all` must be called from
+//! *outside* the pool — calling it from a job would deadlock the worker.
 
+use std::cell::Cell;
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
@@ -15,23 +40,136 @@ use crate::topology::Topology;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Job payload table: `jobs[slot]` holds the closure until a worker takes
+/// it; freed slots are recycled through `free` (bounded growth).
+#[derive(Default)]
+struct Slots {
+    jobs: Vec<Option<Job>>,
+    free: Vec<usize>,
+}
+
+impl Slots {
+    fn insert(&mut self, job: Job) -> usize {
+        match self.free.pop() {
+            Some(slot) => {
+                debug_assert!(self.jobs[slot].is_none());
+                self.jobs[slot] = Some(job);
+                slot
+            }
+            None => {
+                self.jobs.push(Some(job));
+                self.jobs.len() - 1
+            }
+        }
+    }
+
+    fn take(&mut self, slot: usize) -> Option<Job> {
+        let job = self.jobs[slot].take();
+        if job.is_some() {
+            self.free.push(slot);
+        }
+        job
+    }
+}
+
 struct Shared {
+    /// Per-worker deques (owner-only push/pop; thieves steal).
     queues: Vec<Deque>,
-    jobs: Mutex<Vec<Option<Job>>>,
+    /// Per-worker submission inboxes (any thread may push).
+    inboxes: Vec<Mutex<VecDeque<usize>>>,
+    slots: Mutex<Slots>,
     pending: AtomicUsize,
     stop: AtomicBool,
     idle: Mutex<()>,
     wake: Condvar,
     done: Condvar,
     steals: AtomicUsize,
+    next_worker: AtomicUsize,
+    /// Slots submitted but not yet picked up by any worker. Parking
+    /// re-checks this under the `idle` mutex (and submissions notify
+    /// under it), so a submission racing a worker's failed `find_slot`
+    /// cannot be lost to a full park timeout.
+    queued: AtomicUsize,
+    /// First panic payload from a job; re-raised by `wait_all` on the
+    /// caller so a panicking job fails the run instead of wedging it.
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+impl Shared {
+    fn submit(&self, worker: usize, job: Job) {
+        if self.stop.load(Ordering::SeqCst) {
+            // The pool has shut down (a `Submitter` outlived it): the
+            // job is discarded — there are no workers left to run it.
+            return;
+        }
+        let slot = self.slots.lock().unwrap().insert(job);
+        self.pending.fetch_add(1, Ordering::SeqCst);
+        self.inboxes[worker % self.inboxes.len()]
+            .lock()
+            .unwrap()
+            .push_back(slot);
+        self.queued.fetch_add(1, Ordering::SeqCst);
+        // Notify under the park mutex: a worker between its `queued`
+        // re-check and `wait_timeout` holds the lock, so this notify
+        // cannot slip into that window and be lost. One waker per job —
+        // stealing and the park timeout cover any second waiter.
+        let _guard = self.idle.lock().unwrap();
+        self.wake.notify_one();
+    }
+
+    fn submit_round_robin(&self, job: Job) {
+        let w = self.next_worker.fetch_add(1, Ordering::Relaxed);
+        self.submit(w % self.inboxes.len(), job);
+    }
 }
 
 /// A chiplet-aware work-stealing thread pool.
 pub struct HostExecutor {
     shared: Arc<Shared>,
     workers: Vec<std::thread::JoinHandle<()>>,
-    next_worker: AtomicUsize,
     n_workers: usize,
+}
+
+/// Clone-able submission handle onto a [`HostExecutor`]'s shared state.
+///
+/// Jobs may capture a `Submitter` and schedule follow-up work from inside
+/// the pool; the handle keeps the queues alive but does **not** own the
+/// worker threads, so dropping it inside a job never joins the pool.
+/// A handle may outlive its pool, but submissions after the pool has
+/// dropped are **discarded** — the workers are gone.
+#[derive(Clone)]
+pub struct Submitter {
+    shared: Arc<Shared>,
+}
+
+impl Submitter {
+    /// Submit a job (round-robin across worker inboxes).
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.shared.submit_round_robin(Box::new(job));
+    }
+
+    /// Submit a job to a specific worker's inbox (`worker` is taken
+    /// modulo the pool size). Thieves may still move it elsewhere.
+    pub fn execute_on(&self, worker: usize, job: impl FnOnce() + Send + 'static) {
+        self.shared.submit(worker, Box::new(job));
+    }
+
+    pub fn workers(&self) -> usize {
+        self.shared.inboxes.len()
+    }
+}
+
+thread_local! {
+    /// Index of the pool worker running on this thread, if any.
+    static CURRENT_WORKER: Cell<Option<usize>> = const { Cell::new(None) };
+}
+
+/// The pool worker index of the calling thread (`None` off-pool).
+///
+/// Workers map 1:1 onto cores (worker *i* = core *i*), so this is also
+/// the core a job should charge machine time to.
+pub fn current_worker() -> Option<usize> {
+    CURRENT_WORKER.with(|w| w.get())
 }
 
 impl HostExecutor {
@@ -41,13 +179,17 @@ impl HostExecutor {
         let n = n_workers.max(1);
         let shared = Arc::new(Shared {
             queues: (0..n).map(|_| Deque::new()).collect(),
-            jobs: Mutex::new(Vec::new()),
+            inboxes: (0..n).map(|_| Mutex::new(VecDeque::new())).collect(),
+            slots: Mutex::new(Slots::default()),
             pending: AtomicUsize::new(0),
             stop: AtomicBool::new(false),
             idle: Mutex::new(()),
             wake: Condvar::new(),
             done: Condvar::new(),
             steals: AtomicUsize::new(0),
+            next_worker: AtomicUsize::new(0),
+            queued: AtomicUsize::new(0),
+            panic: Mutex::new(None),
         });
         let cores: Vec<usize> = (0..n).collect();
         let mut workers = Vec::with_capacity(n);
@@ -58,32 +200,48 @@ impl HostExecutor {
                 if pin {
                     pin_to_core(w);
                 }
+                CURRENT_WORKER.with(|c| c.set(Some(w)));
                 worker_loop(w, order, shared);
             }));
         }
         Self {
             shared,
             workers,
-            next_worker: AtomicUsize::new(0),
             n_workers: n,
         }
     }
 
-    /// Submit a job (round-robin across worker queues).
+    /// Submit a job (round-robin across worker inboxes).
     pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
-        let slot = {
-            let mut jobs = self.shared.jobs.lock().unwrap();
-            jobs.push(Some(Box::new(job)));
-            jobs.len() - 1
-        };
-        self.shared.pending.fetch_add(1, Ordering::SeqCst);
-        let w = self.next_worker.fetch_add(1, Ordering::Relaxed) % self.n_workers;
-        self.shared.queues[w].push(slot);
-        self.shared.wake.notify_all();
+        self.shared.submit_round_robin(Box::new(job));
     }
 
-    /// Block until every submitted job has run.
+    /// Submit a job to a specific worker's inbox.
+    pub fn execute_on(&self, worker: usize, job: impl FnOnce() + Send + 'static) {
+        self.shared.submit(worker, Box::new(job));
+    }
+
+    /// A clone-able submission handle (usable from inside jobs).
+    pub fn submitter(&self) -> Submitter {
+        Submitter {
+            shared: self.shared.clone(),
+        }
+    }
+
+    /// Block until every submitted job (including jobs submitted by other
+    /// jobs) has run. Must not be called from inside a job. If a job
+    /// panicked, the first panic is re-raised here on the caller.
     pub fn wait_all(&self) {
+        self.wait_idle();
+        let payload = self.shared.panic.lock().unwrap().take();
+        if let Some(p) = payload {
+            std::panic::resume_unwind(p);
+        }
+    }
+
+    /// The draining half of [`Self::wait_all`], without re-raising job
+    /// panics (used by `Drop`, which must not panic mid-unwind).
+    fn wait_idle(&self) {
         let mut guard = self.shared.idle.lock().unwrap();
         while self.shared.pending.load(Ordering::SeqCst) > 0 {
             let (g, _timeout) = self
@@ -100,6 +258,13 @@ impl HostExecutor {
         self.shared.steals.load(Ordering::Relaxed)
     }
 
+    /// High-water mark of the job slot table. Bounded by the peak
+    /// in-flight job count (slots are recycled), not by the total number
+    /// of jobs ever submitted — pinned by a regression test.
+    pub fn slot_capacity(&self) -> usize {
+        self.shared.slots.lock().unwrap().jobs.len()
+    }
+
     pub fn workers(&self) -> usize {
         self.n_workers
     }
@@ -107,40 +272,90 @@ impl HostExecutor {
 
 impl Drop for HostExecutor {
     fn drop(&mut self) {
-        self.wait_all();
+        self.wait_idle();
         self.shared.stop.store(true, Ordering::SeqCst);
         self.shared.wake.notify_all();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+        // Surface an unobserved job panic — unless we are already
+        // unwinding (double panic would abort).
+        if !std::thread::panicking() {
+            let payload = self.shared.panic.lock().unwrap().take();
+            if let Some(p) = payload {
+                std::panic::resume_unwind(p);
+            }
+        }
     }
+}
+
+/// Find the next slot for worker `me`: own deque, else drain own inbox,
+/// else steal (deques first, then inboxes) in chiplet-aware order.
+fn find_slot(me: usize, steal_order: &[usize], shared: &Shared) -> Option<usize> {
+    if let Some(slot) = shared.queues[me].pop() {
+        return Some(slot);
+    }
+    // Drain the inbox into the owned deque (owner-side push is safe),
+    // keeping one to run now.
+    {
+        let mut inbox = shared.inboxes[me].lock().unwrap();
+        if let Some(first) = inbox.pop_front() {
+            while let Some(slot) = inbox.pop_front() {
+                shared.queues[me].push(slot);
+            }
+            return Some(first);
+        }
+    }
+    for &v in steal_order {
+        loop {
+            match shared.queues[v].steal() {
+                Steal::Success(slot) => {
+                    shared.steals.fetch_add(1, Ordering::Relaxed);
+                    return Some(slot);
+                }
+                Steal::Retry => continue,
+                Steal::Empty => break,
+            }
+        }
+        // Raid the victim's inbox too: a targeted job must not starve
+        // behind a long-running victim.
+        if let Ok(mut inbox) = shared.inboxes[v].try_lock() {
+            if let Some(slot) = inbox.pop_front() {
+                shared.steals.fetch_add(1, Ordering::Relaxed);
+                return Some(slot);
+            }
+        }
+    }
+    None
 }
 
 fn worker_loop(me: usize, steal_order: Vec<usize>, shared: Arc<Shared>) {
     loop {
-        // 1. local queue, 2. steal in chiplet-aware order.
-        let slot = shared.queues[me].pop().or_else(|| {
-            for &v in &steal_order {
-                loop {
-                    match shared.queues[v].steal() {
-                        Steal::Success(s) => {
-                            shared.steals.fetch_add(1, Ordering::Relaxed);
-                            return Some(s);
+        match find_slot(me, &steal_order, &shared) {
+            Some(slot) => {
+                shared.queued.fetch_sub(1, Ordering::SeqCst);
+                let job = shared.slots.lock().unwrap().take(slot);
+                if let Some(job) = job {
+                    // Contain unwinds: a panicking job must still reach
+                    // the `pending` decrement below, or `wait_all` (and
+                    // `Drop`) would hang forever. The first payload is
+                    // kept and re-raised on the `wait_all` caller.
+                    if let Err(p) = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job)) {
+                        let mut first = shared.panic.lock().unwrap();
+                        if first.is_none() {
+                            *first = Some(p);
                         }
-                        Steal::Retry => continue,
-                        Steal::Empty => break,
                     }
                 }
-            }
-            None
-        });
-        match slot {
-            Some(s) => {
-                let job = shared.jobs.lock().unwrap()[s].take();
-                if let Some(job) = job {
-                    job();
-                }
+                // The job ran (and possibly submitted follow-up work,
+                // bumping `pending`) before this decrement, so `wait_all`
+                // cannot observe a spuriously drained pool mid-chain.
                 if shared.pending.fetch_sub(1, Ordering::SeqCst) == 1 {
+                    // Under the `idle` mutex for the same lost-wakeup
+                    // reason as `submit`: `wait_idle` re-checks `pending`
+                    // while holding it, so this notify cannot land
+                    // between its check and its wait.
+                    let _guard = shared.idle.lock().unwrap();
                     shared.done.notify_all();
                 }
             }
@@ -148,15 +363,18 @@ fn worker_loop(me: usize, steal_order: Vec<usize>, shared: Arc<Shared>) {
                 if shared.stop.load(Ordering::SeqCst) {
                     return;
                 }
+                // Park, re-checking for queued work under the lock: a
+                // submission completed before the check is retried
+                // immediately; one still in flight notifies under this
+                // same mutex, so its wake-up cannot be lost. The timeout
+                // is a belt-and-braces bound, not the recovery path.
                 let guard = shared.idle.lock().unwrap();
-                if shared.pending.load(Ordering::SeqCst) == 0 && !shared.stop.load(Ordering::SeqCst)
+                if shared.queued.load(Ordering::SeqCst) == 0
+                    && !shared.stop.load(Ordering::SeqCst)
                 {
                     let _ = shared
                         .wake
-                        .wait_timeout(guard, std::time::Duration::from_millis(10));
-                } else {
-                    drop(guard);
-                    std::hint::spin_loop();
+                        .wait_timeout(guard, std::time::Duration::from_millis(1));
                 }
             }
         }
@@ -259,5 +477,107 @@ mod tests {
             pool.wait_all();
             assert_eq!(c.load(Ordering::Relaxed), (round + 1) * 10);
         }
+    }
+
+    #[test]
+    fn slots_are_recycled_across_rounds() {
+        let topo = Topology::milan_1s();
+        let pool = HostExecutor::new(2, &topo, false);
+        let c = Arc::new(AtomicU64::new(0));
+        for _ in 0..50 {
+            for _ in 0..64 {
+                let c = c.clone();
+                pool.execute(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+            pool.wait_all();
+        }
+        assert_eq!(c.load(Ordering::Relaxed), 50 * 64);
+        // The old append-only table grew one slot per job ever submitted
+        // (3200 here); the free list bounds it by the peak in-flight count.
+        assert!(
+            pool.slot_capacity() <= 64,
+            "slot table leaked: {} slots after 3200 jobs in rounds of 64",
+            pool.slot_capacity()
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "job exploded")]
+    fn job_panic_propagates_to_wait_all_instead_of_hanging() {
+        let topo = Topology::milan_1s();
+        let pool = HostExecutor::new(2, &topo, false);
+        let c = Arc::new(AtomicU64::new(0));
+        for i in 0..16 {
+            let c = c.clone();
+            pool.execute(move || {
+                if i == 7 {
+                    panic!("job exploded");
+                }
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait_all();
+    }
+
+    #[test]
+    fn pool_survives_a_job_panic() {
+        let topo = Topology::milan_1s();
+        let pool = HostExecutor::new(2, &topo, false);
+        pool.execute(|| panic!("first round panics"));
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| pool.wait_all()));
+        assert!(res.is_err());
+        // The pool is still usable afterwards.
+        let c = Arc::new(AtomicU64::new(0));
+        for _ in 0..10 {
+            let c = c.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait_all();
+        assert_eq!(c.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn submitter_outliving_the_pool_discards_jobs() {
+        let topo = Topology::milan_1s();
+        let pool = HostExecutor::new(2, &topo, false);
+        let sub = pool.submitter();
+        let c = Arc::new(AtomicU64::new(0));
+        {
+            let c = c.clone();
+            sub.execute(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        drop(pool);
+        assert_eq!(c.load(Ordering::Relaxed), 1, "pre-drop job must run");
+        // Post-drop submissions are discarded, not lost in a queue.
+        let c2 = c.clone();
+        sub.execute(move || {
+            c2.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(c.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn targeted_execute_on_runs_and_reports_worker() {
+        let topo = Topology::milan_1s();
+        let pool = HostExecutor::new(4, &topo, false);
+        let seen = Arc::new(AtomicU64::new(u64::MAX));
+        for w in 0..4 {
+            let seen = seen.clone();
+            pool.execute_on(w, move || {
+                // On-pool jobs always observe a worker id; which one is
+                // timing dependent (an idle thief may raid the inbox).
+                let id = current_worker().expect("job ran off-pool") as u64;
+                seen.fetch_min(id, Ordering::Relaxed);
+            });
+        }
+        pool.wait_all();
+        assert!(seen.load(Ordering::Relaxed) < 4);
+        assert_eq!(current_worker(), None, "main thread is not a worker");
     }
 }

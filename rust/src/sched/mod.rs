@@ -9,7 +9,7 @@
 //! the same structure the host executor uses with real threads.
 
 mod host;
-pub use host::HostExecutor;
+pub use host::{current_worker, HostExecutor, Submitter};
 
 use crate::cachesim::{ClassCounts, Outcome};
 use crate::deque::Deque;
@@ -59,8 +59,14 @@ pub struct RunReport {
     pub dram_bytes: f64,
     /// Final spread rate.
     pub spread_rate: usize,
-    /// Wall-clock time the simulation itself took (perf pass metric).
+    /// Wall-clock time the run took: the simulation itself on the sim
+    /// backend (perf pass metric), real end-to-end execution on the host
+    /// backend (throughput next to the simulated makespan).
     pub wall_ns: u64,
+    /// Successful steals on the real [`HostExecutor`] pool (host backend
+    /// only; 0 for simulated runs, which report virtual steals in
+    /// `steals`).
+    pub host_steals: u64,
 }
 
 impl RunReport {
@@ -448,6 +454,7 @@ impl SimExecutor {
                 .sum(),
             spread_rate: self.policy.spread_rate(),
             wall_ns: wall_start.elapsed().as_nanos() as u64,
+            host_steals: 0,
         }
     }
 

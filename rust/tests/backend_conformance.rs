@@ -1,0 +1,183 @@
+//! Scenario × backend conformance suite.
+//!
+//! Every scenario in the registry runs a small instance on **both**
+//! executor backends with verification on:
+//!
+//! - **Sim** stays golden: run-to-run deterministic, and selecting
+//!   `ExecBackend::Sim` explicitly produces the exact report the default
+//!   driver path produces (the backend seam is byte-for-byte neutral).
+//! - **Host** must pass each scenario's `verify()` hook — the real
+//!   algorithm, computed by coroutines stepped on real worker threads
+//!   with nondeterministic interleaving, still matches the serial
+//!   reference.
+//!
+//! The suite is self-sealing: `suite_covers_entire_registry` fails when
+//! a newly registered scenario is missing from `COVERED`, so adding a
+//! workload forces adding its conformance tests.
+
+use arcas::engine::{self, Driver, ExecBackend, ScenarioParams, ScenarioRun};
+use arcas::policy::by_name;
+use arcas::sched::RunReport;
+use arcas::topology::Topology;
+
+/// Small instances, same knobs the engine golden tests use: ~1k-vertex
+/// graphs, 4 intensity units, fast enough to run 11 scenarios × both
+/// backends on every push.
+fn small_params() -> ScenarioParams {
+    ScenarioParams {
+        scale: 0.002,
+        seed: 11,
+        iters: Some(4),
+        variant: None,
+    }
+}
+
+fn topo() -> Topology {
+    Topology::milan_1s()
+}
+
+/// The deterministic fields of a report (everything except wall time).
+fn key(r: &RunReport) -> (u64, u64, u64, u64, u64, String, String) {
+    (
+        r.makespan_ns,
+        r.dispatches,
+        r.steals,
+        r.migrations,
+        r.barrier_epochs,
+        format!("{:?}", r.counts),
+        format!("{:.3}", r.dram_bytes),
+    )
+}
+
+fn run_on(name: &str, backend: Option<ExecBackend>) -> ScenarioRun {
+    let spec = engine::by_name(name).unwrap_or_else(|| panic!("{name} not in registry"));
+    let mut s = spec.build(&small_params());
+    let mut driver = Driver::new(&topo(), by_name("local", &topo()).unwrap(), 8).with_verify(true);
+    if let Some(b) = backend {
+        driver = driver.with_backend(b);
+    }
+    driver.run(s.as_mut())
+}
+
+/// One scenario's conformance check across both backends.
+fn conformance(name: &str) {
+    // Sim, selected explicitly, twice: deterministic.
+    let sim_a = run_on(name, Some(ExecBackend::Sim));
+    let sim_b = run_on(name, Some(ExecBackend::Sim));
+    assert_eq!(
+        key(&sim_a.report),
+        key(&sim_b.report),
+        "{name}: sim backend must be run-to-run deterministic"
+    );
+    // Default driver path (no backend selected) is the same golden report.
+    let default_run = run_on(name, None);
+    assert_eq!(
+        key(&sim_a.report),
+        key(&default_run.report),
+        "{name}: the backend seam changed the default sim report"
+    );
+    // Host: with_verify(true) already asserted the scenario's verify()
+    // hook against the serial reference; check the report is sane.
+    let host = run_on(name, Some(ExecBackend::Host));
+    assert!(host.report.dispatches > 0, "{name}: host ran nothing");
+    assert!(
+        host.report.makespan_ns > 0,
+        "{name}: host charged no virtual time"
+    );
+    assert!(host.report.wall_ns > 0, "{name}: host wall clock missing");
+    assert!(host.metrics.items >= 0.0, "{name}: bad host metrics");
+}
+
+macro_rules! conformance_tests {
+    ($($test:ident => $name:expr;)*) => {
+        /// Scenario names this suite covers — compared against the
+        /// registry below, so forgetting to add a new scenario here is a
+        /// test failure, not silent under-coverage.
+        const COVERED: &[&str] = &[$($name),*];
+
+        $(
+            #[test]
+            fn $test() {
+                conformance($name);
+            }
+        )*
+    };
+}
+
+conformance_tests! {
+    conformance_bfs => "bfs";
+    conformance_pagerank => "pagerank";
+    conformance_cc => "cc";
+    conformance_sssp => "sssp";
+    conformance_gups => "gups";
+    conformance_streamcluster => "streamcluster";
+    conformance_sgd => "sgd";
+    conformance_sgd_loss => "sgd-loss";
+    conformance_tpch => "tpch";
+    conformance_ycsb => "ycsb";
+    conformance_tpcc => "tpcc";
+}
+
+#[test]
+fn suite_covers_entire_registry() {
+    for spec in engine::registry() {
+        assert!(
+            COVERED.contains(&spec.name),
+            "scenario {:?} is registered but missing from the backend conformance suite — \
+             add it to conformance_tests! in rust/tests/backend_conformance.rs",
+            spec.name
+        );
+    }
+    for name in COVERED {
+        assert!(
+            engine::by_name(name).is_some(),
+            "conformance suite covers {name:?}, which is no longer registered"
+        );
+    }
+    assert_eq!(
+        COVERED.len(),
+        engine::registry().len(),
+        "coverage list and registry disagree"
+    );
+}
+
+/// The acceptance-criteria invocation: `arcas run --scenario bfs
+/// --policy arcas --cores 8 --backend host --verify` (library-level).
+#[test]
+fn bfs_under_arcas_policy_verifies_on_host() {
+    let spec = engine::by_name("bfs").unwrap();
+    let mut s = spec.build(&small_params());
+    let run = Driver::new(&topo(), by_name("arcas", &topo()).unwrap(), 8)
+        .with_backend(ExecBackend::Host)
+        .with_verify(true)
+        .run(s.as_mut());
+    assert!(run.report.dispatches > 0);
+    assert!(run.metrics.get("teps").unwrap() > 0.0);
+}
+
+/// Warm-cache repetition (`--repeat`) composes with both backends.
+#[test]
+fn repeat_runs_compose_with_both_backends() {
+    for backend in ExecBackend::ALL {
+        let spec = engine::by_name("gups").unwrap();
+        let runs = engine::run_repeated(
+            &topo(),
+            2,
+            4,
+            backend,
+            true,
+            None,
+            || by_name("local", &topo()).unwrap(),
+            || spec.build(&small_params()),
+        );
+        assert_eq!(runs.len(), 2);
+        for run in &runs {
+            assert!(run.report.makespan_ns > 0, "{backend}: empty repetition");
+        }
+        // Same machine carried across reps: the second run starts warm.
+        assert!(
+            runs[1].machine.max_time() >= runs[0].report.makespan_ns,
+            "{backend}: machine was not reused"
+        );
+    }
+}

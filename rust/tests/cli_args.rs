@@ -1,0 +1,141 @@
+//! CLI-facing tests: `arcas run` argument validation (backend/repeat),
+//! the `arcas scenarios` listing, and the acceptance-criteria invocation
+//! end-to-end through the real binary.
+
+use arcas::engine::{self, ExecBackend, RunConfig};
+
+fn parse(args: &[&str]) -> Result<RunConfig, String> {
+    RunConfig::from_args(args.iter().map(|s| s.to_string()))
+}
+
+#[test]
+fn run_defaults_to_the_sim_backend_single_run() {
+    let c = parse(&[]).unwrap();
+    assert_eq!(c.backend, ExecBackend::Sim);
+    assert_eq!(c.repeat, 1);
+    assert_eq!(c.scenario, "bfs");
+    assert_eq!(c.policy, "arcas");
+}
+
+#[test]
+fn run_accepts_backend_host_and_repeat() {
+    let c = parse(&["--backend", "host", "--repeat", "3", "--cores", "8"]).unwrap();
+    assert_eq!(c.backend, ExecBackend::Host);
+    assert_eq!(c.repeat, 3);
+    assert_eq!(c.cores, 8);
+}
+
+#[test]
+fn run_rejects_unknown_backend() {
+    let err = parse(&["--backend", "gpu"]).unwrap_err();
+    assert!(err.contains("unknown backend"), "{err}");
+    assert!(err.contains("sim|host"), "{err}");
+}
+
+#[test]
+fn run_rejects_repeat_zero_and_garbage() {
+    assert!(parse(&["--repeat", "0"])
+        .unwrap_err()
+        .contains("--repeat must be >= 1"));
+    assert!(parse(&["--repeat", "lots"]).unwrap_err().contains("--repeat"));
+    assert!(parse(&["--cores", "0"]).unwrap_err().contains("--cores"));
+}
+
+#[test]
+fn run_help_documents_the_new_flags() {
+    let help = RunConfig::cli()
+        .parse_from(["--help".to_string()])
+        .unwrap_err();
+    for flag in ["--backend", "--repeat", "--scenario", "--verify"] {
+        assert!(help.contains(flag), "help is missing {flag}:\n{help}");
+    }
+}
+
+#[test]
+fn scenarios_listing_includes_every_registry_name() {
+    let listing = engine::scenarios_table();
+    for spec in engine::registry() {
+        assert!(
+            listing.contains(spec.name),
+            "`arcas scenarios` output is missing {:?}:\n{listing}",
+            spec.name
+        );
+        assert!(
+            listing.contains(spec.family),
+            "`arcas scenarios` output is missing family {:?}",
+            spec.family
+        );
+    }
+}
+
+/// The acceptance-criteria invocation against the real binary:
+/// `arcas run --scenario bfs --policy arcas --cores 8 --backend host
+/// --verify` (at test scale) must exit 0 and report verification.
+#[test]
+fn arcas_run_bfs_host_verify_end_to_end() {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_arcas"))
+        .args([
+            "run",
+            "--scenario",
+            "bfs",
+            "--policy",
+            "arcas",
+            "--cores",
+            "8",
+            "--backend",
+            "host",
+            "--verify",
+            "--scale",
+            "0.002",
+        ])
+        .output()
+        .expect("spawn arcas binary");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        out.status.success(),
+        "arcas run failed:\nstdout:\n{stdout}\nstderr:\n{stderr}"
+    );
+    assert!(stdout.contains("host backend"), "{stdout}");
+    assert!(stdout.contains("verified"), "{stdout}");
+}
+
+/// `--repeat` through the real binary: per-repetition lines + warm runs.
+#[test]
+fn arcas_run_repeat_end_to_end() {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_arcas"))
+        .args([
+            "run",
+            "--scenario",
+            "gups",
+            "--policy",
+            "local",
+            "--cores",
+            "4",
+            "--repeat",
+            "2",
+            "--scale",
+            "0.002",
+            "--iters",
+            "1000",
+        ])
+        .output()
+        .expect("spawn arcas binary");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "{stdout}");
+    assert!(stdout.contains("rep 0"), "{stdout}");
+    assert!(stdout.contains("(warm)"), "{stdout}");
+}
+
+/// Unknown backends must be a hard CLI error (exit != 0), not a silent
+/// fallback to the simulator.
+#[test]
+fn arcas_run_unknown_backend_exits_nonzero() {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_arcas"))
+        .args(["run", "--backend", "gpu"])
+        .output()
+        .expect("spawn arcas binary");
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("unknown backend"), "{stderr}");
+}

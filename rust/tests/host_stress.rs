@@ -1,0 +1,210 @@
+//! HostExecutor stress & property tests: the pool invariants the host
+//! execution backend leans on.
+//!
+//! - any number of threads may submit concurrently (the per-worker
+//!   inboxes serialize external pushes; the Chase–Lev deques stay
+//!   owner-only),
+//! - jobs may submit follow-up jobs from inside the pool (nested
+//!   `execute` via [`Submitter`]), and `wait_all` drains whole chains,
+//! - `wait_all` with zero jobs returns immediately,
+//! - under a seeded randomized schedule no job is lost or run twice,
+//! - the job slot table is recycled, not append-only (regression for the
+//!   one-slot-per-job leak).
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use arcas::sched::{current_worker, HostExecutor, Submitter};
+use arcas::topology::Topology;
+use arcas::util::Rng;
+
+fn pool(workers: usize) -> HostExecutor {
+    HostExecutor::new(workers, &Topology::milan_1s(), false)
+}
+
+#[test]
+fn zero_job_wait_all_returns_immediately() {
+    let p = pool(4);
+    p.wait_all();
+    p.wait_all(); // and is idempotent
+    p.execute(|| {});
+    p.wait_all();
+    p.wait_all();
+}
+
+#[test]
+fn concurrent_submitters_from_many_threads() {
+    const THREADS: usize = 8;
+    const JOBS: u64 = 500;
+    let p = pool(4);
+    let counter = Arc::new(AtomicU64::new(0));
+    let handles: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let sub: Submitter = p.submitter();
+            let counter = counter.clone();
+            std::thread::spawn(move || {
+                for j in 0..JOBS {
+                    let c = counter.clone();
+                    // Mix round-robin and targeted submissions.
+                    if j % 2 == 0 {
+                        sub.execute(move || {
+                            c.fetch_add(1, Ordering::Relaxed);
+                        });
+                    } else {
+                        sub.execute_on(t + j as usize, move || {
+                            c.fetch_add(1, Ordering::Relaxed);
+                        });
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    p.wait_all();
+    assert_eq!(counter.load(Ordering::Relaxed), THREADS as u64 * JOBS);
+}
+
+#[test]
+fn nested_execute_from_inside_jobs() {
+    // Each job spawns two children down to depth 6: a full binary tree,
+    // 2^7 - 1 = 127 executions from one root submission. wait_all must
+    // see the whole chain, not just the root.
+    let p = pool(4);
+    let counter = Arc::new(AtomicU64::new(0));
+
+    fn spawn_tree(sub: Submitter, counter: Arc<AtomicU64>, depth: u32) {
+        counter.fetch_add(1, Ordering::Relaxed);
+        if depth == 0 {
+            return;
+        }
+        for _ in 0..2 {
+            let sub2 = sub.clone();
+            let c = counter.clone();
+            sub.execute(move || spawn_tree(sub2, c, depth - 1));
+        }
+    }
+
+    let sub = p.submitter();
+    let c = counter.clone();
+    let sub2 = sub.clone();
+    sub.execute(move || spawn_tree(sub2, c, 6));
+    p.wait_all();
+    assert_eq!(counter.load(Ordering::Relaxed), (1 << 7) - 1);
+}
+
+#[test]
+fn randomized_schedule_loses_nothing_and_runs_nothing_twice() {
+    // Seeded random mix of round-robin vs targeted submissions, bursty
+    // round sizes, random tiny busy-work, random wait_all points. Every
+    // job bumps its own cell: afterwards each must be exactly 1.
+    let mut rng = Rng::new(0xA5CA5);
+    let p = pool(6);
+    const TOTAL: usize = 4000;
+    let cells: Arc<Vec<AtomicU64>> = Arc::new((0..TOTAL).map(|_| AtomicU64::new(0)).collect());
+    let mut submitted = 0usize;
+    while submitted < TOTAL {
+        let burst = (1 + rng.gen_range(64) as usize).min(TOTAL - submitted);
+        for _ in 0..burst {
+            let id = submitted;
+            submitted += 1;
+            let cells = cells.clone();
+            let spin = rng.gen_range(200);
+            let job = move || {
+                // Tiny random busy-work so jobs overlap with submission.
+                for _ in 0..spin {
+                    std::hint::spin_loop();
+                }
+                cells[id].fetch_add(1, Ordering::Relaxed);
+            };
+            if rng.gen_range(2) == 0 {
+                p.execute(job);
+            } else {
+                p.execute_on(rng.gen_range(16) as usize, job);
+            }
+        }
+        if rng.gen_range(4) == 0 {
+            p.wait_all();
+        }
+    }
+    p.wait_all();
+    for (id, c) in cells.iter().enumerate() {
+        assert_eq!(
+            c.load(Ordering::Relaxed),
+            1,
+            "job {id} ran {} times (must be exactly once)",
+            c.load(Ordering::Relaxed)
+        );
+    }
+}
+
+#[test]
+fn slot_table_stays_bounded_across_rounds() {
+    // Regression: `Shared.jobs` used to be append-only, leaking one slot
+    // per job ever submitted. 100 reuse_after_wait-style rounds of 32
+    // jobs must not grow the table past one round's in-flight peak.
+    let p = pool(2);
+    let counter = Arc::new(AtomicU64::new(0));
+    for _ in 0..100 {
+        for _ in 0..32 {
+            let c = counter.clone();
+            p.execute(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        p.wait_all();
+    }
+    assert_eq!(counter.load(Ordering::Relaxed), 3200);
+    assert!(
+        p.slot_capacity() <= 32,
+        "slot table leaked: {} slots alive after 3200 jobs in rounds of 32",
+        p.slot_capacity()
+    );
+}
+
+#[test]
+fn jobs_always_observe_a_worker_identity() {
+    // current_worker() is how the host backend charges machine time to
+    // the core actually running a step: Some(w) on-pool, None off-pool.
+    let p = pool(3);
+    let bad = Arc::new(AtomicUsize::new(0));
+    for _ in 0..100 {
+        let bad = bad.clone();
+        p.execute(move || match current_worker() {
+            Some(w) if w < 3 => {}
+            _ => {
+                bad.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+    }
+    p.wait_all();
+    assert_eq!(bad.load(Ordering::Relaxed), 0);
+    assert_eq!(current_worker(), None);
+}
+
+#[test]
+fn steals_rebalance_targeted_floods() {
+    // Flood one worker's inbox while the others are idle: thieves must
+    // take from the flooded queue (steal counter moves) and everything
+    // still runs exactly once.
+    let p = pool(8);
+    let counter = Arc::new(AtomicU64::new(0));
+    for _ in 0..256 {
+        let c = counter.clone();
+        p.execute_on(0, move || {
+            let mut s = 1u64;
+            for k in 0..20_000u64 {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(k);
+            }
+            std::hint::black_box(s);
+            c.fetch_add(1, Ordering::Relaxed);
+        });
+    }
+    p.wait_all();
+    assert_eq!(counter.load(Ordering::Relaxed), 256);
+    assert!(
+        p.steal_count() > 0,
+        "8 idle workers never stole from a flooded victim"
+    );
+}
