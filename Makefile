@@ -8,7 +8,7 @@
 #                   python + jax; the rust build runs fine without them)
 #   make bench-smoke  quick pass over two figure benches
 
-.PHONY: verify build test fmt clippy ci artifacts bench-smoke
+.PHONY: verify build test fmt clippy ci artifacts bench-smoke host-scaling
 
 verify: build test
 
@@ -32,3 +32,9 @@ artifacts:
 bench-smoke:
 	cargo bench --bench fig13_oltp -- --quick --scale 0.002
 	cargo bench --bench fig05_local_vs_dist -- --quick
+
+# Host-backend scaling smoke: multi-worker wall time must beat 1-worker
+# on a memory-bound scenario (sharded accounting = no whole-machine
+# lock). Emits BENCH_host_scaling.json.
+host-scaling:
+	cargo bench --bench micro_runtime -- --scaling-only --assert-scaling --workers 1,8

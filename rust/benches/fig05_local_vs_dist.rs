@@ -25,7 +25,7 @@ fn run_one(
     size: u64,
     iters: u64,
 ) -> u64 {
-    let mut machine = Machine::new(topo.clone());
+    let machine = Machine::new(topo.clone());
     // Per-core chunk regions of the shared vector.
     let chunk = (size / CORES as u64).max(64);
     let regions: Vec<_> = (0..CORES)

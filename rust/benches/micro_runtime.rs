@@ -1,24 +1,162 @@
 //! Runtime microbenchmarks (wall-clock, criterion-style): the §Perf
-//! numbers for the L3 hot paths.
+//! numbers for the L3 hot paths, plus the host-backend scaling smoke.
 //!
 //!   - Chase-Lev deque push/pop/steal
 //!   - simulator dispatch rate (coroutine steps/s)
 //!   - cache-model access cost
 //!   - host executor job dispatch overhead
 //!   - Algorithm 2 placement-map computation
+//!   - host-backend *scaling* over a workers axis (`--workers 1,8`):
+//!     a fixed memory-bound GUPS workload split across N real workers.
+//!     With sharded machine accounting, multi-worker wall time must beat
+//!     single-worker (steps charge disjoint shards concurrently); CI
+//!     pins this with `--assert-scaling` and the run emits
+//!     `BENCH_host_scaling.json` for trend tracking.
+//!
+//! Flags: `--workers a,b,..` sets the axis, `--scaling-only` skips the
+//! micro section (CI), `--assert-scaling` makes the scaling check fatal.
 
 use arcas::controller::placement_map;
 use arcas::deque::Deque;
+use arcas::engine::{Driver, ExecBackend};
 use arcas::mem::Placement;
-use arcas::policy::LocalCachePolicy;
+use arcas::policy::{LocalCachePolicy, ShoalPolicy};
 use arcas::sched::HostExecutor;
 use arcas::sim::Machine;
 use arcas::task::IterTask;
 use arcas::topology::Topology;
 use arcas::util::bench::Bencher;
+use arcas::util::cli::{Args, Cli};
+use arcas::workloads::graph::GupsScenario;
 
-fn main() {
-    let mut b = Bencher::new();
+fn cli() -> Cli {
+    Cli::new("micro_runtime", "runtime microbenchmarks + host scaling smoke")
+        .opt(
+            "workers",
+            "1,8",
+            "host-backend scaling axis: comma-separated worker counts",
+        )
+        .opt("scaling-reps", "3", "repetitions per workers point (best-of)")
+        .flag("assert-scaling", "fail unless max-workers beats 1-worker wall time")
+        .flag("scaling-only", "run only the host-backend scaling section")
+        .flag("quick", "smaller runs for smoke testing")
+        .flag("bench", "(passed by `cargo bench`; ignored)")
+}
+
+/// Scaling topology: Milan with **one core per CCD**, so worker *i* =
+/// core *i* = chiplet-shard *i*. Every worker owns a whole
+/// `ChipletShard`; what stays shared is exactly what hardware shares —
+/// the DDR trackers, coherence invalidations and remote residency
+/// probes. A regression that re-serializes shard accounting (a global
+/// machine lock) shows up directly on this axis instead of hiding
+/// behind the workload's own unlocked compute.
+fn scaling_topo() -> Topology {
+    let mut t = Topology::milan_1s();
+    t.cores_per_chiplet = 1;
+    t.name = "milan_1s_1cpc".into();
+    t
+}
+
+/// One host-backend run: `workers` ranks (Shoal places rank i on core i,
+/// so the pool is exactly `workers` threads, each on its own chiplet
+/// shard under [`scaling_topo`]) splitting a fixed total of GUPS updates
+/// over a 16 MiB table — memory-bound in the model *and* genuinely
+/// parallel real work (atomic XORs over the table). Returns wall ns.
+fn host_scaling_run(topo: &Topology, workers: usize, total_updates: u64, seed: u64) -> u64 {
+    let per_rank = (total_updates / workers as u64).max(1);
+    let mut s = GupsScenario::new(1 << 21, per_rank, seed);
+    let run = Driver::new(topo, Box::new(ShoalPolicy::new()), workers)
+        .with_backend(ExecBackend::Host)
+        .run(&mut s);
+    run.report.wall_ns
+}
+
+/// The host-backend scaling smoke. Returns false when `--assert-scaling`
+/// is set and the bound is violated.
+fn host_scaling(args: &Args) -> bool {
+    let topo = scaling_topo();
+    let axis: Vec<usize> = args
+        .u64_list("workers")
+        .iter()
+        .map(|&w| (w as usize).clamp(1, topo.num_cores()))
+        .collect();
+    assert!(!axis.is_empty(), "--workers needs at least one point");
+    let total_updates: u64 = if args.flag("quick") { 400_000 } else { 2_000_000 };
+    let reps = args.u64("scaling-reps").max(1);
+
+    println!("### host-backend scaling (sharded machine accounting)");
+    println!(
+        "# scenario=gups table=16MiB total_updates={total_updates} backend=host reps={reps} \
+         (best-of); topology={} (1 core/CCD: worker i = shard i)",
+        topo.name
+    );
+    let mut points: Vec<(usize, u64)> = Vec::new();
+    for &w in &axis {
+        let mut best = u64::MAX;
+        for rep in 0..reps {
+            best = best.min(host_scaling_run(&topo, w, total_updates, 42 + rep));
+        }
+        println!(
+            "  workers={w:<3} wall = {:>10.3} ms  ({:.1} M updates/s real)",
+            best as f64 / 1e6,
+            total_updates as f64 / best as f64 * 1e3
+        );
+        points.push((w, best));
+    }
+
+    // Emit BENCH_host_scaling.json for CI artifacts / trend tracking.
+    let wall_1 = points.iter().find(|(w, _)| *w == 1).map(|&(_, ns)| ns);
+    let (w_max, wall_max) = *points.iter().max_by_key(|(w, _)| *w).unwrap();
+    let speedup = wall_1.map(|w1| w1 as f64 / wall_max as f64);
+    let json_points: Vec<String> = points
+        .iter()
+        .map(|(w, ns)| format!("{{\"workers\": {w}, \"wall_ns\": {ns}}}"))
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"host_scaling\",\n  \"scenario\": \"gups\",\n  \
+         \"backend\": \"host\",\n  \"total_updates\": {total_updates},\n  \
+         \"points\": [{}],\n  \"speedup_max_vs_1\": {}\n}}\n",
+        json_points.join(", "),
+        speedup.map_or("null".to_string(), |s| format!("{s:.3}")),
+    );
+    let path = std::path::Path::new("BENCH_host_scaling.json");
+    match std::fs::write(path, &json) {
+        Ok(()) => println!(
+            "  => wrote {}",
+            std::fs::canonicalize(path)
+                .unwrap_or_else(|_| path.to_path_buf())
+                .display()
+        ),
+        Err(e) => println!("  => could not write BENCH_host_scaling.json: {e}"),
+    }
+
+    // The smoke assertion: more workers must actually help. The bound is
+    // deliberately loose (CI runners have few cores and 8 oversubscribed
+    // threads still beat 1), but a serialized machine — the pre-shard
+    // global mutex — fails it decisively (speedup there was ~1.0x).
+    if let (Some(w1), true) = (wall_1, w_max > 1) {
+        let speedup = w1 as f64 / wall_max as f64;
+        let ok = wall_max as f64 <= w1 as f64 * 0.9;
+        println!(
+            "  => speedup {w_max}-worker vs 1-worker: {speedup:.2}x ({})",
+            if ok { "pass" } else { "FAIL: expected > 1.11x" }
+        );
+        if args.flag("assert-scaling") && !ok {
+            return false;
+        }
+    } else if args.flag("assert-scaling") {
+        println!("  => --assert-scaling needs a workers axis spanning 1 and >1");
+        return false;
+    }
+    true
+}
+
+fn micro(args: &Args) {
+    let mut b = if args.flag("quick") {
+        Bencher::quick()
+    } else {
+        Bencher::new()
+    };
     let topo = Topology::milan_2s();
 
     // --- deque ops.
@@ -39,7 +177,7 @@ fn main() {
     });
 
     // --- cache model access.
-    let mut m = Machine::new(topo.clone());
+    let m = Machine::new(topo.clone());
     let r = m.alloc("bench", 64 << 20, Placement::Interleave);
     b.bench("cachesim access (rand 1k ops)", || {
         m.access(0, arcas::cachesim::Access::rand_read(r, 1000, 64 << 20))
@@ -95,4 +233,15 @@ fn main() {
         "  => {:.1} us/host-backed run (incl. pool spawn)",
         res.median_ns / 1e3
     );
+}
+
+fn main() {
+    let args = cli().parse();
+    if !args.flag("scaling-only") {
+        micro(&args);
+    }
+    if !host_scaling(&args) {
+        eprintln!("host-backend scaling assertion failed");
+        std::process::exit(1);
+    }
 }

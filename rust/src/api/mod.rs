@@ -206,7 +206,7 @@ impl Arcas {
         // Request message.
         self.machine.message(from_core, target_core, 64);
         let mut ctx = TaskCtx {
-            machine: &mut self.machine,
+            machine: &self.machine,
             core: target_core,
             task_id: usize::MAX,
             rank: 0,
@@ -225,7 +225,7 @@ impl Arcas {
     pub fn call_async(&mut self, from_core: usize, target_core: usize, f: impl FnOnce(&mut TaskCtx<'_>) + Send) {
         self.machine.message(from_core, target_core, 64);
         let mut ctx = TaskCtx {
-            machine: &mut self.machine,
+            machine: &self.machine,
             core: target_core,
             task_id: usize::MAX,
             rank: 0,
@@ -298,7 +298,7 @@ mod tests {
             ctx.seq_read(r, 4 << 20);
         });
         // Second run: the region is warm in chiplet 0's L3.
-        let resident = rt.machine().cache.resident(0, r);
+        let resident = rt.machine().resident(0, r);
         assert!(resident > 0, "residency must persist across runs");
     }
 

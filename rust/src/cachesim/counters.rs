@@ -60,6 +60,12 @@ impl Counters {
         }
     }
 
+    /// Assemble from per-chiplet slices (the sharded machine keeps each
+    /// chiplet's `ClassCounts` in its own shard and snapshots them here).
+    pub fn from_parts(per_chiplet: Vec<ClassCounts>) -> Self {
+        Self { per_chiplet }
+    }
+
     pub fn record(&mut self, chiplet: usize, o: &Outcome) {
         self.per_chiplet[chiplet].add(o);
     }

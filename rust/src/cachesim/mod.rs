@@ -16,6 +16,14 @@
 //! Algorithm 1's `getEventCounter()` reads (remote-chiplet cache-fill
 //! events). Expected-value accounting keeps the model deterministic and
 //! fast — billions of modeled line accesses cost a few arithmetic ops.
+//!
+//! Since the sharded-accounting refactor this module holds the *model
+//! pieces*, not machine-wide state: [`ChipletL3`] is one chiplet's
+//! residency tracker (owned by that chiplet's shard in
+//! [`crate::coordinator`]), and [`classify`] is the pure hit/miss split
+//! over per-chiplet residency queries. The wiring — which shard to lock, in what
+//! order — lives in [`crate::sim::Machine`], so the model math itself
+//! cannot depend on how the state is partitioned.
 
 mod counters;
 pub use counters::{ClassCounts, Counters};
@@ -121,25 +129,36 @@ struct Segment {
     stamp: u64,
 }
 
-/// One chiplet's shared L3.
+/// One chiplet's shared L3: per-region resident bytes under segment-LRU.
+///
+/// Owned by that chiplet's shard ([`crate::coordinator::ChipletShard`]);
+/// the recency `stamp` passed to [`ChipletL3::fill`] only ever needs to
+/// be monotone *per chiplet*, which is why a per-shard counter replaced
+/// the old machine-global one without changing any eviction decision.
 #[derive(Clone, Debug)]
-struct ChipletL3 {
+pub struct ChipletL3 {
     capacity: u64,
     used: u64,
     segments: HashMap<RegionId, Segment>,
 }
 
 impl ChipletL3 {
-    fn new(capacity: u64) -> Self {
+    pub fn new(capacity: u64) -> Self {
         Self { capacity, used: 0, segments: HashMap::new() }
     }
 
-    fn resident(&self, region: RegionId) -> u64 {
+    /// Resident bytes of `region` in this L3.
+    pub fn resident(&self, region: RegionId) -> u64 {
         self.segments.get(&region).map(|s| s.bytes).unwrap_or(0)
     }
 
+    /// Total resident bytes (≤ capacity).
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+
     /// Bring `bytes` of `region` into this L3, evicting LRU segments.
-    fn fill(&mut self, region: RegionId, bytes: u64, stamp: u64, region_size: u64) {
+    pub fn fill(&mut self, region: RegionId, bytes: u64, stamp: u64, region_size: u64) {
         let have = self.resident(region);
         let want = (have + bytes).min(region_size).min(self.capacity);
         if want <= have {
@@ -180,7 +199,7 @@ impl ChipletL3 {
 
     /// Drop `frac` of the resident bytes of `region` (coherence
     /// invalidation on remote writes).
-    fn invalidate_frac(&mut self, region: RegionId, frac: f64) {
+    pub fn invalidate_frac(&mut self, region: RegionId, frac: f64) {
         if let Some(s) = self.segments.get_mut(&region) {
             let drop = (s.bytes as f64 * frac.clamp(0.0, 1.0)) as u64;
             s.bytes -= drop;
@@ -191,152 +210,108 @@ impl ChipletL3 {
         }
     }
 
-    fn flush(&mut self) {
+    /// Clear all residency (between experiment repetitions).
+    pub fn flush(&mut self) {
         self.segments.clear();
         self.used = 0;
     }
 }
 
-/// The machine-wide cache model.
-#[derive(Clone, Debug)]
-pub struct CacheSim {
-    topo: Topology,
-    chiplets: Vec<ChipletL3>,
-    region_sizes: HashMap<RegionId, u64>,
-    stamp: u64,
-    /// Hierarchical access counters (the libpfm substitute).
-    pub counters: Counters,
+/// [`classify`]'s result: the expected outcome plus the local-residency
+/// fraction the caller needs for the residency update (fill size).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Classified {
+    pub out: Outcome,
+    /// Probability a touched line was already resident in the issuing
+    /// core's own chiplet.
+    pub p_local: f64,
 }
 
-impl CacheSim {
-    pub fn new(topo: &Topology) -> Self {
-        let chiplets = (0..topo.num_chiplets())
-            .map(|_| ChipletL3::new(topo.l3_per_chiplet))
-            .collect();
-        Self {
-            topo: topo.clone(),
-            chiplets,
-            region_sizes: HashMap::new(),
-            stamp: 0,
-            counters: Counters::new(topo.num_chiplets()),
-        }
+/// Pure hit/miss classification of one access over per-chiplet residency.
+///
+/// `resident_of(ch)` returns the resident-byte count of `acc.region` in
+/// chiplet `ch`'s L3; each chiplet is queried **exactly once**, in a
+/// fixed order (own chiplet, same-NUMA siblings, then remote NUMA
+/// domains). The caller decides how a query is answered — one brief
+/// shard-lock per chiplet in the sharded machine (never nested, and
+/// skippable when the answer is known to be irrelevant), direct `Vec`
+/// indexing in a monolithic oracle — so no allocation or snapshot
+/// buffer is needed. The arithmetic, including float summation order
+/// over sibling and remote chiplets, is exactly the pre-refactor
+/// `CacheSim::access` math, so every arrangement produces bit-identical
+/// outcomes.
+pub fn classify(
+    topo: &Topology,
+    core: usize,
+    acc: Access,
+    region_size: u64,
+    resident_of: impl Fn(usize) -> u64,
+) -> Classified {
+    let my_chiplet = topo.chiplet_of(core);
+    let my_numa = topo.numa_of_core(core);
+    let size = region_size.max(1) as f64;
+    let ops = acc.pattern.ops() as f64;
+    if ops == 0.0 {
+        return Classified::default();
     }
 
-    pub fn topology(&self) -> &Topology {
-        &self.topo
-    }
+    // Probability a touched line is resident in a given chiplet's L3.
+    // Residency is tracked per-region; resident bytes are assumed
+    // uniformly spread over the region.
+    let frac_of = |ch: usize| -> f64 { (resident_of(ch) as f64 / size).min(1.0) };
 
-    pub fn register_region(&mut self, region: RegionId, size: u64) {
-        self.region_sizes.insert(region, size.max(1));
-    }
+    let p_local = frac_of(my_chiplet);
 
-    pub fn drop_region(&mut self, region: RegionId) {
-        self.region_sizes.remove(&region);
-        for ch in &mut self.chiplets {
-            ch.invalidate_frac(region, 1.0);
+    // Fraction available from sibling chiplets in the same NUMA domain
+    // (union bound, capped by what is not already local).
+    let mut p_near = 0.0;
+    for ch in topo.chiplets_of_numa(my_numa) {
+        if ch != my_chiplet {
+            p_near += frac_of(ch);
         }
     }
+    p_near = p_near.min(1.0 - p_local).max(0.0);
 
-    pub fn region_size(&self, region: RegionId) -> u64 {
-        *self.region_sizes.get(&region).unwrap_or(&1)
-    }
-
-    /// Resident bytes of `region` in `chiplet`'s L3.
-    pub fn resident(&self, chiplet: usize, region: RegionId) -> u64 {
-        self.chiplets[chiplet].resident(region)
-    }
-
-    /// Flush every chiplet's L3 (between experiment repetitions).
-    pub fn flush_all(&mut self) {
-        for ch in &mut self.chiplets {
-            ch.flush();
+    // Fraction available from chiplets on other NUMA domains.
+    let mut p_far = 0.0;
+    for numa in 0..topo.num_numa() {
+        if numa == my_numa {
+            continue;
+        }
+        for ch in topo.chiplets_of_numa(numa) {
+            p_far += frac_of(ch);
         }
     }
+    p_far = p_far.min((1.0 - p_local - p_near).max(0.0));
 
-    /// Model one access issued by `core`; returns the expected outcome and
-    /// updates residency + counters.
-    pub fn access(&mut self, core: usize, acc: Access) -> Outcome {
-        self.stamp += 1;
-        let my_chiplet = self.topo.chiplet_of(core);
-        let my_numa = self.topo.numa_of_core(core);
-        let size = self.region_size(acc.region) as f64;
-        let ops = acc.pattern.ops() as f64;
-        if ops == 0.0 {
-            return Outcome::default();
-        }
+    let p_dram = (1.0 - p_local - p_near - p_far).max(0.0);
 
-        // Probability a touched line is resident in a given chiplet's L3.
-        // Residency is tracked per-region; resident bytes are assumed
-        // uniformly spread over the region.
-        let frac_of = |resident: u64| -> f64 { (resident as f64 / size).min(1.0) };
+    let local_hits = ops * p_local;
+    let near_hits = ops * p_near;
+    let far_hits = ops * p_far;
+    let dram_lines = ops * p_dram;
 
-        let p_local = frac_of(self.chiplets[my_chiplet].resident(acc.region));
+    // Latency per class; overlapped by MLP.
+    let lat = &topo.lat;
+    let near_ns = lat.l3_hit_ns + lat.inter_chiplet_near_ns;
+    let far_ns = lat.l3_hit_ns + lat.cross_socket_ns;
+    let dram_ns = topo.dram_access_ns(core, my_numa);
+    let raw_ns = local_hits * lat.l3_hit_ns
+        + near_hits * near_ns
+        + far_hits * far_ns
+        + dram_lines * dram_ns;
+    let latency_ns = raw_ns / acc.mlp.max(1.0);
 
-        // Fraction available from sibling chiplets in the same NUMA domain
-        // (union bound, capped by what is not already local).
-        let mut p_near = 0.0;
-        for ch in self.topo.chiplets_of_numa(my_numa) {
-            if ch != my_chiplet {
-                p_near += frac_of(self.chiplets[ch].resident(acc.region));
-            }
-        }
-        p_near = p_near.min(1.0 - p_local).max(0.0);
-
-        // Fraction available from chiplets on other NUMA domains.
-        let mut p_far = 0.0;
-        for numa in 0..self.topo.num_numa() {
-            if numa == my_numa {
-                continue;
-            }
-            for ch in self.topo.chiplets_of_numa(numa) {
-                p_far += frac_of(self.chiplets[ch].resident(acc.region));
-            }
-        }
-        p_far = p_far.min((1.0 - p_local - p_near).max(0.0));
-
-        let p_dram = (1.0 - p_local - p_near - p_far).max(0.0);
-
-        let local_hits = ops * p_local;
-        let near_hits = ops * p_near;
-        let far_hits = ops * p_far;
-        let dram_lines = ops * p_dram;
-
-        // Latency per class; overlapped by MLP.
-        let lat = &self.topo.lat;
-        let near_ns = lat.l3_hit_ns + lat.inter_chiplet_near_ns;
-        let far_ns = lat.l3_hit_ns + lat.cross_socket_ns;
-        let dram_ns = self.topo.dram_access_ns(core, my_numa);
-        let raw_ns = local_hits * lat.l3_hit_ns
-            + near_hits * near_ns
-            + far_hits * far_ns
-            + dram_lines * dram_ns;
-        let latency_ns = raw_ns / acc.mlp.max(1.0);
-
-        // Residency update: fills land in the local chiplet's L3.
-        let unique = acc.pattern.unique_bytes().min(size as u64);
-        let fill_bytes = ((unique as f64) * (1.0 - p_local)) as u64;
-        self.chiplets[my_chiplet].fill(acc.region, fill_bytes, self.stamp, size as u64);
-
-        // Coherence: a write invalidates the written fraction elsewhere.
-        if acc.write {
-            let written_frac = (unique as f64 / size).min(1.0);
-            for ch in 0..self.chiplets.len() {
-                if ch != my_chiplet {
-                    self.chiplets[ch].invalidate_frac(acc.region, written_frac);
-                }
-            }
-        }
-
-        let out = Outcome {
+    Classified {
+        out: Outcome {
             local_hits,
             near_hits,
             far_hits,
             dram_lines,
             latency_ns,
             dram_bytes: dram_lines * LINE as f64,
-        };
-        self.counters.record(my_chiplet, &out);
-        out
+        },
+        p_local,
     }
 }
 
@@ -344,114 +319,6 @@ impl CacheSim {
 mod tests {
     use super::*;
     use crate::mem::RegionId;
-
-    fn setup() -> (CacheSim, RegionId) {
-        let topo = Topology::milan_2s();
-        let mut sim = CacheSim::new(&topo);
-        let r = RegionId(1);
-        sim.register_region(r, 16 << 20); // 16 MiB, fits one chiplet L3
-        (sim, r)
-    }
-
-    #[test]
-    fn cold_access_goes_to_dram() {
-        let (mut sim, r) = setup();
-        let out = sim.access(0, Access::seq_read(r, 16 << 20));
-        assert!(out.dram_lines > 0.9 * out.total_ops());
-        assert!(out.local_hits < 0.1 * out.total_ops());
-    }
-
-    #[test]
-    fn warm_access_hits_local_l3() {
-        let (mut sim, r) = setup();
-        sim.access(0, Access::seq_read(r, 16 << 20)); // warm
-        let out = sim.access(0, Access::seq_read(r, 16 << 20));
-        assert!(
-            out.local_hits > 0.95 * out.total_ops(),
-            "local={} total={}",
-            out.local_hits,
-            out.total_ops()
-        );
-    }
-
-    #[test]
-    fn sibling_chiplet_hit_counts_as_near() {
-        let (mut sim, r) = setup();
-        sim.access(0, Access::seq_read(r, 16 << 20)); // chiplet 0 warm
-        // Core 8 is chiplet 1 (same NUMA): should mostly hit chiplet 0's L3.
-        let out = sim.access(8, Access::rand_read(r, 1000, 16 << 20));
-        assert!(out.near_hits > 0.8 * out.total_ops(), "near={:?}", out);
-    }
-
-    #[test]
-    fn cross_socket_hit_counts_as_far() {
-        let (mut sim, r) = setup();
-        sim.access(0, Access::seq_read(r, 16 << 20));
-        // Core 64 is on socket 1.
-        let out = sim.access(64, Access::rand_read(r, 1000, 16 << 20));
-        assert!(out.far_hits > 0.8 * out.total_ops(), "far={:?}", out);
-    }
-
-    #[test]
-    fn oversized_region_misses() {
-        let topo = Topology::milan_2s();
-        let mut sim = CacheSim::new(&topo);
-        let r = RegionId(2);
-        sim.register_region(r, 256 << 20); // 8x one chiplet's L3
-        sim.access(0, Access::seq_read(r, 256 << 20));
-        let out = sim.access(0, Access::rand_read(r, 10_000, 256 << 20));
-        // At most 32/256 can be resident locally.
-        assert!(out.local_hits < 0.2 * out.total_ops(), "{out:?}");
-        assert!(out.dram_lines > 0.5 * out.total_ops(), "{out:?}");
-    }
-
-    #[test]
-    fn latency_orders_local_faster_than_remote() {
-        let (mut sim, r) = setup();
-        sim.access(0, Access::seq_read(r, 16 << 20));
-        let local = sim.access(0, Access::rand_read(r, 1000, 16 << 20));
-        let mut sim2 = CacheSim::new(&Topology::milan_2s());
-        sim2.register_region(r, 16 << 20);
-        sim2.access(0, Access::seq_read(r, 16 << 20));
-        let remote = sim2.access(40, Access::rand_read(r, 1000, 16 << 20));
-        assert!(local.latency_ns < remote.latency_ns);
-    }
-
-    #[test]
-    fn write_invalidates_remote_copies() {
-        let (mut sim, r) = setup();
-        sim.access(0, Access::seq_read(r, 16 << 20));
-        assert!(sim.resident(0, r) > 0);
-        // Full overwrite from chiplet 2.
-        sim.access(16, Access::seq_write(r, 16 << 20));
-        assert_eq!(sim.resident(0, r), 0, "writer must invalidate readers");
-        assert!(sim.resident(2, r) > 0);
-    }
-
-    #[test]
-    fn lru_eviction_respects_capacity() {
-        let topo = Topology::milan_2s();
-        let mut sim = CacheSim::new(&topo);
-        let a = RegionId(10);
-        let b = RegionId(11);
-        sim.register_region(a, 24 << 20);
-        sim.register_region(b, 24 << 20);
-        sim.access(0, Access::seq_read(a, 24 << 20));
-        sim.access(0, Access::seq_read(b, 24 << 20));
-        let used = sim.chiplets[0].used;
-        assert!(used <= topo.l3_per_chiplet);
-        // b is more recent; a must have been (partially) evicted.
-        assert!(sim.resident(0, b) > sim.resident(0, a));
-    }
-
-    #[test]
-    fn counters_accumulate() {
-        let (mut sim, r) = setup();
-        sim.access(0, Access::seq_read(r, 1 << 20));
-        sim.access(8, Access::rand_read(r, 100, 1 << 20));
-        assert!(sim.counters.total().dram > 0.0);
-        assert!(sim.counters.total().total_ops() > 0.0);
-    }
 
     #[test]
     fn pattern_unique_bytes() {
@@ -465,10 +332,83 @@ mod tests {
     }
 
     #[test]
-    fn flush_clears_residency() {
-        let (mut sim, r) = setup();
-        sim.access(0, Access::seq_read(r, 16 << 20));
-        sim.flush_all();
-        assert_eq!(sim.resident(0, r), 0);
+    fn l3_fill_and_lru_eviction_respect_capacity() {
+        let mut l3 = ChipletL3::new(32 << 20);
+        let a = RegionId(10);
+        let b = RegionId(11);
+        l3.fill(a, 24 << 20, 1, 24 << 20);
+        l3.fill(b, 24 << 20, 2, 24 << 20);
+        assert!(l3.used() <= 32 << 20);
+        // b is more recent; a must have been (partially) evicted.
+        assert!(l3.resident(b) > l3.resident(a));
+    }
+
+    #[test]
+    fn l3_invalidate_and_flush() {
+        let mut l3 = ChipletL3::new(1 << 20);
+        let r = RegionId(1);
+        l3.fill(r, 1 << 19, 1, 1 << 19);
+        l3.invalidate_frac(r, 0.5);
+        assert_eq!(l3.resident(r), 1 << 18);
+        l3.flush();
+        assert_eq!(l3.resident(r), 0);
+        assert_eq!(l3.used(), 0);
+    }
+
+    #[test]
+    fn l3_sole_region_fill_is_capped_at_capacity() {
+        let mut l3 = ChipletL3::new(1 << 20);
+        let r = RegionId(2);
+        l3.fill(r, 8 << 20, 1, 8 << 20);
+        assert_eq!(l3.resident(r), 1 << 20);
+        assert_eq!(l3.used(), 1 << 20);
+    }
+
+    #[test]
+    fn classify_cold_access_goes_to_dram() {
+        let topo = crate::topology::Topology::milan_2s();
+        let r = RegionId(1);
+        let residency = vec![0u64; topo.num_chiplets()];
+        let c = classify(&topo, 0, Access::seq_read(r, 16 << 20), 16 << 20, |ch| residency[ch]);
+        assert!(c.out.dram_lines > 0.99 * c.out.total_ops());
+        assert_eq!(c.p_local, 0.0);
+    }
+
+    #[test]
+    fn classify_splits_by_residency_location() {
+        let topo = crate::topology::Topology::milan_2s();
+        let r = RegionId(1);
+        let size = 16u64 << 20;
+        // Fully resident in chiplet 0.
+        let mut residency = vec![0u64; topo.num_chiplets()];
+        residency[0] = size;
+        // Core 0 (chiplet 0): all local.
+        let local = classify(&topo, 0, Access::rand_read(r, 1000, size), size, |ch| residency[ch]);
+        assert!(local.out.local_hits > 0.99 * local.out.total_ops());
+        // Core 8 (chiplet 1, same NUMA): all near.
+        let near = classify(&topo, 8, Access::rand_read(r, 1000, size), size, |ch| residency[ch]);
+        assert!(near.out.near_hits > 0.99 * near.out.total_ops());
+        // Core 64 (socket 1): all far.
+        let far = classify(&topo, 64, Access::rand_read(r, 1000, size), size, |ch| residency[ch]);
+        assert!(far.out.far_hits > 0.99 * far.out.total_ops());
+        // Latency ordering follows the hierarchy.
+        assert!(local.out.latency_ns < near.out.latency_ns);
+        assert!(near.out.latency_ns < far.out.latency_ns);
+    }
+
+    #[test]
+    fn classify_zero_ops_is_default() {
+        let topo = crate::topology::Topology::milan_2s();
+        let r = RegionId(1);
+        let residency = vec![0u64; topo.num_chiplets()];
+        let acc = Access {
+            region: r,
+            pattern: Pattern::Rand { ops: 0, span: 64 },
+            write: false,
+            mlp: 1.0,
+        };
+        let c = classify(&topo, 0, acc, 1 << 20, |ch| residency[ch]);
+        assert_eq!(c.out.total_ops(), 0.0);
+        assert_eq!(c.out.latency_ns, 0.0);
     }
 }

@@ -233,10 +233,8 @@ impl Driver {
         // not the cumulative totals (all-zero baselines on fresh
         // machines, so cold reports are unchanged).
         let t0 = machine.max_time();
-        let counts0 = machine.cache.counters.total();
-        let dram0: f64 = (0..machine.topo.sockets)
-            .map(|s| machine.membw.total_bytes(s))
-            .sum();
+        let counts0 = machine.class_totals();
+        let dram0 = machine.dram_total_bytes();
         scenario.setup(&mut machine, tasks);
         let (mut report, machine) = execute_on(backend, machine, policy, timer_ns, tasks, |rank| {
             scenario.spawn(rank)

@@ -18,7 +18,8 @@ use super::Scenario;
 use crate::workloads::graph::{
     kronecker::kronecker, BfsScenario, CcScenario, GupsScenario, PagerankScenario, SsspScenario,
 };
-use crate::workloads::olap::{all_queries, Db, OlapScenario};
+use crate::workloads::mixed::MixedScenario;
+use crate::workloads::olap::{all_queries, Db, OlapScenario, QuerySpec};
 use crate::workloads::oltp::{OltpScenario, OltpWorkload};
 use crate::workloads::sgd::{
     generate_data, DwStrategy, RustGrad, SgdConfig, SgdMode, SgdScenario,
@@ -157,13 +158,13 @@ fn build_sgd_loss(p: &ScenarioParams) -> Box<dyn Scenario> {
     ))
 }
 
-fn build_tpch(p: &ScenarioParams) -> Box<dyn Scenario> {
-    let db = Arc::new(Db::generate(p.scale, p.seed));
+/// Resolve a `--variant qN` selector to a query shape. Strict: running
+/// a different query than requested would silently corrupt recorded
+/// results, so malformed/out-of-range selectors panic.
+fn query_variant(variant: Option<&str>, what: &str, default_id: usize) -> QuerySpec {
     let queries = all_queries();
-    // Strict: running a different query than requested would silently
-    // corrupt recorded results.
-    let id = match p.variant.as_deref() {
-        None => 6,
+    let id = match variant {
+        None => default_id,
         Some(v) => {
             let parsed = v
                 .trim_start_matches(|c| c == 'q' || c == 'Q')
@@ -171,11 +172,16 @@ fn build_tpch(p: &ScenarioParams) -> Box<dyn Scenario> {
                 .ok()
                 .filter(|id| (1..=queries.len()).contains(id));
             parsed.unwrap_or_else(|| {
-                panic!("tpch variant {v:?} is not q1..q{}", queries.len())
+                panic!("{what} variant {v:?} is not q1..q{}", queries.len())
             })
         }
     };
-    let spec = queries[id - 1].clone();
+    queries[id - 1].clone()
+}
+
+fn build_tpch(p: &ScenarioParams) -> Box<dyn Scenario> {
+    let db = Arc::new(Db::generate(p.scale, p.seed));
+    let spec = query_variant(p.variant.as_deref(), "tpch", 6);
     Box::new(OlapScenario::new(db, spec))
 }
 
@@ -187,6 +193,26 @@ fn build_ycsb(p: &ScenarioParams) -> Box<dyn Scenario> {
 fn build_tpcc(p: &ScenarioParams) -> Box<dyn Scenario> {
     let wl = OltpWorkload::tpcc_scaled(p.scale);
     Box::new(OltpScenario::new(wl, p.iters.unwrap_or(20_000), p.seed))
+}
+
+fn build_mixed(p: &ScenarioParams) -> Box<dyn Scenario> {
+    // YCSB table at the pure-OLTP scenario's scale convention, TPC-H
+    // database at the OLAP one, co-resident. `iters` = transactions per
+    // OLTP rank; `variant` picks the (join-free) scan query — Q1
+    // pricing summary by default.
+    let OltpWorkload::Ycsb { records, read_frac } = OltpWorkload::ycsb_scaled(p.scale) else {
+        unreachable!("ycsb_scaled always builds a Ycsb workload")
+    };
+    let db = Arc::new(Db::generate(p.scale, p.seed));
+    let spec = query_variant(p.variant.as_deref(), "mixed", 1);
+    Box::new(MixedScenario::new(
+        records,
+        read_frac,
+        p.iters.unwrap_or(10_000),
+        p.seed,
+        db,
+        spec,
+    ))
 }
 
 static REGISTRY: &[ScenarioSpec] = &[
@@ -266,6 +292,13 @@ static REGISTRY: &[ScenarioSpec] = &[
         family: "oltp",
         about: "TPC-C-lite transaction mix on the OLTP engine",
         build: build_tpcc,
+    },
+    ScenarioSpec {
+        name: "mixed-oltp-olap",
+        aliases: &["mixed"],
+        family: "mixed",
+        about: "YCSB + TPC-H scan co-resident: cross-tenant cache/bandwidth contention",
+        build: build_mixed,
     },
 ];
 

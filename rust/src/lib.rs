@@ -6,8 +6,10 @@
 //!
 //! The crate contains:
 //! - the simulated chiplet machine substrate ([`topology`], [`cachesim`],
-//!   [`memsim`], [`sim`]) standing in for the paper's dual-socket AMD EPYC
-//!   Milan 7713 testbed,
+//!   [`memsim`], [`coordinator`], [`sim`]) standing in for the paper's
+//!   dual-socket AMD EPYC Milan 7713 testbed — accounting state is
+//!   sharded per chiplet/socket ([`coordinator`]) so host-backend steps
+//!   charge concurrently with no whole-machine lock,
 //! - the ARCAS runtime proper ([`task`], [`deque`], [`sched`],
 //!   [`profiler`], [`controller`], [`policy`], [`mem`], [`api`]),
 //! - the unified workload [`engine`]: the [`engine::Scenario`] trait,
@@ -31,6 +33,7 @@ pub mod util;
 pub mod topology;
 pub mod cachesim;
 pub mod memsim;
+pub mod coordinator;
 pub mod sim;
 pub mod task;
 pub mod deque;

@@ -5,6 +5,15 @@
 //! cache model tracks residency per region, and the DRAM side of an access
 //! is charged against the region's home NUMA node(s). Algorithm 2's
 //! `set_mempolicy(MPOL_BIND, …)` maps to [`MemoryManager::rebind`].
+//!
+//! Under the sharded accounting layout ([`crate::coordinator`]) a
+//! region's state is owned piecewise by the shards: each chiplet shard
+//! tracks its own L3 residency slice of the region, and the DRAM home
+//! computed by [`MemoryManager::dram_home`] selects which *socket
+//! shard*'s DDR tracker a miss is charged to
+//! (`Topology::socket_of_numa`). The registry itself is read-mostly:
+//! every access reads it (size + placement) under a shared lock; only
+//! alloc/free/rebind take the write side.
 
 use std::collections::HashMap;
 

@@ -1,18 +1,28 @@
 //! Memory-channel bandwidth contention model (§2.2: "more cores, limited
 //! memory channels").
 //!
-//! Each socket has `mem_channels_per_socket × mem_bw_per_channel` bytes/ns
-//! of peak DRAM bandwidth. The model tracks demanded bytes per socket in a
-//! sliding window of virtual time and inflates DRAM service time by an
-//! M/M/1-style queueing factor `1/(1-u)` as utilization `u` approaches 1.
-//! This is what makes high core counts memory-bound in the reproduction —
-//! the exact effect Fig. 4 motivates and Fig. 7/10 exhibit.
+//! The unit of modeling is one [`BwTracker`]: a bandwidth-limited pipe
+//! (a socket's DDR channels, or one CCD's Infinity-Fabric link to the IO
+//! die) that tracks demanded bytes in a sliding window of virtual time
+//! and inflates service time by an M/M/1-style queueing factor `1/(1-u)`
+//! as utilization `u` approaches 1. This is what makes high core counts
+//! memory-bound in the reproduction — the exact effect Fig. 4 motivates
+//! and Fig. 7/10 exhibit.
+//!
+//! Ownership of the trackers is *sharded* (see [`crate::coordinator`]):
+//! each socket shard owns its DDR tracker, each chiplet shard owns its
+//! IF-link tracker, and [`crate::sim::Machine::access`] combines the two
+//! stages as `max(ddr, link)` (they pipeline, so the slower dominates).
+//! This module only defines the tracker itself, so the monolithic-vs-
+//! sharded arrangements stay byte-for-byte comparable.
 
-use crate::topology::Topology;
+/// Sliding window length: 10 µs of virtual time — long enough to smooth
+/// bursts, short enough to adapt within a scheduler interval.
+pub const BW_WINDOW_NS: f64 = 10_000.0;
 
-/// Per-socket bandwidth accounting over a sliding window.
+/// Bandwidth accounting for one pipe over a sliding virtual-time window.
 #[derive(Clone, Debug)]
-struct SocketChannel {
+pub struct BwTracker {
     peak_bw: f64, // bytes/ns
     window_ns: f64,
     window_start: f64,
@@ -20,8 +30,8 @@ struct SocketChannel {
     total_bytes: f64,
 }
 
-impl SocketChannel {
-    fn new(peak_bw: f64, window_ns: f64) -> Self {
+impl BwTracker {
+    pub fn new(peak_bw: f64, window_ns: f64) -> Self {
         Self {
             peak_bw,
             window_ns,
@@ -42,13 +52,13 @@ impl SocketChannel {
         }
     }
 
-    fn utilization(&self, now_ns: f64) -> f64 {
+    pub fn utilization(&self, now_ns: f64) -> f64 {
         let span = (now_ns - self.window_start).max(1.0) + self.window_ns * 0.5;
         (self.bytes_in_window / (self.peak_bw * span)).min(1.0)
     }
 
     /// Charge `bytes` at `now_ns`; returns the service time in ns.
-    fn charge(&mut self, now_ns: f64, bytes: f64) -> f64 {
+    pub fn charge(&mut self, now_ns: f64, bytes: f64) -> f64 {
         self.roll(now_ns);
         self.bytes_in_window += bytes;
         self.total_bytes += bytes;
@@ -59,103 +69,55 @@ impl SocketChannel {
         let base = bytes / self.peak_bw;
         base / (1.0 - u)
     }
-}
 
-/// Machine-wide DRAM bandwidth model: per-socket DDR channels plus the
-/// per-CCD Infinity-Fabric link every chiplet funnels its DRAM traffic
-/// through (§2.3: why spreading keeps paying off past cache capacity).
-#[derive(Clone, Debug)]
-pub struct MemSim {
-    sockets: Vec<SocketChannel>,
-    chiplet_links: Vec<SocketChannel>,
-    numa_per_socket: usize,
-}
-
-impl MemSim {
-    pub fn new(topo: &Topology) -> Self {
-        // Window: 10 µs of virtual time — long enough to smooth bursts,
-        // short enough to adapt within a scheduler interval.
-        let window_ns = 10_000.0;
-        Self {
-            sockets: (0..topo.sockets)
-                .map(|_| SocketChannel::new(topo.mem_bw_per_socket(), window_ns))
-                .collect(),
-            chiplet_links: (0..topo.num_chiplets())
-                .map(|_| SocketChannel::new(topo.if_bw_per_chiplet, window_ns))
-                .collect(),
-            numa_per_socket: topo.numa_per_socket,
-        }
+    /// Total bytes ever served (for the bandwidth-utilization measurement
+    /// the paper reports).
+    pub fn total_bytes(&self) -> f64 {
+        self.total_bytes
     }
 
-    /// Charge a DRAM transfer of `bytes` homed on `numa`, requested from
-    /// `chiplet`, at virtual time `now_ns`. Returns the bandwidth-term
-    /// service time in ns (added on top of the cache model's latency
-    /// term): the max of the DDR-channel and IF-link service times (the
-    /// two stages pipeline, so the slower one dominates).
-    pub fn charge(&mut self, now_ns: f64, numa: usize, chiplet: usize, bytes: f64) -> f64 {
-        if bytes <= 0.0 {
-            return 0.0;
-        }
-        let socket = numa / self.numa_per_socket;
-        let ddr = self.sockets[socket].charge(now_ns, bytes);
-        let link = self.chiplet_links[chiplet].charge(now_ns, bytes);
-        ddr.max(link)
-    }
-
-    /// Current utilization of `socket`'s memory channels, 0..1.
-    pub fn utilization(&self, socket: usize, now_ns: f64) -> f64 {
-        self.sockets[socket].utilization(now_ns)
-    }
-
-    /// Total bytes ever served per socket (for the bandwidth-utilization
-    /// measurement the paper reports).
-    pub fn total_bytes(&self, socket: usize) -> f64 {
-        self.sockets[socket].total_bytes
-    }
-
+    /// Clear dynamic state between experiment repetitions.
     pub fn reset(&mut self) {
-        for s in self.sockets.iter_mut().chain(self.chiplet_links.iter_mut()) {
-            s.window_start = 0.0;
-            s.bytes_in_window = 0.0;
-            s.total_bytes = 0.0;
-        }
+        self.window_start = 0.0;
+        self.bytes_in_window = 0.0;
+        self.total_bytes = 0.0;
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::topology::Topology;
 
-    fn memsim() -> MemSim {
-        MemSim::new(&Topology::milan_2s())
+    fn ddr() -> BwTracker {
+        BwTracker::new(Topology::milan_2s().mem_bw_per_socket(), BW_WINDOW_NS)
+    }
+
+    fn if_link() -> BwTracker {
+        BwTracker::new(Topology::milan_2s().if_bw_per_chiplet, BW_WINDOW_NS)
     }
 
     #[test]
     fn light_load_gets_near_peak_bandwidth() {
-        let mut m = memsim();
-        // 1 KiB at t=0 on an idle socket.
-        let ns = m.charge(0.0, 0, 0 * 8, 1024.0);
-        // A single chiplet is IF-link limited (32 B/ns on Milan), even
-        // though the socket's DDR channels could go faster.
+        // 1 KiB at t=0 on an idle pipe serves near the pipe's peak; the
+        // IF link (32-80 B/ns) is the narrow stage a single chiplet sees,
+        // even though the socket's DDR channels could go faster.
+        let mut link = if_link();
+        let ns = link.charge(0.0, 1024.0);
         let ideal = 1024.0 / Topology::milan_2s().if_bw_per_chiplet;
         assert!(ns < ideal * 1.2, "ns={ns} ideal={ideal}");
-        // Spread across chiplets, the same bytes stream nearer DDR peak.
-        let mut m2 = memsim();
-        let per = 1024.0 / 8.0;
-        let total: f64 = (0..8).map(|c| m2.charge(0.0, 0, c, per)).sum();
-        assert!(total < ns, "spread {total} must beat single-link {ns}");
+        let mut d = ddr();
+        assert!(d.charge(0.0, 1024.0) < ns, "DDR channels outrun one IF link");
     }
 
     #[test]
     fn heavy_load_inflates_service_time() {
-        let mut m = memsim();
-        // Saturate the window.
+        let mut t = ddr();
         for _ in 0..200 {
-            m.charge(100.0, 0, 0 * 8, 4.0 * 1024.0 * 1024.0);
+            t.charge(100.0, 4.0 * 1024.0 * 1024.0);
         }
-        let loaded = m.charge(100.0, 0, 0 * 8, 1024.0);
-        let mut fresh = memsim();
-        let idle = fresh.charge(100.0, 0, 0, 1024.0);
+        let loaded = t.charge(100.0, 1024.0);
+        let idle = ddr().charge(100.0, 1024.0);
         assert!(
             loaded > idle * 3.0,
             "loaded={loaded} idle={idle} (queueing must inflate)"
@@ -163,42 +125,45 @@ mod tests {
     }
 
     #[test]
-    fn sockets_are_independent() {
-        let mut m = memsim();
+    fn trackers_are_independent() {
+        // Independence is structural now: every socket/chiplet shard owns
+        // its own tracker, so saturating one cannot slow another.
+        let mut hot = ddr();
         for _ in 0..200 {
-            m.charge(100.0, 0, 0 * 8, 4.0 * 1024.0 * 1024.0);
+            hot.charge(100.0, 4.0 * 1024.0 * 1024.0);
         }
-        let s0 = m.charge(100.0, 0, 0 * 8, 1024.0);
-        let s1 = m.charge(100.0, 1, 1 * 8, 1024.0);
-        assert!(s1 < s0, "socket 1 must be idle: s0={s0} s1={s1}");
+        let s0 = hot.charge(100.0, 1024.0);
+        let s1 = ddr().charge(100.0, 1024.0);
+        assert!(s1 < s0, "fresh tracker must be idle: s0={s0} s1={s1}");
     }
 
     #[test]
     fn window_rolls_and_decays() {
-        let mut m = memsim();
+        let mut t = ddr();
         for _ in 0..200 {
-            m.charge(0.0, 0, 0 * 8, 4.0 * 1024.0 * 1024.0);
+            t.charge(0.0, 4.0 * 1024.0 * 1024.0);
         }
-        let hot = m.utilization(0, 0.0);
+        let hot = t.utilization(0.0);
         // Far in the future the window has decayed.
-        m.charge(1_000_000.0, 0, 0 * 8, 64.0);
-        let cooled = m.utilization(0, 1_000_000.0);
+        t.charge(1_000_000.0, 64.0);
+        let cooled = t.utilization(1_000_000.0);
         assert!(cooled < hot * 0.5, "hot={hot} cooled={cooled}");
     }
 
     #[test]
-    fn zero_bytes_is_free() {
-        let mut m = memsim();
-        assert_eq!(m.charge(0.0, 0, 0 * 8, 0.0), 0.0);
+    fn total_bytes_accumulates() {
+        let mut t = ddr();
+        t.charge(0.0, 100.0);
+        t.charge(5.0, 50.0);
+        assert_eq!(t.total_bytes(), 150.0);
     }
 
     #[test]
-    fn total_bytes_accumulates() {
-        let mut m = memsim();
-        m.charge(0.0, 1, 1 * 8, 100.0);
-        m.charge(5.0, 1, 1 * 8, 50.0);
-        // NUMA 1 maps to socket 1 under NPS1.
-        assert_eq!(m.total_bytes(1), 150.0);
-        assert_eq!(m.total_bytes(0), 0.0);
+    fn reset_clears_dynamic_state() {
+        let mut t = ddr();
+        t.charge(0.0, (1u64 << 20) as f64);
+        t.reset();
+        assert_eq!(t.total_bytes(), 0.0);
+        assert_eq!(t.utilization(0.0), 0.0);
     }
 }

@@ -12,7 +12,7 @@
 //! In the real system this is libpfm reads at coroutine yield points; here
 //! the counters come from the cache model, sampled at the same points.
 
-use crate::cachesim::{ClassCounts, Counters};
+use crate::cachesim::ClassCounts;
 
 /// One profiling window snapshot.
 #[derive(Clone, Copy, Debug, Default)]
@@ -46,14 +46,18 @@ impl Profiler {
     /// the window ending at `now_ns`, computing the fill-event *rate*
     /// normalized to `timer_ns` (Algorithm 1 line 6:
     /// `rate ← counter × SCHEDULER_TIMER / elapsed`).
+    ///
+    /// `total` is the machine-wide class-count snapshot at `now_ns`
+    /// (`Machine::class_totals()` — the sharded machine merges its
+    /// per-chiplet counter slices on demand instead of keeping one
+    /// global counter object).
     pub fn sample_window(
         &mut self,
         now_ns: u64,
-        counters: &Counters,
+        total: ClassCounts,
         timer_ns: u64,
         live_tasks: usize,
     ) -> WindowSample {
-        let total = counters.total();
         let fills = (total.fill_events() - self.last_total.fill_events()).max(0.0);
         let elapsed = now_ns.saturating_sub(self.last_ns).max(1);
         let rate = fills * timer_ns as f64 / elapsed as f64;
@@ -116,30 +120,22 @@ impl Profiler {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cachesim::Outcome;
 
-    fn counters_with(local: f64, near: f64, far: f64, dram: f64) -> Counters {
-        let mut c = Counters::new(2);
-        c.record(
-            0,
-            &Outcome {
-                local_hits: local,
-                near_hits: near,
-                far_hits: far,
-                dram_lines: dram,
-                latency_ns: 0.0,
-                dram_bytes: 0.0,
-            },
-        );
-        c
+    fn totals_with(local: f64, near: f64, far: f64, dram: f64) -> ClassCounts {
+        ClassCounts {
+            local,
+            near,
+            far,
+            dram,
+        }
     }
 
     #[test]
     fn window_rate_normalizes_to_timer() {
         let mut p = Profiler::new();
-        let c = counters_with(0.0, 600.0, 0.0, 0.0);
+        let c = totals_with(0.0, 600.0, 0.0, 0.0);
         // 600 fills over 20 ms with a 10 ms timer => rate 300.
-        let s = p.sample_window(20_000_000, &c, 10_000_000, 8);
+        let s = p.sample_window(20_000_000, c, 10_000_000, 8);
         assert!((s.rate - 300.0).abs() < 1e-9, "rate={}", s.rate);
         assert_eq!(s.fill_events, 600.0);
     }
@@ -147,10 +143,10 @@ mod tests {
     #[test]
     fn second_window_sees_only_delta() {
         let mut p = Profiler::new();
-        let c1 = counters_with(10.0, 100.0, 0.0, 5.0);
-        p.sample_window(10_000_000, &c1, 10_000_000, 4);
-        let c2 = counters_with(20.0, 150.0, 0.0, 9.0);
-        let s = p.sample_window(20_000_000, &c2, 10_000_000, 4);
+        let c1 = totals_with(10.0, 100.0, 0.0, 5.0);
+        p.sample_window(10_000_000, c1, 10_000_000, 4);
+        let c2 = totals_with(20.0, 150.0, 0.0, 9.0);
+        let s = p.sample_window(20_000_000, c2, 10_000_000, 4);
         assert!((s.fill_events - 50.0).abs() < 1e-9);
         assert!((s.counts.local - 10.0).abs() < 1e-9);
         assert!((s.counts.dram - 4.0).abs() < 1e-9);
@@ -168,8 +164,8 @@ mod tests {
     #[test]
     fn remote_share_bounded() {
         let mut p = Profiler::new();
-        let c = counters_with(50.0, 25.0, 0.0, 25.0);
-        p.sample_window(1000, &c, 1000, 1);
+        let c = totals_with(50.0, 25.0, 0.0, 25.0);
+        p.sample_window(1000, c, 1000, 1);
         let share = p.recent_remote_share(4);
         assert!((share - 0.5).abs() < 1e-9, "share={share}");
     }

@@ -172,6 +172,23 @@ pub fn current_worker() -> Option<usize> {
     CURRENT_WORKER.with(|w| w.get())
 }
 
+/// The core a worker models (worker *i* = core *i*, wrapped for pools
+/// larger than the topology).
+#[inline]
+pub fn worker_core(topo: &Topology, worker: usize) -> usize {
+    worker % topo.num_cores()
+}
+
+/// The machine-accounting shard a worker charges by default: its core's
+/// chiplet ([`crate::coordinator::ChipletShard`]). Workers on the same
+/// chiplet share one shard (their cores share that L3 in hardware);
+/// workers on different chiplets charge disjoint shards and therefore
+/// run concurrently on the sharded machine.
+#[inline]
+pub fn worker_shard(topo: &Topology, worker: usize) -> usize {
+    topo.chiplet_of(worker_core(topo, worker))
+}
+
 impl HostExecutor {
     /// Spawn `n_workers` threads; steal order follows `topo` with worker
     /// index interpreted as core id. `pin` attempts CPU affinity.
@@ -195,7 +212,7 @@ impl HostExecutor {
         let mut workers = Vec::with_capacity(n);
         for w in 0..n {
             let shared = shared.clone();
-            let order = chiplet_first_steal_order(topo, w % topo.num_cores(), &cores);
+            let order = chiplet_first_steal_order(topo, worker_core(topo, w), &cores);
             workers.push(std::thread::spawn(move || {
                 if pin {
                     pin_to_core(w);
@@ -560,6 +577,18 @@ mod tests {
             c2.fetch_add(1, Ordering::Relaxed);
         });
         assert_eq!(c.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn worker_shard_follows_the_chiplet_map() {
+        let topo = Topology::milan_1s(); // 8 chiplets x 8 cores
+        assert_eq!(worker_shard(&topo, 0), 0);
+        assert_eq!(worker_shard(&topo, 7), 0);
+        assert_eq!(worker_shard(&topo, 8), 1);
+        assert_eq!(worker_shard(&topo, 63), 7);
+        // Oversized pools wrap onto the topology.
+        assert_eq!(worker_core(&topo, 64), 0);
+        assert_eq!(worker_shard(&topo, 64), 0);
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //! the same structure the host executor uses with real threads.
 
 mod host;
-pub use host::{current_worker, HostExecutor, Submitter};
+pub use host::{current_worker, worker_core, worker_shard, HostExecutor, Submitter};
 
 use crate::cachesim::{ClassCounts, Outcome};
 use crate::deque::Deque;
@@ -182,12 +182,10 @@ impl SimExecutor {
     /// Fire the policy timer (profiling window + possible migration).
     fn fire_timer(&mut self, now_ns: u64) {
         let live = self.live_threads();
-        let sample = self.profiler.sample_window(
-            now_ns,
-            &self.machine.cache.counters,
-            self.cfg.timer_ns,
-            live,
-        );
+        let totals = self.machine.class_totals();
+        let sample = self
+            .profiler
+            .sample_window(now_ns, totals, self.cfg.timer_ns, live);
         self.profiler.sample_concurrency(now_ns, live);
         let group = self.tasks.len();
         if let Some(new_map) = self
@@ -384,7 +382,7 @@ impl SimExecutor {
             let rank = task.rank;
             let group_size = task.group_size;
             let mut ctx = TaskCtx {
-                machine: &mut self.machine,
+                machine: &self.machine,
                 core,
                 task_id: tid,
                 rank,
@@ -434,7 +432,7 @@ impl SimExecutor {
         RunReport {
             policy: self.policy.name().to_string(),
             makespan_ns: makespan,
-            counts: self.machine.cache.counters.total(),
+            counts: self.machine.class_totals(),
             dispatches: self.dispatches,
             steals: self.steals,
             migrations: self.migrations,
@@ -449,9 +447,7 @@ impl SimExecutor {
                 .unwrap_or(0),
             concurrency: self.profiler.concurrency.clone(),
             decisions: Vec::new(),
-            dram_bytes: (0..self.machine.topo.sockets)
-                .map(|s| self.machine.membw.total_bytes(s))
-                .sum(),
+            dram_bytes: self.machine.dram_total_bytes(),
             spread_rate: self.policy.spread_rate(),
             wall_ns: wall_start.elapsed().as_nanos() as u64,
             host_steals: 0,
@@ -582,7 +578,7 @@ mod tests {
 
     #[test]
     fn arcas_controller_fires_and_reports_spread() {
-        let mut m = machine();
+        let m = machine();
         let r = m.alloc("shared", 64 << 20, Placement::Bind(0));
         let policy = ArcasPolicy::new(&m.topo).with_timer(100_000);
         let report = run_group(m, Box::new(policy), 8, |_| {

@@ -1,118 +1,210 @@
 //! The simulated chiplet machine: discrete-event substrate.
 //!
-//! [`Machine`] composes the [`Topology`], the per-chiplet cache model, the
-//! memory-bandwidth model and the region registry, and keeps one virtual
-//! clock per core. Task execution charges virtual nanoseconds to the core
-//! a task currently runs on; the executor (in [`crate::sched`]) always
+//! [`Machine`] composes the [`Topology`], the per-chiplet shard set from
+//! [`crate::coordinator`] (L3 residency, access counters, IF-link and
+//! DDR bandwidth trackers, virtual clocks) and the region registry. Task
+//! execution charges virtual nanoseconds to the core a task currently
+//! runs on; the simulator's executor (in [`crate::sched`]) always
 //! advances the core with the smallest clock, which yields a
 //! deterministic, causally-consistent interleaving — the discrete-event
 //! replacement for running on real EPYC hardware.
+//!
+//! Every charging method takes `&self`: state is sharded per chiplet /
+//! per socket behind leaf-level locks (never nested — see the
+//! [`crate::coordinator`] docs), so the host backend shares one
+//! `Machine` across worker threads with **no whole-machine lock**.
+//! Steps on different chiplets charge concurrently and only contend
+//! where the hardware would: sibling-L3 probes, coherence invalidations
+//! and the shared DDR channels. Driven single-threaded, the arithmetic
+//! is byte-for-byte the pre-shard monolith (pinned by
+//! `rust/tests/shard_equivalence.rs` and the engine golden tests).
 
 mod events;
 pub use events::{Event, EventQueue};
 
-use crate::cachesim::{Access, CacheSim, Outcome};
+use std::sync::RwLock;
+
+use crate::cachesim::{classify, Access, ClassCounts, Counters, Outcome};
+use crate::coordinator::Shards;
 use crate::mem::{MemoryManager, Placement, RegionId};
-use crate::memsim::MemSim;
 use crate::topology::Topology;
 
 /// The simulated machine.
-#[derive(Clone, Debug)]
+#[derive(Debug)]
 pub struct Machine {
     pub topo: Topology,
-    pub cache: CacheSim,
-    pub membw: MemSim,
-    pub mm: MemoryManager,
-    clocks: Vec<u64>,
+    /// Per-chiplet + per-socket accounting shards.
+    shards: Shards,
+    /// Region registry (sizes + NUMA placement), read on every access,
+    /// written only by alloc/free/rebind.
+    regions: RwLock<MemoryManager>,
 }
 
 impl Machine {
     pub fn new(topo: Topology) -> Self {
         Self {
-            cache: CacheSim::new(&topo),
-            membw: MemSim::new(&topo),
-            mm: MemoryManager::new(),
-            clocks: vec![0; topo.num_cores()],
+            shards: Shards::new(&topo),
+            regions: RwLock::new(MemoryManager::new()),
             topo,
         }
     }
 
     // --- memory management ---------------------------------------------
 
-    /// Allocate a region and register it with the cache model.
-    pub fn alloc(&mut self, label: &str, size: u64, placement: Placement) -> RegionId {
-        let id = self.mm.alloc(label, size, placement);
-        self.cache.register_region(id, size);
-        id
+    /// Allocate a region and register it with the accounting model.
+    pub fn alloc(&self, label: &str, size: u64, placement: Placement) -> RegionId {
+        self.regions.write().unwrap().alloc(label, size, placement)
     }
 
-    pub fn free(&mut self, id: RegionId) {
-        self.mm.free(id);
-        self.cache.drop_region(id);
+    pub fn free(&self, id: RegionId) {
+        self.regions.write().unwrap().free(id);
+        self.shards.drop_region(id);
+    }
+
+    /// Re-bind a region to a NUMA node (Algorithm 2's
+    /// `set_mempolicy(MPOL_BIND, …)`).
+    pub fn rebind(&self, id: RegionId, numa: usize) {
+        self.regions.write().unwrap().rebind(id, numa);
+    }
+
+    /// Registered size of `id` (1 for unknown regions, matching the
+    /// registry's own default).
+    pub fn region_size(&self, id: RegionId) -> u64 {
+        self.regions.read().unwrap().size(id)
+    }
+
+    /// NUMA placement of `id`.
+    pub fn placement_of(&self, id: RegionId) -> Placement {
+        self.regions.read().unwrap().placement(id)
     }
 
     // --- clocks ----------------------------------------------------------
 
     #[inline]
     pub fn now(&self, core: usize) -> u64 {
-        self.clocks[core]
+        self.shards.now(core)
     }
 
     /// Latest clock across all cores (= makespan when a run finishes).
     pub fn max_time(&self) -> u64 {
-        *self.clocks.iter().max().unwrap_or(&0)
+        self.shards.max_time()
     }
 
     /// Earliest-clock core among `candidates` (executor's pick rule).
     pub fn min_clock_core(&self, candidates: &[usize]) -> Option<usize> {
-        candidates
-            .iter()
-            .copied()
-            .min_by_key(|&c| self.clocks[c])
+        candidates.iter().copied().min_by_key(|&c| self.now(c))
     }
 
     #[inline]
-    pub fn advance(&mut self, core: usize, ns: u64) {
-        self.clocks[core] += ns;
+    pub fn advance(&self, core: usize, ns: u64) {
+        self.shards.advance(core, ns);
     }
 
     /// Synchronize `core`'s clock forward to at least `t` (barrier wake-up,
     /// steal from a later core, timer alignment).
     #[inline]
-    pub fn advance_to(&mut self, core: usize, t: u64) {
-        if self.clocks[core] < t {
-            self.clocks[core] = t;
-        }
+    pub fn advance_to(&self, core: usize, t: u64) {
+        self.shards.advance_to(core, t);
     }
 
     /// Reset clocks and dynamic state between experiment repetitions
     /// (allocations survive; caches and counters are cold again).
-    pub fn reset_dynamic(&mut self) {
-        self.clocks.iter_mut().for_each(|c| *c = 0);
-        self.cache.flush_all();
-        self.cache.counters.reset();
-        self.membw.reset();
+    pub fn reset_dynamic(&self) {
+        self.shards.reset_dynamic();
+    }
+
+    // --- accounting snapshots --------------------------------------------
+
+    /// Machine-wide class totals (hierarchy counters summed over chiplets).
+    pub fn class_totals(&self) -> ClassCounts {
+        self.shards.class_totals()
+    }
+
+    /// Per-chiplet counter snapshot (Tab. 1/2-style reporting).
+    pub fn counters(&self) -> Counters {
+        self.shards.counters()
+    }
+
+    /// Resident bytes of `region` in `chiplet`'s L3.
+    pub fn resident(&self, chiplet: usize, region: RegionId) -> u64 {
+        self.shards.resident(chiplet, region)
+    }
+
+    /// Total DRAM bytes served by `socket`.
+    pub fn dram_bytes_of_socket(&self, socket: usize) -> f64 {
+        self.shards.dram_bytes_of_socket(socket)
+    }
+
+    /// Total DRAM bytes across all sockets.
+    pub fn dram_total_bytes(&self) -> f64 {
+        self.shards.dram_total_bytes()
+    }
+
+    /// A charging handle bound to `core` (what each coroutine step works
+    /// through — see [`MachineView`]).
+    pub fn view(&self, core: usize) -> MachineView<'_> {
+        MachineView {
+            machine: self,
+            core,
+        }
     }
 
     // --- cost charging ---------------------------------------------------
 
     /// Pure compute on `core` for `ns` virtual nanoseconds.
     #[inline]
-    pub fn compute(&mut self, core: usize, ns: u64) {
+    pub fn compute(&self, core: usize, ns: u64) {
         self.advance(core, ns);
     }
 
     /// Model a memory access from `core`; charges the core's clock with
     /// cache latency + DRAM bandwidth terms and returns the outcome.
-    pub fn access(&mut self, core: usize, acc: Access) -> Outcome {
-        let now = self.clocks[core] as f64;
-        let mut out = self.cache.access(core, acc);
+    ///
+    /// Shard choreography (at most one lock held at any instant):
+    /// 1. read the region book (size + DRAM home) under the read lock,
+    /// 2. classify via lazy residency probes ([`classify`]) — one brief
+    ///    shard lock per chiplet, none at all for remote chiplets when
+    ///    the region is fully resident locally,
+    /// 3. re-lock the *local* shard for the fill + counter record,
+    /// 4. on writes, invalidate the other shards one by one,
+    /// 5. charge the serving socket's DDR tracker and the local IF link.
+    pub fn access(&self, core: usize, acc: Access) -> Outcome {
+        let now = self.now(core) as f64;
+        let my_chiplet = self.topo.chiplet_of(core);
+        let my_numa = self.topo.numa_of_core(core);
 
-        // DRAM side: where is the region homed?
-        let core_numa = self.topo.numa_of_core(core);
-        let (home, local_frac) =
-            self.mm
-                .dram_home(acc.region, core_numa, self.topo.num_numa());
+        let (size, home, local_frac) = {
+            let book = self.regions.read().unwrap();
+            let (home, frac) = book.dram_home(acc.region, my_numa, self.topo.num_numa());
+            (book.size(acc.region), home, frac)
+        };
+
+        if acc.pattern.ops() == 0 {
+            return Outcome::default();
+        }
+
+        // Residency probing is lazy: `classify` asks for each chiplet's
+        // resident bytes exactly once, and each answer takes one brief
+        // shard lock (never nested). Local-hit fast path: when the
+        // region is fully resident in the issuing chiplet's L3, the
+        // near/far fractions clamp to exactly zero no matter what the
+        // other shards hold — so remote probes are answered with 0
+        // without touching their locks at all, and warm chiplet-local
+        // traffic stays on its own shard (the shard-equivalence property
+        // suite pins that this shortcut is bit-identical).
+        let local_res = self.shards.resident(my_chiplet, acc.region);
+        let classified = classify(&self.topo, core, acc, size, |ch| {
+            if ch == my_chiplet {
+                local_res
+            } else if local_res >= size {
+                0
+            } else {
+                self.shards.resident(ch, acc.region)
+            }
+        });
+        let mut out = classified.out;
+        let p_local = classified.p_local;
+
         // Latency correction for remote-homed DRAM lines (the cache model
         // assumed local-NUMA DRAM latency).
         if local_frac < 1.0 {
@@ -120,11 +212,35 @@ impl Machine {
             let extra = self.topo.lat.dram_remote_ns - self.topo.lat.dram_local_ns;
             out.latency_ns += remote_lines * extra / acc.mlp.max(1.0);
         }
-        // Bandwidth term, charged against the serving socket's channels
-        // and the issuing chiplet's IF link.
-        let bw_numa = if local_frac >= 1.0 { core_numa } else { home };
-        let chiplet = self.topo.chiplet_of(core);
-        let bw_ns = self.membw.charge(now, bw_numa, chiplet, out.dram_bytes);
+
+        // Residency update: fills land in the local chiplet's L3.
+        let unique = acc.pattern.unique_bytes().min(size);
+        let fill_bytes = ((unique as f64) * (1.0 - p_local)) as u64;
+        self.shards
+            .fill_and_record(my_chiplet, acc.region, fill_bytes, size, &out);
+
+        // Coherence: a write invalidates the written fraction elsewhere.
+        if acc.write {
+            let written_frac = (unique as f64 / size.max(1) as f64).min(1.0);
+            for ch in 0..self.topo.num_chiplets() {
+                if ch != my_chiplet {
+                    self.shards.invalidate(ch, acc.region, written_frac);
+                }
+            }
+        }
+
+        // Bandwidth term, charged against the serving socket's DDR
+        // channels and the issuing chiplet's IF link (the two stages
+        // pipeline, so the slower one dominates).
+        let bw_ns = if out.dram_bytes > 0.0 {
+            let bw_numa = if local_frac >= 1.0 { my_numa } else { home };
+            let socket = self.topo.socket_of_numa(bw_numa);
+            let ddr = self.shards.charge_ddr(socket, now, out.dram_bytes);
+            let link = self.shards.charge_if_link(my_chiplet, now, out.dram_bytes);
+            ddr.max(link)
+        } else {
+            0.0
+        };
         let total = out.latency_ns + bw_ns;
         out.latency_ns = total;
         self.advance(core, total.round() as u64);
@@ -133,7 +249,7 @@ impl Machine {
 
     /// Point-to-point message cost between cores (RPC / steal / barrier
     /// traffic). Charges the *sender*; returns the latency.
-    pub fn message(&mut self, from: usize, to: usize, bytes: u64) -> u64 {
+    pub fn message(&self, from: usize, to: usize, bytes: u64) -> u64 {
         let lat = self.topo.core_to_core_ns(from, to);
         // Payload beyond a cache line streams at fabric bandwidth
         // (~32 B/ns on Infinity Fabric).
@@ -144,15 +260,85 @@ impl Machine {
     }
 
     /// Cost of an OS context switch on `core` (std::async baseline).
-    pub fn os_context_switch(&mut self, core: usize) {
+    pub fn os_context_switch(&self, core: usize) {
         let ns = self.topo.lat.os_context_switch_ns.round() as u64;
         self.advance(core, ns);
     }
 
     /// Cost of a user-space coroutine switch on `core` (ARCAS tasks).
-    pub fn coroutine_switch(&mut self, core: usize) {
+    pub fn coroutine_switch(&self, core: usize) {
         let ns = self.topo.lat.coroutine_switch_ns.round() as u64;
         self.advance(core, ns);
+    }
+}
+
+impl Clone for Machine {
+    fn clone(&self) -> Self {
+        Self {
+            topo: self.topo.clone(),
+            shards: self.shards.clone(),
+            regions: RwLock::new(self.regions.read().unwrap().clone()),
+        }
+    }
+}
+
+/// A per-core charging handle: the "view" a coroutine step gets of the
+/// sharded machine. Charges land on the bound core's own chiplet shard
+/// directly; remote shards are only touched for sibling/remote residency,
+/// coherence and DRAM — mirroring what the hardware would do.
+#[derive(Clone, Copy)]
+pub struct MachineView<'m> {
+    machine: &'m Machine,
+    core: usize,
+}
+
+impl<'m> MachineView<'m> {
+    pub fn machine(&self) -> &'m Machine {
+        self.machine
+    }
+
+    pub fn core(&self) -> usize {
+        self.core
+    }
+
+    #[inline]
+    pub fn now(&self) -> u64 {
+        self.machine.now(self.core)
+    }
+
+    #[inline]
+    pub fn compute(&self, ns: u64) {
+        self.machine.compute(self.core, ns);
+    }
+
+    #[inline]
+    pub fn advance_to(&self, t: u64) {
+        self.machine.advance_to(self.core, t);
+    }
+
+    pub fn access(&self, acc: Access) -> Outcome {
+        self.machine.access(self.core, acc)
+    }
+
+    /// Message from this core to `to` (charges this core as sender).
+    pub fn message_to(&self, to: usize, bytes: u64) -> u64 {
+        self.machine.message(self.core, to, bytes)
+    }
+
+    pub fn coroutine_switch(&self) {
+        self.machine.coroutine_switch(self.core);
+    }
+
+    pub fn os_context_switch(&self) {
+        self.machine.os_context_switch(self.core);
+    }
+
+    pub fn chiplet(&self) -> usize {
+        self.machine.topo.chiplet_of(self.core)
+    }
+
+    pub fn numa(&self) -> usize {
+        self.machine.topo.numa_of_core(self.core)
     }
 }
 
@@ -166,7 +352,7 @@ mod tests {
 
     #[test]
     fn clocks_start_at_zero_and_advance() {
-        let mut m = machine();
+        let m = machine();
         assert_eq!(m.now(0), 0);
         m.compute(0, 100);
         assert_eq!(m.now(0), 100);
@@ -176,7 +362,7 @@ mod tests {
 
     #[test]
     fn advance_to_never_rewinds() {
-        let mut m = machine();
+        let m = machine();
         m.compute(0, 100);
         m.advance_to(0, 50);
         assert_eq!(m.now(0), 100);
@@ -186,7 +372,7 @@ mod tests {
 
     #[test]
     fn min_clock_core_picks_earliest() {
-        let mut m = machine();
+        let m = machine();
         m.compute(0, 100);
         m.compute(1, 50);
         assert_eq!(m.min_clock_core(&[0, 1, 2]), Some(2));
@@ -196,7 +382,7 @@ mod tests {
 
     #[test]
     fn access_charges_time() {
-        let mut m = machine();
+        let m = machine();
         let r = m.alloc("data", 8 << 20, Placement::Bind(0));
         let out = m.access(0, Access::seq_read(r, 8 << 20));
         assert!(out.latency_ns > 0.0);
@@ -205,11 +391,11 @@ mod tests {
 
     #[test]
     fn remote_numa_dram_costs_more() {
-        let mut m1 = machine();
+        let m1 = machine();
         let local = m1.alloc("l", 8 << 20, Placement::Bind(0));
         let a = m1.access(0, Access::seq_read(local, 8 << 20));
 
-        let mut m2 = machine();
+        let m2 = machine();
         let remote = m2.alloc("r", 8 << 20, Placement::Bind(1));
         let b = m2.access(0, Access::seq_read(remote, 8 << 20));
         assert!(
@@ -222,7 +408,7 @@ mod tests {
 
     #[test]
     fn message_cost_follows_topology() {
-        let mut m = machine();
+        let m = machine();
         let intra = m.message(0, 1, 64);
         let inter = m.message(0, 9, 64);
         let cross = m.message(0, 64, 64);
@@ -233,7 +419,7 @@ mod tests {
 
     #[test]
     fn large_message_pays_bandwidth() {
-        let mut m = machine();
+        let m = machine();
         let small = m.message(0, 8, 64);
         let big = m.message(1, 9, 1 << 20);
         assert!(big > small + 10_000, "big={big} small={small}");
@@ -241,7 +427,7 @@ mod tests {
 
     #[test]
     fn switch_costs_differ_by_regime() {
-        let mut m = machine();
+        let m = machine();
         m.coroutine_switch(0);
         let coro = m.now(0);
         m.os_context_switch(1);
@@ -251,13 +437,50 @@ mod tests {
 
     #[test]
     fn reset_dynamic_clears_clocks_and_counters() {
-        let mut m = machine();
+        let m = machine();
         let r = m.alloc("d", 1 << 20, Placement::Bind(0));
         m.access(0, Access::seq_read(r, 1 << 20));
         m.reset_dynamic();
         assert_eq!(m.max_time(), 0);
-        assert_eq!(m.cache.counters.total().total_ops(), 0.0);
+        assert_eq!(m.class_totals().total_ops(), 0.0);
         // Region registration survives.
-        assert_eq!(m.cache.region_size(r), 1 << 20);
+        assert_eq!(m.region_size(r), 1 << 20);
+    }
+
+    #[test]
+    fn spreading_dram_traffic_across_chiplets_beats_one_if_link() {
+        // The per-CCD IF link is the narrow stage for a single chiplet
+        // (§2.3): the same DRAM bytes served through 8 chiplet shards
+        // finish faster than funneled through one.
+        let single = machine();
+        let r1 = single.alloc("d", 64 << 20, Placement::Bind(0));
+        let funneled = single.access(0, Access::seq_read(r1, 64 << 20));
+
+        let spread = machine();
+        let r2 = spread.alloc("d", 64 << 20, Placement::Bind(0));
+        let mut spread_max = 0.0f64;
+        for ch in 0..8 {
+            let out = spread.access(ch * 8, Access::seq_read(r2, 8 << 20));
+            spread_max = spread_max.max(out.latency_ns);
+        }
+        assert!(
+            spread_max < funneled.latency_ns,
+            "spread {spread_max} must beat single-link {}",
+            funneled.latency_ns
+        );
+    }
+
+    #[test]
+    fn view_charges_the_bound_core() {
+        let m = machine();
+        let v = m.view(3);
+        v.compute(100);
+        let r = m.alloc("d", 1 << 20, Placement::Bind(0));
+        let out = v.access(Access::seq_read(r, 1 << 20));
+        assert!(out.total_ops() > 0.0);
+        assert!(m.now(3) >= 100);
+        assert_eq!(m.now(0), 0);
+        assert_eq!(v.chiplet(), 0);
+        assert_eq!(v.core(), 3);
     }
 }

@@ -13,7 +13,7 @@
 
 use crate::cachesim::{Access, Outcome};
 use crate::mem::RegionId;
-use crate::sim::Machine;
+use crate::sim::{Machine, MachineView};
 
 pub type TaskId = usize;
 
@@ -36,8 +36,13 @@ pub trait Coroutine: Send {
 /// Execution context handed to a coroutine step: the gateway through which
 /// tasks touch the simulated machine (and the PJRT runtime, via
 /// workloads that capture an executable).
+///
+/// Since the sharded-accounting refactor the machine reference is
+/// *shared*: all charging goes through [`MachineView`] onto per-chiplet
+/// shards, so steps on different chiplets run (and charge) concurrently
+/// on the host backend instead of serializing behind one `&mut Machine`.
 pub struct TaskCtx<'a> {
-    pub machine: &'a mut Machine,
+    pub machine: &'a Machine,
     /// Core the task is currently running on.
     pub core: usize,
     pub task_id: TaskId,
@@ -52,9 +57,15 @@ pub struct TaskCtx<'a> {
 }
 
 impl<'a> TaskCtx<'a> {
+    /// The charging handle this step works through: the task's current
+    /// core bound to its chiplet shard.
+    pub fn view(&self) -> MachineView<'a> {
+        self.machine.view(self.core)
+    }
+
     /// Model a memory access; charges virtual time on the current core.
     pub fn access(&mut self, acc: Access) -> Outcome {
-        let out = self.machine.access(self.core, acc);
+        let out = self.view().access(acc);
         self.step_outcome.local_hits += out.local_hits;
         self.step_outcome.near_hits += out.near_hits;
         self.step_outcome.far_hits += out.far_hits;
@@ -81,7 +92,7 @@ impl<'a> TaskCtx<'a> {
 
     /// Pure compute for `ns` virtual nanoseconds.
     pub fn compute_ns(&mut self, ns: u64) {
-        self.machine.compute(self.core, ns);
+        self.view().compute(ns);
     }
 
     /// Compute cost modeled from FLOPs (Milan core ≈ 32 SP FLOP/cycle at
@@ -90,7 +101,7 @@ impl<'a> TaskCtx<'a> {
     pub fn compute_flops(&mut self, flops: u64) {
         const FLOPS_PER_NS: f64 = 48.0;
         let ns = (flops as f64 / FLOPS_PER_NS).ceil() as u64;
-        self.machine.compute(self.core, ns.max(1));
+        self.view().compute(ns.max(1));
     }
 
     /// Which chiplet the task currently runs on.
@@ -247,7 +258,7 @@ mod tests {
     use crate::mem::Placement;
     use crate::topology::Topology;
 
-    fn ctx_on<'a>(machine: &'a mut Machine, core: usize) -> TaskCtx<'a> {
+    fn ctx_on(machine: &Machine, core: usize) -> TaskCtx<'_> {
         TaskCtx {
             machine,
             core,
@@ -261,13 +272,13 @@ mod tests {
 
     #[test]
     fn fn_task_runs_once() {
-        let mut m = Machine::new(Topology::milan_1s());
+        let m = Machine::new(Topology::milan_1s());
         let mut hits = 0u32;
         let mut t = FnTask(|ctx: &mut TaskCtx<'_>| {
             ctx.compute_ns(10);
             hits += 1;
         });
-        let mut c = ctx_on(&mut m, 0);
+        let mut c = ctx_on(&m, 0);
         assert_eq!(t.step(&mut c), Step::Done);
         drop(c);
         assert_eq!(hits, 1);
@@ -276,9 +287,9 @@ mod tests {
 
     #[test]
     fn iter_task_yields_then_finishes() {
-        let mut m = Machine::new(Topology::milan_1s());
+        let m = Machine::new(Topology::milan_1s());
         let mut t = IterTask::new(3, |ctx, _i| ctx.compute_ns(5));
-        let mut c = ctx_on(&mut m, 0);
+        let mut c = ctx_on(&m, 0);
         assert_eq!(t.step(&mut c), Step::Yield);
         assert_eq!(t.step(&mut c), Step::Yield);
         assert_eq!(t.step(&mut c), Step::Done);
@@ -288,28 +299,28 @@ mod tests {
 
     #[test]
     fn bsp_task_barriers_between_iterations() {
-        let mut m = Machine::new(Topology::milan_1s());
+        let m = Machine::new(Topology::milan_1s());
         let mut t = BspTask::new(2, |ctx, _| ctx.compute_ns(1));
-        let mut c = ctx_on(&mut m, 0);
+        let mut c = ctx_on(&m, 0);
         assert_eq!(t.step(&mut c), Step::Barrier);
         assert_eq!(t.step(&mut c), Step::Done);
     }
 
     #[test]
     fn zero_iter_tasks_finish_immediately() {
-        let mut m = Machine::new(Topology::milan_1s());
+        let m = Machine::new(Topology::milan_1s());
         let mut t = IterTask::new(0, |_, _| {});
         let mut b = BspTask::new(0, |_, _| {});
-        let mut c = ctx_on(&mut m, 0);
+        let mut c = ctx_on(&m, 0);
         assert_eq!(t.step(&mut c), Step::Done);
         assert_eq!(b.step(&mut c), Step::Done);
     }
 
     #[test]
     fn ctx_access_charges_and_records() {
-        let mut m = Machine::new(Topology::milan_1s());
+        let m = Machine::new(Topology::milan_1s());
         let r = m.alloc("d", 1 << 20, Placement::Bind(0));
-        let mut c = ctx_on(&mut m, 0);
+        let mut c = ctx_on(&m, 0);
         let out = c.seq_read(r, 1 << 20);
         assert!(out.total_ops() > 0.0);
         assert!(c.step_outcome.latency_ns > 0.0);
@@ -319,8 +330,8 @@ mod tests {
 
     #[test]
     fn compute_flops_scales() {
-        let mut m = Machine::new(Topology::milan_1s());
-        let mut c = ctx_on(&mut m, 0);
+        let m = Machine::new(Topology::milan_1s());
+        let mut c = ctx_on(&m, 0);
         c.compute_flops(48_000);
         drop(c);
         assert_eq!(m.now(0), 1_000);
@@ -328,8 +339,8 @@ mod tests {
 
     #[test]
     fn chiplet_and_numa_helpers() {
-        let mut m = Machine::new(Topology::milan_2s());
-        let c = ctx_on(&mut m, 70);
+        let m = Machine::new(Topology::milan_2s());
+        let c = ctx_on(&m, 70);
         assert_eq!(c.chiplet(), 8);
         assert_eq!(c.numa(), 1);
     }

@@ -1,0 +1,418 @@
+//! Mixed multi-tenant workload: YCSB (OLTP) + TPC-H-shaped scan (OLAP)
+//! co-resident on one machine.
+//!
+//! The "millions of users" serving story is never one workload at a
+//! time: a production box runs latency-sensitive transactions *next to*
+//! scan-heavy analytics, and the interesting systems question is what
+//! the tenants do to each other's caches and memory channels. This
+//! scenario makes that contention first-class:
+//!
+//! - **OLTP tenant** (ranks `0..n_oltp`): the ERMIA-style YCSB mix from
+//!   [`crate::workloads::oltp`] — zipfian point reads/RMWs over a shared
+//!   record store, commit-counter ping-pong and log appends.
+//! - **OLAP tenant** (ranks `n_oltp..n`): a TPC-H Q1-shaped pricing
+//!   summary — a full scan of the `lineitem` fact table with the same
+//!   deterministic selectivity filter and aggregate the OLAP engine
+//!   uses, verified against [`crate::workloads::olap::run_query_serial`].
+//!
+//! Both tenants' regions are interleaved across NUMA nodes and their
+//! coroutines yield every chunk, so the scheduler genuinely co-schedules
+//! them: OLAP scan fills evict OLTP residency, both sides queue on the
+//! same DDR trackers, and on partitioned-L3 machines the per-chiplet
+//! shards ([`crate::coordinator`]) make the cross-tenant interference
+//! visible per chiplet instead of as one blurred global number. The
+//! tenants are deliberately barrier-free (the scan is embarrassingly
+//! parallel; transactions are independent), so neither tenant's progress
+//! gates the other's — contention is the only coupling.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::engine::{Scenario, ScenarioMetrics};
+use crate::mem::{Placement, RegionId};
+use crate::sched::RunReport;
+use crate::sim::Machine;
+use crate::task::{Coroutine, StateTask, Step};
+use crate::util::prng::Rng;
+use crate::workloads::olap::exec::{agg_value, keep};
+use crate::workloads::olap::{run_query_serial, Db, QuerySpec};
+use crate::workloads::oltp::Store;
+
+/// Transactions per OLTP coroutine step (same chunking as the pure OLTP
+/// scenario: every chunk is a yield/co-scheduling point).
+const TXNS_PER_STEP: u64 = 64;
+
+/// Probe rows per OLAP coroutine step.
+const ROWS_PER_STEP: usize = 2048;
+
+/// YCSB + TPC-H scan co-residency as a [`Scenario`].
+pub struct MixedScenario {
+    /// YCSB table size (records).
+    records: usize,
+    /// YCSB read fraction (reads vs RMWs).
+    read_frac: f64,
+    /// Transactions per OLTP rank.
+    txns_per_core: u64,
+    seed: u64,
+    /// The analytics database (scan side).
+    db: Arc<Db>,
+    /// The scan query shape (must be join-free; Q1 by default).
+    spec: QuerySpec,
+    tasks: usize,
+    n_oltp: usize,
+    st: Option<MixedState>,
+}
+
+/// Post-`setup` shared state.
+struct MixedState {
+    store: Arc<Store>,
+    commit_region: RegionId,
+    log_region: RegionId,
+    probe_region: RegionId,
+    group_region: RegionId,
+    commits: Arc<AtomicU64>,
+    aborts: Arc<AtomicU64>,
+    /// OLAP partials merged at each rank's final chunk.
+    olap: Arc<Mutex<(u64, f64)>>,
+}
+
+impl MixedScenario {
+    /// `records`/`read_frac` shape the YCSB tenant; `txns_per_core` is
+    /// per OLTP rank; `spec` must be a join-free scan query.
+    pub fn new(
+        records: usize,
+        read_frac: f64,
+        txns_per_core: u64,
+        seed: u64,
+        db: Arc<Db>,
+        spec: QuerySpec,
+    ) -> Self {
+        assert!(
+            spec.joins.is_empty(),
+            "mixed scenario's OLAP tenant is a scan: Q{} has joins",
+            spec.id
+        );
+        Self {
+            records,
+            read_frac,
+            txns_per_core,
+            seed,
+            db,
+            spec,
+            tasks: 0,
+            n_oltp: 0,
+            st: None,
+        }
+    }
+
+    /// Committed transactions; valid after the run.
+    pub fn commits(&self) -> u64 {
+        self.st
+            .as_ref()
+            .map_or(0, |st| st.commits.load(Ordering::Relaxed))
+    }
+
+    /// Aborted transactions; valid after the run.
+    pub fn aborts(&self) -> u64 {
+        self.st
+            .as_ref()
+            .map_or(0, |st| st.aborts.load(Ordering::Relaxed))
+    }
+
+    /// (rows, aggregate) produced by the OLAP tenant; valid after the run.
+    pub fn olap_result(&self) -> (u64, f64) {
+        self.st.as_ref().map_or((0, 0.0), |st| *st.olap.lock().unwrap())
+    }
+
+    /// How many ranks each tenant got (OLTP first).
+    pub fn split(&self) -> (usize, usize) {
+        (self.n_oltp, self.tasks - self.n_oltp)
+    }
+
+    fn olap_rank_coroutine(&self, olap_rank: usize, n_olap: usize) -> Box<dyn Coroutine> {
+        let st = self.st.as_ref().expect("setup() before spawn()");
+        let db = self.db.clone();
+        let spec = self.spec.clone();
+        let salt = spec.id as u64 * 0x1234_5678;
+        let probe_region = st.probe_region;
+        let group_region = st.group_region;
+        let olap = st.olap.clone();
+        // This rank's slice of the fact table, scanned in yielding chunks.
+        let rows = db.rows(spec.probe);
+        let per = rows.div_ceil(n_olap);
+        let lo = (olap_rank * per).min(rows);
+        let hi = ((olap_rank + 1) * per).min(rows);
+        let chunks = (hi - lo).div_ceil(ROWS_PER_STEP).max(1) as u64;
+        let mut local_rows = 0u64;
+        let mut local_sum = 0.0f64;
+        Box::new(StateTask::new(move |ctx, step| {
+            if step >= chunks {
+                return Step::Done;
+            }
+            let c_lo = lo + step as usize * ROWS_PER_STEP;
+            let c_hi = (c_lo + ROWS_PER_STEP).min(hi);
+            for r in c_lo..c_hi {
+                if keep(r as u64, salt, spec.probe_selectivity) {
+                    local_rows += 1;
+                    local_sum += agg_value(&db, spec.probe, r);
+                }
+            }
+            ctx.seq_read(
+                probe_region,
+                ((c_hi - c_lo) as u64) * db.row_bytes(spec.probe),
+            );
+            ctx.compute_flops(spec.flops_per_row * (c_hi - c_lo) as u64);
+            if step + 1 >= chunks {
+                // Final chunk: publish this rank's partials.
+                let mut agg = olap.lock().unwrap();
+                agg.0 += local_rows;
+                agg.1 += local_sum;
+                ctx.seq_write(group_region, 64);
+                Step::Done
+            } else {
+                Step::Yield
+            }
+        }))
+    }
+
+    fn oltp_rank_coroutine(&self, rank: usize) -> Box<dyn Coroutine> {
+        let st = self.st.as_ref().expect("setup() before spawn()");
+        let txns_per_core = self.txns_per_core;
+        let steps = txns_per_core.div_ceil(TXNS_PER_STEP);
+        let records = self.records;
+        let read_frac = self.read_frac;
+        let store = st.store.clone();
+        let commit_region = st.commit_region;
+        let log_region = st.log_region;
+        let commits = st.commits.clone();
+        let aborts = st.aborts.clone();
+        let mut rng = Rng::new(self.seed ^ ((rank as u64) << 40));
+        Box::new(StateTask::new(move |ctx, step| {
+            if step >= steps {
+                return Step::Done;
+            }
+            let todo = TXNS_PER_STEP.min(txns_per_core - step * TXNS_PER_STEP);
+            let mut ok = 0u64;
+            let mut failed = 0u64;
+            let mut reads = 0u64;
+            let mut writes = 0u64;
+            for _ in 0..todo {
+                let key = rng.gen_zipf(records as u64, 0.99) as usize;
+                let committed = if rng.gen_bool(read_frac) {
+                    let _ = store.read(key);
+                    reads += 1;
+                    true
+                } else {
+                    reads += 1;
+                    writes += 1;
+                    store.rmw(key, 1)
+                };
+                if committed {
+                    ok += 1;
+                } else {
+                    failed += 1;
+                }
+            }
+            commits.fetch_add(ok, Ordering::Relaxed);
+            aborts.fetch_add(failed, Ordering::Relaxed);
+
+            // --- cost model for this chunk (same shape as OltpScenario).
+            if reads > 0 {
+                ctx.access(
+                    crate::cachesim::Access::rand_read(store.region, reads, store.bytes)
+                        .with_mlp(1.5),
+                );
+            }
+            if writes > 0 {
+                ctx.access(
+                    crate::cachesim::Access::rand_write(store.region, writes, store.bytes)
+                        .with_mlp(1.5),
+                );
+            }
+            if ok > 0 {
+                ctx.rand_write(commit_region, ok, 64);
+                ctx.seq_write(log_region, ok * 128);
+                ctx.compute_ns(ok * 600);
+            }
+            ctx.compute_flops(todo * 300);
+            if step + 1 >= steps {
+                Step::Done
+            } else {
+                Step::Yield
+            }
+        }))
+    }
+}
+
+impl Scenario for MixedScenario {
+    fn name(&self) -> &'static str {
+        "mixed-oltp-olap"
+    }
+
+    fn setup(&mut self, machine: &mut Machine, tasks: usize) {
+        self.tasks = tasks;
+        // Split ranks between tenants: OLTP gets the ceiling half, so a
+        // single-rank group degenerates to pure OLTP (never to nothing).
+        self.n_oltp = tasks.div_ceil(2);
+        let store = Arc::new(Store::new(machine, "mixed-ycsb-table", self.records, 100));
+        let commit_region = machine.alloc("mixed-commit-counter", 64, Placement::Bind(0));
+        let log_region = machine.alloc("mixed-txn-log", 64 << 20, Placement::Bind(0));
+        let probe_region = machine.alloc(
+            "mixed-probe-table",
+            self.db.table_bytes(self.spec.probe),
+            Placement::Interleave,
+        );
+        let group_region = machine.alloc("mixed-group-state", 4 << 10, Placement::Interleave);
+        self.st = Some(MixedState {
+            store,
+            commit_region,
+            log_region,
+            probe_region,
+            group_region,
+            commits: Arc::new(AtomicU64::new(0)),
+            aborts: Arc::new(AtomicU64::new(0)),
+            olap: Arc::new(Mutex::new((0, 0.0))),
+        });
+    }
+
+    fn spawn(&mut self, rank: usize) -> Box<dyn Coroutine> {
+        if rank < self.n_oltp {
+            self.oltp_rank_coroutine(rank)
+        } else {
+            let n_olap = self.tasks - self.n_oltp;
+            self.olap_rank_coroutine(rank - self.n_oltp, n_olap)
+        }
+    }
+
+    fn verify(&self) {
+        // OLTP tenant: every transaction committed or aborted.
+        let total = self.commits() + self.aborts();
+        let expect = self.n_oltp as u64 * self.txns_per_core;
+        assert_eq!(
+            total, expect,
+            "every transaction must commit or abort ({total} of {expect})"
+        );
+        // OLAP tenant: scan matches the OLAP engine's serial oracle.
+        if self.tasks > self.n_oltp {
+            let (rows, sum) = self.olap_result();
+            let (rows_ref, sum_ref) = run_query_serial(&self.db, &self.spec);
+            assert_eq!(
+                rows, rows_ref,
+                "Q{}: co-resident scan row count diverges from the serial oracle",
+                self.spec.id
+            );
+            assert!(
+                (sum - sum_ref).abs() <= sum_ref.abs() * 1e-9 + 1e-6,
+                "Q{}: aggregate {} vs serial {}",
+                self.spec.id,
+                sum,
+                sum_ref
+            );
+        }
+    }
+
+    fn metrics(&self, report: &RunReport) -> ScenarioMetrics {
+        let (rows, _) = self.olap_result();
+        let scanned = if self.tasks > self.n_oltp {
+            self.db.rows(self.spec.probe) as f64
+        } else {
+            0.0
+        };
+        // Primary work-item count: both tenants' completed units.
+        let items = self.commits() as f64 + scanned;
+        ScenarioMetrics::new(items, "ops")
+            .with("commits", self.commits() as f64)
+            .with("aborts", self.aborts() as f64)
+            .with("commits_per_s", report.throughput(self.commits() as f64))
+            .with("olap_rows_out", rows as f64)
+            .with("olap_rows_per_s", report.throughput(scanned))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::Driver;
+    use crate::policy::LocalCachePolicy;
+    use crate::topology::Topology;
+    use crate::workloads::olap::all_queries;
+
+    fn scenario(scale: f64, txns: u64) -> MixedScenario {
+        let db = Arc::new(Db::generate(scale, 7));
+        MixedScenario::new(10_000, 0.45, txns, 3, db, all_queries()[0].clone())
+    }
+
+    fn topo() -> Topology {
+        Topology::milan_1s()
+    }
+
+    #[test]
+    fn tenants_split_the_group_and_both_make_progress() {
+        let mut s = scenario(0.002, 512);
+        let run = Driver::new(&topo(), Box::new(LocalCachePolicy), 8)
+            .with_verify(true)
+            .run(&mut s);
+        assert_eq!(s.split(), (4, 4));
+        assert_eq!(s.commits() + s.aborts(), 4 * 512);
+        let (rows, sum) = s.olap_result();
+        assert!(rows > 0, "scan produced nothing");
+        assert!(sum > 0.0);
+        assert!(run.report.makespan_ns > 0);
+        assert!(run.metrics.get("commits").unwrap() > 0.0);
+    }
+
+    #[test]
+    fn single_rank_degenerates_to_pure_oltp() {
+        let mut s = scenario(0.002, 128);
+        let _ = Driver::new(&topo(), Box::new(LocalCachePolicy), 1)
+            .with_verify(true)
+            .run(&mut s);
+        assert_eq!(s.split(), (1, 0));
+        assert_eq!(s.commits() + s.aborts(), 128);
+        assert_eq!(s.olap_result().0, 0);
+    }
+
+    #[test]
+    fn runs_are_deterministic_on_the_sim_backend() {
+        let run_once = || {
+            let mut s = scenario(0.002, 256);
+            let run = Driver::new(&topo(), Box::new(LocalCachePolicy), 8).run(&mut s);
+            (
+                run.report.makespan_ns,
+                run.report.dispatches,
+                s.commits(),
+                s.olap_result().0,
+            )
+        };
+        assert_eq!(run_once(), run_once());
+    }
+
+    #[test]
+    fn co_residency_contends_vs_isolated_oltp() {
+        // The same OLTP work with a co-resident scan tenant must consume
+        // more DRAM bandwidth machine-wide than alone (the scan's
+        // traffic), i.e. the tenants actually share the accounting.
+        let mut mixed = scenario(0.01, 512);
+        let with_scan = Driver::new(&topo(), Box::new(LocalCachePolicy), 8).run(&mut mixed);
+        let wl = crate::workloads::oltp::OltpWorkload::Ycsb {
+            records: 10_000,
+            read_frac: 0.45,
+        };
+        let alone =
+            crate::workloads::oltp::run_oltp(&topo(), Box::new(LocalCachePolicy), 4, &wl, 512, 3);
+        assert!(
+            with_scan.report.dram_bytes > alone.report.dram_bytes,
+            "mixed {} must out-traffic isolated {}",
+            with_scan.report.dram_bytes,
+            alone.report.dram_bytes
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "joins")]
+    fn join_queries_are_rejected() {
+        let db = Arc::new(Db::generate(0.002, 7));
+        // Q3 has a join: the scan tenant cannot run it.
+        let _ = MixedScenario::new(1024, 0.5, 10, 1, db, all_queries()[2].clone());
+    }
+}

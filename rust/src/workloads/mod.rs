@@ -1,6 +1,7 @@
-//! Evaluation workloads (paper §5).
+//! Evaluation workloads (paper §5), plus multi-tenant mixes beyond it.
 pub mod graph;
 pub mod streamcluster;
 pub mod sgd;
 pub mod olap;
 pub mod oltp;
+pub mod mixed;

@@ -28,8 +28,10 @@ use crate::topology::Topology;
 const HASH_SHARDS: usize = 64;
 
 /// Deterministic selectivity filter: keep `row` with probability `sel`.
+/// Shared with the mixed multi-tenant scenario's OLAP tenant so both
+/// verify against the same serial oracle.
 #[inline]
-fn keep(row: u64, salt: u64, sel: f64) -> bool {
+pub(crate) fn keep(row: u64, salt: u64, sel: f64) -> bool {
     if sel >= 1.0 {
         return true;
     }
@@ -102,7 +104,7 @@ fn probe_key(db: &Db, probe: Table, col: KeyCol, row: usize) -> u64 {
 }
 
 /// Aggregation value for a passing probe row.
-fn agg_value(db: &Db, probe: Table, row: usize) -> f64 {
+pub(crate) fn agg_value(db: &Db, probe: Table, row: usize) -> f64 {
     match probe {
         Table::Lineitem => {
             (db.lineitem.extendedprice[row] * (1.0 - db.lineitem.discount[row])) as f64

@@ -60,15 +60,17 @@ impl OltpRun {
     }
 }
 
-/// In-memory record store: one versioned word per record.
-struct Store {
-    records: Vec<AtomicU64>,
-    region: RegionId,
-    bytes: u64,
+/// In-memory record store: one versioned word per record. Shared with
+/// the mixed multi-tenant scenario (`workloads::mixed`), whose OLTP
+/// tenant runs the same YCSB mix over it.
+pub(crate) struct Store {
+    pub(crate) records: Vec<AtomicU64>,
+    pub(crate) region: RegionId,
+    pub(crate) bytes: u64,
 }
 
 impl Store {
-    fn new(machine: &mut Machine, label: &str, n: usize, rec_bytes: u64) -> Self {
+    pub(crate) fn new(machine: &mut Machine, label: &str, n: usize, rec_bytes: u64) -> Self {
         let bytes = (n as u64 * rec_bytes).max(64);
         let region = machine.alloc(label, bytes, Placement::Interleave);
         Self {
@@ -79,13 +81,13 @@ impl Store {
     }
 
     #[inline]
-    fn read(&self, i: usize) -> u64 {
+    pub(crate) fn read(&self, i: usize) -> u64 {
         self.records[i % self.records.len()].load(Ordering::Relaxed)
     }
 
     /// Optimistic RMW: returns false on version conflict (abort).
     #[inline]
-    fn rmw(&self, i: usize, delta: u64) -> bool {
+    pub(crate) fn rmw(&self, i: usize, delta: u64) -> bool {
         let slot = &self.records[i % self.records.len()];
         let cur = slot.load(Ordering::Relaxed);
         slot.compare_exchange(

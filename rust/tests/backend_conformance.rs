@@ -21,8 +21,9 @@ use arcas::sched::RunReport;
 use arcas::topology::Topology;
 
 /// Small instances, same knobs the engine golden tests use: ~1k-vertex
-/// graphs, 4 intensity units, fast enough to run 11 scenarios × both
-/// backends on every push.
+/// graphs, 4 intensity units, fast enough to run every registry
+/// scenario × both backends on every push (the `COVERED` check below
+/// keeps the suite in lockstep with the registry as it grows).
 fn small_params() -> ScenarioParams {
     ScenarioParams {
         scale: 0.002,
@@ -116,6 +117,7 @@ conformance_tests! {
     conformance_tpch => "tpch";
     conformance_ycsb => "ycsb";
     conformance_tpcc => "tpcc";
+    conformance_mixed_oltp_olap => "mixed-oltp-olap";
 }
 
 #[test]

@@ -35,7 +35,7 @@ fn adaptive_controller_spreads_under_cache_pressure() {
     // Working set >> one chiplet's L3 with heavy remote fills: the
     // controller should move away from maximal compaction.
     let topo = Topology::milan_1s().scale_caches(1.0 / 64.0);
-    let mut machine = Machine::new(topo.clone());
+    let machine = Machine::new(topo.clone());
     let region = machine.alloc("big", 64 << 20, Placement::Interleave);
     let policy = ArcasPolicy::new(&topo)
         .with_timer(20_000)
@@ -63,7 +63,7 @@ impl SpreadProbe for ArcasPolicy {
 fn approaches_bias_final_spread() {
     let topo = Topology::milan_1s();
     let run = |approach: Approach| -> usize {
-        let mut machine = Machine::new(topo.clone());
+        let machine = Machine::new(topo.clone());
         let region = machine.alloc("ws", 16 << 20, Placement::Interleave);
         let policy = ArcasPolicy::new(&topo)
             .with_timer(20_000)
@@ -110,7 +110,7 @@ fn monolithic_topology_neutralizes_chiplet_awareness() {
     // Ablation: on a monolithic LLC machine, ARCAS ≈ Shoal.
     let topo = Topology::monolithic_64();
     let run = |policy: Box<dyn arcas::policy::Policy>| -> u64 {
-        let mut machine = Machine::new(topo.clone());
+        let machine = Machine::new(topo.clone());
         let region = machine.alloc("ws", 32 << 20, Placement::Bind(0));
         run_group(machine, policy, 16, |_| {
             Box::new(IterTask::new(50, move |ctx: &mut TaskCtx<'_>, _| {

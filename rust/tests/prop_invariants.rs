@@ -7,10 +7,10 @@
 
 use std::sync::Arc;
 
-use arcas::cachesim::{Access, CacheSim};
+use arcas::cachesim::Access;
 use arcas::controller::{placement_map_bounded, update_location_bounded};
 use arcas::deque::Deque;
-use arcas::mem::RegionId;
+use arcas::mem::Placement;
 use arcas::policy::{by_name, LocalCachePolicy};
 use arcas::sched::run_group;
 use arcas::sim::Machine;
@@ -147,17 +147,16 @@ fn prop_cache_outcome_conserves_ops() {
             (size, core, ops, write)
         },
         |&(size, core, ops, write)| {
-            let mut sim = CacheSim::new(&topo);
-            let r = RegionId(1);
-            sim.register_region(r, size);
-            // Warm a random other chiplet first.
-            sim.access(0, Access::seq_read(r, size.min(8 << 20)));
+            let m = Machine::new(topo.clone());
+            let r = m.alloc("prop", size, Placement::Interleave);
+            // Warm chiplet 0 first.
+            m.access(0, Access::seq_read(r, size.min(8 << 20)));
             let acc = if write {
                 Access::rand_write(r, ops, size)
             } else {
                 Access::rand_read(r, ops, size)
             };
-            let out = sim.access(core, acc);
+            let out = m.access(core, acc);
             let total = out.total_ops();
             if (total - ops as f64).abs() > 1e-6 * ops as f64 {
                 return Err(format!("ops {} split to {}", ops, total));
@@ -200,25 +199,27 @@ fn prop_cache_residency_never_exceeds_capacity() {
             (n_regions, accesses)
         },
         |(n_regions, accesses)| {
-            let mut sim = CacheSim::new(&topo);
+            let m = Machine::new(topo.clone());
             let sizes: Vec<u64> = (0..*n_regions).map(|i| 4 << (18 + i)).collect();
-            for (i, &s) in sizes.iter().enumerate() {
-                sim.register_region(RegionId(i as u32), s);
-            }
+            let ids: Vec<_> = sizes
+                .iter()
+                .enumerate()
+                .map(|(i, &s)| m.alloc(&format!("r{i}"), s, Placement::Interleave))
+                .collect();
             for &(ri, bytes, write) in accesses {
-                let r = RegionId(ri as u32);
+                let r = ids[ri];
                 let acc = if write {
                     Access::seq_write(r, bytes.min(sizes[ri]))
                 } else {
                     Access::seq_read(r, bytes.min(sizes[ri]))
                 };
-                sim.access(0, acc);
+                m.access(0, acc);
                 // Invariant: per-chiplet residency within capacity, and
                 // per-region residency within the region size.
                 for ch in 0..topo.num_chiplets() {
                     let mut used = 0;
                     for (i, &s) in sizes.iter().enumerate() {
-                        let res = sim.resident(ch, RegionId(i as u32));
+                        let res = m.resident(ch, ids[i]);
                         if res > s {
                             return Err(format!("region {i} residency {res} > size {s}"));
                         }

@@ -1,0 +1,444 @@
+//! Shard-vs-monolith equivalence: the sharded machine accounting
+//! (per-chiplet/per-socket shards, `crate::coordinator`) must be
+//! **byte-for-byte** the pre-refactor monolithic arrangement when driven
+//! single-threaded, and must conserve every charge when driven
+//! concurrently.
+//!
+//! The oracle below *is* the pre-refactor `Machine` layout, rebuilt from
+//! the same primitives: one flat `Vec<ChipletL3>`, one machine-global
+//! LRU stamp, one clock vector, `Vec<BwTracker>`s for DDR and IF links,
+//! and the same `classify()` math over directly indexed residency. The
+//! property drives seeded random schedules (allocs, reads/writes of
+//! every pattern shape, messages, pure compute, barrier-style clock
+//! syncs) through both arrangements and requires exact equality of
+//! every outcome field, every core clock, the per-class counter totals,
+//! and the DRAM byte totals.
+
+use arcas::cachesim::{classify, Access, ChipletL3, ClassCounts, Outcome, Pattern, LINE};
+use arcas::mem::{MemoryManager, Placement, RegionId};
+use arcas::memsim::{BwTracker, BW_WINDOW_NS};
+use arcas::sim::Machine;
+use arcas::topology::Topology;
+use arcas::util::proptest::check;
+use arcas::util::Rng;
+
+/// The pre-refactor monolithic machine accounting, kept as a test oracle.
+struct Monolith {
+    topo: Topology,
+    l3s: Vec<ChipletL3>,
+    counts: Vec<ClassCounts>,
+    /// Machine-global LRU recency stamp (the sharded machine keeps one
+    /// per chiplet; eviction order only depends on per-chiplet
+    /// monotonicity, which this suite is precisely here to prove).
+    stamp: u64,
+    ddr: Vec<BwTracker>,
+    links: Vec<BwTracker>,
+    mm: MemoryManager,
+    clocks: Vec<u64>,
+}
+
+impl Monolith {
+    fn new(topo: Topology) -> Self {
+        Self {
+            l3s: (0..topo.num_chiplets())
+                .map(|_| ChipletL3::new(topo.l3_per_chiplet))
+                .collect(),
+            counts: vec![ClassCounts::default(); topo.num_chiplets()],
+            stamp: 0,
+            ddr: (0..topo.sockets)
+                .map(|_| BwTracker::new(topo.mem_bw_per_socket(), BW_WINDOW_NS))
+                .collect(),
+            links: (0..topo.num_chiplets())
+                .map(|_| BwTracker::new(topo.if_bw_per_chiplet, BW_WINDOW_NS))
+                .collect(),
+            mm: MemoryManager::new(),
+            clocks: vec![0; topo.num_cores()],
+            topo,
+        }
+    }
+
+    fn alloc(&mut self, label: &str, size: u64, placement: Placement) -> RegionId {
+        self.mm.alloc(label, size, placement)
+    }
+
+    fn access(&mut self, core: usize, acc: Access) -> Outcome {
+        let now = self.clocks[core] as f64;
+        let my_chiplet = self.topo.chiplet_of(core);
+        let my_numa = self.topo.numa_of_core(core);
+        let size = self.mm.size(acc.region);
+        let (home, local_frac) = self.mm.dram_home(acc.region, my_numa, self.topo.num_numa());
+
+        // Pre-refactor `CacheSim::access` bumped the global stamp before
+        // the zero-ops early return; keep that quirk.
+        self.stamp += 1;
+        if acc.pattern.ops() == 0 {
+            return Outcome::default();
+        }
+
+        // Monolithic arrangement: residency by direct Vec indexing.
+        let classified = classify(&self.topo, core, acc, size, |ch| {
+            self.l3s[ch].resident(acc.region)
+        });
+        let mut out = classified.out;
+
+        // Fill + coherence + counters, monolithically indexed.
+        let unique = acc.pattern.unique_bytes().min(size);
+        let fill_bytes = ((unique as f64) * (1.0 - classified.p_local)) as u64;
+        self.l3s[my_chiplet].fill(acc.region, fill_bytes, self.stamp, size);
+        if acc.write {
+            let written_frac = (unique as f64 / size.max(1) as f64).min(1.0);
+            for ch in 0..self.l3s.len() {
+                if ch != my_chiplet {
+                    self.l3s[ch].invalidate_frac(acc.region, written_frac);
+                }
+            }
+        }
+        self.counts[my_chiplet].add(&out);
+
+        // Remote-homed DRAM latency correction.
+        if local_frac < 1.0 {
+            let remote_lines = out.dram_lines * (1.0 - local_frac);
+            let extra = self.topo.lat.dram_remote_ns - self.topo.lat.dram_local_ns;
+            out.latency_ns += remote_lines * extra / acc.mlp.max(1.0);
+        }
+
+        // DDR + IF-link bandwidth stages (slower dominates).
+        let bw_ns = if out.dram_bytes > 0.0 {
+            let bw_numa = if local_frac >= 1.0 { my_numa } else { home };
+            let socket = self.topo.socket_of_numa(bw_numa);
+            let ddr = self.ddr[socket].charge(now, out.dram_bytes);
+            let link = self.links[my_chiplet].charge(now, out.dram_bytes);
+            ddr.max(link)
+        } else {
+            0.0
+        };
+        out.latency_ns += bw_ns;
+        self.clocks[core] += out.latency_ns.round() as u64;
+        out
+    }
+
+    fn message(&mut self, from: usize, to: usize, bytes: u64) -> u64 {
+        let lat = self.topo.core_to_core_ns(from, to);
+        let stream = (bytes.saturating_sub(64)) as f64 / 32.0;
+        let ns = (lat + stream).round() as u64;
+        self.clocks[from] += ns;
+        ns
+    }
+
+    fn class_totals(&self) -> ClassCounts {
+        let mut t = ClassCounts::default();
+        for c in &self.counts {
+            t.merge(c);
+        }
+        t
+    }
+
+    fn dram_total_bytes(&self) -> f64 {
+        self.ddr.iter().map(|t| t.total_bytes()).sum()
+    }
+}
+
+/// One schedule step.
+#[derive(Clone, Debug)]
+enum Op {
+    Access {
+        core: usize,
+        region: usize,
+        seq: bool,
+        amount: u64,
+        write: bool,
+        mlp: f64,
+    },
+    Compute {
+        core: usize,
+        ns: u64,
+    },
+    Message {
+        from: usize,
+        to: usize,
+        bytes: u64,
+    },
+    SyncTo {
+        core: usize,
+        t: u64,
+    },
+}
+
+#[derive(Clone, Debug)]
+struct Schedule {
+    topo_idx: usize,
+    regions: Vec<(u64, Placement)>,
+    ops: Vec<Op>,
+}
+
+fn topo_for(idx: usize) -> Topology {
+    match idx % 3 {
+        // Scaled-down caches force real LRU churn and evictions.
+        0 => Topology::milan_2s().scale_caches(1.0 / 64.0),
+        1 => Topology::milan_1s().scale_caches(1.0 / 16.0),
+        _ => Topology::milan_2s(),
+    }
+}
+
+fn gen_schedule(rng: &mut Rng) -> Schedule {
+    let topo_idx = rng.gen_index(3);
+    let topo = topo_for(topo_idx);
+    let cores = topo.num_cores();
+    let n_regions = 1 + rng.gen_index(4);
+    let regions: Vec<(u64, Placement)> = (0..n_regions)
+        .map(|_| {
+            let size = LINE * (1 + rng.gen_range(1 << 17)); // up to 8 MiB
+            let placement = match rng.gen_index(3) {
+                0 => Placement::Bind(rng.gen_index(topo.num_numa())),
+                1 => Placement::Interleave,
+                _ => Placement::Replicated,
+            };
+            (size, placement)
+        })
+        .collect();
+    let n_ops = 60 + rng.gen_index(100);
+    let ops = (0..n_ops)
+        .map(|_| match rng.gen_index(10) {
+            0 => Op::Compute {
+                core: rng.gen_index(cores),
+                ns: rng.gen_range(100_000),
+            },
+            1 => Op::Message {
+                from: rng.gen_index(cores),
+                to: rng.gen_index(cores),
+                bytes: rng.gen_range(1 << 16),
+            },
+            2 => Op::SyncTo {
+                core: rng.gen_index(cores),
+                t: rng.gen_range(1 << 20),
+            },
+            _ => {
+                let region = rng.gen_index(n_regions);
+                let size = regions[region].0;
+                let seq = rng.gen_bool(0.5);
+                let amount = if seq {
+                    1 + rng.gen_range(size)
+                } else {
+                    1 + rng.gen_range(20_000)
+                };
+                Op::Access {
+                    core: rng.gen_index(cores),
+                    region,
+                    seq,
+                    amount,
+                    write: rng.gen_bool(0.3),
+                    mlp: [1.0, 1.5, 2.0, 4.0, 8.0][rng.gen_index(5)],
+                }
+            }
+        })
+        .collect();
+    Schedule {
+        topo_idx,
+        regions,
+        ops,
+    }
+}
+
+fn build_access(ids: &[RegionId], sizes: &[u64], op: &Op) -> Option<(usize, Access)> {
+    if let Op::Access {
+        core,
+        region,
+        seq,
+        amount,
+        write,
+        mlp,
+    } = *op
+    {
+        let pattern = if seq {
+            Pattern::Seq { bytes: amount }
+        } else {
+            Pattern::Rand {
+                ops: amount,
+                span: sizes[region],
+            }
+        };
+        Some((
+            core,
+            Access {
+                region: ids[region],
+                pattern,
+                write,
+                mlp,
+            },
+        ))
+    } else {
+        None
+    }
+}
+
+#[test]
+fn prop_sharded_accounting_equals_the_monolith() {
+    check(
+        "sharded == monolith",
+        25,
+        gen_schedule,
+        |schedule| {
+            let topo = topo_for(schedule.topo_idx);
+            let machine = Machine::new(topo.clone());
+            let mut oracle = Monolith::new(topo.clone());
+
+            let mut ids_m = Vec::new();
+            let mut ids_o = Vec::new();
+            let mut sizes = Vec::new();
+            for (i, &(size, placement)) in schedule.regions.iter().enumerate() {
+                ids_m.push(machine.alloc(&format!("r{i}"), size, placement));
+                ids_o.push(oracle.alloc(&format!("r{i}"), size, placement));
+                sizes.push(size);
+            }
+            if ids_m != ids_o {
+                return Err("region id streams diverge".into());
+            }
+
+            for (i, op) in schedule.ops.iter().enumerate() {
+                match op {
+                    Op::Access { .. } => {
+                        let (core, acc) = build_access(&ids_m, &sizes, op).unwrap();
+                        let a = machine.access(core, acc);
+                        let b = oracle.access(core, acc);
+                        for (name, x, y) in [
+                            ("local", a.local_hits, b.local_hits),
+                            ("near", a.near_hits, b.near_hits),
+                            ("far", a.far_hits, b.far_hits),
+                            ("dram", a.dram_lines, b.dram_lines),
+                            ("latency", a.latency_ns, b.latency_ns),
+                            ("bytes", a.dram_bytes, b.dram_bytes),
+                        ] {
+                            // Bit-exact: same float op sequence or bust.
+                            if x != y {
+                                return Err(format!(
+                                    "op {i}: outcome.{name} {x} != {y} (sharded vs monolith)"
+                                ));
+                            }
+                        }
+                    }
+                    Op::Compute { core, ns } => {
+                        machine.compute(*core, *ns);
+                        oracle.clocks[*core] += ns;
+                    }
+                    Op::Message { from, to, bytes } => {
+                        let a = machine.message(*from, *to, *bytes);
+                        let b = oracle.message(*from, *to, *bytes);
+                        if a != b {
+                            return Err(format!("op {i}: message cost {a} != {b}"));
+                        }
+                    }
+                    Op::SyncTo { core, t } => {
+                        machine.advance_to(*core, *t);
+                        oracle.clocks[*core] = oracle.clocks[*core].max(*t);
+                    }
+                }
+            }
+
+            for core in 0..topo.num_cores() {
+                if machine.now(core) != oracle.clocks[core] {
+                    return Err(format!(
+                        "core {core} clock {} != {}",
+                        machine.now(core),
+                        oracle.clocks[core]
+                    ));
+                }
+            }
+            if machine.max_time() != *oracle.clocks.iter().max().unwrap() {
+                return Err("makespan diverges".into());
+            }
+            let (a, b) = (machine.class_totals(), oracle.class_totals());
+            if (a.local, a.near, a.far, a.dram) != (b.local, b.near, b.far, b.dram) {
+                return Err(format!("class totals diverge: {a:?} vs {b:?}"));
+            }
+            if machine.dram_total_bytes() != oracle.dram_total_bytes() {
+                return Err(format!(
+                    "dram bytes diverge: {} vs {}",
+                    machine.dram_total_bytes(),
+                    oracle.dram_total_bytes()
+                ));
+            }
+            // Residency state (what future accesses will see) matches too.
+            for ch in 0..topo.num_chiplets() {
+                for (i, id) in ids_m.iter().enumerate() {
+                    if machine.resident(ch, *id) != oracle.l3s[ch].resident(*id) {
+                        return Err(format!(
+                            "chiplet {ch} region {i} residency {} != {}",
+                            machine.resident(ch, *id),
+                            oracle.l3s[ch].resident(*id)
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Concurrent charging conserves every charge: per-core clocks equal the
+/// exact sum of that worker's charges, and counter/DRAM totals equal the
+/// sum of all returned outcomes (within float-merge tolerance). This is
+/// the property that lets the host backend drop its whole-machine lock.
+#[test]
+fn concurrent_charging_conserves_totals() {
+    use std::sync::Arc;
+    let topo = Topology::milan_2s().scale_caches(1.0 / 16.0);
+    let n_threads = 8usize;
+    let per_thread = 200u64;
+    let machine = Arc::new(Machine::new(topo.clone()));
+    let shared = machine.alloc("shared", 16 << 20, Placement::Interleave);
+
+    let mut handles = Vec::new();
+    for t in 0..n_threads {
+        let machine = machine.clone();
+        // One worker per chiplet, mirroring worker→shard affinity.
+        let core = t * topo.cores_per_chiplet;
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(0xC0FFEE ^ t as u64);
+            let mut charged = 0u64;
+            let mut ops_sum = 0.0f64;
+            let mut bytes_sum = 0.0f64;
+            for _ in 0..per_thread {
+                let out = if rng.gen_bool(0.3) {
+                    machine.access(core, Access::seq_write(shared, 1 + rng.gen_range(1 << 18)))
+                } else {
+                    machine.access(
+                        core,
+                        Access::rand_read(shared, 1 + rng.gen_range(4_000), 16 << 20),
+                    )
+                };
+                charged += out.latency_ns.round() as u64;
+                ops_sum += out.total_ops();
+                bytes_sum += out.dram_bytes;
+            }
+            (core, charged, ops_sum, bytes_sum)
+        }));
+    }
+
+    let mut total_ops = 0.0;
+    let mut total_bytes = 0.0;
+    for h in handles {
+        let (core, charged, ops_sum, bytes_sum) = h.join().unwrap();
+        // Exact: only this thread ever advanced this core's clock.
+        assert_eq!(
+            machine.now(core),
+            charged,
+            "core {core}: clock diverges from the sum of its own charges"
+        );
+        total_ops += ops_sum;
+        total_bytes += bytes_sum;
+    }
+    let totals = machine.class_totals();
+    let rel = |a: f64, b: f64| (a - b).abs() / b.abs().max(1.0);
+    assert!(
+        rel(totals.total_ops(), total_ops) < 1e-9,
+        "counter totals {} != sum of outcomes {}",
+        totals.total_ops(),
+        total_ops
+    );
+    assert!(
+        rel(machine.dram_total_bytes(), total_bytes) < 1e-9,
+        "dram totals {} != sum of outcomes {}",
+        machine.dram_total_bytes(),
+        total_bytes
+    );
+}
