@@ -1,14 +1,17 @@
 # ARCAS reproduction — tooling entry points.
 #
-#   make verify     tier-1 gate: release build + full test suite
-#   make fmt        rustfmt check (no writes)
-#   make clippy     clippy with warnings denied
-#   make ci         everything CI runs, in order
-#   make artifacts  AOT-lower the JAX/Pallas kernels to HLO text (needs
-#                   python + jax; the rust build runs fine without them)
+#   make verify       tier-1 gate: release build + full test suite
+#   make fmt          rustfmt check (no writes)
+#   make clippy       clippy with warnings denied
+#   make ci           everything CI runs, in order (all three workflow jobs)
+#   make host-suites  the release-mode host-backend suites CI's host job runs
+#   make host-scaling host-backend scaling smoke (BENCH_host_scaling.json)
+#   make bench-regression  serving bench + baseline gates (CI's bench job)
+#   make artifacts    AOT-lower the JAX/Pallas kernels to HLO text (needs
+#                     python + jax; the rust build runs fine without them)
 #   make bench-smoke  quick pass over two figure benches
 
-.PHONY: verify build test fmt clippy ci artifacts bench-smoke host-scaling
+.PHONY: verify build test fmt clippy ci artifacts bench-smoke host-suites host-scaling bench-regression
 
 verify: build test
 
@@ -24,7 +27,16 @@ fmt:
 clippy:
 	cargo clippy --all-targets -- -D warnings
 
-ci: fmt clippy verify
+# Mirror of .github/workflows/ci.yml: the `rust` job (fmt+clippy+verify),
+# the `host-backend` job (release-mode suites) and the `bench-regression`
+# job (serving bench + host-scaling smoke + baseline gates) — so a local
+# `make ci` reproduces what the workflow enforces.
+ci: fmt clippy verify host-suites bench-regression
+
+# Release-mode host-backend suites with bounded parallelism (what CI's
+# host-backend job runs; debug-mode coverage already comes via `test`).
+host-suites:
+	cargo test --release --test backend_conformance --test host_stress --test cli_args --test shard_equivalence -- --test-threads 2
 
 artifacts:
 	cd python/compile && python3 aot.py --out-dir ../../artifacts
@@ -37,4 +49,14 @@ bench-smoke:
 # on a memory-bound scenario (sharded accounting = no whole-machine
 # lock). Emits BENCH_host_scaling.json.
 host-scaling:
-	cargo bench --bench micro_runtime -- --scaling-only --assert-scaling --workers 1,8
+	cargo bench --bench micro_runtime -- --scaling-only --assert-scaling --scaling-reps 5 --workers 1,8
+
+# The CI bench-regression gate, locally: run fig_serving + the scaling
+# smoke, then compare both BENCH_*.json against ci/baselines/ (fail on
+# regression, warn on improvement; unpinned baselines only report).
+# Cargo runs bench binaries with CWD = the package root, so the emitted
+# BENCH_*.json files land under rust/.
+bench-regression: build host-scaling
+	cargo bench --bench fig_serving -- --quick
+	./target/release/arcas bench-check --kind serving --baseline ci/baselines/BENCH_serving_latency.json --current rust/BENCH_serving_latency.json
+	./target/release/arcas bench-check --kind scaling --baseline ci/baselines/BENCH_host_scaling.json --current rust/BENCH_host_scaling.json

@@ -112,9 +112,13 @@ fn host_scaling(args: &Args) -> bool {
         .iter()
         .map(|(w, ns)| format!("{{\"workers\": {w}, \"wall_ns\": {ns}}}"))
         .collect();
+    // "pinned": true + "tol" so copying this file over ci/baselines/
+    // (the bench-check re-pin flow) yields a live gate with the intended
+    // band (loose: shared-runner speedups are a smoke signal).
     let json = format!(
         "{{\n  \"bench\": \"host_scaling\",\n  \"scenario\": \"gups\",\n  \
-         \"backend\": \"host\",\n  \"total_updates\": {total_updates},\n  \
+         \"backend\": \"host\",\n  \"pinned\": true,\n  \"tol\": 0.35,\n  \
+         \"total_updates\": {total_updates},\n  \
          \"points\": [{}],\n  \"speedup_max_vs_1\": {}\n}}\n",
         json_points.join(", "),
         speedup.map_or("null".to_string(), |s| format!("{s:.3}")),

@@ -213,6 +213,7 @@ impl Arcas {
             group_size: 1,
             now_ns: 0,
             step_outcome: Default::default(),
+            probe_cache: Default::default(),
         };
         let r = f(&mut ctx);
         // Response message.
@@ -232,6 +233,7 @@ impl Arcas {
             group_size: 1,
             now_ns: 0,
             step_outcome: Default::default(),
+            probe_cache: Default::default(),
         };
         f(&mut ctx);
     }

@@ -234,7 +234,9 @@ pub struct Classified {
 /// fixed order (own chiplet, same-NUMA siblings, then remote NUMA
 /// domains). The caller decides how a query is answered — one brief
 /// shard-lock per chiplet in the sharded machine (never nested, and
-/// skippable when the answer is known to be irrelevant), direct `Vec`
+/// skippable when the answer is known to be irrelevant), a per-step
+/// probe cache ([`crate::sim::ProbeCache`]) that remembers remote
+/// answers across the accesses of one coroutine step, direct `Vec`
 /// indexing in a monolithic oracle — so no allocation or snapshot
 /// buffer is needed. The arithmetic, including float summation order
 /// over sibling and remote chiplets, is exactly the pre-refactor
@@ -245,7 +247,7 @@ pub fn classify(
     core: usize,
     acc: Access,
     region_size: u64,
-    resident_of: impl Fn(usize) -> u64,
+    mut resident_of: impl FnMut(usize) -> u64,
 ) -> Classified {
     let my_chiplet = topo.chiplet_of(core);
     let my_numa = topo.numa_of_core(core);
@@ -258,7 +260,7 @@ pub fn classify(
     // Probability a touched line is resident in a given chiplet's L3.
     // Residency is tracked per-region; resident bytes are assumed
     // uniformly spread over the region.
-    let frac_of = |ch: usize| -> f64 { (resident_of(ch) as f64 / size).min(1.0) };
+    let mut frac_of = |ch: usize| -> f64 { (resident_of(ch) as f64 / size).min(1.0) };
 
     let p_local = frac_of(my_chiplet);
 

@@ -1,0 +1,227 @@
+//! Open-loop request dispatch + per-request latency accounting: the
+//! engine-side machinery of the serving subsystem.
+//!
+//! **Open loop** means the arrival process is fixed ahead of time (a
+//! trace), and requests keep arriving whether or not the servers keep
+//! up — the difference between "how fast can we drain work" (batch
+//! throughput) and "how long did each user wait" (serving latency). The
+//! pieces here are workload-agnostic; `workloads::serve` instantiates
+//! them with KV requests:
+//!
+//! - [`OpenLoopQueue`] — a lock-free FCFS admission queue over a
+//!   time-ordered item list. Server coroutines `pop()` the next
+//!   undispatched request; a request whose arrival timestamp is still in
+//!   the future makes the server *wait for it* (advance its virtual
+//!   clock), never the other way round. On the Sim backend the executor
+//!   always steps the earliest-clock core, so pops follow virtual time
+//!   deterministically (an M/G/k-style multi-server queue); on the Host
+//!   backend workers race on the same atomic cursor and every request is
+//!   still dispatched exactly once.
+//! - [`LatencyRecorder`] — folds each request's sojourn
+//!   (queue wait + service) into a [`LogHistogram`], with queue/service
+//!   mean breakdowns; mergeable so each worker records locally and
+//!   merges once at the end. [`LatencyRecorder::report`] produces the
+//!   [`LatencyReport`] carried in [`RunReport::request_latency`].
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::sched::LatencyReport;
+use crate::util::stats::{LogHistogram, Summary};
+
+/// Lock-free FCFS admission over a fixed, time-ordered item list.
+///
+/// `T` is the request type (kept generic so the engine layer stays free
+/// of workload types); items must be sorted by arrival time for the
+/// FCFS claim to mean anything — the serve trace constructors enforce
+/// that.
+#[derive(Debug)]
+pub struct OpenLoopQueue<T> {
+    items: Vec<T>,
+    next: AtomicUsize,
+}
+
+impl<T: Copy> OpenLoopQueue<T> {
+    pub fn new(items: Vec<T>) -> Arc<Self> {
+        Arc::new(Self {
+            items,
+            next: AtomicUsize::new(0),
+        })
+    }
+
+    /// Claim the next undispatched item (exactly-once across all
+    /// workers); `None` once the trace is drained.
+    #[inline]
+    pub fn pop(&self) -> Option<T> {
+        let i = self.next.fetch_add(1, Ordering::Relaxed);
+        self.items.get(i).copied()
+    }
+
+    /// Total number of items in the trace.
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Items not yet claimed (racy snapshot under concurrency).
+    pub fn remaining(&self) -> usize {
+        self.items
+            .len()
+            .saturating_sub(self.next.load(Ordering::Relaxed))
+    }
+}
+
+/// Per-request latency accounting: sojourn = queue wait + service.
+#[derive(Clone, Debug)]
+pub struct LatencyRecorder {
+    sojourn: LogHistogram,
+    queue: Summary,
+    service: Summary,
+}
+
+impl Default for LatencyRecorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        Self {
+            sojourn: LogHistogram::new(),
+            queue: Summary::new(),
+            service: Summary::new(),
+        }
+    }
+
+    /// Record one served request.
+    #[inline]
+    pub fn record(&mut self, queue_ns: u64, service_ns: u64) {
+        self.sojourn.record(queue_ns + service_ns);
+        self.queue.add(queue_ns as f64);
+        self.service.add(service_ns as f64);
+    }
+
+    /// Fold another recorder in (workers record locally, merge once).
+    pub fn merge(&mut self, other: &LatencyRecorder) {
+        self.sojourn.merge(&other.sojourn);
+        self.queue.merge(&other.queue);
+        self.service.merge(&other.service);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.sojourn.count()
+    }
+
+    /// The sojourn histogram (CDF/quantile source for benches).
+    pub fn histogram(&self) -> &LogHistogram {
+        &self.sojourn
+    }
+
+    /// The aggregate carried in `RunReport::request_latency` (`None`
+    /// when nothing was recorded).
+    pub fn report(&self) -> Option<LatencyReport> {
+        if self.sojourn.is_empty() {
+            return None;
+        }
+        Some(LatencyReport {
+            count: self.sojourn.count(),
+            mean_ns: self.sojourn.mean(),
+            p50_ns: self.sojourn.quantile(0.50),
+            p95_ns: self.sojourn.quantile(0.95),
+            p99_ns: self.sojourn.quantile(0.99),
+            max_ns: self.sojourn.max(),
+            mean_queue_ns: self.queue.mean(),
+            mean_service_ns: self.service.mean(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queue_dispatches_each_item_exactly_once_in_order() {
+        let q = OpenLoopQueue::new((0..100u64).collect());
+        assert_eq!(q.len(), 100);
+        assert_eq!(q.remaining(), 100);
+        let mut seen = Vec::new();
+        while let Some(v) = q.pop() {
+            seen.push(v);
+        }
+        assert_eq!(seen, (0..100).collect::<Vec<_>>());
+        assert_eq!(q.remaining(), 0);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn queue_is_exactly_once_under_concurrency() {
+        use std::sync::Mutex;
+        let q = OpenLoopQueue::new((0..10_000u64).collect());
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let q = q.clone();
+            let seen = seen.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut local = Vec::new();
+                while let Some(v) = q.pop() {
+                    local.push(v);
+                }
+                seen.lock().unwrap().extend(local);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut all = Arc::try_unwrap(seen).unwrap().into_inner().unwrap();
+        all.sort_unstable();
+        assert_eq!(all, (0..10_000).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_queue_and_empty_recorder() {
+        let q: Arc<OpenLoopQueue<u64>> = OpenLoopQueue::new(Vec::new());
+        assert!(q.is_empty());
+        assert!(q.pop().is_none());
+        assert!(LatencyRecorder::new().report().is_none());
+    }
+
+    #[test]
+    fn recorder_aggregates_sojourn_and_breakdown() {
+        let mut r = LatencyRecorder::new();
+        r.record(100, 900); // sojourn 1000
+        r.record(0, 500);
+        r.record(2_000, 1_000); // tail: 3000
+        let rep = r.report().unwrap();
+        assert_eq!(rep.count, 3);
+        assert_eq!(rep.max_ns, 3_000);
+        assert!(rep.p50_ns <= rep.p95_ns && rep.p95_ns <= rep.p99_ns);
+        assert!(rep.p99_ns <= rep.max_ns);
+        assert!((rep.mean_ns - 1500.0).abs() < 1e-9);
+        assert!((rep.mean_queue_ns - 700.0).abs() < 1e-9);
+        assert!((rep.mean_service_ns - 800.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn recorder_merge_equals_combined() {
+        let mut a = LatencyRecorder::new();
+        let mut b = LatencyRecorder::new();
+        let mut all = LatencyRecorder::new();
+        for i in 0..1000u64 {
+            let (q, s) = (i * 7 % 5000, 200 + i % 800);
+            all.record(q, s);
+            if i % 2 == 0 {
+                a.record(q, s);
+            } else {
+                b.record(q, s);
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.report(), all.report());
+    }
+}

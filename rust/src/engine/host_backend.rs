@@ -147,6 +147,7 @@ pub(crate) fn execute_host(
         spread_rate: policy.spread_rate(),
         wall_ns: wall_start.elapsed().as_nanos() as u64,
         host_steals,
+        request_latency: None,
     };
     (report, machine)
 }
@@ -184,6 +185,7 @@ fn step_rank(run: Arc<HostRun>, sub: Submitter, rank: usize) {
             group_size: run.ranks.len(),
             now_ns: machine.now(core),
             step_outcome: Outcome::default(),
+            probe_cache: Default::default(),
         };
         coro.step(&mut ctx)
     };

@@ -25,15 +25,17 @@
 //! deterministic reports are unchanged. See `rust/src/engine/README.md`
 //! for the architecture notes and a porting guide.
 
+pub mod dispatch;
 mod host_backend;
 pub mod registry;
 pub mod runcfg;
 
+pub use dispatch::{LatencyRecorder, OpenLoopQueue};
 pub use registry::{by_name, registry, scenarios_table, ScenarioParams, ScenarioSpec};
 pub use runcfg::RunConfig;
 
 use crate::policy::Policy;
-use crate::sched::{RunReport, SimExecutor};
+use crate::sched::{LatencyReport, RunReport, SimExecutor};
 use crate::sim::Machine;
 use crate::task::Coroutine;
 use crate::topology::Topology;
@@ -144,6 +146,14 @@ pub trait Scenario {
     /// configured with [`Driver::with_verify`].
     fn verify(&self) {}
 
+    /// Per-request latency aggregate for request-serving scenarios
+    /// (sojourn = queue wait + service; see [`dispatch`]). The driver
+    /// attaches it to [`RunReport::request_latency`] after the run.
+    /// Batch workloads keep the default `None`.
+    fn latency(&self) -> Option<LatencyReport> {
+        None
+    }
+
     /// Workload-level metrics for the finished run.
     fn metrics(&self, report: &RunReport) -> ScenarioMetrics;
 }
@@ -248,6 +258,9 @@ impl Driver {
         if verify {
             scenario.verify();
         }
+        // Serving scenarios carry their per-request aggregate on the
+        // report (attached before `metrics`, which may read it).
+        report.request_latency = scenario.latency();
         let metrics = scenario.metrics(&report);
         ScenarioRun {
             report,

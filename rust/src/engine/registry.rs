@@ -21,6 +21,9 @@ use crate::workloads::graph::{
 use crate::workloads::mixed::MixedScenario;
 use crate::workloads::olap::{all_queries, Db, OlapScenario, QuerySpec};
 use crate::workloads::oltp::{OltpScenario, OltpWorkload};
+use crate::workloads::serve::{
+    ArrivalModel, ServeKvScenario, ServeMixedScenario, Trace, TraceConfig,
+};
 use crate::workloads::sgd::{
     generate_data, DwStrategy, RustGrad, SgdConfig, SgdMode, SgdScenario,
 };
@@ -40,8 +43,13 @@ pub struct ScenarioParams {
     /// scenario's default.
     pub iters: Option<u64>,
     /// Workload-specific selector: TPC-H query (`"q6"`), SGD replication
-    /// strategy (`"percore"|"pernode"|"permachine"`).
+    /// strategy (`"percore"|"pernode"|"permachine"`), serve arrival
+    /// model (`"poisson"|"uniform"|"diurnal"|"bursty"`).
     pub variant: Option<String>,
+    /// Request trace file for the serve scenarios (`--trace`; text
+    /// format, see `workloads::serve::trace`). `None` = seeded synthetic
+    /// trace.
+    pub trace: Option<String>,
 }
 
 impl Default for ScenarioParams {
@@ -51,6 +59,7 @@ impl Default for ScenarioParams {
             seed: 42,
             iters: None,
             variant: None,
+            trace: None,
         }
     }
 }
@@ -215,6 +224,68 @@ fn build_mixed(p: &ScenarioParams) -> Box<dyn Scenario> {
     ))
 }
 
+/// Default offered load of the synthetic serving traces, requests per
+/// second of virtual time (the bench sweeps this; `--iters` scales the
+/// request count).
+const SERVE_RATE_RPS: f64 = 2.0e6;
+
+/// Resolve the serve scenarios' trace: `params.trace` replays a text
+/// trace file; otherwise a seeded synthetic trace (`variant` picks the
+/// arrival process, Poisson by default; `iters` the request count).
+fn serve_trace(
+    p: &ScenarioParams,
+    keyspace: u64,
+    read_frac: f64,
+    default_requests: u64,
+) -> Arc<Trace> {
+    if let Some(path) = &p.trace {
+        let trace = Trace::load(std::path::Path::new(path))
+            .unwrap_or_else(|e| panic!("cannot replay --trace {path}: {e}"));
+        return Arc::new(trace);
+    }
+    let arrivals = match p.variant.as_deref() {
+        None | Some("poisson") => ArrivalModel::Poisson,
+        Some("uniform") => ArrivalModel::Uniform,
+        // Diurnal swing compressed to simulation timescales: one "day"
+        // every 2 ms of virtual time, ±80% around the mean rate.
+        Some("diurnal") => ArrivalModel::Diurnal {
+            period_ns: 2_000_000,
+            depth: 0.8,
+        },
+        Some("bursty") => ArrivalModel::Bursty { burst: 64 },
+        Some(v) => panic!("serve variant {v:?} is not poisson|uniform|diurnal|bursty"),
+    };
+    Arc::new(Trace::synth(&TraceConfig {
+        requests: p.iters.unwrap_or(default_requests) as usize,
+        rate_rps: SERVE_RATE_RPS,
+        keyspace,
+        zipf_theta: 0.99,
+        read_frac,
+        arrivals,
+        seed: p.seed,
+    }))
+}
+
+fn build_serve_kv(p: &ScenarioParams) -> Box<dyn Scenario> {
+    let OltpWorkload::Ycsb { records, read_frac } = OltpWorkload::ycsb_scaled(p.scale) else {
+        unreachable!("ycsb_scaled always builds a Ycsb workload")
+    };
+    let trace = serve_trace(p, records as u64, read_frac, 20_000);
+    Box::new(ServeKvScenario::new(records, trace))
+}
+
+fn build_serve_mixed(p: &ScenarioParams) -> Box<dyn Scenario> {
+    let OltpWorkload::Ycsb { records, read_frac } = OltpWorkload::ycsb_scaled(p.scale) else {
+        unreachable!("ycsb_scaled always builds a Ycsb workload")
+    };
+    let trace = serve_trace(p, records as u64, read_frac, 10_000);
+    let db = Arc::new(Db::generate(p.scale, p.seed));
+    // The scan tenant is fixed to Q1 (the join-free pricing summary):
+    // `variant` selects the serve arrival model here, not the query.
+    let spec = all_queries()[0].clone();
+    Box::new(ServeMixedScenario::new(records, trace, db, spec))
+}
+
 static REGISTRY: &[ScenarioSpec] = &[
     ScenarioSpec {
         name: "bfs",
@@ -300,6 +371,20 @@ static REGISTRY: &[ScenarioSpec] = &[
         about: "YCSB + TPC-H scan co-resident: cross-tenant cache/bandwidth contention",
         build: build_mixed,
     },
+    ScenarioSpec {
+        name: "serve-kv",
+        aliases: &["serve"],
+        family: "serve",
+        about: "open-loop trace-replay KV serving with per-request p50/p95/p99 latency",
+        build: build_serve_kv,
+    },
+    ScenarioSpec {
+        name: "serve-mixed",
+        aliases: &[],
+        family: "serve",
+        about: "KV serving co-resident with a TPC-H scan tenant (tail under interference)",
+        build: build_serve_mixed,
+    },
 ];
 
 /// Every registered scenario.
@@ -356,6 +441,75 @@ mod tests {
             for a in spec.aliases {
                 assert!(seen.insert(*a), "duplicate alias {a}");
             }
+        }
+    }
+
+    #[test]
+    fn serve_kv_replays_a_trace_file() {
+        let path = std::env::temp_dir().join(format!(
+            "arcas_registry_trace_{}.txt",
+            std::process::id()
+        ));
+        std::fs::write(&path, "# tiny trace\n0 r 1\n100 u 2\n200 r 3\n").unwrap();
+        let p = ScenarioParams {
+            trace: Some(path.to_string_lossy().into_owned()),
+            ..Default::default()
+        };
+        let topo = crate::topology::Topology::milan_1s();
+        let mut s = by_name("serve-kv").unwrap().build(&p);
+        let run = crate::engine::Driver::new(
+            &topo,
+            crate::policy::by_name("local", &topo).unwrap(),
+            2,
+        )
+        .with_verify(true)
+        .run(s.as_mut());
+        std::fs::remove_file(&path).ok();
+        let lat = run.report.request_latency.expect("trace replay must report latency");
+        assert_eq!(lat.count, 3);
+        assert_eq!(run.metrics.items, 3.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot replay --trace")]
+    fn serve_kv_missing_trace_file_panics_with_context() {
+        let p = ScenarioParams {
+            trace: Some("/nonexistent/arcas-trace.txt".into()),
+            ..Default::default()
+        };
+        let _ = by_name("serve-kv").unwrap().build(&p);
+    }
+
+    #[test]
+    #[should_panic(expected = "serve variant")]
+    fn serve_rejects_unknown_arrival_models() {
+        let p = ScenarioParams {
+            variant: Some("warp-speed".into()),
+            iters: Some(4),
+            ..Default::default()
+        };
+        let _ = by_name("serve-kv").unwrap().build(&p);
+    }
+
+    #[test]
+    fn serve_variants_build_distinct_arrival_processes() {
+        // Same seed/count, different arrival models: the traces the
+        // scenarios run must differ (and each build is deterministic).
+        let build_trace = |variant: Option<&str>| {
+            let p = ScenarioParams {
+                scale: 0.002,
+                iters: Some(64),
+                variant: variant.map(str::to_string),
+                ..Default::default()
+            };
+            // Build twice to check determinism of the constructor path.
+            let _ = by_name("serve-kv").unwrap().build(&p);
+            super::serve_trace(&p, 1_000, 0.45, 64)
+        };
+        let poisson = build_trace(None);
+        assert_eq!(poisson, build_trace(Some("poisson")));
+        for v in ["uniform", "diurnal", "bursty"] {
+            assert_ne!(poisson, build_trace(Some(v)), "{v} must differ from poisson");
         }
     }
 

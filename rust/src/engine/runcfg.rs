@@ -38,7 +38,11 @@ impl RunConfig {
             .opt_nodefault("iters", "intensity knob (PR iterations, txns/core, SGD epochs)")
             .opt_nodefault(
                 "variant",
-                "scenario variant (tpch q1..q22, sgd percore|pernode|permachine)",
+                "scenario variant (tpch q1..q22, sgd percore|pernode|permachine, serve poisson|uniform|diurnal|bursty)",
+            )
+            .opt_nodefault(
+                "trace",
+                "request trace file for serve-* scenarios (text: \"<arrival_ns> <op> <key>\" lines)",
             )
             .opt("topology", "milan_2s", "machine preset")
             .opt("timer-us", "100", "ARCAS controller timer (us)")
@@ -93,6 +97,7 @@ impl RunConfig {
                 seed: a.u64("seed"),
                 iters,
                 variant: a.get("variant").map(str::to_string),
+                trace: a.get("trace").map(str::to_string),
             },
             deprecated_workload,
         })
@@ -137,6 +142,13 @@ mod tests {
         let err = from(&["--repeat", "0"]).unwrap_err();
         assert!(err.contains("--repeat must be >= 1"), "{err}");
         assert!(from(&["--repeat", "many"]).is_err());
+    }
+
+    #[test]
+    fn trace_option_threads_into_params() {
+        let c = from(&["--scenario", "serve-kv", "--trace", "/tmp/t.txt"]).unwrap();
+        assert_eq!(c.params.trace.as_deref(), Some("/tmp/t.txt"));
+        assert_eq!(from(&[]).unwrap().params.trace, None);
     }
 
     #[test]

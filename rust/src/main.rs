@@ -1,11 +1,12 @@
 //! `arcas` — CLI for the ARCAS runtime reproduction.
 //!
 //! Subcommands:
-//!   topology   — print a machine preset and its latency classes
-//!   run        — run one scenario under a policy and print the report
-//!   scenarios  — list the scenario registry
-//!   artifacts  — list + smoke-test the AOT PJRT artifacts
-//!   policies   — list available scheduling policies
+//!   topology    — print a machine preset and its latency classes
+//!   run         — run one scenario under a policy and print the report
+//!   scenarios   — list the scenario registry
+//!   artifacts   — list + smoke-test the AOT PJRT artifacts
+//!   policies    — list available scheduling policies
+//!   bench-check — CI gate: compare BENCH_*.json against a baseline
 
 use arcas::engine::{self, RunConfig};
 use arcas::policy;
@@ -26,15 +27,17 @@ fn main() {
         "scenarios" => cmd_scenarios(),
         "artifacts" => cmd_artifacts(),
         "policies" => cmd_policies(),
+        "bench-check" => cmd_bench_check(args),
         _ => {
             println!(
                 "arcas — Adaptive Runtime System for Chiplet-Aware Scheduling\n\n\
-                 USAGE: arcas <topology|run|scenarios|artifacts|policies> [options]\n\n\
+                 USAGE: arcas <topology|run|scenarios|artifacts|policies|bench-check> [options]\n\n\
                    topology [preset]       print machine layout + latency classes\n\
                    run [options]           run a scenario (see `arcas run --help`)\n\
                    scenarios               list the scenario registry\n\
                    artifacts               list + smoke-test AOT artifacts\n\
-                   policies                list scheduling policies\n\n\
+                   policies                list scheduling policies\n\
+                   bench-check [options]   gate BENCH_*.json vs ci/baselines (see --help)\n\n\
                  Figures/tables of the paper: `cargo bench --bench fig07_graph_scaling` etc."
             );
         }
@@ -92,6 +95,21 @@ fn print_report(name: &str, r: &RunReport) {
     println!("  wall clock        {}", arcas::util::fmt_ns(r.wall_ns));
     if r.host_steals > 0 {
         println!("  host steals       {}", r.host_steals);
+    }
+    if let Some(l) = &r.request_latency {
+        println!(
+            "  req sojourn       p50 {} | p95 {} | p99 {} | max {} ({} reqs)",
+            arcas::util::fmt_ns(l.p50_ns),
+            arcas::util::fmt_ns(l.p95_ns),
+            arcas::util::fmt_ns(l.p99_ns),
+            arcas::util::fmt_ns(l.max_ns),
+            l.count,
+        );
+        println!(
+            "  req breakdown     mean queue {} + mean service {}",
+            arcas::util::fmt_ns(l.mean_queue_ns.round() as u64),
+            arcas::util::fmt_ns(l.mean_service_ns.round() as u64),
+        );
     }
 }
 
@@ -197,6 +215,83 @@ fn cmd_artifacts() {
             std::process::exit(1);
         }
     }
+}
+
+/// The CI bench-regression gate: compare an emitted `BENCH_*.json`
+/// against its checked-in baseline. Exit 0 = within tolerance (or the
+/// baseline is an unpinned bootstrap placeholder), exit 1 = regression
+/// or missing series, exit 2 = usage/parse error. Improvements beyond
+/// tolerance pass with a re-pin nudge.
+fn cmd_bench_check(args: Vec<String>) {
+    use arcas::util::baseline::{check_scaling, check_serving};
+    use arcas::util::json::Json;
+
+    let cli = arcas::util::cli::Cli::new(
+        "arcas bench-check",
+        "compare a BENCH_*.json against a checked-in baseline with a tolerance band",
+    )
+    .opt(
+        "kind",
+        "serving",
+        "metric family: serving (p99, lower=better) | scaling (speedup, higher=better)",
+    )
+    .opt_nodefault("baseline", "checked-in baseline json (ci/baselines/...)")
+    .opt_nodefault("current", "freshly emitted BENCH_*.json")
+    .opt(
+        "tolerance",
+        "0.25",
+        "default relative tolerance for entries without their own \"tol\"",
+    );
+    let a = match cli.parse_from(args) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    };
+    let load = |opt: &str| -> Json {
+        let Some(path) = a.get(opt) else {
+            eprintln!("bench-check: --{opt} is required");
+            std::process::exit(2);
+        };
+        let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+            eprintln!("bench-check: cannot read {path}: {e}");
+            std::process::exit(2);
+        });
+        Json::parse(&text).unwrap_or_else(|e| {
+            eprintln!("bench-check: {path} is not valid JSON: {e}");
+            std::process::exit(2);
+        })
+    };
+    let baseline = load("baseline");
+    let current = load("current");
+    let tol = a.f64("tolerance");
+    let kind = a.str("kind");
+    let result = match kind.as_str() {
+        "serving" => check_serving(&baseline, &current, tol),
+        "scaling" => check_scaling(&baseline, &current, tol),
+        other => {
+            eprintln!("bench-check: unknown --kind {other} (serving|scaling)");
+            std::process::exit(2);
+        }
+    };
+    let result = result.unwrap_or_else(|e| {
+        eprintln!("bench-check: {e}");
+        std::process::exit(2);
+    });
+    println!("bench-check ({kind}):");
+    print!("{}", result.render());
+    if result.failed() {
+        eprintln!("bench-check: REGRESSION — current results exceed the baseline tolerance band");
+        std::process::exit(1);
+    }
+    if result.improved() {
+        println!(
+            "bench-check: improvement beyond tolerance — re-pin the baseline \
+             (copy the current json into ci/baselines/ and keep \"pinned\": true)"
+        );
+    }
+    println!("bench-check: OK");
 }
 
 fn cmd_policies() {

@@ -40,6 +40,30 @@ impl Default for ExecConfig {
     }
 }
 
+/// Per-request latency aggregate of a serving run: sojourn
+/// (queue wait + service) quantiles from a log-scaled histogram
+/// (`util::stats::LogHistogram`, ≤3.2% relative error; min/max/mean
+/// exact), plus the queue/service mean breakdown. Produced by
+/// `engine::dispatch::LatencyRecorder`; attached to
+/// [`RunReport::request_latency`] by the engine driver for scenarios
+/// that implement the `Scenario::latency` hook.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LatencyReport {
+    /// Requests served.
+    pub count: u64,
+    /// Mean sojourn (exact).
+    pub mean_ns: f64,
+    pub p50_ns: u64,
+    pub p95_ns: u64,
+    pub p99_ns: u64,
+    /// Worst sojourn (exact).
+    pub max_ns: u64,
+    /// Mean time between arrival and service start.
+    pub mean_queue_ns: f64,
+    /// Mean service time.
+    pub mean_service_ns: f64,
+}
+
 /// Result of one executor run.
 #[derive(Clone, Debug, Default)]
 pub struct RunReport {
@@ -67,6 +91,9 @@ pub struct RunReport {
     /// only; 0 for simulated runs, which report virtual steals in
     /// `steals`).
     pub host_steals: u64,
+    /// Per-request sojourn aggregate for request-serving scenarios
+    /// (`serve-kv`, `serve-mixed`); `None` for batch workloads.
+    pub request_latency: Option<LatencyReport>,
 }
 
 impl RunReport {
@@ -389,6 +416,7 @@ impl SimExecutor {
                 group_size,
                 now_ns: t_before,
                 step_outcome: Outcome::default(),
+                probe_cache: Default::default(),
             };
             let step = task.coro.step(&mut ctx);
             let t_after = self.machine.now(core);
@@ -451,6 +479,7 @@ impl SimExecutor {
             spread_rate: self.policy.spread_rate(),
             wall_ns: wall_start.elapsed().as_nanos() as u64,
             host_steals: 0,
+            request_latency: None,
         }
     }
 

@@ -29,6 +29,73 @@ use crate::coordinator::Shards;
 use crate::mem::{MemoryManager, Placement, RegionId};
 use crate::topology::Topology;
 
+/// Per-step cache of **remote**-chiplet residency probes.
+///
+/// One coroutine step often issues several accesses against the same
+/// region (read + write + log in an OLTP chunk, fill + frontier in a
+/// graph sweep). Each access used to probe every remote chiplet's shard
+/// lock for its residency; with this cache the step probes each
+/// `(region, remote chiplet)` pair **once** and reuses the answer for
+/// the rest of the step (ROADMAP follow-up from the sharding PR: batch
+/// residency probes per step instead of per access).
+///
+/// Bit-identity on the Sim backend: within a single-threaded step the
+/// only thing that can change a *remote* chiplet's residency is this
+/// step's own writes (coherence invalidations) — and a write evicts the
+/// written region from the cache ([`ProbeCache::forget`]), so the next
+/// access re-probes. Local-chiplet residency is never cached (our own
+/// fills change it on every access). `rust/tests/shard_equivalence.rs`
+/// pins cached == uncached exactly. On the Host backend a cached probe
+/// may miss a concurrent remote fill for the remainder of the step —
+/// the same staleness a real core's snoop results have — while every
+/// charge still lands exactly once.
+///
+/// Owned by `task::TaskCtx` (one per step), threaded through
+/// [`Machine::access_cached`].
+#[derive(Clone, Debug, Default)]
+pub struct ProbeCache {
+    /// (region, chiplet, resident bytes); linear scan — a step touches a
+    /// handful of regions × at most 15 remote chiplets.
+    entries: Vec<(RegionId, usize, u64)>,
+}
+
+impl ProbeCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    fn get(&self, region: RegionId, chiplet: usize) -> Option<u64> {
+        self.entries
+            .iter()
+            .find(|e| e.0 == region && e.1 == chiplet)
+            .map(|e| e.2)
+    }
+
+    #[inline]
+    fn put(&mut self, region: RegionId, chiplet: usize, bytes: u64) {
+        self.entries.push((region, chiplet, bytes));
+    }
+
+    /// Drop every cached probe for `region` (its remote residency just
+    /// changed — e.g. this step wrote to it).
+    pub fn forget(&mut self, region: RegionId) {
+        self.entries.retain(|e| e.0 != region);
+    }
+
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
 /// The simulated machine.
 #[derive(Debug)]
 pub struct Machine {
@@ -169,6 +236,20 @@ impl Machine {
     /// 4. on writes, invalidate the other shards one by one,
     /// 5. charge the serving socket's DDR tracker and the local IF link.
     pub fn access(&self, core: usize, acc: Access) -> Outcome {
+        self.access_with(core, acc, None)
+    }
+
+    /// [`Machine::access`] with a per-step [`ProbeCache`]: remote
+    /// residency probes for a `(region, chiplet)` pair are answered from
+    /// the cache after the first probe of the step. The task layer
+    /// (`TaskCtx::access`) routes every coroutine-step access through
+    /// this; bit-identical to the uncached path on the Sim backend
+    /// (pinned by `rust/tests/shard_equivalence.rs`).
+    pub fn access_cached(&self, core: usize, acc: Access, cache: &mut ProbeCache) -> Outcome {
+        self.access_with(core, acc, Some(cache))
+    }
+
+    fn access_with(&self, core: usize, acc: Access, mut cache: Option<&mut ProbeCache>) -> Outcome {
         let now = self.now(core) as f64;
         let my_chiplet = self.topo.chiplet_of(core);
         let my_numa = self.topo.numa_of_core(core);
@@ -191,7 +272,9 @@ impl Machine {
         // other shards hold — so remote probes are answered with 0
         // without touching their locks at all, and warm chiplet-local
         // traffic stays on its own shard (the shard-equivalence property
-        // suite pins that this shortcut is bit-identical).
+        // suite pins that this shortcut is bit-identical). With a step
+        // cache, a remote probe already answered earlier in this step is
+        // reused without touching the shard lock again.
         let local_res = self.shards.resident(my_chiplet, acc.region);
         let classified = classify(&self.topo, core, acc, size, |ch| {
             if ch == my_chiplet {
@@ -199,7 +282,18 @@ impl Machine {
             } else if local_res >= size {
                 0
             } else {
-                self.shards.resident(ch, acc.region)
+                match cache.as_deref_mut() {
+                    Some(c) => {
+                        if let Some(v) = c.get(acc.region, ch) {
+                            v
+                        } else {
+                            let v = self.shards.resident(ch, acc.region);
+                            c.put(acc.region, ch, v);
+                            v
+                        }
+                    }
+                    None => self.shards.resident(ch, acc.region),
+                }
             }
         });
         let mut out = classified.out;
@@ -219,13 +313,18 @@ impl Machine {
         self.shards
             .fill_and_record(my_chiplet, acc.region, fill_bytes, size, &out);
 
-        // Coherence: a write invalidates the written fraction elsewhere.
+        // Coherence: a write invalidates the written fraction elsewhere —
+        // and stales any cached probes of this region, so the step cache
+        // forgets them (next access re-probes; keeps cached == uncached).
         if acc.write {
             let written_frac = (unique as f64 / size.max(1) as f64).min(1.0);
             for ch in 0..self.topo.num_chiplets() {
                 if ch != my_chiplet {
                     self.shards.invalidate(ch, acc.region, written_frac);
                 }
+            }
+            if let Some(c) = cache.as_deref_mut() {
+                c.forget(acc.region);
             }
         }
 
@@ -468,6 +567,66 @@ mod tests {
             "spread {spread_max} must beat single-link {}",
             funneled.latency_ns
         );
+    }
+
+    #[test]
+    fn cached_access_equals_uncached_within_a_step() {
+        // Warm chiplet 1 so chiplet 0 sees real remote residency, then
+        // issue a step's worth of mixed accesses through both paths.
+        let ops: Vec<(bool, bool, u64)> = vec![
+            // (write, seq, amount)
+            (false, false, 500),
+            (false, true, 1 << 20),
+            (true, false, 200),
+            (false, false, 800),
+            (true, true, 1 << 19),
+            (false, false, 300),
+        ];
+        let run = |cached: bool| {
+            let m = machine();
+            let r = m.alloc("d", 16 << 20, Placement::Bind(0));
+            m.access(8, Access::seq_read(r, 16 << 20)); // chiplet 1 warm
+            let mut cache = ProbeCache::new();
+            let mut outs = Vec::new();
+            for &(write, seq, amount) in &ops {
+                let acc = match (write, seq) {
+                    (false, true) => Access::seq_read(r, amount),
+                    (false, false) => Access::rand_read(r, amount, 16 << 20),
+                    (true, true) => Access::seq_write(r, amount),
+                    (true, false) => Access::rand_write(r, amount, 16 << 20),
+                };
+                let out = if cached {
+                    m.access_cached(0, acc, &mut cache)
+                } else {
+                    m.access(0, acc)
+                };
+                outs.push((out.local_hits, out.near_hits, out.far_hits, out.latency_ns));
+            }
+            (outs, m.now(0), m.resident(0, r), m.resident(1, r))
+        };
+        assert_eq!(run(true), run(false));
+    }
+
+    #[test]
+    fn probe_cache_reuses_remote_probes_and_forgets_on_write() {
+        let m = machine();
+        let r = m.alloc("d", 16 << 20, Placement::Bind(0));
+        m.access(8, Access::seq_read(r, 16 << 20)); // remote residency on chiplet 1
+        let mut cache = ProbeCache::new();
+        assert!(cache.is_empty());
+        m.access_cached(0, Access::rand_read(r, 100, 16 << 20), &mut cache);
+        // Remote probes were recorded (one entry per probed remote chiplet).
+        let probed = cache.len();
+        assert!(probed > 0, "remote probes should have been cached");
+        m.access_cached(0, Access::rand_read(r, 100, 16 << 20), &mut cache);
+        assert_eq!(cache.len(), probed, "second access must reuse, not re-probe");
+        // A write to the region stales the remote answers.
+        m.access_cached(0, Access::rand_write(r, 10, 16 << 20), &mut cache);
+        assert!(cache.is_empty(), "write must evict the region's probes");
+        cache.put(r, 3, 42);
+        assert_eq!(cache.get(r, 3), Some(42));
+        cache.clear();
+        assert!(cache.is_empty());
     }
 
     #[test]

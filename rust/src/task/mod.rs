@@ -13,7 +13,7 @@
 
 use crate::cachesim::{Access, Outcome};
 use crate::mem::RegionId;
-use crate::sim::{Machine, MachineView};
+use crate::sim::{Machine, MachineView, ProbeCache};
 
 pub type TaskId = usize;
 
@@ -54,6 +54,11 @@ pub struct TaskCtx<'a> {
     pub now_ns: u64,
     /// Accumulated per-step outcome (for task stats).
     pub step_outcome: Outcome,
+    /// Per-step cache of remote residency probes: accesses in this step
+    /// probe each `(region, remote chiplet)` pair once instead of once
+    /// per access (bit-identical on the Sim backend — writes evict; see
+    /// [`ProbeCache`]). Fresh per step, like the context itself.
+    pub probe_cache: ProbeCache,
 }
 
 impl<'a> TaskCtx<'a> {
@@ -64,8 +69,12 @@ impl<'a> TaskCtx<'a> {
     }
 
     /// Model a memory access; charges virtual time on the current core.
+    /// Routed through the step's [`ProbeCache`], so repeated accesses to
+    /// a region within one step probe remote shards only once.
     pub fn access(&mut self, acc: Access) -> Outcome {
-        let out = self.view().access(acc);
+        let out = self
+            .machine
+            .access_cached(self.core, acc, &mut self.probe_cache);
         self.step_outcome.local_hits += out.local_hits;
         self.step_outcome.near_hits += out.near_hits;
         self.step_outcome.far_hits += out.far_hits;
@@ -267,6 +276,7 @@ mod tests {
             group_size: 1,
             now_ns: 0,
             step_outcome: Outcome::default(),
+            probe_cache: Default::default(),
         }
     }
 

@@ -1,0 +1,358 @@
+//! Bench-regression gate: compare emitted `BENCH_*.json` files against
+//! checked-in baselines (`ci/baselines/*.json`) with a tolerance band.
+//!
+//! Policy (the CI contract):
+//! - **regression** (worse than baseline by more than the tolerance) —
+//!   the gate **fails**;
+//! - **improvement** beyond the tolerance — the gate passes with a
+//!   warning telling the operator to re-pin the baseline (copy the
+//!   uploaded artifact over `ci/baselines/` and keep `"pinned": true`);
+//! - a baseline marked `"pinned": false` is a bootstrap placeholder:
+//!   comparisons are reported but never fail, so the very first CI run
+//!   on a new bench can mint the numbers to pin.
+//!
+//! Two metrics are gated today: the per-series p99 request sojourn of
+//! `fig_serving` (`BENCH_serving_latency.json`, lower is better) and the
+//! host-scaling speedup of `micro_runtime` (`BENCH_host_scaling.json`,
+//! higher is better). Each baseline entry may carry its own `"tol"`
+//! (relative band, e.g. `0.25`); entries without one use the caller's
+//! default — keep simulator series tight (they are deterministic) and
+//! host series loose (shared-runner noise).
+
+use super::json::Json;
+
+/// Outcome of one metric comparison.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Verdict {
+    /// Within the tolerance band.
+    Ok,
+    /// Better than baseline by more than the tolerance: warn + re-pin.
+    Improved,
+    /// Worse than baseline by more than the tolerance: fail.
+    Regressed,
+    /// The baseline entry has no counterpart in the current results.
+    Missing,
+}
+
+/// One gated metric.
+#[derive(Clone, Debug)]
+pub struct Check {
+    /// Human-readable series label, e.g. `local/sim p99_ns`.
+    pub label: String,
+    pub base: f64,
+    /// NaN when the series is missing from the current results.
+    pub current: f64,
+    /// Relative tolerance band.
+    pub tol: f64,
+    pub verdict: Verdict,
+}
+
+/// All checks of one gate run.
+#[derive(Clone, Debug)]
+pub struct GateResult {
+    pub checks: Vec<Check>,
+    /// Baseline had `"pinned": false` — report, never fail.
+    pub unpinned: bool,
+}
+
+impl GateResult {
+    /// True when the gate must fail the build.
+    pub fn failed(&self) -> bool {
+        !self.unpinned
+            && self
+                .checks
+                .iter()
+                .any(|c| matches!(c.verdict, Verdict::Regressed | Verdict::Missing))
+    }
+
+    /// True when any series improved beyond tolerance (re-pin nudge).
+    pub fn improved(&self) -> bool {
+        self.checks.iter().any(|c| c.verdict == Verdict::Improved)
+    }
+
+    /// One line per check, stable format for CI logs.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for c in &self.checks {
+            let delta = if c.current.is_nan() {
+                "     -  ".to_string()
+            } else {
+                format!("{:+7.1}%", (c.current / c.base - 1.0) * 100.0)
+            };
+            out.push_str(&format!(
+                "  {:<28} base {:>14.1}  current {:>14.1}  {delta} (tol ±{:.0}%)  {:?}\n",
+                c.label,
+                c.base,
+                c.current,
+                c.tol * 100.0,
+                c.verdict
+            ));
+        }
+        if self.unpinned {
+            out.push_str(
+                "  baseline is marked \"pinned\": false — bootstrap mode, comparisons do not fail.\n  \
+                 Re-pin: copy the current BENCH json over ci/baselines/ and set \"pinned\": true.\n",
+            );
+        }
+        out
+    }
+}
+
+fn verdict(base: f64, current: f64, tol: f64, higher_is_better: bool) -> Verdict {
+    let (lo, hi) = (base * (1.0 - tol), base * (1.0 + tol));
+    let worse = if higher_is_better {
+        current < lo
+    } else {
+        current > hi
+    };
+    let better = if higher_is_better {
+        current > hi
+    } else {
+        current < lo
+    };
+    if worse {
+        Verdict::Regressed
+    } else if better {
+        Verdict::Improved
+    } else {
+        Verdict::Ok
+    }
+}
+
+fn is_unpinned(baseline: &Json) -> bool {
+    baseline.get("pinned").and_then(Json::as_bool) == Some(false)
+}
+
+/// Config-drift guard: when both files carry a `"config"` object, every
+/// baseline key must match the current run's value. A p99 minted under
+/// one invocation (request count, offered rate, arrival model, workers,
+/// seed, …) is not comparable to another's — gating across configs
+/// would report phantom regressions or mask real ones. Files without a
+/// config block (e.g. the host-scaling bench) skip the guard.
+fn check_config(baseline: &Json, current: &Json) -> Result<(), String> {
+    let (Some(Json::Obj(base)), Some(cur)) = (baseline.get("config"), current.get("config"))
+    else {
+        return Ok(());
+    };
+    for (key, want) in base {
+        let got = cur.get(key);
+        if got != Some(want) {
+            return Err(format!(
+                "bench config drift on \"{key}\": baseline {want:?} vs current {got:?} — \
+                 the files come from different bench invocations; re-pin the baseline \
+                 from the current invocation instead of gating across configs"
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Gate `BENCH_serving_latency.json`: per-(policy, backend) p99 sojourn,
+/// lower is better. Baseline series without a `"tol"` use `default_tol`.
+pub fn check_serving(
+    baseline: &Json,
+    current: &Json,
+    default_tol: f64,
+) -> Result<GateResult, String> {
+    check_config(baseline, current)?;
+    let base_series = baseline
+        .get("series")
+        .and_then(Json::as_arr)
+        .ok_or("baseline has no \"series\" array")?;
+    let cur_series = current
+        .get("series")
+        .and_then(Json::as_arr)
+        .ok_or("current results have no \"series\" array")?;
+    let mut checks = Vec::new();
+    for b in base_series {
+        let policy = b.str_of("policy").ok_or("baseline series missing \"policy\"")?;
+        let backend = b.str_of("backend").ok_or("baseline series missing \"backend\"")?;
+        let base = b.num("p99_ns").ok_or_else(|| {
+            format!("baseline series {policy}/{backend} missing numeric \"p99_ns\"")
+        })?;
+        let tol = b.num("tol").unwrap_or(default_tol);
+        let label = format!("{policy}/{backend} p99_ns");
+        let cur = cur_series
+            .iter()
+            .find(|c| c.str_of("policy") == Some(policy) && c.str_of("backend") == Some(backend))
+            .and_then(|c| c.num("p99_ns"));
+        let (current, verdict) = match cur {
+            Some(v) => (v, verdict(base, v, tol, false)),
+            None => (f64::NAN, Verdict::Missing),
+        };
+        checks.push(Check {
+            label,
+            base,
+            current,
+            tol,
+            verdict,
+        });
+    }
+    if checks.is_empty() {
+        return Err("baseline has an empty \"series\" array — nothing to gate".into());
+    }
+    Ok(GateResult {
+        checks,
+        unpinned: is_unpinned(baseline),
+    })
+}
+
+/// Gate `BENCH_host_scaling.json`: the max-workers-vs-1 speedup, higher
+/// is better. A current file with a null/absent speedup (no 1-worker
+/// point) is a missing metric, which fails a pinned gate.
+pub fn check_scaling(
+    baseline: &Json,
+    current: &Json,
+    default_tol: f64,
+) -> Result<GateResult, String> {
+    check_config(baseline, current)?;
+    let base = baseline
+        .num("speedup_max_vs_1")
+        .ok_or("baseline missing numeric \"speedup_max_vs_1\"")?;
+    let tol = baseline.num("tol").unwrap_or(default_tol);
+    let (cur, verdict) = match current.num("speedup_max_vs_1") {
+        Some(v) => (v, verdict(base, v, tol, true)),
+        None => (f64::NAN, Verdict::Missing),
+    };
+    Ok(GateResult {
+        checks: vec![Check {
+            label: "host_scaling speedup_max_vs_1".into(),
+            base,
+            current: cur,
+            tol,
+            verdict,
+        }],
+        unpinned: is_unpinned(baseline),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn serving_json(p99_local_sim: f64, p99_arcas_host: f64, pinned: bool) -> Json {
+        Json::parse(&format!(
+            r#"{{
+                "bench": "serving_latency",
+                "pinned": {pinned},
+                "series": [
+                    {{"policy": "local", "backend": "sim", "p99_ns": {p99_local_sim}, "tol": 0.10}},
+                    {{"policy": "arcas", "backend": "host", "p99_ns": {p99_arcas_host}, "tol": 0.50}}
+                ]
+            }}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn within_tolerance_passes() {
+        let base = serving_json(10_000.0, 20_000.0, true);
+        let cur = serving_json(10_500.0, 25_000.0, true);
+        let r = check_serving(&base, &cur, 0.25).unwrap();
+        assert!(!r.failed());
+        assert!(!r.improved());
+        assert!(r.checks.iter().all(|c| c.verdict == Verdict::Ok));
+    }
+
+    #[test]
+    fn seeded_p99_regression_fails_the_gate() {
+        // local/sim regresses 50% against a 10% band: the gate must fail.
+        let base = serving_json(10_000.0, 20_000.0, true);
+        let cur = serving_json(15_000.0, 20_000.0, true);
+        let r = check_serving(&base, &cur, 0.25).unwrap();
+        assert!(r.failed());
+        assert_eq!(r.checks[0].verdict, Verdict::Regressed);
+        assert_eq!(r.checks[1].verdict, Verdict::Ok);
+        assert!(r.render().contains("Regressed"), "{}", r.render());
+    }
+
+    #[test]
+    fn improvement_warns_but_passes() {
+        let base = serving_json(10_000.0, 20_000.0, true);
+        let cur = serving_json(5_000.0, 20_000.0, true);
+        let r = check_serving(&base, &cur, 0.25).unwrap();
+        assert!(!r.failed());
+        assert!(r.improved());
+        assert_eq!(r.checks[0].verdict, Verdict::Improved);
+    }
+
+    #[test]
+    fn missing_series_fails_a_pinned_gate() {
+        let base = serving_json(10_000.0, 20_000.0, true);
+        let cur = Json::parse(
+            r#"{"series": [{"policy": "local", "backend": "sim", "p99_ns": 10000}]}"#,
+        )
+        .unwrap();
+        let r = check_serving(&base, &cur, 0.25).unwrap();
+        assert!(r.failed());
+        assert_eq!(r.checks[1].verdict, Verdict::Missing);
+    }
+
+    #[test]
+    fn unpinned_baseline_never_fails() {
+        let base = serving_json(10_000.0, 20_000.0, false);
+        let cur = serving_json(99_000.0, 99_000.0, false);
+        let r = check_serving(&base, &cur, 0.25).unwrap();
+        assert!(r.unpinned);
+        assert!(!r.failed());
+        assert_eq!(r.checks[0].verdict, Verdict::Regressed); // still reported
+        assert!(r.render().contains("bootstrap"));
+    }
+
+    #[test]
+    fn scaling_gate_is_higher_is_better() {
+        let base =
+            Json::parse(r#"{"pinned": true, "speedup_max_vs_1": 1.5, "tol": 0.3}"#).unwrap();
+        let good = Json::parse(r#"{"speedup_max_vs_1": 1.6}"#).unwrap();
+        assert!(!check_scaling(&base, &good, 0.3).unwrap().failed());
+        let bad = Json::parse(r#"{"speedup_max_vs_1": 0.9}"#).unwrap();
+        let r = check_scaling(&base, &bad, 0.3).unwrap();
+        assert!(r.failed());
+        assert_eq!(r.checks[0].verdict, Verdict::Regressed);
+        let better = Json::parse(r#"{"speedup_max_vs_1": 4.0}"#).unwrap();
+        let r = check_scaling(&base, &better, 0.3).unwrap();
+        assert!(!r.failed());
+        assert!(r.improved());
+        // Null speedup (no 1-worker point) is a missing metric.
+        let null = Json::parse(r#"{"speedup_max_vs_1": null}"#).unwrap();
+        assert!(check_scaling(&base, &null, 0.3).unwrap().failed());
+    }
+
+    #[test]
+    fn config_drift_is_an_error_not_a_comparison() {
+        let with_cfg = |requests: u64, p99: f64| {
+            Json::parse(&format!(
+                r#"{{"pinned": true,
+                     "config": {{"requests": {requests}, "arrivals": "poisson"}},
+                     "series": [{{"policy": "local", "backend": "sim", "p99_ns": {p99}}}]}}"#
+            ))
+            .unwrap()
+        };
+        // Same config: gated normally.
+        let r = check_serving(&with_cfg(4000, 100.0), &with_cfg(4000, 101.0), 0.25).unwrap();
+        assert!(!r.failed());
+        // Drifted config (different request count): error, not a verdict.
+        let err = check_serving(&with_cfg(4000, 100.0), &with_cfg(20_000, 50.0), 0.25)
+            .unwrap_err();
+        assert!(err.contains("config drift"), "{err}");
+        assert!(err.contains("requests"), "{err}");
+        // A side with no config block skips the guard.
+        let no_cfg = Json::parse(
+            r#"{"series": [{"policy": "local", "backend": "sim", "p99_ns": 100}]}"#,
+        )
+        .unwrap();
+        assert!(check_serving(&with_cfg(4000, 100.0), &no_cfg, 0.25).is_ok());
+        assert!(check_serving(&no_cfg, &with_cfg(4000, 100.0), 0.25).is_ok());
+    }
+
+    #[test]
+    fn malformed_inputs_are_errors_not_panics() {
+        let ok = serving_json(1.0, 2.0, true);
+        let no_series = Json::parse("{}").unwrap();
+        assert!(check_serving(&no_series, &ok, 0.25).is_err());
+        assert!(check_serving(&ok, &no_series, 0.25).is_err());
+        assert!(check_scaling(&no_series, &ok, 0.3).is_err());
+        let empty = Json::parse(r#"{"series": []}"#).unwrap();
+        assert!(check_serving(&empty, &ok, 0.25).is_err());
+    }
+}

@@ -18,7 +18,11 @@
 //! - [`logger`] — a tiny leveled logger,
 //! - [`bench`] — a micro-benchmark timing harness (criterion substitute),
 //! - [`proptest`] — a miniature property-based testing helper with
-//!   random input generation and iteration shrinking.
+//!   random input generation and iteration shrinking,
+//! - [`json`] — a minimal JSON parser (serde substitute) for reading the
+//!   `BENCH_*.json` files the benches emit,
+//! - [`baseline`] — the CI bench-regression gate logic behind
+//!   `arcas bench-check` (tolerance-band comparison vs `ci/baselines/`).
 pub mod prng;
 pub mod stats;
 pub mod cli;
@@ -27,6 +31,8 @@ pub mod table;
 pub mod logger;
 pub mod bench;
 pub mod proptest;
+pub mod json;
+pub mod baseline;
 
 pub use prng::Rng;
 pub use stats::Summary;

@@ -190,6 +190,168 @@ impl Histogram {
     }
 }
 
+/// Log-scaled histogram for latency-style `u64` nanosecond values:
+/// power-of-two octaves split into 32 sub-buckets each, HdrHistogram
+/// style, so quantiles carry a bounded relative error of at most
+/// 1/32 ≈ 3.2% while the footprint stays a fixed ~15 KiB regardless of
+/// sample count. Exact count/sum/min/max ride alongside, so `mean()` and
+/// the extreme quantiles (`p0`, `p100`) are exact.
+///
+/// This is the aggregation behind per-request latency accounting in the
+/// serving subsystem (`engine::dispatch::LatencyRecorder`): millions of
+/// request sojourn times fold into one mergeable, allocation-free
+/// structure instead of a sample vector.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: u64,
+    max: u64,
+}
+
+/// Sub-bucket resolution: 2^5 = 32 sub-buckets per octave.
+const LOG_SUB_BITS: u32 = 5;
+const LOG_SUB: usize = 1 << LOG_SUB_BITS;
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        // Max index is ((63-SUB_BITS)+1)<<SUB_BITS | (SUB-1); +1 sizes it.
+        let n_buckets = (64 - LOG_SUB_BITS as usize + 1) * LOG_SUB;
+        Self {
+            counts: vec![0; n_buckets],
+            count: 0,
+            sum: 0.0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    /// Bucket index of `v`: identity below 32, then 32 sub-buckets per
+    /// power-of-two octave.
+    #[inline]
+    fn bucket(v: u64) -> usize {
+        if v < LOG_SUB as u64 {
+            return v as usize;
+        }
+        let top = 63 - v.leading_zeros(); // MSB position, >= LOG_SUB_BITS
+        let shift = top - LOG_SUB_BITS;
+        let mantissa = (v >> shift) as usize - LOG_SUB;
+        ((shift as usize + 1) << LOG_SUB_BITS) + mantissa
+    }
+
+    /// Smallest value mapping to bucket `idx` (quantile representative).
+    #[inline]
+    fn bucket_lo(idx: usize) -> u64 {
+        if idx < LOG_SUB {
+            return idx as u64;
+        }
+        let shift = (idx >> LOG_SUB_BITS) - 1;
+        let mantissa = (idx & (LOG_SUB - 1)) + LOG_SUB;
+        (mantissa as u64) << shift
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.counts[Self::bucket(v)] += 1;
+        self.count += 1;
+        self.sum += v as f64;
+        if v < self.min {
+            self.min = v;
+        }
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Exact mean of recorded values (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Exact minimum (0 when empty).
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Exact maximum (0 when empty).
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Nearest-rank quantile with ≤3.2% relative error (0 when empty;
+    /// the extremes are exact because the result is clamped to the
+    /// recorded min/max).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = (q.clamp(0.0, 1.0) * (self.count - 1) as f64).round() as u64;
+        if target >= self.count - 1 {
+            return self.max;
+        }
+        let mut cum = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if c > 0 && cum > target {
+                return Self::bucket_lo(idx).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// The empirical CDF as (bucket lower bound, cumulative fraction)
+    /// points over the non-empty buckets — the plotting/JSON form.
+    pub fn cdf_points(&self) -> Vec<(u64, f64)> {
+        let mut pts = Vec::new();
+        if self.count == 0 {
+            return pts;
+        }
+        let mut cum = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            if c > 0 {
+                cum += c;
+                pts.push((
+                    Self::bucket_lo(idx).clamp(self.min, self.max),
+                    cum as f64 / self.count as f64,
+                ));
+            }
+        }
+        pts
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -257,6 +419,96 @@ mod tests {
     fn geomean_of_speedups() {
         let g = geomean(&[2.0, 8.0]);
         assert!((g - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn log_histogram_empty() {
+        let h = LogHistogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 0);
+        assert!(h.cdf_points().is_empty());
+    }
+
+    #[test]
+    fn log_histogram_single_sample_is_exact() {
+        for v in [0u64, 1, 31, 32, 100, 1_000_000, u64::MAX / 2] {
+            let mut h = LogHistogram::new();
+            h.record(v);
+            for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+                assert_eq!(h.quantile(q), v, "v={v} q={q}");
+            }
+            assert_eq!(h.min(), v);
+            assert_eq!(h.max(), v);
+            assert_eq!(h.mean(), v as f64);
+            assert_eq!(h.cdf_points(), vec![(v, 1.0)]);
+        }
+    }
+
+    #[test]
+    fn log_histogram_known_uniform_distribution() {
+        // 1..=100_000 uniformly: quantiles within the 1/32 error bound.
+        let mut h = LogHistogram::new();
+        for v in 1..=100_000u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 100_000);
+        for (q, expect) in [(0.5, 50_000.0), (0.95, 95_000.0), (0.99, 99_000.0)] {
+            let got = h.quantile(q) as f64;
+            let rel = (got - expect).abs() / expect;
+            assert!(rel <= 1.0 / 32.0 + 1e-9, "q={q}: got {got}, want ~{expect}");
+        }
+        assert_eq!(h.quantile(0.0), 1);
+        assert_eq!(h.quantile(1.0), 100_000);
+        assert!((h.mean() - 50_000.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn log_histogram_small_values_are_exact() {
+        // Below 32 the buckets are identity: quantiles are exact.
+        let mut h = LogHistogram::new();
+        for v in 0..32u64 {
+            h.record(v);
+        }
+        assert_eq!(h.quantile(0.0), 0);
+        assert_eq!(h.quantile(0.5), 16); // round(0.5 * 31) = 16
+        assert_eq!(h.quantile(1.0), 31);
+    }
+
+    #[test]
+    fn log_histogram_merge_equals_combined() {
+        let mut all = LogHistogram::new();
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        for i in 0..10_000u64 {
+            let v = i * i % 777_777;
+            all.record(v);
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a, all);
+    }
+
+    #[test]
+    fn log_histogram_cdf_is_monotone() {
+        let mut h = LogHistogram::new();
+        for i in 0..1000u64 {
+            h.record(i * 37 % 9999);
+        }
+        let pts = h.cdf_points();
+        assert!(!pts.is_empty());
+        for w in pts.windows(2) {
+            assert!(w[0].0 < w[1].0);
+            assert!(w[0].1 < w[1].1);
+        }
+        assert!((pts.last().unwrap().1 - 1.0).abs() < 1e-12);
     }
 
     #[test]

@@ -45,6 +45,127 @@ const TXNS_PER_STEP: u64 = 64;
 /// Probe rows per OLAP coroutine step.
 const ROWS_PER_STEP: usize = 2048;
 
+/// A co-resident TPC-H-shaped scan tenant: the OLAP half of the mixed
+/// scenario, factored out so other multi-tenant scenarios (the serving
+/// mix, `workloads::serve`) can co-schedule the same scan pressure
+/// against their own foreground traffic. Owns the scan's regions and
+/// the merged (rows, aggregate) result; `coroutine(rank, n)` builds one
+/// rank's chunked, yielding scan over its slice of the fact table.
+pub(crate) struct ScanTenant {
+    pub(crate) db: Arc<Db>,
+    pub(crate) spec: QuerySpec,
+    probe_region: RegionId,
+    group_region: RegionId,
+    /// Per-rank partials merged at each rank's final chunk.
+    olap: Arc<Mutex<(u64, f64)>>,
+}
+
+impl ScanTenant {
+    /// Allocate the scan tenant's regions on `machine` (probe table
+    /// interleaved across NUMA nodes, like the standalone OLAP engine).
+    /// `spec` must be join-free — the tenant is a scan.
+    pub(crate) fn new(
+        machine: &mut Machine,
+        label_prefix: &str,
+        db: Arc<Db>,
+        spec: QuerySpec,
+    ) -> Self {
+        assert!(
+            spec.joins.is_empty(),
+            "scan tenant requires a join-free query: Q{} has joins",
+            spec.id
+        );
+        let probe_region = machine.alloc(
+            &format!("{label_prefix}-probe-table"),
+            db.table_bytes(spec.probe),
+            Placement::Interleave,
+        );
+        let group_region = machine.alloc(
+            &format!("{label_prefix}-group-state"),
+            4 << 10,
+            Placement::Interleave,
+        );
+        Self {
+            db,
+            spec,
+            probe_region,
+            group_region,
+            olap: Arc::new(Mutex::new((0, 0.0))),
+        }
+    }
+
+    /// (rows, aggregate) produced by the tenant; valid after the run.
+    pub(crate) fn result(&self) -> (u64, f64) {
+        *self.olap.lock().unwrap()
+    }
+
+    /// Assert the co-resident scan matches the OLAP engine's serial
+    /// oracle (float tolerance covers rank-order-dependent summation on
+    /// the host backend).
+    pub(crate) fn verify_against_serial(&self) {
+        let (rows, sum) = self.result();
+        let (rows_ref, sum_ref) = run_query_serial(&self.db, &self.spec);
+        assert_eq!(
+            rows, rows_ref,
+            "Q{}: co-resident scan row count diverges from the serial oracle",
+            self.spec.id
+        );
+        assert!(
+            (sum - sum_ref).abs() <= sum_ref.abs() * 1e-9 + 1e-6,
+            "Q{}: aggregate {} vs serial {}",
+            self.spec.id,
+            sum,
+            sum_ref
+        );
+    }
+
+    /// Build scan rank `olap_rank` of `n_olap`: its slice of the fact
+    /// table, scanned in yielding [`ROWS_PER_STEP`] chunks.
+    pub(crate) fn coroutine(&self, olap_rank: usize, n_olap: usize) -> Box<dyn Coroutine> {
+        let db = self.db.clone();
+        let spec = self.spec.clone();
+        let salt = spec.id as u64 * 0x1234_5678;
+        let probe_region = self.probe_region;
+        let group_region = self.group_region;
+        let olap = self.olap.clone();
+        let rows = db.rows(spec.probe);
+        let per = rows.div_ceil(n_olap);
+        let lo = (olap_rank * per).min(rows);
+        let hi = ((olap_rank + 1) * per).min(rows);
+        let chunks = (hi - lo).div_ceil(ROWS_PER_STEP).max(1) as u64;
+        let mut local_rows = 0u64;
+        let mut local_sum = 0.0f64;
+        Box::new(StateTask::new(move |ctx, step| {
+            if step >= chunks {
+                return Step::Done;
+            }
+            let c_lo = lo + step as usize * ROWS_PER_STEP;
+            let c_hi = (c_lo + ROWS_PER_STEP).min(hi);
+            for r in c_lo..c_hi {
+                if keep(r as u64, salt, spec.probe_selectivity) {
+                    local_rows += 1;
+                    local_sum += agg_value(&db, spec.probe, r);
+                }
+            }
+            ctx.seq_read(
+                probe_region,
+                ((c_hi - c_lo) as u64) * db.row_bytes(spec.probe),
+            );
+            ctx.compute_flops(spec.flops_per_row * (c_hi - c_lo) as u64);
+            if step + 1 >= chunks {
+                // Final chunk: publish this rank's partials.
+                let mut agg = olap.lock().unwrap();
+                agg.0 += local_rows;
+                agg.1 += local_sum;
+                ctx.seq_write(group_region, 64);
+                Step::Done
+            } else {
+                Step::Yield
+            }
+        }))
+    }
+}
+
 /// YCSB + TPC-H scan co-residency as a [`Scenario`].
 pub struct MixedScenario {
     /// YCSB table size (records).
@@ -68,12 +189,9 @@ struct MixedState {
     store: Arc<Store>,
     commit_region: RegionId,
     log_region: RegionId,
-    probe_region: RegionId,
-    group_region: RegionId,
+    scan: ScanTenant,
     commits: Arc<AtomicU64>,
     aborts: Arc<AtomicU64>,
-    /// OLAP partials merged at each rank's final chunk.
-    olap: Arc<Mutex<(u64, f64)>>,
 }
 
 impl MixedScenario {
@@ -121,7 +239,7 @@ impl MixedScenario {
 
     /// (rows, aggregate) produced by the OLAP tenant; valid after the run.
     pub fn olap_result(&self) -> (u64, f64) {
-        self.st.as_ref().map_or((0, 0.0), |st| *st.olap.lock().unwrap())
+        self.st.as_ref().map_or((0, 0.0), |st| st.scan.result())
     }
 
     /// How many ranks each tenant got (OLTP first).
@@ -131,48 +249,7 @@ impl MixedScenario {
 
     fn olap_rank_coroutine(&self, olap_rank: usize, n_olap: usize) -> Box<dyn Coroutine> {
         let st = self.st.as_ref().expect("setup() before spawn()");
-        let db = self.db.clone();
-        let spec = self.spec.clone();
-        let salt = spec.id as u64 * 0x1234_5678;
-        let probe_region = st.probe_region;
-        let group_region = st.group_region;
-        let olap = st.olap.clone();
-        // This rank's slice of the fact table, scanned in yielding chunks.
-        let rows = db.rows(spec.probe);
-        let per = rows.div_ceil(n_olap);
-        let lo = (olap_rank * per).min(rows);
-        let hi = ((olap_rank + 1) * per).min(rows);
-        let chunks = (hi - lo).div_ceil(ROWS_PER_STEP).max(1) as u64;
-        let mut local_rows = 0u64;
-        let mut local_sum = 0.0f64;
-        Box::new(StateTask::new(move |ctx, step| {
-            if step >= chunks {
-                return Step::Done;
-            }
-            let c_lo = lo + step as usize * ROWS_PER_STEP;
-            let c_hi = (c_lo + ROWS_PER_STEP).min(hi);
-            for r in c_lo..c_hi {
-                if keep(r as u64, salt, spec.probe_selectivity) {
-                    local_rows += 1;
-                    local_sum += agg_value(&db, spec.probe, r);
-                }
-            }
-            ctx.seq_read(
-                probe_region,
-                ((c_hi - c_lo) as u64) * db.row_bytes(spec.probe),
-            );
-            ctx.compute_flops(spec.flops_per_row * (c_hi - c_lo) as u64);
-            if step + 1 >= chunks {
-                // Final chunk: publish this rank's partials.
-                let mut agg = olap.lock().unwrap();
-                agg.0 += local_rows;
-                agg.1 += local_sum;
-                ctx.seq_write(group_region, 64);
-                Step::Done
-            } else {
-                Step::Yield
-            }
-        }))
+        st.scan.coroutine(olap_rank, n_olap)
     }
 
     fn oltp_rank_coroutine(&self, rank: usize) -> Box<dyn Coroutine> {
@@ -257,21 +334,16 @@ impl Scenario for MixedScenario {
         let store = Arc::new(Store::new(machine, "mixed-ycsb-table", self.records, 100));
         let commit_region = machine.alloc("mixed-commit-counter", 64, Placement::Bind(0));
         let log_region = machine.alloc("mixed-txn-log", 64 << 20, Placement::Bind(0));
-        let probe_region = machine.alloc(
-            "mixed-probe-table",
-            self.db.table_bytes(self.spec.probe),
-            Placement::Interleave,
-        );
-        let group_region = machine.alloc("mixed-group-state", 4 << 10, Placement::Interleave);
+        // Same allocation order and labels as pre-refactor (probe table,
+        // then group state), so the golden sim reports are unchanged.
+        let scan = ScanTenant::new(machine, "mixed", self.db.clone(), self.spec.clone());
         self.st = Some(MixedState {
             store,
             commit_region,
             log_region,
-            probe_region,
-            group_region,
+            scan,
             commits: Arc::new(AtomicU64::new(0)),
             aborts: Arc::new(AtomicU64::new(0)),
-            olap: Arc::new(Mutex::new((0, 0.0))),
         });
     }
 
@@ -294,20 +366,8 @@ impl Scenario for MixedScenario {
         );
         // OLAP tenant: scan matches the OLAP engine's serial oracle.
         if self.tasks > self.n_oltp {
-            let (rows, sum) = self.olap_result();
-            let (rows_ref, sum_ref) = run_query_serial(&self.db, &self.spec);
-            assert_eq!(
-                rows, rows_ref,
-                "Q{}: co-resident scan row count diverges from the serial oracle",
-                self.spec.id
-            );
-            assert!(
-                (sum - sum_ref).abs() <= sum_ref.abs() * 1e-9 + 1e-6,
-                "Q{}: aggregate {} vs serial {}",
-                self.spec.id,
-                sum,
-                sum_ref
-            );
+            let st = self.st.as_ref().expect("setup() before verify()");
+            st.scan.verify_against_serial();
         }
     }
 

@@ -1,7 +1,9 @@
-//! Evaluation workloads (paper §5), plus multi-tenant mixes beyond it.
+//! Evaluation workloads (paper §5), plus multi-tenant mixes and the
+//! trace-replay request-serving story beyond it.
 pub mod graph;
 pub mod streamcluster;
 pub mod sgd;
 pub mod olap;
 pub mod oltp;
 pub mod mixed;
+pub mod serve;

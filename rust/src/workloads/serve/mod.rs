@@ -1,0 +1,521 @@
+//! Trace-replay request serving: the "millions of users" story.
+//!
+//! Every other workload in the registry is a batch job — build data,
+//! burn through it, report a makespan. A serving system answers a
+//! different question: requests arrive on *their* schedule (the trace),
+//! and what matters is how long each one waited. This module turns the
+//! engine seam into that experiment:
+//!
+//! - [`trace`] — deterministic request traces: seeded synthetic
+//!   generators (Zipfian keys; uniform/Poisson/diurnal/bursty open-loop
+//!   arrivals) and a tiny text format for replaying recorded traffic.
+//! - **Server workers** — each rank is a server coroutine that claims
+//!   requests FCFS from an [`OpenLoopQueue`] (engine-side dispatcher).
+//!   An idle server *waits for the next arrival* (advances its virtual
+//!   clock to the request's timestamp); a backlogged one starts service
+//!   immediately — so sojourn = queue wait + service, measured per
+//!   request in virtual time and folded into a log-scaled histogram
+//!   ([`LatencyRecorder`]) that the driver attaches to
+//!   [`RunReport::request_latency`].
+//! - [`ServeKvScenario`] (`serve-kv`) — YCSB-style point reads/updates
+//!   over the shared [`Store`] from the OLTP engine: zipfian key
+//!   contention, a shared commit line and log appends on the update
+//!   path.
+//! - [`ServeMixedScenario`] (`serve-mixed`) — the same KV traffic
+//!   co-resident with the TPC-H scan tenant from [`mixed`]: the scan
+//!   evicts the KV working set and queues on the same DDR trackers, so
+//!   the serving tail directly measures cross-tenant interference.
+//!
+//! Both scenarios run on the Sim backend (deterministic latency
+//! distributions — the paper-figure path, see `fig_serving`) and the
+//! Host backend (real threads racing on the same admission queue; every
+//! request still served exactly once).
+
+pub mod trace;
+
+pub use trace::{ArrivalModel, ReqOp, Request, Trace, TraceConfig};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::cachesim::Access;
+use crate::engine::{LatencyRecorder, OpenLoopQueue, Scenario, ScenarioMetrics};
+use crate::mem::{Placement, RegionId};
+use crate::sched::{LatencyReport, RunReport};
+use crate::sim::Machine;
+use crate::task::{Coroutine, StateTask, Step};
+use crate::util::stats::LogHistogram;
+use crate::workloads::mixed::ScanTenant;
+use crate::workloads::olap::{Db, QuerySpec};
+use crate::workloads::oltp::Store;
+
+/// The KV serving tenant: store + commit/log regions + the admission
+/// queue and latency accounting, shared by `serve-kv` and `serve-mixed`.
+struct KvTenant {
+    store: Arc<Store>,
+    commit_region: RegionId,
+    log_region: RegionId,
+    queue: Arc<OpenLoopQueue<Request>>,
+    served: Arc<AtomicU64>,
+    conflicts: Arc<AtomicU64>,
+    lat: Arc<Mutex<LatencyRecorder>>,
+}
+
+impl KvTenant {
+    fn new(machine: &mut Machine, label_prefix: &str, records: usize, trace: &Trace) -> Self {
+        let store = Arc::new(Store::new(
+            machine,
+            &format!("{label_prefix}-kv-table"),
+            records,
+            100,
+        ));
+        let commit_region =
+            machine.alloc(&format!("{label_prefix}-commit-counter"), 64, Placement::Bind(0));
+        let log_region =
+            machine.alloc(&format!("{label_prefix}-log"), 64 << 20, Placement::Bind(0));
+        Self {
+            store,
+            commit_region,
+            log_region,
+            queue: OpenLoopQueue::new(trace.requests.clone()),
+            served: Arc::new(AtomicU64::new(0)),
+            conflicts: Arc::new(AtomicU64::new(0)),
+            lat: Arc::new(Mutex::new(LatencyRecorder::new())),
+        }
+    }
+
+    fn served(&self) -> u64 {
+        self.served.load(Ordering::Relaxed)
+    }
+
+    fn conflicts(&self) -> u64 {
+        self.conflicts.load(Ordering::Relaxed)
+    }
+
+    fn report(&self) -> Option<LatencyReport> {
+        self.lat.lock().unwrap().report()
+    }
+
+    fn histogram(&self) -> LogHistogram {
+        self.lat.lock().unwrap().histogram().clone()
+    }
+
+    /// One server worker: a coroutine serving one request per step
+    /// (every request is a scheduling/profiling/migration point), with
+    /// per-request sojourn recorded locally and merged once at drain.
+    fn worker(&self) -> Box<dyn Coroutine> {
+        let store = self.store.clone();
+        let commit_region = self.commit_region;
+        let log_region = self.log_region;
+        let queue = self.queue.clone();
+        let served = self.served.clone();
+        let conflicts = self.conflicts.clone();
+        let lat = self.lat.clone();
+        let mut local = LatencyRecorder::new();
+        Box::new(StateTask::new(move |ctx, _step| {
+            let Some(req) = queue.pop() else {
+                // Trace drained: publish this worker's latency samples.
+                lat.lock().unwrap().merge(&local);
+                local = LatencyRecorder::new();
+                return Step::Done;
+            };
+            // Open loop: an idle server waits for the arrival; a
+            // backlogged one starts immediately (the request was
+            // queueing while every server was busy).
+            let v = ctx.view();
+            if v.now() < req.arrival_ns {
+                v.advance_to(req.arrival_ns);
+            }
+            let start = v.now();
+            let key = req.key as usize;
+            match req.op {
+                ReqOp::Read => {
+                    let _ = store.read(key);
+                    ctx.access(Access::rand_read(store.region, 1, store.bytes).with_mlp(1.0));
+                }
+                ReqOp::Update => {
+                    if !store.rmw(key, 1) {
+                        conflicts.fetch_add(1, Ordering::Relaxed);
+                    }
+                    // Read-modify-write: point read + write back, then
+                    // the commit path (shared counter line ping-pong,
+                    // log append, ~600 ns latch) — the same cost shape
+                    // as the OLTP engine's commit.
+                    ctx.access(Access::rand_read(store.region, 1, store.bytes).with_mlp(1.0));
+                    ctx.access(Access::rand_write(store.region, 1, store.bytes).with_mlp(1.0));
+                    ctx.rand_write(commit_region, 1, 64);
+                    ctx.seq_write(log_region, 128);
+                    ctx.compute_ns(600);
+                }
+            }
+            // Request parse/dispatch CPU.
+            ctx.compute_flops(300);
+            let end = ctx.view().now();
+            local.record(start - req.arrival_ns, end - start);
+            served.fetch_add(1, Ordering::Relaxed);
+            Step::Yield
+        }))
+    }
+}
+
+/// `serve-kv`: open-loop trace replay of YCSB-style point ops over the
+/// OLTP engine's record store, with per-request latency accounting.
+pub struct ServeKvScenario {
+    records: usize,
+    trace: Arc<Trace>,
+    kv: Option<KvTenant>,
+}
+
+impl ServeKvScenario {
+    /// `records` sizes the KV table; `trace` is the arrival schedule
+    /// (keys are taken modulo the table size).
+    pub fn new(records: usize, trace: Arc<Trace>) -> Self {
+        Self {
+            records,
+            trace,
+            kv: None,
+        }
+    }
+
+    /// Requests served; valid after the run.
+    pub fn served(&self) -> u64 {
+        self.kv.as_ref().map_or(0, KvTenant::served)
+    }
+
+    /// Update RMWs that lost their version race; valid after the run.
+    pub fn conflicts(&self) -> u64 {
+        self.kv.as_ref().map_or(0, KvTenant::conflicts)
+    }
+
+    /// The sojourn histogram (CDF source for `fig_serving`).
+    pub fn latency_histogram(&self) -> Option<LogHistogram> {
+        self.kv.as_ref().map(KvTenant::histogram)
+    }
+}
+
+impl Scenario for ServeKvScenario {
+    fn name(&self) -> &'static str {
+        "serve-kv"
+    }
+
+    fn setup(&mut self, machine: &mut Machine, _tasks: usize) {
+        self.kv = Some(KvTenant::new(machine, "serve", self.records, &self.trace));
+    }
+
+    fn spawn(&mut self, _rank: usize) -> Box<dyn Coroutine> {
+        self.kv.as_ref().expect("setup() before spawn()").worker()
+    }
+
+    fn verify(&self) {
+        let served = self.served();
+        assert_eq!(
+            served,
+            self.trace.len() as u64,
+            "every request must be served exactly once"
+        );
+        let recorded = self.kv.as_ref().map_or(0, |kv| kv.lat.lock().unwrap().count());
+        assert_eq!(
+            recorded, served,
+            "every served request must have a latency sample"
+        );
+    }
+
+    fn latency(&self) -> Option<LatencyReport> {
+        self.kv.as_ref().and_then(KvTenant::report)
+    }
+
+    fn metrics(&self, report: &RunReport) -> ScenarioMetrics {
+        let p99 = self.latency().map_or(0.0, |l| l.p99_ns as f64);
+        ScenarioMetrics::new(self.served() as f64, "reqs")
+            .with("reqs_per_s", report.throughput(self.served() as f64))
+            .with("update_conflicts", self.conflicts() as f64)
+            .with("p99_sojourn_ns", p99)
+    }
+}
+
+/// `serve-mixed`: the `serve-kv` traffic co-resident with a TPC-H-shaped
+/// scan tenant — serving tail latency under analytics interference.
+pub struct ServeMixedScenario {
+    records: usize,
+    trace: Arc<Trace>,
+    db: Arc<Db>,
+    spec: QuerySpec,
+    tasks: usize,
+    n_serve: usize,
+    st: Option<(KvTenant, ScanTenant)>,
+}
+
+impl ServeMixedScenario {
+    /// `spec` must be a join-free scan query (Q1 by default in the
+    /// registry).
+    pub fn new(records: usize, trace: Arc<Trace>, db: Arc<Db>, spec: QuerySpec) -> Self {
+        assert!(
+            spec.joins.is_empty(),
+            "serve-mixed's scan tenant requires a join-free query: Q{} has joins",
+            spec.id
+        );
+        Self {
+            records,
+            trace,
+            db,
+            spec,
+            tasks: 0,
+            n_serve: 0,
+            st: None,
+        }
+    }
+
+    /// Requests served; valid after the run.
+    pub fn served(&self) -> u64 {
+        self.st.as_ref().map_or(0, |(kv, _)| kv.served())
+    }
+
+    /// (rows, aggregate) produced by the scan tenant; valid after the run.
+    pub fn olap_result(&self) -> (u64, f64) {
+        self.st.as_ref().map_or((0, 0.0), |(_, scan)| scan.result())
+    }
+
+    /// How many ranks each tenant got (serving first).
+    pub fn split(&self) -> (usize, usize) {
+        (self.n_serve, self.tasks - self.n_serve)
+    }
+
+    /// The sojourn histogram (CDF source for benches).
+    pub fn latency_histogram(&self) -> Option<LogHistogram> {
+        self.st.as_ref().map(|(kv, _)| kv.histogram())
+    }
+}
+
+impl Scenario for ServeMixedScenario {
+    fn name(&self) -> &'static str {
+        "serve-mixed"
+    }
+
+    fn setup(&mut self, machine: &mut Machine, tasks: usize) {
+        self.tasks = tasks;
+        // Serving gets the ceiling half (a single-rank group degenerates
+        // to pure serving, never to nothing), like the mixed scenario.
+        self.n_serve = tasks.div_ceil(2);
+        let kv = KvTenant::new(machine, "serve-mixed", self.records, &self.trace);
+        let scan = ScanTenant::new(machine, "serve-mixed", self.db.clone(), self.spec.clone());
+        self.st = Some((kv, scan));
+    }
+
+    fn spawn(&mut self, rank: usize) -> Box<dyn Coroutine> {
+        let (kv, scan) = self.st.as_ref().expect("setup() before spawn()");
+        if rank < self.n_serve {
+            kv.worker()
+        } else {
+            scan.coroutine(rank - self.n_serve, self.tasks - self.n_serve)
+        }
+    }
+
+    fn verify(&self) {
+        let (kv, scan) = self.st.as_ref().expect("setup() before verify()");
+        assert_eq!(
+            kv.served(),
+            self.trace.len() as u64,
+            "every request must be served exactly once"
+        );
+        if self.tasks > self.n_serve {
+            scan.verify_against_serial();
+        }
+    }
+
+    fn latency(&self) -> Option<LatencyReport> {
+        self.st.as_ref().and_then(|(kv, _)| kv.report())
+    }
+
+    fn metrics(&self, report: &RunReport) -> ScenarioMetrics {
+        let scanned = if self.tasks > self.n_serve {
+            self.db.rows(self.spec.probe) as f64
+        } else {
+            0.0
+        };
+        let p99 = self.latency().map_or(0.0, |l| l.p99_ns as f64);
+        ScenarioMetrics::new(self.served() as f64 + scanned, "ops")
+            .with("reqs_per_s", report.throughput(self.served() as f64))
+            .with("p99_sojourn_ns", p99)
+            .with("olap_rows_out", self.olap_result().0 as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::Driver;
+    use crate::policy::LocalCachePolicy;
+    use crate::topology::Topology;
+    use crate::workloads::olap::all_queries;
+
+    fn topo() -> Topology {
+        Topology::milan_1s()
+    }
+
+    fn kv_trace(requests: usize, rate_rps: f64) -> Arc<Trace> {
+        Arc::new(Trace::synth(&TraceConfig {
+            requests,
+            rate_rps,
+            keyspace: 10_000,
+            seed: 3,
+            ..Default::default()
+        }))
+    }
+
+    fn run_kv(requests: usize, rate_rps: f64, workers: usize) -> (ServeKvScenario, RunReport) {
+        let mut s = ServeKvScenario::new(10_000, kv_trace(requests, rate_rps));
+        let run = Driver::new(&topo(), Box::new(LocalCachePolicy), workers)
+            .with_verify(true)
+            .run(&mut s);
+        (s, run.report)
+    }
+
+    #[test]
+    fn serves_every_request_and_reports_latency() {
+        let (s, report) = run_kv(2_000, 2.0e6, 8);
+        assert_eq!(s.served(), 2_000);
+        let l = report.request_latency.expect("serving must report latency");
+        assert_eq!(l.count, 2_000);
+        assert!(l.p50_ns <= l.p95_ns && l.p95_ns <= l.p99_ns && l.p99_ns <= l.max_ns);
+        assert!(l.mean_ns > 0.0);
+        assert!(l.mean_service_ns > 0.0);
+        // The open loop ran at least as long as the arrival horizon.
+        assert!(report.makespan_ns >= s.trace.last_arrival_ns());
+        assert_eq!(s.latency_histogram().unwrap().count(), 2_000);
+    }
+
+    #[test]
+    fn sim_runs_are_deterministic_including_latency() {
+        let once = || {
+            let (s, report) = run_kv(1_000, 2.0e6, 8);
+            (
+                report.makespan_ns,
+                report.dispatches,
+                report.request_latency,
+                s.served(),
+                s.conflicts(),
+            )
+        };
+        assert_eq!(once(), once());
+    }
+
+    #[test]
+    fn underload_has_idle_queue_and_overload_queues() {
+        // 0.2M rps on 8 servers: arrivals are far apart, queue wait ~0.
+        let (_, light) = run_kv(600, 0.2e6, 8);
+        let light = light.request_latency.unwrap();
+        assert!(
+            light.mean_queue_ns < light.mean_service_ns,
+            "underload queue {} should be below service {}",
+            light.mean_queue_ns,
+            light.mean_service_ns
+        );
+        // 200M rps: everything arrives at once; sojourn is queue-bound
+        // and the tail dwarfs the service time.
+        let (_, heavy) = run_kv(600, 200.0e6, 8);
+        let heavy = heavy.request_latency.unwrap();
+        assert!(
+            heavy.mean_queue_ns > 10.0 * heavy.mean_service_ns,
+            "overload queue {} should dominate service {}",
+            heavy.mean_queue_ns,
+            heavy.mean_service_ns
+        );
+        assert!(heavy.p99_ns > light.p99_ns);
+    }
+
+    #[test]
+    fn fewer_requests_than_workers_is_fine() {
+        let (s, report) = run_kv(3, 1.0e6, 8);
+        assert_eq!(s.served(), 3);
+        assert_eq!(report.request_latency.unwrap().count, 3);
+    }
+
+    #[test]
+    fn update_traffic_mutates_the_store() {
+        let trace = Arc::new(
+            Trace::parse("0 u 5\n100 u 5\n200 r 5\n300 u 6\n").unwrap(),
+        );
+        let mut s = ServeKvScenario::new(100, trace);
+        let _ = Driver::new(&topo(), Box::new(LocalCachePolicy), 2)
+            .with_verify(true)
+            .run(&mut s);
+        assert_eq!(s.served(), 4);
+        let kv = s.kv.as_ref().unwrap();
+        // Key 5 started at 5 and took two increments; key 6 one.
+        assert_eq!(kv.store.read(5), 7);
+        assert_eq!(kv.store.read(6), 7);
+    }
+
+    #[test]
+    fn serve_mixed_splits_ranks_and_both_tenants_finish() {
+        let db = Arc::new(Db::generate(0.002, 7));
+        let mut s = ServeMixedScenario::new(
+            10_000,
+            kv_trace(1_000, 2.0e6),
+            db,
+            all_queries()[0].clone(),
+        );
+        let run = Driver::new(&topo(), Box::new(LocalCachePolicy), 8)
+            .with_verify(true)
+            .run(&mut s);
+        assert_eq!(s.split(), (4, 4));
+        assert_eq!(s.served(), 1_000);
+        let (rows, sum) = s.olap_result();
+        assert!(rows > 0 && sum > 0.0);
+        let l = run.report.request_latency.unwrap();
+        assert_eq!(l.count, 1_000);
+        assert!(run.metrics.get("olap_rows_out").unwrap() > 0.0);
+    }
+
+    #[test]
+    fn serve_mixed_scan_interference_raises_the_tail() {
+        // Same serving traffic with and without the co-resident scan:
+        // the scan tenant's cache/bandwidth pressure must not *lower*
+        // the p99 (and DRAM traffic must be strictly higher).
+        let db = Arc::new(Db::generate(0.01, 7));
+        let trace = kv_trace(2_000, 2.0e6);
+        let mut alone = ServeKvScenario::new(10_000, trace.clone());
+        let alone_run = Driver::new(&topo(), Box::new(LocalCachePolicy), 4).run(&mut alone);
+        let mut mixed =
+            ServeMixedScenario::new(10_000, trace, db, all_queries()[0].clone());
+        let mixed_run = Driver::new(&topo(), Box::new(LocalCachePolicy), 8).run(&mut mixed);
+        assert!(
+            mixed_run.report.dram_bytes > alone_run.report.dram_bytes,
+            "the scan tenant must add DRAM traffic"
+        );
+        let (a, m) = (
+            alone_run.report.request_latency.unwrap(),
+            mixed_run.report.request_latency.unwrap(),
+        );
+        assert!(
+            m.p99_ns * 10 >= a.p99_ns,
+            "co-residency cannot make the tail 10x better: alone {} mixed {}",
+            a.p99_ns,
+            m.p99_ns
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "join-free")]
+    fn serve_mixed_rejects_join_queries() {
+        let db = Arc::new(Db::generate(0.002, 7));
+        let _ = ServeMixedScenario::new(100, kv_trace(10, 1e6), db, all_queries()[2].clone());
+    }
+
+    #[test]
+    fn single_rank_serve_mixed_degenerates_to_pure_serving() {
+        let db = Arc::new(Db::generate(0.002, 7));
+        let mut s = ServeMixedScenario::new(
+            1_000,
+            kv_trace(128, 1.0e6),
+            db,
+            all_queries()[0].clone(),
+        );
+        let _ = Driver::new(&topo(), Box::new(LocalCachePolicy), 1)
+            .with_verify(true)
+            .run(&mut s);
+        assert_eq!(s.split(), (1, 0));
+        assert_eq!(s.served(), 128);
+        assert_eq!(s.olap_result().0, 0);
+    }
+}

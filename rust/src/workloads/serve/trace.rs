@@ -1,0 +1,368 @@
+//! Deterministic request traces for the serving subsystem.
+//!
+//! A trace is a time-ordered list of point-op requests — the open-loop
+//! arrival process the dispatcher replays regardless of how fast the
+//! servers drain it (arrivals never wait on completions; that is what
+//! makes tail latency honest). Two sources:
+//!
+//! - **Synthetic generators** ([`Trace::synth`]): Zipfian key popularity
+//!   over a configurable keyspace, and a choice of arrival processes —
+//!   evenly spaced, Poisson, diurnally modulated Poisson (a slow
+//!   sinusoidal load swing, the "day/night" shape of user traffic) and
+//!   on/off bursts. All draws come from the repo's seeded PRNG, so a
+//!   `(config, seed)` pair is a reproducible workload.
+//! - **Text traces** ([`Trace::parse`] / [`Trace::load`]): a tiny
+//!   line-oriented format for replaying recorded or hand-written traffic:
+//!
+//!   ```text
+//!   # arcas request trace: "<arrival_ns> <op> <key>" per line
+//!   0 r 17
+//!   250 u 3
+//!   900 r 17
+//!   ```
+//!
+//!   `#` starts a comment, blank lines are skipped, ops are `r`/`read`
+//!   and `u`/`update` (alias `w`/`write`), arrivals are non-decreasing
+//!   nanoseconds. [`Trace::to_text`] writes the same format back, so
+//!   traces round-trip.
+
+use std::path::Path;
+
+use crate::util::prng::Rng;
+
+/// A request's operation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReqOp {
+    /// Point read of a key.
+    Read,
+    /// Read-modify-write of a key.
+    Update,
+}
+
+impl ReqOp {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ReqOp::Read => "r",
+            ReqOp::Update => "u",
+        }
+    }
+}
+
+/// One request: when it arrives (virtual ns since trace start) and what
+/// it asks for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Request {
+    pub arrival_ns: u64,
+    pub op: ReqOp,
+    pub key: u64,
+}
+
+/// The arrival process of a synthetic trace.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalModel {
+    /// Evenly spaced at the mean rate (deterministic spacing).
+    Uniform,
+    /// Poisson process: exponential interarrivals at the mean rate.
+    Poisson,
+    /// Poisson with a sinusoidally modulated rate:
+    /// `rate(t) = mean * (1 + depth * sin(2πt/period))`, the diurnal
+    /// load swing compressed to simulation timescales.
+    Diurnal { period_ns: u64, depth: f64 },
+    /// On/off bursts: `burst` requests arrive back-to-back at 10× the
+    /// mean rate, then the gap stretches so the long-run rate stays at
+    /// the configured mean.
+    Bursty { burst: usize },
+}
+
+/// Knobs of a synthetic trace.
+#[derive(Clone, Debug)]
+pub struct TraceConfig {
+    pub requests: usize,
+    /// Mean offered load, requests per second (of virtual time).
+    pub rate_rps: f64,
+    /// Keys are drawn from `[0, keyspace)`.
+    pub keyspace: u64,
+    /// Zipfian skew of key popularity (YCSB default 0.99; 0 = uniform).
+    pub zipf_theta: f64,
+    /// Fraction of reads (the rest are updates).
+    pub read_frac: f64,
+    pub arrivals: ArrivalModel,
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        Self {
+            requests: 20_000,
+            rate_rps: 2.0e6,
+            keyspace: 1 << 20,
+            zipf_theta: 0.99,
+            read_frac: 0.45,
+            arrivals: ArrivalModel::Poisson,
+            seed: 42,
+        }
+    }
+}
+
+/// A time-ordered request trace.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Trace {
+    pub requests: Vec<Request>,
+}
+
+impl Trace {
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// Arrival time of the last request (0 for empty traces).
+    pub fn last_arrival_ns(&self) -> u64 {
+        self.requests.last().map_or(0, |r| r.arrival_ns)
+    }
+
+    /// Long-run offered rate implied by the trace (requests per second
+    /// of virtual time).
+    pub fn offered_rate_rps(&self) -> f64 {
+        if self.requests.len() < 2 {
+            return 0.0;
+        }
+        self.requests.len() as f64 / (self.last_arrival_ns().max(1) as f64 / 1e9)
+    }
+
+    /// Generate a synthetic trace — deterministic in `cfg` (seed
+    /// included).
+    pub fn synth(cfg: &TraceConfig) -> Trace {
+        assert!(cfg.rate_rps > 0.0, "trace rate must be positive");
+        assert!(cfg.keyspace > 0, "trace keyspace must be non-empty");
+        let mut rng = Rng::new(cfg.seed ^ 0x5E2F_7ACE);
+        let mean_gap_ns = 1e9 / cfg.rate_rps;
+        let mut t = 0.0f64;
+        let mut requests = Vec::with_capacity(cfg.requests);
+        for i in 0..cfg.requests {
+            let gap = match cfg.arrivals {
+                ArrivalModel::Uniform => mean_gap_ns,
+                ArrivalModel::Poisson => rng.gen_exp(1.0 / mean_gap_ns),
+                ArrivalModel::Diurnal { period_ns, depth } => {
+                    let depth = depth.clamp(0.0, 0.95);
+                    let phase = 2.0 * std::f64::consts::PI * t / period_ns.max(1) as f64;
+                    let rate = (1.0 + depth * phase.sin()).max(0.05) / mean_gap_ns;
+                    rng.gen_exp(rate)
+                }
+                ArrivalModel::Bursty { burst } => {
+                    let burst = burst.max(1);
+                    if i % burst == 0 && i > 0 {
+                        // The off period repays the burst's 10x-rate
+                        // spacing so the long-run mean holds.
+                        mean_gap_ns * (burst as f64 - (burst - 1) as f64 / 10.0)
+                    } else {
+                        mean_gap_ns / 10.0
+                    }
+                }
+            };
+            t += gap;
+            let op = if rng.gen_bool(cfg.read_frac) {
+                ReqOp::Read
+            } else {
+                ReqOp::Update
+            };
+            let key = rng.gen_zipf(cfg.keyspace, cfg.zipf_theta);
+            requests.push(Request {
+                arrival_ns: t as u64,
+                op,
+                key,
+            });
+        }
+        Trace { requests }
+    }
+
+    /// Parse the text trace format. Strict: malformed lines and
+    /// out-of-order arrivals are errors (a silently reordered trace
+    /// would corrupt every latency number derived from it).
+    pub fn parse(text: &str) -> Result<Trace, String> {
+        let mut requests = Vec::new();
+        let mut last_arrival = 0u64;
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut fields = line.split_whitespace();
+            let (Some(a), Some(o), Some(k), None) =
+                (fields.next(), fields.next(), fields.next(), fields.next())
+            else {
+                return Err(format!(
+                    "trace line {}: expected \"<arrival_ns> <op> <key>\", got {raw:?}",
+                    lineno + 1
+                ));
+            };
+            let arrival_ns: u64 = a.parse().map_err(|_| {
+                format!("trace line {}: bad arrival {a:?}", lineno + 1)
+            })?;
+            let op = match o {
+                "r" | "read" => ReqOp::Read,
+                "u" | "update" | "w" | "write" => ReqOp::Update,
+                other => {
+                    return Err(format!(
+                        "trace line {}: unknown op {other:?} (r|read|u|update)",
+                        lineno + 1
+                    ))
+                }
+            };
+            let key: u64 = k
+                .parse()
+                .map_err(|_| format!("trace line {}: bad key {k:?}", lineno + 1))?;
+            if arrival_ns < last_arrival {
+                return Err(format!(
+                    "trace line {}: arrivals must be non-decreasing ({arrival_ns} after {last_arrival})",
+                    lineno + 1
+                ));
+            }
+            last_arrival = arrival_ns;
+            requests.push(Request {
+                arrival_ns,
+                op,
+                key,
+            });
+        }
+        if requests.is_empty() {
+            return Err("trace contains no requests".into());
+        }
+        Ok(Trace { requests })
+    }
+
+    /// Load a text trace from a file.
+    pub fn load(path: &Path) -> Result<Trace, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read trace {}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Serialize back to the text format (round-trips through
+    /// [`Trace::parse`]).
+    pub fn to_text(&self) -> String {
+        let mut out = String::with_capacity(16 * self.requests.len() + 64);
+        out.push_str("# arcas request trace: \"<arrival_ns> <op> <key>\" per line\n");
+        for r in &self.requests {
+            out.push_str(&format!("{} {} {}\n", r.arrival_ns, r.op.as_str(), r.key));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(model: ArrivalModel) -> TraceConfig {
+        TraceConfig {
+            requests: 4_000,
+            rate_rps: 1.0e6,
+            keyspace: 10_000,
+            arrivals: model,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn synth_is_deterministic_and_ordered() {
+        for model in [
+            ArrivalModel::Uniform,
+            ArrivalModel::Poisson,
+            ArrivalModel::Diurnal {
+                period_ns: 500_000,
+                depth: 0.8,
+            },
+            ArrivalModel::Bursty { burst: 32 },
+        ] {
+            let a = Trace::synth(&cfg(model));
+            let b = Trace::synth(&cfg(model));
+            assert_eq!(a, b, "{model:?} must be reproducible");
+            assert_eq!(a.len(), 4_000);
+            for w in a.requests.windows(2) {
+                assert!(w[0].arrival_ns <= w[1].arrival_ns, "{model:?} out of order");
+            }
+            assert!(a.requests.iter().all(|r| r.key < 10_000));
+        }
+    }
+
+    #[test]
+    fn synth_hits_the_mean_rate() {
+        for model in [
+            ArrivalModel::Uniform,
+            ArrivalModel::Poisson,
+            ArrivalModel::Bursty { burst: 64 },
+        ] {
+            let t = Trace::synth(&cfg(model));
+            let rate = t.offered_rate_rps();
+            assert!(
+                (0.8..1.25).contains(&(rate / 1.0e6)),
+                "{model:?}: offered {rate:.0} rps vs 1M configured"
+            );
+        }
+    }
+
+    #[test]
+    fn zipf_keys_are_skewed() {
+        let t = Trace::synth(&cfg(ArrivalModel::Poisson));
+        let hot = t.requests.iter().filter(|r| r.key == 0).count();
+        // Uniform share would be 4000/10000 < 1; the Zipf head gets far more.
+        assert!(hot > 100, "hottest key drew {hot} of 4000");
+    }
+
+    #[test]
+    fn bursty_gaps_alternate() {
+        let t = Trace::synth(&TraceConfig {
+            requests: 300,
+            rate_rps: 1.0e6,
+            arrivals: ArrivalModel::Bursty { burst: 100 },
+            ..Default::default()
+        });
+        let gap = |i: usize| t.requests[i].arrival_ns - t.requests[i - 1].arrival_ns;
+        // Within a burst: ~mean/10; at the burst boundary: a long gap.
+        assert!(gap(50) < 500);
+        assert!(gap(100) > 50_000);
+    }
+
+    #[test]
+    fn text_format_round_trips() {
+        let t = Trace::synth(&TraceConfig {
+            requests: 200,
+            ..Default::default()
+        });
+        let parsed = Trace::parse(&t.to_text()).unwrap();
+        assert_eq!(parsed, t);
+    }
+
+    #[test]
+    fn parse_accepts_comments_and_aliases() {
+        let t = Trace::parse(
+            "# header\n\n10 r 5\n20 read 6\n20 u 7\n30 update 8\n40 w 9\n",
+        )
+        .unwrap();
+        assert_eq!(t.len(), 5);
+        assert_eq!(t.requests[0].op, ReqOp::Read);
+        assert_eq!(t.requests[2].op, ReqOp::Update);
+        assert_eq!(t.requests[4].op, ReqOp::Update);
+        assert_eq!(t.last_arrival_ns(), 40);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_traces() {
+        for (bad, why) in [
+            ("", "empty"),
+            ("# only comments\n", "no requests"),
+            ("10 r\n", "missing key"),
+            ("10 r 5 extra\n", "extra field"),
+            ("x r 5\n", "bad arrival"),
+            ("10 q 5\n", "unknown op"),
+            ("10 r x\n", "bad key"),
+            ("20 r 1\n10 r 2\n", "out of order"),
+        ] {
+            assert!(Trace::parse(bad).is_err(), "{why}: {bad:?} must not parse");
+        }
+    }
+}

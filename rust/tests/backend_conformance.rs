@@ -30,6 +30,7 @@ fn small_params() -> ScenarioParams {
         seed: 11,
         iters: Some(4),
         variant: None,
+        trace: None,
     }
 }
 
@@ -118,6 +119,8 @@ conformance_tests! {
     conformance_ycsb => "ycsb";
     conformance_tpcc => "tpcc";
     conformance_mixed_oltp_olap => "mixed-oltp-olap";
+    conformance_serve_kv => "serve-kv";
+    conformance_serve_mixed => "serve-mixed";
 }
 
 #[test]
@@ -141,6 +144,37 @@ fn suite_covers_entire_registry() {
         engine::registry().len(),
         "coverage list and registry disagree"
     );
+}
+
+/// Serving scenarios must carry a per-request latency report on BOTH
+/// backends (host interleavings vary, but every request is served and
+/// sampled), and the sim-backend latency numbers are deterministic.
+#[test]
+fn serving_scenarios_report_latency_on_both_backends() {
+    for name in ["serve-kv", "serve-mixed"] {
+        let sim_a = run_on(name, Some(ExecBackend::Sim));
+        let sim_b = run_on(name, Some(ExecBackend::Sim));
+        assert_eq!(
+            sim_a.report.request_latency, sim_b.report.request_latency,
+            "{name}: sim latency report must be deterministic"
+        );
+        for backend in ExecBackend::ALL {
+            let run = run_on(name, Some(backend));
+            let l = run
+                .report
+                .request_latency
+                .unwrap_or_else(|| panic!("{name}/{backend}: no latency report"));
+            assert_eq!(l.count, 4, "{name}/{backend}: 4 requests must be sampled");
+            assert!(
+                l.p50_ns <= l.p95_ns && l.p95_ns <= l.p99_ns && l.p99_ns <= l.max_ns,
+                "{name}/{backend}: quantiles out of order"
+            );
+            assert!(l.mean_service_ns > 0.0, "{name}/{backend}: no service time");
+        }
+    }
+    // Batch scenarios must NOT grow a latency report.
+    let batch = run_on("gups", Some(ExecBackend::Sim));
+    assert_eq!(batch.report.request_latency, None);
 }
 
 /// The acceptance-criteria invocation: `arcas run --scenario bfs

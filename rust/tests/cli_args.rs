@@ -127,6 +127,116 @@ fn arcas_run_repeat_end_to_end() {
     assert!(stdout.contains("(warm)"), "{stdout}");
 }
 
+/// The serving acceptance invocation against the real binary:
+/// `arcas run --scenario serve-kv --backend host --verify` must exit 0,
+/// report verification and print the p50/p95/p99 request-latency line.
+#[test]
+fn arcas_run_serve_kv_host_verify_reports_latency() {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_arcas"))
+        .args([
+            "run",
+            "--scenario",
+            "serve-kv",
+            "--policy",
+            "local",
+            "--cores",
+            "8",
+            "--backend",
+            "host",
+            "--verify",
+            "--scale",
+            "0.002",
+            "--iters",
+            "2000",
+        ])
+        .output()
+        .expect("spawn arcas binary");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        out.status.success(),
+        "arcas run serve-kv failed:\nstdout:\n{stdout}\nstderr:\n{stderr}"
+    );
+    assert!(stdout.contains("host backend"), "{stdout}");
+    assert!(stdout.contains("verified"), "{stdout}");
+    for needle in ["req sojourn", "p50", "p95", "p99", "mean queue"] {
+        assert!(stdout.contains(needle), "missing {needle:?} in:\n{stdout}");
+    }
+}
+
+/// `--trace` replays a text trace file end-to-end through the binary.
+#[test]
+fn arcas_run_replays_a_trace_file() {
+    let path = std::env::temp_dir().join(format!("arcas_cli_trace_{}.txt", std::process::id()));
+    std::fs::write(&path, "# three requests\n0 r 1\n500 u 2\n1000 r 3\n").unwrap();
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_arcas"))
+        .args([
+            "run",
+            "--scenario",
+            "serve-kv",
+            "--policy",
+            "local",
+            "--cores",
+            "2",
+            "--verify",
+            "--scale",
+            "0.002",
+            "--trace",
+            path.to_str().unwrap(),
+        ])
+        .output()
+        .expect("spawn arcas binary");
+    std::fs::remove_file(&path).ok();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "{stdout}");
+    assert!(stdout.contains("(3 reqs)"), "{stdout}");
+}
+
+/// `arcas bench-check` end-to-end: a seeded p99 regression beyond the
+/// tolerance band must exit non-zero against a pinned baseline; within
+/// the band it exits 0; an improvement exits 0 with a re-pin warning.
+#[test]
+fn arcas_bench_check_gates_regressions() {
+    let dir = std::env::temp_dir();
+    let base_path = dir.join(format!("arcas_gate_base_{}.json", std::process::id()));
+    let cur_path = dir.join(format!("arcas_gate_cur_{}.json", std::process::id()));
+    let series = |p99: f64| {
+        format!(
+            "{{\"pinned\": true, \"series\": [{{\"policy\": \"local\", \"backend\": \"sim\", \
+             \"p99_ns\": {p99}, \"tol\": 0.10}}]}}"
+        )
+    };
+    std::fs::write(&base_path, series(10_000.0)).unwrap();
+    let run = |current: &str| {
+        std::fs::write(&cur_path, current).unwrap();
+        std::process::Command::new(env!("CARGO_BIN_EXE_arcas"))
+            .args([
+                "bench-check",
+                "--kind",
+                "serving",
+                "--baseline",
+                base_path.to_str().unwrap(),
+                "--current",
+                cur_path.to_str().unwrap(),
+            ])
+            .output()
+            .expect("spawn arcas binary")
+    };
+    // Seeded regression: +50% p99 against a 10% band -> exit 1.
+    let out = run(&series(15_000.0));
+    assert!(!out.status.success(), "regression must fail the gate");
+    assert!(String::from_utf8_lossy(&out.stderr).contains("REGRESSION"));
+    // Within band -> exit 0.
+    let out = run(&series(10_400.0));
+    assert!(out.status.success(), "in-band result must pass");
+    // Improvement -> exit 0 + re-pin nudge.
+    let out = run(&series(2_000.0));
+    assert!(out.status.success(), "improvement must pass");
+    assert!(String::from_utf8_lossy(&out.stdout).contains("re-pin"));
+    std::fs::remove_file(&base_path).ok();
+    std::fs::remove_file(&cur_path).ok();
+}
+
 /// Unknown backends must be a hard CLI error (exit != 0), not a silent
 /// fallback to the simulator.
 #[test]

@@ -160,6 +160,40 @@ fn olap_wrapper_equals_hand_driven_scenario() {
     assert_eq!(wrapped.rows_out, s.rows_out());
 }
 
+/// Golden pin for `serve-kv` on the Sim backend: the full deterministic
+/// report — request-latency aggregate included — is identical across
+/// fresh builds and runs, the makespan covers the open-loop arrival
+/// horizon, and the quantiles are ordered. (Absolute numbers are not
+/// hard-coded: the latency model evolves with the machine calibration;
+/// run-to-run byte-identity plus the structural invariants are what
+/// "golden" means for every other scenario in this suite too.)
+#[test]
+fn serve_kv_sim_report_is_golden() {
+    let params = ScenarioParams {
+        scale: 0.002,
+        seed: 11,
+        iters: Some(512),
+        variant: None,
+        trace: None,
+    };
+    let run_once = || {
+        let mut s = engine::by_name("serve-kv").unwrap().build(&params);
+        Driver::new(&topo(), by_name("local", &topo()).unwrap(), 8)
+            .with_verify(true)
+            .run(s.as_mut())
+    };
+    let a = run_once();
+    let b = run_once();
+    assert_eq!(key(&a.report), key(&b.report));
+    assert_eq!(a.report.request_latency, b.report.request_latency);
+    let l = a.report.request_latency.expect("serve-kv must report latency");
+    assert_eq!(l.count, 512);
+    assert!(l.p50_ns <= l.p95_ns && l.p95_ns <= l.p99_ns && l.p99_ns <= l.max_ns);
+    assert!(l.mean_ns >= l.mean_service_ns);
+    assert_eq!(a.metrics.items, 512.0);
+    assert!(a.metrics.get("p99_sojourn_ns").unwrap() >= 1.0);
+}
+
 #[test]
 fn every_registry_scenario_runs_verified_on_a_toy_topology() {
     // 2 chiplets × 8 cores: the smallest machine with a chiplet boundary.
@@ -173,6 +207,7 @@ fn every_registry_scenario_runs_verified_on_a_toy_topology() {
         seed: 11,
         iters: Some(4),
         variant: None,
+        trace: None,
     };
     for spec in engine::registry() {
         let mut s = spec.build(&params);
@@ -202,6 +237,7 @@ fn registry_runs_under_every_policy_on_the_toy_topology() {
         seed: 5,
         iters: Some(2),
         variant: None,
+        trace: None,
     };
     for policy in ["arcas", "ring", "shoal", "local", "distributed", "os_async"] {
         let mut s = engine::by_name("bfs").unwrap().build(&params);

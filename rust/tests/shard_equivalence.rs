@@ -17,7 +17,7 @@
 use arcas::cachesim::{classify, Access, ChipletL3, ClassCounts, Outcome, Pattern, LINE};
 use arcas::mem::{MemoryManager, Placement, RegionId};
 use arcas::memsim::{BwTracker, BW_WINDOW_NS};
-use arcas::sim::Machine;
+use arcas::sim::{Machine, ProbeCache};
 use arcas::topology::Topology;
 use arcas::util::proptest::check;
 use arcas::util::Rng;
@@ -365,6 +365,129 @@ fn prop_sharded_accounting_equals_the_monolith() {
                             "chiplet {ch} region {i} residency {} != {}",
                             machine.resident(ch, *id),
                             oracle.l3s[ch].resident(*id)
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Step-batched residency probes are bit-identical to per-access
+/// probes: the same seeded schedules driven through `Machine::access`
+/// (fresh probes every access) and `Machine::access_cached` with a
+/// [`ProbeCache`] that persists across a random number of consecutive
+/// accesses (a simulated coroutine step, 1..=8 accesses long) must
+/// produce exactly equal outcomes, clocks, counter totals, DRAM bytes
+/// and residency. This pins the ROADMAP follow-up from the sharding PR
+/// — snapshot residency once per *step* instead of per access — as a
+/// pure performance change.
+#[test]
+fn prop_step_cached_probes_equal_per_access_probes() {
+    check(
+        "step-cached == uncached",
+        25,
+        |rng| {
+            let s = gen_schedule(rng);
+            // Step lengths: how many consecutive ops share one cache.
+            let lens: Vec<usize> = (0..s.ops.len()).map(|_| 1 + rng.gen_index(8)).collect();
+            (s, lens)
+        },
+        |(schedule, step_lens)| {
+            let topo = topo_for(schedule.topo_idx);
+            let plain = Machine::new(topo.clone());
+            let cached = Machine::new(topo.clone());
+
+            let mut ids = Vec::new();
+            let mut sizes = Vec::new();
+            for (i, &(size, placement)) in schedule.regions.iter().enumerate() {
+                let a = plain.alloc(&format!("r{i}"), size, placement);
+                let b = cached.alloc(&format!("r{i}"), size, placement);
+                if a != b {
+                    return Err("region id streams diverge".into());
+                }
+                ids.push(a);
+                sizes.push(size);
+            }
+
+            let mut cache = ProbeCache::new();
+            let mut left_in_step = 0usize;
+            let mut step_core = usize::MAX;
+            for (i, op) in schedule.ops.iter().enumerate() {
+                match op {
+                    Op::Access { .. } => {
+                        let (core, acc) = build_access(&ids, &sizes, op).unwrap();
+                        // Step boundary: a fresh TaskCtx means a fresh
+                        // cache. A real cache belongs to one TaskCtx and
+                        // so to one core for the whole step — model that
+                        // by also ending the step when the core changes
+                        // (a cross-core cache could legitimately observe
+                        // the other core's fills late).
+                        if left_in_step == 0 || core != step_core {
+                            cache.clear();
+                            left_in_step = step_lens[i];
+                            step_core = core;
+                        }
+                        left_in_step -= 1;
+                        let a = plain.access(core, acc);
+                        let b = cached.access_cached(core, acc, &mut cache);
+                        for (name, x, y) in [
+                            ("local", a.local_hits, b.local_hits),
+                            ("near", a.near_hits, b.near_hits),
+                            ("far", a.far_hits, b.far_hits),
+                            ("dram", a.dram_lines, b.dram_lines),
+                            ("latency", a.latency_ns, b.latency_ns),
+                            ("bytes", a.dram_bytes, b.dram_bytes),
+                        ] {
+                            if x != y {
+                                return Err(format!(
+                                    "op {i}: outcome.{name} {x} != {y} (cached vs uncached)"
+                                ));
+                            }
+                        }
+                    }
+                    Op::Compute { core, ns } => {
+                        plain.compute(*core, *ns);
+                        cached.compute(*core, *ns);
+                    }
+                    Op::Message { from, to, bytes } => {
+                        let a = plain.message(*from, *to, *bytes);
+                        let b = cached.message(*from, *to, *bytes);
+                        if a != b {
+                            return Err(format!("op {i}: message cost {a} != {b}"));
+                        }
+                    }
+                    Op::SyncTo { core, t } => {
+                        plain.advance_to(*core, *t);
+                        cached.advance_to(*core, *t);
+                    }
+                }
+            }
+
+            for core in 0..topo.num_cores() {
+                if plain.now(core) != cached.now(core) {
+                    return Err(format!(
+                        "core {core} clock {} != {}",
+                        plain.now(core),
+                        cached.now(core)
+                    ));
+                }
+            }
+            let (a, b) = (plain.class_totals(), cached.class_totals());
+            if (a.local, a.near, a.far, a.dram) != (b.local, b.near, b.far, b.dram) {
+                return Err(format!("class totals diverge: {a:?} vs {b:?}"));
+            }
+            if plain.dram_total_bytes() != cached.dram_total_bytes() {
+                return Err("dram bytes diverge".into());
+            }
+            for ch in 0..topo.num_chiplets() {
+                for (i, id) in ids.iter().enumerate() {
+                    if plain.resident(ch, *id) != cached.resident(ch, *id) {
+                        return Err(format!(
+                            "chiplet {ch} region {i} residency {} != {}",
+                            plain.resident(ch, *id),
+                            cached.resident(ch, *id)
                         ));
                     }
                 }
