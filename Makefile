@@ -52,11 +52,14 @@ host-scaling:
 	cargo bench --bench micro_runtime -- --scaling-only --assert-scaling --scaling-reps 5 --workers 1,8
 
 # The CI bench-regression gate, locally: run fig_serving + the scaling
-# smoke, then compare both BENCH_*.json against ci/baselines/ (fail on
-# regression, warn on improvement; unpinned baselines only report).
+# smoke, then compare the emitted BENCH_*.json against ci/baselines/
+# (fail on regression, warn on improvement; unpinned baselines only
+# report). fig_serving emits both the latency file and the SLO-section
+# file (per-class p99 + shed rate, gated via the per-entry "metric" key).
 # Cargo runs bench binaries with CWD = the package root, so the emitted
 # BENCH_*.json files land under rust/.
 bench-regression: build host-scaling
 	cargo bench --bench fig_serving -- --quick
 	./target/release/arcas bench-check --kind serving --baseline ci/baselines/BENCH_serving_latency.json --current rust/BENCH_serving_latency.json
+	./target/release/arcas bench-check --kind serving --baseline ci/baselines/BENCH_serving_slo.json --current rust/BENCH_serving_slo.json
 	./target/release/arcas bench-check --kind scaling --baseline ci/baselines/BENCH_host_scaling.json --current rust/BENCH_host_scaling.json

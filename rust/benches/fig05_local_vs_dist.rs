@@ -34,23 +34,27 @@ fn run_one(
     let regions = Arc::new(regions);
     // Executor boilerplate lives in the engine layer now; `--backend
     // host` replays the same sweep on real threads.
-    arcas::engine::execute_on(backend, machine, policy, None, CORES, |rank| {
-        let regions = regions.clone();
-        Box::new(BspTask::new(iters, move |ctx, _| {
-            ctx.seq_write(regions[rank], chunk);
-            // Per-iteration reduction to rank 0 — the coordination step
-            // of the real µbenchmark. Intra-chiplet for LocalCache,
-            // cross-chiplet for DistributedCache: the reason LocalCache
-            // wins while the vector fits one chiplet's L3 (paper: down
-            // to 0.59x).
-            if rank != 0 {
-                let core = ctx.core;
-                ctx.machine.message(core, 0, 64);
-            }
-        }))
-    })
-    .0
-    .makespan_ns
+    arcas::engine::Run::on_machine(machine)
+        .policy(policy)
+        .backend(backend)
+        .tasks(CORES)
+        .run_group(|rank| {
+            let regions = regions.clone();
+            Box::new(BspTask::new(iters, move |ctx, _| {
+                ctx.seq_write(regions[rank], chunk);
+                // Per-iteration reduction to rank 0 — the coordination
+                // step of the real µbenchmark. Intra-chiplet for
+                // LocalCache, cross-chiplet for DistributedCache: the
+                // reason LocalCache wins while the vector fits one
+                // chiplet's L3 (paper: down to 0.59x).
+                if rank != 0 {
+                    let core = ctx.core;
+                    ctx.machine.message(core, 0, 64);
+                }
+            }))
+        })
+        .0
+        .makespan_ns
 }
 
 fn main() {

@@ -6,10 +6,10 @@
 //! at every core count, because OLTP is commit/synchronization-bound.
 //!
 //! The workloads come from the scenario registry and run through
-//! `engine::Driver` — the same code path `arcas run --scenario ycsb`
+//! `engine::Run` — the same code path `arcas run --scenario ycsb`
 //! takes.
 
-use arcas::engine::Driver;
+use arcas::engine::Run;
 use arcas::harness;
 use arcas::util::table::SeriesSet;
 
@@ -41,7 +41,10 @@ fn main() {
             }
             let run_one = |policy: &str| {
                 let mut s = harness::scenario_with(scenario, &params);
-                Driver::new(&topo, harness::baseline(policy, &topo), c).run(s.as_mut())
+                Run::new(&topo)
+                    .policy(harness::baseline(policy, &topo))
+                    .tasks(c)
+                    .run(s.as_mut())
             };
             let local = run_one("local");
             let dist = run_one("distributed");

@@ -9,15 +9,18 @@
 //! and are gated with a loose band.
 //!
 //! Emits `BENCH_serving_latency.json`:
-//! `{"series": [{"policy", "backend", "p50_ns", ..., "cdf": [[ns, frac], ...]}]}`.
+//! `{"series": [{"policy", "backend", "p50_ns", ..., "cdf": [[ns, frac], ...]}]}`
+//! plus `BENCH_serving_slo.json` from the SLO section: a prioritized
+//! trace driven past capacity per policy (sim only), gating per-class
+//! p99s and the Background shed rate via the `"metric"` key.
 //!
 //! Flags beyond the standard set: `--requests N`, `--rate RPS`,
 //! `--arrivals poisson|uniform|diurnal|bursty`, `--workers N`,
-//! `--policies a,b,c`.
+//! `--policies a,b,c`, `--slo-rate RPS`, `--slo-budget US`.
 
 use std::sync::Arc;
 
-use arcas::engine::{Driver, ExecBackend};
+use arcas::engine::{ExecBackend, Run};
 use arcas::harness;
 use arcas::policy::Policy;
 use arcas::topology::Topology;
@@ -26,7 +29,9 @@ use arcas::util::json::escape;
 use arcas::util::stats::LogHistogram;
 use arcas::util::table::Table;
 use arcas::workloads::oltp::OltpWorkload;
-use arcas::workloads::serve::{ArrivalModel, ServeKvScenario, Trace, TraceConfig};
+use arcas::workloads::serve::{
+    ArrivalModel, PriorityMix, ServeKvScenario, ServeOpts, Trace, TraceConfig,
+};
 
 struct Series {
     policy: String,
@@ -50,6 +55,8 @@ fn main() {
         .opt("arrivals", "poisson", "arrival process: poisson|uniform|diurnal|bursty")
         .opt("workers", "16", "server worker count")
         .opt("policies", "local,distributed,arcas", "comma-separated policy list")
+        .opt("slo-rate", "8000000", "offered load of the SLO overload section, requests/second")
+        .opt("slo-budget", "150", "queue-wait SLO budget of the overload section, microseconds")
         .parse();
     let topo = harness::bench_topology(&args);
     harness::print_header("fig_serving: open-loop serve-kv latency", &args, &topo);
@@ -82,6 +89,7 @@ fn main() {
         read_frac,
         arrivals,
         seed: args.u64("seed"),
+        priority_mix: None,
     }));
     let workers = args.usize("workers").clamp(1, topo.num_cores());
     println!(
@@ -100,9 +108,11 @@ fn main() {
     for policy in &policies {
         for backend in ExecBackend::ALL {
             let mut s = ServeKvScenario::new(records, trace.clone());
-            let run = Driver::new(&topo, policy_by_name(policy, &topo, &args), workers)
-                .with_backend(backend)
-                .with_verify(true)
+            let run = Run::new(&topo)
+                .policy(policy_by_name(policy, &topo, &args))
+                .tasks(workers)
+                .backend(backend)
+                .verify(true)
                 .run(&mut s);
             let lat = run
                 .report
@@ -212,5 +222,97 @@ fn main() {
                 .display()
         ),
         Err(e) => println!("=> could not write BENCH_serving_latency.json: {e}"),
+    }
+
+    // ---- SLO section: priority tiers + shedding past capacity (sim) ----
+    // Same workload shape, driven at `--slo-rate` (past capacity) with a
+    // critical/background tenant mix and a queue-wait budget. Sim only:
+    // the series are deterministic, so per-class tails and the shed rate
+    // gate tightly in CI (`BENCH_serving_slo.json`).
+    let slo_rate = args.f64("slo-rate");
+    let slo_budget_ns = (args.f64("slo-budget") * 1_000.0) as u64;
+    let slo_trace = Arc::new(Trace::synth(&TraceConfig {
+        requests,
+        rate_rps: slo_rate,
+        keyspace: records as u64,
+        zipf_theta: 0.99,
+        read_frac,
+        arrivals,
+        seed: args.u64("seed"),
+        priority_mix: Some(PriorityMix {
+            critical: 0.2,
+            background: 0.3,
+        }),
+    }));
+    let mut slo_tab = Table::new(
+        "serve-kv SLO section (sim, past capacity): per-class p99 (ns) + shed rate",
+        &["policy", "critical p99", "normal p99", "background p99", "shed rate"],
+    );
+    let mut slo_entries: Vec<String> = Vec::new();
+    for policy in &policies {
+        let mut s = ServeKvScenario::new(records, slo_trace.clone()).with_opts(ServeOpts {
+            slo_shed_ns: Some(slo_budget_ns),
+            closed_loop_think_ns: None,
+        });
+        let run = Run::new(&topo)
+            .policy(policy_by_name(policy, &topo, &args))
+            .tasks(workers)
+            .verify(true)
+            .run(&mut s);
+        let shed_rate = run.report.request_shed as f64 / requests as f64;
+        let p99_of = |class: &str| {
+            run.report
+                .class_latency
+                .iter()
+                .find(|(n, _)| *n == class)
+                .map(|(_, l)| l.p99_ns)
+        };
+        slo_tab.row(vec![
+            policy.clone(),
+            p99_of("critical").map_or("-".into(), |v| v.to_string()),
+            p99_of("normal").map_or("-".into(), |v| v.to_string()),
+            p99_of("background").map_or("-".into(), |v| v.to_string()),
+            format!("{shed_rate:.4}"),
+        ]);
+        for (class, l) in &run.report.class_latency {
+            slo_entries.push(format!(
+                "    {{\"policy\": \"{}\", \"backend\": \"sim\", \"metric\": \"{class}_p99_ns\", \
+                 \"{class}_p99_ns\": {}, \"count\": {}, \"tol\": 0.05}}",
+                escape(policy),
+                l.p99_ns,
+                l.count,
+            ));
+        }
+        slo_entries.push(format!(
+            "    {{\"policy\": \"{}\", \"backend\": \"sim\", \"metric\": \"shed_rate\", \
+             \"shed_rate\": {shed_rate:.6}, \"tol\": 0.10}}",
+            escape(policy),
+        ));
+    }
+    slo_tab.emit("fig_serving_slo");
+
+    let slo_json = format!(
+        "{{\n  \"bench\": \"serving_slo\",\n  \"scenario\": \"serve-kv\",\n  \
+         \"pinned\": true,\n  \
+         \"config\": {{\"requests\": {requests}, \"rate_rps\": {slo_rate}, \"arrivals\": \"{}\", \
+         \"workers\": {workers}, \"scale\": {}, \"seed\": {}, \"quick\": {}, \
+         \"budget_us\": {}, \"mix\": \"0.2,0.3\"}},\n  \
+         \"series\": [\n{}\n  ]\n}}\n",
+        escape(&args.str("arrivals")),
+        args.f64("scale"),
+        args.u64("seed"),
+        args.flag("quick"),
+        args.f64("slo-budget"),
+        slo_entries.join(",\n")
+    );
+    let slo_path = std::path::Path::new("BENCH_serving_slo.json");
+    match std::fs::write(slo_path, &slo_json) {
+        Ok(()) => println!(
+            "=> wrote {}",
+            std::fs::canonicalize(slo_path)
+                .unwrap_or_else(|_| slo_path.to_path_buf())
+                .display()
+        ),
+        Err(e) => println!("=> could not write BENCH_serving_slo.json: {e}"),
     }
 }

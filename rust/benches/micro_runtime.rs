@@ -18,7 +18,7 @@
 
 use arcas::controller::placement_map;
 use arcas::deque::Deque;
-use arcas::engine::{Driver, ExecBackend};
+use arcas::engine::{ExecBackend, Run};
 use arcas::mem::Placement;
 use arcas::policy::{LocalCachePolicy, ShoalPolicy};
 use arcas::sched::HostExecutor;
@@ -65,8 +65,10 @@ fn scaling_topo() -> Topology {
 fn host_scaling_run(topo: &Topology, workers: usize, total_updates: u64, seed: u64) -> u64 {
     let per_rank = (total_updates / workers as u64).max(1);
     let mut s = GupsScenario::new(1 << 21, per_rank, seed);
-    let run = Driver::new(topo, Box::new(ShoalPolicy::new()), workers)
-        .with_backend(ExecBackend::Host)
+    let run = Run::new(topo)
+        .policy(Box::new(ShoalPolicy::new()))
+        .tasks(workers)
+        .backend(ExecBackend::Host)
         .run(&mut s);
     run.report.wall_ns
 }
@@ -222,15 +224,11 @@ fn micro(args: &Args) {
     // real threads (pool spawn + 100 coroutine steps + teardown), the
     // end-to-end cost `arcas run --backend host` pays per run.
     let res = b.bench("host backend group run (100 steps)", || {
-        let machine = Machine::new(Topology::milan_1s());
-        let (r, _) = arcas::engine::execute_on(
-            arcas::engine::ExecBackend::Host,
-            machine,
-            Box::new(LocalCachePolicy),
-            None,
-            4,
-            |_| Box::new(IterTask::new(25, |ctx, _| ctx.compute_ns(100))),
-        );
+        let (r, _) = Run::new(&Topology::milan_1s())
+            .policy(Box::new(LocalCachePolicy))
+            .backend(ExecBackend::Host)
+            .tasks(4)
+            .run_group(|_| Box::new(IterTask::new(25, |ctx, _| ctx.compute_ns(100))));
         r.dispatches
     });
     println!(

@@ -151,8 +151,8 @@ impl Arcas {
     /// Run a group of `n` coroutines (full control over yield points).
     /// Consumes the machine state for the run and restores it after,
     /// carrying cache residency forward. Execution goes through the
-    /// engine's single executor seam ([`crate::engine::execute_on`]) on
-    /// the configured backend.
+    /// engine's [`crate::engine::Run`] builder on the configured
+    /// backend.
     pub fn run(
         &mut self,
         n: usize,
@@ -160,14 +160,12 @@ impl Arcas {
     ) -> RunReport {
         assert!(!self.finalized, "runtime already finalized");
         let machine = std::mem::replace(&mut self.machine, Machine::new(self.cfg.topology.clone()));
-        let (report, machine) = crate::engine::execute_on(
-            self.cfg.backend,
-            machine,
-            self.build_policy(),
-            Some(self.cfg.timer_ns),
-            n,
-            make,
-        );
+        let (report, machine) = crate::engine::Run::on_machine(machine)
+            .policy(self.build_policy())
+            .backend(self.cfg.backend)
+            .timer_ns(self.cfg.timer_ns)
+            .tasks(n)
+            .run_group(make);
         self.machine = machine;
         report
     }

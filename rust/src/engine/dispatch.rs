@@ -17,17 +17,92 @@
 //!   deterministically (an M/G/k-style multi-server queue); on the Host
 //!   backend workers race on the same atomic cursor and every request is
 //!   still dispatched exactly once.
+//! - [`TieredQueue`] — the SLO-aware admission front: three per-class
+//!   FCFS queues ([`Priority::Critical`] / `Normal` / `Background`).
+//!   `pop(now)` serves the highest-priority class *among requests that
+//!   have already arrived* (never idling a server on a future Critical
+//!   arrival while queued lower-class work waits), with a
+//!   promoted-after-N-streak anti-starvation rule and optional
+//!   Background load shedding once queue wait exceeds an SLO target.
+//!   With a single class it degenerates to [`OpenLoopQueue`] exactly.
 //! - [`LatencyRecorder`] — folds each request's sojourn
 //!   (queue wait + service) into a [`LogHistogram`], with queue/service
 //!   mean breakdowns; mergeable so each worker records locally and
 //!   merges once at the end. [`LatencyRecorder::report`] produces the
 //!   [`LatencyReport`] carried in [`RunReport::request_latency`].
+//!   [`ClassLatencyRecorder`] keeps the same aggregate plus one recorder
+//!   per priority class for per-class quantiles.
+//! - [`SloSignal`] — the monitoring→placement feedback channel:
+//!   serve workers publish per-chiplet queue-wait/service windows here,
+//!   and a policy connected via `Policy::connect_slo` drains them on its
+//!   timer to decide spreading vs compaction (`policy::SloPolicy`).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use crate::sched::LatencyReport;
 use crate::util::stats::{LogHistogram, Summary};
+
+/// Request priority class, Critical first. Dispatch order under the
+/// [`TieredQueue`]: among *arrived* requests, lower value wins.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priority {
+    /// Latency-sensitive foreground traffic (served first).
+    Critical = 0,
+    /// Ordinary traffic.
+    #[default]
+    Normal = 1,
+    /// Best-effort traffic: served last, shed first under overload.
+    Background = 2,
+}
+
+impl Priority {
+    /// Every class, dispatch order (Critical first).
+    pub const ALL: [Priority; 3] = [Priority::Critical, Priority::Normal, Priority::Background];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Priority::Critical => "critical",
+            Priority::Normal => "normal",
+            Priority::Background => "background",
+        }
+    }
+
+    /// Index into per-class arrays.
+    #[inline]
+    pub fn idx(self) -> usize {
+        self as usize
+    }
+}
+
+impl std::fmt::Display for Priority {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for Priority {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "c" | "crit" | "critical" => Ok(Priority::Critical),
+            "n" | "normal" => Ok(Priority::Normal),
+            "b" | "bg" | "background" => Ok(Priority::Background),
+            other => Err(format!(
+                "unknown priority {other:?} (c|crit|critical, n|normal, b|bg|background)"
+            )),
+        }
+    }
+}
+
+/// What the [`TieredQueue`] needs to know about an item: when it arrives
+/// and which class it belongs to. `workloads::serve::Request` implements
+/// this; the queue itself stays workload-agnostic.
+pub trait Prioritized: Copy {
+    fn arrival_ns(&self) -> u64;
+    fn priority(&self) -> Priority;
+}
 
 /// Lock-free FCFS admission over a fixed, time-ordered item list.
 ///
@@ -140,6 +215,276 @@ impl LatencyRecorder {
     }
 }
 
+/// Consecutive higher-class dispatches after which an *arrived*
+/// Background request is force-promoted to the front — the streak-based
+/// anti-starvation rule: under sustained Critical/Normal load, at least
+/// one in every `BACKGROUND_STARVATION_LIMIT + 1` dispatches is
+/// Background (when one is waiting).
+pub const BACKGROUND_STARVATION_LIMIT: u32 = 100;
+
+/// SLO-aware admission front: one FCFS queue per [`Priority`] class over
+/// a fixed, time-ordered trace.
+///
+/// `pop(now_ns)` claims exactly-once across workers (per-class CAS
+/// cursors), choosing:
+/// 1. among classes whose head has **arrived** (`arrival_ns <= now`),
+///    the highest-priority one — except when the anti-starvation streak
+///    has hit [`BACKGROUND_STARVATION_LIMIT`], in which case an arrived
+///    Background head is served first;
+/// 2. when nothing has arrived yet, the earliest-arriving head across
+///    classes (plain FCFS — a server never idles on a future
+///    high-priority arrival while another class's request is due
+///    sooner).
+///
+/// With `shed_after_ns` set, Background requests whose queue wait
+/// already exceeds the target at claim time are dropped instead of
+/// served (load shedding; counted per class in [`TieredQueue::shed`]).
+/// Critical and Normal requests are never shed.
+#[derive(Debug)]
+pub struct TieredQueue<T> {
+    classes: [Vec<T>; 3],
+    next: [AtomicUsize; 3],
+    streak: AtomicU32,
+    shed: [AtomicU64; 3],
+    shed_after_ns: Option<u64>,
+    total: usize,
+}
+
+impl<T: Prioritized> TieredQueue<T> {
+    /// Partition `items` (time-ordered) into per-class FCFS queues.
+    /// `shed_after_ns`: queue-wait budget after which Background
+    /// requests are shed (`None` = never shed; the default path).
+    pub fn new(items: Vec<T>, shed_after_ns: Option<u64>) -> Arc<Self> {
+        let total = items.len();
+        let mut classes: [Vec<T>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+        for item in items {
+            classes[item.priority().idx()].push(item);
+        }
+        Arc::new(Self {
+            classes,
+            next: [AtomicUsize::new(0), AtomicUsize::new(0), AtomicUsize::new(0)],
+            streak: AtomicU32::new(0),
+            shed: [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)],
+            shed_after_ns,
+            total,
+        })
+    }
+
+    /// Claim the next request to serve as of virtual time `now_ns`
+    /// (exactly-once across workers); `None` once every class is
+    /// drained. Shed Background requests are consumed internally (the
+    /// caller never sees them) and counted.
+    pub fn pop(&self, now_ns: u64) -> Option<T> {
+        loop {
+            // Snapshot the per-class heads (racy; claims re-validate via
+            // CAS below).
+            let mut heads: [Option<(usize, T)>; 3] = [None, None, None];
+            for (c, class) in self.classes.iter().enumerate() {
+                let i = self.next[c].load(Ordering::Acquire);
+                heads[c] = class.get(i).map(|&item| (i, item));
+            }
+            // Pick a class: highest priority among arrived heads, with
+            // the starvation override; else the earliest future arrival.
+            let arrived = |h: Option<(usize, T)>| {
+                h.is_some_and(|(_, item)| item.arrival_ns() <= now_ns)
+            };
+            let pick = if self.streak.load(Ordering::Relaxed) >= BACKGROUND_STARVATION_LIMIT
+                && arrived(heads[Priority::Background.idx()])
+            {
+                Priority::Background.idx()
+            } else if let Some(c) = (0..3).find(|&c| arrived(heads[c])) {
+                c
+            } else {
+                // Nothing due yet: plain FCFS on the earliest arrival.
+                (0..3)
+                    .filter(|&c| heads[c].is_some())
+                    .min_by_key(|&c| heads[c].map(|(_, item)| item.arrival_ns()))?
+            };
+            let (i, item) = heads[pick].expect("picked class has a head");
+            if self.next[pick]
+                .compare_exchange(i, i + 1, Ordering::AcqRel, Ordering::Acquire)
+                .is_err()
+            {
+                continue; // lost the claim race; re-snapshot
+            }
+            if pick == Priority::Background.idx() {
+                self.streak.store(0, Ordering::Relaxed);
+            } else {
+                // Saturating streak: plain add could wrap u32 on
+                // pathological all-Critical traces.
+                let s = self.streak.load(Ordering::Relaxed);
+                self.streak
+                    .store(s.saturating_add(1), Ordering::Relaxed);
+            }
+            // Load shedding: a Background request whose wait already
+            // blew the budget is dropped, not served.
+            if let Some(budget) = self.shed_after_ns {
+                if item.priority() == Priority::Background
+                    && now_ns.saturating_sub(item.arrival_ns()) > budget
+                {
+                    self.shed[pick].fetch_add(1, Ordering::Relaxed);
+                    continue;
+                }
+            }
+            return Some(item);
+        }
+    }
+
+    /// Total items in the trace (served + shed + unclaimed).
+    pub fn len(&self) -> usize {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Items of `class` in the trace.
+    pub fn class_len(&self, class: Priority) -> usize {
+        self.classes[class.idx()].len()
+    }
+
+    /// Requests shed per class (only Background can be non-zero).
+    pub fn shed_counts(&self) -> [u64; 3] {
+        [
+            self.shed[0].load(Ordering::Relaxed),
+            self.shed[1].load(Ordering::Relaxed),
+            self.shed[2].load(Ordering::Relaxed),
+        ]
+    }
+
+    /// Total requests shed.
+    pub fn shed_total(&self) -> u64 {
+        self.shed_counts().iter().sum()
+    }
+
+    /// Items not yet claimed (racy snapshot under concurrency).
+    pub fn remaining(&self) -> usize {
+        (0..3)
+            .map(|c| {
+                self.classes[c]
+                    .len()
+                    .saturating_sub(self.next[c].load(Ordering::Relaxed))
+            })
+            .sum()
+    }
+}
+
+/// [`LatencyRecorder`] per priority class plus the all-classes
+/// aggregate. Workers record locally and merge once at drain, exactly
+/// like the single-class recorder.
+#[derive(Clone, Debug, Default)]
+pub struct ClassLatencyRecorder {
+    total: LatencyRecorder,
+    classes: [LatencyRecorder; 3],
+}
+
+impl ClassLatencyRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one served request of `class`.
+    #[inline]
+    pub fn record(&mut self, class: Priority, queue_ns: u64, service_ns: u64) {
+        self.total.record(queue_ns, service_ns);
+        self.classes[class.idx()].record(queue_ns, service_ns);
+    }
+
+    pub fn merge(&mut self, other: &ClassLatencyRecorder) {
+        self.total.merge(&other.total);
+        for (mine, theirs) in self.classes.iter_mut().zip(&other.classes) {
+            mine.merge(theirs);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total.count()
+    }
+
+    /// The all-classes sojourn histogram (CDF source for benches).
+    pub fn histogram(&self) -> &LogHistogram {
+        self.total.histogram()
+    }
+
+    /// The all-classes aggregate (what `RunReport::request_latency`
+    /// carries).
+    pub fn report(&self) -> Option<LatencyReport> {
+        self.total.report()
+    }
+
+    /// One class's aggregate (`None` when that class saw no traffic).
+    pub fn class_report(&self, class: Priority) -> Option<LatencyReport> {
+        self.classes[class.idx()].report()
+    }
+
+    /// `(class name, aggregate)` for every class that saw traffic —
+    /// the `RunReport::class_latency` payload.
+    pub fn class_reports(&self) -> Vec<(&'static str, LatencyReport)> {
+        Priority::ALL
+            .iter()
+            .filter_map(|&p| self.class_report(p).map(|r| (p.as_str(), r)))
+            .collect()
+    }
+}
+
+/// Feedback channel from serve workers to an SLO-aware placement policy:
+/// per-chiplet queue-wait and service-time accumulators for the current
+/// profiling window. Workers [`SloSignal::record`] after each request;
+/// the policy [`SloSignal::drain`]s on its timer (sums + resets), so each
+/// window is independent. Plain atomics: recording on the hot path is a
+/// few relaxed adds, and the sim backend's deterministic stepping makes
+/// window contents reproducible.
+#[derive(Debug)]
+pub struct SloSignal {
+    queue_ns: Vec<AtomicU64>,
+    service_ns: Vec<AtomicU64>,
+    count: Vec<AtomicU64>,
+}
+
+/// One drained per-chiplet window.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SloWindow {
+    pub queue_ns: u64,
+    pub service_ns: u64,
+    pub count: u64,
+}
+
+impl SloSignal {
+    pub fn new(num_chiplets: usize) -> Arc<Self> {
+        let mk = || (0..num_chiplets.max(1)).map(|_| AtomicU64::new(0)).collect();
+        Arc::new(Self {
+            queue_ns: mk(),
+            service_ns: mk(),
+            count: mk(),
+        })
+    }
+
+    pub fn num_chiplets(&self) -> usize {
+        self.count.len()
+    }
+
+    /// Publish one served request from `chiplet`.
+    #[inline]
+    pub fn record(&self, chiplet: usize, queue_ns: u64, service_ns: u64) {
+        let c = chiplet.min(self.count.len() - 1);
+        self.queue_ns[c].fetch_add(queue_ns, Ordering::Relaxed);
+        self.service_ns[c].fetch_add(service_ns, Ordering::Relaxed);
+        self.count[c].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Take and reset the current window, one entry per chiplet.
+    pub fn drain(&self) -> Vec<SloWindow> {
+        (0..self.count.len())
+            .map(|c| SloWindow {
+                queue_ns: self.queue_ns[c].swap(0, Ordering::Relaxed),
+                service_ns: self.service_ns[c].swap(0, Ordering::Relaxed),
+                count: self.count[c].swap(0, Ordering::Relaxed),
+            })
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -223,5 +568,215 @@ mod tests {
         }
         a.merge(&b);
         assert_eq!(a.report(), all.report());
+    }
+
+    #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+    struct Item {
+        at: u64,
+        pri: Priority,
+        id: u64,
+    }
+
+    impl Prioritized for Item {
+        fn arrival_ns(&self) -> u64 {
+            self.at
+        }
+
+        fn priority(&self) -> Priority {
+            self.pri
+        }
+    }
+
+    fn item(at: u64, pri: Priority, id: u64) -> Item {
+        Item { at, pri, id }
+    }
+
+    #[test]
+    fn priority_parses_and_orders() {
+        assert_eq!("c".parse::<Priority>().unwrap(), Priority::Critical);
+        assert_eq!("BG".parse::<Priority>().unwrap(), Priority::Background);
+        assert_eq!("normal".parse::<Priority>().unwrap(), Priority::Normal);
+        assert!("urgent".parse::<Priority>().is_err());
+        assert!(Priority::Critical < Priority::Normal);
+        assert!(Priority::Normal < Priority::Background);
+        for p in Priority::ALL {
+            assert_eq!(p.as_str().parse::<Priority>().unwrap(), p);
+        }
+    }
+
+    /// A single-class trace through the tiered queue is byte-for-byte
+    /// the FCFS OpenLoopQueue — the compatibility contract that keeps
+    /// default serve runs golden.
+    #[test]
+    fn tiered_all_normal_degenerates_to_fcfs() {
+        let items: Vec<Item> = (0..200).map(|i| item(i * 10, Priority::Normal, i)).collect();
+        let fcfs = OpenLoopQueue::new(items.clone());
+        let tiered = TieredQueue::new(items, None);
+        // Pop with a clock far behind the arrivals: the not-yet-arrived
+        // fallback must still hand out the FCFS head.
+        let mut now = 0;
+        while let Some(expect) = fcfs.pop() {
+            let got = tiered.pop(now).unwrap();
+            assert_eq!(got, expect);
+            now = got.at; // clock follows arrivals, like a sim worker
+        }
+        assert_eq!(tiered.pop(u64::MAX), None);
+        assert_eq!(tiered.shed_total(), 0);
+    }
+
+    #[test]
+    fn tiered_serves_arrived_critical_before_queued_normal() {
+        let q = TieredQueue::new(
+            vec![
+                item(0, Priority::Normal, 0),
+                item(50, Priority::Critical, 1),
+                item(60, Priority::Normal, 2),
+            ],
+            None,
+        );
+        // At t=10 only the normal head has arrived: a server must not
+        // idle-wait for the future critical arrival.
+        assert_eq!(q.pop(10).unwrap().id, 0);
+        // At t=100 both remaining heads have arrived: critical wins.
+        assert_eq!(q.pop(100).unwrap().id, 1);
+        assert_eq!(q.pop(100).unwrap().id, 2);
+        assert_eq!(q.pop(u64::MAX), None);
+    }
+
+    #[test]
+    fn tiered_falls_back_to_earliest_future_arrival() {
+        let q = TieredQueue::new(
+            vec![
+                item(50, Priority::Background, 0),
+                item(100, Priority::Critical, 1),
+            ],
+            None,
+        );
+        // Nothing arrived at t=0: FCFS on arrival time, not priority.
+        assert_eq!(q.pop(0).unwrap().id, 0);
+        assert_eq!(q.pop(0).unwrap().id, 1);
+    }
+
+    #[test]
+    fn tiered_promotes_background_after_the_starvation_streak() {
+        let n_crit = 400u64;
+        let mut items: Vec<Item> =
+            (0..n_crit).map(|i| item(0, Priority::Critical, i)).collect();
+        items.push(item(0, Priority::Background, 1000));
+        items.push(item(0, Priority::Background, 1001));
+        let q = TieredQueue::new(items, None);
+        let mut bg_positions = Vec::new();
+        let mut pos = 0u64;
+        while let Some(it) = q.pop(u64::MAX) {
+            if it.pri == Priority::Background {
+                bg_positions.push(pos);
+            }
+            pos += 1;
+        }
+        // The streak hits the limit after LIMIT critical pops, so the
+        // first background request is dispatch #LIMIT (0-based), the
+        // second one a full streak later — progress under sustained
+        // critical load instead of waiting for the trace to drain.
+        let limit = BACKGROUND_STARVATION_LIMIT as u64;
+        assert_eq!(bg_positions, vec![limit, 2 * limit + 1]);
+        assert_eq!(pos, n_crit + 2);
+    }
+
+    #[test]
+    fn tiered_sheds_only_background_past_the_budget() {
+        let q = TieredQueue::new(
+            vec![
+                item(0, Priority::Background, 0),
+                item(0, Priority::Normal, 1),
+                item(0, Priority::Critical, 2),
+                item(490, Priority::Background, 3),
+            ],
+            Some(100),
+        );
+        // t=500: critical and normal are long past the budget but are
+        // never shed; background 0 (wait 500) is shed, background 3
+        // (wait 10) is within budget and served.
+        assert_eq!(q.pop(500).unwrap().id, 2);
+        assert_eq!(q.pop(500).unwrap().id, 1);
+        assert_eq!(q.pop(500).unwrap().id, 3);
+        assert_eq!(q.pop(500), None);
+        assert_eq!(q.shed_counts(), [0, 0, 1]);
+        assert_eq!(q.shed_total(), 1);
+        // Conservation: served + shed == trace length.
+        assert_eq!(3 + q.shed_total() as usize, q.len());
+    }
+
+    #[test]
+    fn tiered_is_exactly_once_under_concurrency() {
+        use std::sync::Mutex;
+        let items: Vec<Item> = (0..9_000)
+            .map(|i| item(0, Priority::ALL[(i % 3) as usize], i))
+            .collect();
+        let q = TieredQueue::new(items, None);
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let q = q.clone();
+            let seen = seen.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut local = Vec::new();
+                while let Some(it) = q.pop(u64::MAX) {
+                    local.push(it.id);
+                }
+                seen.lock().unwrap().extend(local);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut all = Arc::try_unwrap(seen).unwrap().into_inner().unwrap();
+        all.sort_unstable();
+        assert_eq!(all, (0..9_000).collect::<Vec<_>>());
+        assert_eq!(q.shed_total(), 0);
+        assert_eq!(q.remaining(), 0);
+    }
+
+    #[test]
+    fn class_recorder_reports_per_class_and_total() {
+        let mut r = ClassLatencyRecorder::new();
+        r.record(Priority::Critical, 10, 100);
+        r.record(Priority::Critical, 20, 100);
+        r.record(Priority::Background, 5_000, 100);
+        let total = r.report().unwrap();
+        assert_eq!(total.count, 3);
+        let crit = r.class_report(Priority::Critical).unwrap();
+        assert_eq!(crit.count, 2);
+        assert!((crit.mean_queue_ns - 15.0).abs() < 1e-9);
+        assert!(r.class_report(Priority::Normal).is_none());
+        let names: Vec<&str> = r.class_reports().iter().map(|(n, _)| *n).collect();
+        assert_eq!(names, vec!["critical", "background"]);
+        // Merge matches combined recording.
+        let mut a = ClassLatencyRecorder::new();
+        a.record(Priority::Critical, 10, 100);
+        let mut b = ClassLatencyRecorder::new();
+        b.record(Priority::Critical, 20, 100);
+        b.record(Priority::Background, 5_000, 100);
+        a.merge(&b);
+        assert_eq!(a.report(), r.report());
+        assert_eq!(
+            a.class_report(Priority::Background),
+            r.class_report(Priority::Background)
+        );
+    }
+
+    #[test]
+    fn slo_signal_windows_drain_and_reset() {
+        let s = SloSignal::new(4);
+        s.record(0, 100, 50);
+        s.record(0, 300, 50);
+        s.record(3, 10, 20);
+        s.record(99, 1, 2); // out-of-range chiplets clamp to the last
+        let w = s.drain();
+        assert_eq!(w.len(), 4);
+        assert_eq!(w[0], SloWindow { queue_ns: 400, service_ns: 100, count: 2 });
+        assert_eq!(w[3], SloWindow { queue_ns: 11, service_ns: 22, count: 2 });
+        assert_eq!(w[1].count, 0);
+        // Drained: the next window starts empty.
+        assert!(s.drain().iter().all(|w| w.count == 0));
     }
 }

@@ -148,6 +148,8 @@ pub(crate) fn execute_host(
         wall_ns: wall_start.elapsed().as_nanos() as u64,
         host_steals,
         request_latency: None,
+        request_shed: 0,
+        class_latency: Vec::new(),
     };
     (report, machine)
 }

@@ -8,13 +8,25 @@
 //! - [`Scenario`] — what a workload *is*: region setup on a machine,
 //!   a coroutine per rank, optional result verification, and
 //!   workload-level metrics derived from the run report.
-//! - [`Driver`] — what the runtime *does* with one: owns topology →
-//!   machine construction, policy wiring, `spawn_group`, the run loop,
-//!   and report collection. It is the single seam where an executor
-//!   backend is chosen: [`ExecBackend::Sim`] (the deterministic
-//!   [`SimExecutor`]) or [`ExecBackend::Host`] (real threads on the
-//!   `HostExecutor` work-stealing pool), both behind [`execute_on`]
-//!   without touching workloads.
+//! - [`Run`] — what the runtime *does* with one: a builder that owns
+//!   topology → machine construction, policy wiring, backend selection,
+//!   repetition, verification, and report collection in one place:
+//!
+//!   ```ignore
+//!   let run = engine::Run::new(&topo)
+//!       .policy(by_name("arcas", &topo).unwrap())
+//!       .tasks(16)
+//!       .backend(ExecBackend::Host)
+//!       .verify(true)
+//!       .run(scenario.as_mut());
+//!   ```
+//!
+//!   The executor backend is chosen at the [`execute_on`] seam:
+//!   [`ExecBackend::Sim`] (the deterministic [`SimExecutor`]) or
+//!   [`ExecBackend::Host`] (real threads on the `HostExecutor`
+//!   work-stealing pool), without touching workloads. [`Driver`],
+//!   [`execute`] and the free [`run_repeated`] survive as thin wrappers
+//!   over `Run` for older call sites.
 //! - [`registry`] — a name-keyed catalogue of every scenario
 //!   (`bfs`, `pagerank`, …, `tpch`, `ycsb`) so the CLI, harness and
 //!   benches enumerate workload×policy combinations through one code
@@ -30,11 +42,16 @@ mod host_backend;
 pub mod registry;
 pub mod runcfg;
 
-pub use dispatch::{LatencyRecorder, OpenLoopQueue};
+pub use dispatch::{
+    ClassLatencyRecorder, LatencyRecorder, OpenLoopQueue, Prioritized, Priority, SloSignal,
+    TieredQueue,
+};
 pub use registry::{by_name, registry, scenarios_table, ScenarioParams, ScenarioSpec};
 pub use runcfg::RunConfig;
 
-use crate::policy::Policy;
+use std::sync::Arc;
+
+use crate::policy::{LocalCachePolicy, Policy};
 use crate::sched::{LatencyReport, RunReport, SimExecutor};
 use crate::sim::Machine;
 use crate::task::Coroutine;
@@ -154,6 +171,29 @@ pub trait Scenario {
         None
     }
 
+    /// Requests dropped by load shedding (serving scenarios under
+    /// overload); attached to [`RunReport::request_shed`]. Batch
+    /// workloads keep the default 0.
+    fn shed(&self) -> u64 {
+        0
+    }
+
+    /// Per-priority-class latency aggregates (critical first); attached
+    /// to [`RunReport::class_latency`]. Empty unless the scenario serves
+    /// a priority-tiered trace.
+    fn class_latency(&self) -> Vec<(&'static str, LatencyReport)> {
+        Vec::new()
+    }
+
+    /// The per-chiplet queue-wait/service feedback channel a serving
+    /// scenario publishes for SLO-aware policies. Called after `setup`;
+    /// when `Some`, the driver hands it to `Policy::connect_slo` before
+    /// the run so a feedback policy (e.g. `policy::SloPolicy`) can drain
+    /// it on its timer.
+    fn slo_signal(&self) -> Option<Arc<SloSignal>> {
+        None
+    }
+
     /// Workload-level metrics for the finished run.
     fn metrics(&self, report: &RunReport) -> ScenarioMetrics;
 }
@@ -175,8 +215,226 @@ impl ScenarioRun {
     }
 }
 
-/// Owns machine construction, policy wiring and the run loop for one
-/// scenario execution — the one place executor boilerplate lives.
+/// The consolidated run builder: machine construction, policy wiring,
+/// backend selection, repetition and verification for scenario
+/// executions — the one place executor boilerplate lives.
+///
+/// Defaults: fresh machine from the topology, [`LocalCachePolicy`],
+/// 1 task, [`ExecBackend::Sim`], no verification, 1 repetition.
+///
+/// Three terminal methods:
+/// - [`Run::run`] — one scenario execution → [`ScenarioRun`];
+/// - [`Run::run_repeated`] — `repeat` back-to-back executions over one
+///   warm machine (fresh policy + scenario per repetition);
+/// - [`Run::run_group`] — a bare coroutine group without a [`Scenario`]
+///   (the `api::Arcas` / bench-closure path) → `(RunReport, Machine)`.
+pub struct Run {
+    machine: Machine,
+    policy: Option<Box<dyn Policy>>,
+    tasks: usize,
+    backend: ExecBackend,
+    timer_ns: Option<u64>,
+    verify: bool,
+    repeat: usize,
+}
+
+impl Run {
+    /// Start a run on a fresh machine built from `topo`.
+    pub fn new(topo: &Topology) -> Self {
+        Self::on_machine(Machine::new(topo.clone()))
+    }
+
+    /// Start a run on an existing machine (warm caches / pre-allocated
+    /// regions). Reports from warm machines are per-run: the engine
+    /// subtracts the machine's pre-run clock, access counters and DRAM
+    /// totals.
+    pub fn on_machine(machine: Machine) -> Self {
+        Self {
+            machine,
+            policy: None,
+            tasks: 1,
+            backend: ExecBackend::Sim,
+            timer_ns: None,
+            verify: false,
+            repeat: 1,
+        }
+    }
+
+    /// Scheduling policy (default [`LocalCachePolicy`]). Ignored by
+    /// [`Run::run_repeated`], which takes a per-repetition factory.
+    pub fn policy(mut self, policy: Box<dyn Policy>) -> Self {
+        self.policy = Some(policy);
+        self
+    }
+
+    /// Size of the coroutine task group (default 1).
+    pub fn tasks(mut self, tasks: usize) -> Self {
+        self.tasks = tasks;
+        self
+    }
+
+    /// Executor backend (default [`ExecBackend::Sim`]).
+    pub fn backend(mut self, backend: ExecBackend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Override the scheduler timer (policies with their own preferred
+    /// cadence still win, as in the executor).
+    pub fn timer_ns(mut self, timer_ns: u64) -> Self {
+        self.timer_ns = Some(timer_ns);
+        self
+    }
+
+    /// Run the scenario's `verify` hook after the run (default off).
+    pub fn verify(mut self, on: bool) -> Self {
+        self.verify = on;
+        self
+    }
+
+    /// Number of back-to-back repetitions for [`Run::run_repeated`]
+    /// (default 1); later repetitions see the warm machine.
+    pub fn repeat(mut self, repeat: usize) -> Self {
+        assert!(repeat >= 1, "repeat must be >= 1");
+        self.repeat = repeat;
+        self
+    }
+
+    fn take_policy(&mut self) -> Box<dyn Policy> {
+        self.policy.take().unwrap_or_else(|| Box::new(LocalCachePolicy))
+    }
+
+    /// Set up, spawn and run `scenario` to completion.
+    pub fn run(mut self, scenario: &mut dyn Scenario) -> ScenarioRun {
+        let policy = self.take_policy();
+        run_once(
+            self.machine,
+            policy,
+            self.tasks,
+            self.timer_ns,
+            self.verify,
+            self.backend,
+            scenario,
+        )
+    }
+
+    /// Drive `repeat` back-to-back runs of a (freshly built each time)
+    /// scenario over **one** machine, so later repetitions see warm
+    /// caches — the story behind `arcas run --repeat`.
+    ///
+    /// `policy` and `scenario` are factories because both are consumed
+    /// per run. Returns one [`ScenarioRun`] per repetition, each with
+    /// its own per-run makespan. Each run retains its machine (callers
+    /// inspect residency), so repetitions clone it forward — between
+    /// runs, outside both the virtual and wall-clock timed windows.
+    pub fn run_repeated(
+        self,
+        mut policy: impl FnMut() -> Box<dyn Policy>,
+        mut scenario: impl FnMut() -> Box<dyn Scenario>,
+    ) -> Vec<ScenarioRun> {
+        let Run {
+            machine,
+            policy: _,
+            tasks,
+            backend,
+            timer_ns,
+            verify,
+            repeat,
+        } = self;
+        let mut machine = Some(machine);
+        let mut runs = Vec::with_capacity(repeat);
+        for i in 0..repeat {
+            let mut s = scenario();
+            let run = run_once(
+                machine.take().unwrap(),
+                policy(),
+                tasks,
+                timer_ns,
+                verify,
+                backend,
+                s.as_mut(),
+            );
+            // The run keeps its machine (callers inspect residency);
+            // clone it forward only while more repetitions need it.
+            if i + 1 < repeat {
+                machine = Some(run.machine.clone());
+            }
+            runs.push(run);
+        }
+        runs
+    }
+
+    /// Run a bare coroutine group (no [`Scenario`] hooks) and hand the
+    /// machine back — the closure path used by `api::Arcas` and the
+    /// bench harness.
+    pub fn run_group(
+        mut self,
+        make: impl FnMut(usize) -> Box<dyn Coroutine>,
+    ) -> (RunReport, Machine) {
+        let policy = self.take_policy();
+        execute_on(
+            self.backend,
+            self.machine,
+            policy,
+            self.timer_ns,
+            self.tasks,
+            make,
+        )
+    }
+}
+
+/// One scenario execution: setup → SLO wiring → execute → verify →
+/// report decoration. Shared by [`Run`] and the legacy [`Driver`].
+fn run_once(
+    mut machine: Machine,
+    mut policy: Box<dyn Policy>,
+    tasks: usize,
+    timer_ns: Option<u64>,
+    verify: bool,
+    backend: ExecBackend,
+    scenario: &mut dyn Scenario,
+) -> ScenarioRun {
+    // Warm machines carry virtual time and counters from earlier
+    // runs; report this run's makespan / accesses / DRAM traffic,
+    // not the cumulative totals (all-zero baselines on fresh
+    // machines, so cold reports are unchanged).
+    let t0 = machine.max_time();
+    let counts0 = machine.class_totals();
+    let dram0 = machine.dram_total_bytes();
+    scenario.setup(&mut machine, tasks);
+    // Serving scenarios publish a queue-wait/service feedback channel;
+    // SLO-aware policies subscribe to it (no-op for every other pair).
+    if let Some(signal) = scenario.slo_signal() {
+        policy.connect_slo(signal);
+    }
+    let (mut report, machine) = execute_on(backend, machine, policy, timer_ns, tasks, |rank| {
+        scenario.spawn(rank)
+    });
+    report.makespan_ns = report.makespan_ns.saturating_sub(t0);
+    report.counts.local -= counts0.local;
+    report.counts.near -= counts0.near;
+    report.counts.far -= counts0.far;
+    report.counts.dram -= counts0.dram;
+    report.dram_bytes -= dram0;
+    if verify {
+        scenario.verify();
+    }
+    // Serving scenarios carry their per-request aggregate on the
+    // report (attached before `metrics`, which may read it).
+    report.request_latency = scenario.latency();
+    report.request_shed = scenario.shed();
+    report.class_latency = scenario.class_latency();
+    let metrics = scenario.metrics(&report);
+    ScenarioRun {
+        report,
+        metrics,
+        machine,
+    }
+}
+
+/// Legacy builder over one scenario execution. Prefer [`Run`]: this
+/// type survives as a thin wrapper so older call sites keep compiling
+/// (same defaults, same report bytes).
 pub struct Driver {
     machine: Machine,
     policy: Box<dyn Policy>,
@@ -231,42 +489,14 @@ impl Driver {
     /// Set up, spawn and run `scenario` to completion.
     pub fn run(self, scenario: &mut dyn Scenario) -> ScenarioRun {
         let Driver {
-            mut machine,
+            machine,
             policy,
             tasks,
             timer_ns,
             verify,
             backend,
         } = self;
-        // Warm machines carry virtual time and counters from earlier
-        // runs; report this run's makespan / accesses / DRAM traffic,
-        // not the cumulative totals (all-zero baselines on fresh
-        // machines, so cold reports are unchanged).
-        let t0 = machine.max_time();
-        let counts0 = machine.class_totals();
-        let dram0 = machine.dram_total_bytes();
-        scenario.setup(&mut machine, tasks);
-        let (mut report, machine) = execute_on(backend, machine, policy, timer_ns, tasks, |rank| {
-            scenario.spawn(rank)
-        });
-        report.makespan_ns = report.makespan_ns.saturating_sub(t0);
-        report.counts.local -= counts0.local;
-        report.counts.near -= counts0.near;
-        report.counts.far -= counts0.far;
-        report.counts.dram -= counts0.dram;
-        report.dram_bytes -= dram0;
-        if verify {
-            scenario.verify();
-        }
-        // Serving scenarios carry their per-request aggregate on the
-        // report (attached before `metrics`, which may read it).
-        report.request_latency = scenario.latency();
-        let metrics = scenario.metrics(&report);
-        ScenarioRun {
-            report,
-            metrics,
-            machine,
-        }
+        run_once(machine, policy, tasks, timer_ns, verify, backend, scenario)
     }
 }
 
@@ -314,16 +544,8 @@ pub fn execute(
     execute_on(ExecBackend::Sim, machine, policy, timer_ns, n, make)
 }
 
-/// Drive `repeat` back-to-back runs of a (freshly built each time)
-/// scenario over **one** machine, so later repetitions see warm caches —
-/// the `Driver::on_machine` repetition story behind `arcas run --repeat`.
-///
-/// `policy` and `scenario` are factories because both are consumed per
-/// run. Returns one [`ScenarioRun`] per repetition (each with its own
-/// per-run makespan; see [`Driver::on_machine`]). Each run retains its
-/// machine (callers inspect residency), so repetitions clone it forward
-/// — between runs, outside both the virtual and wall-clock timed
-/// windows.
+/// Legacy free-function form of [`Run::run_repeated`]; prefer the
+/// builder. Kept as a thin wrapper so older call sites keep compiling.
 #[allow(clippy::too_many_arguments)]
 pub fn run_repeated(
     topo: &Topology,
@@ -332,29 +554,18 @@ pub fn run_repeated(
     backend: ExecBackend,
     verify: bool,
     timer_ns: Option<u64>,
-    mut policy: impl FnMut() -> Box<dyn Policy>,
-    mut scenario: impl FnMut() -> Box<dyn Scenario>,
+    policy: impl FnMut() -> Box<dyn Policy>,
+    scenario: impl FnMut() -> Box<dyn Scenario>,
 ) -> Vec<ScenarioRun> {
-    assert!(repeat >= 1, "repeat must be >= 1");
-    let mut machine = Some(Machine::new(topo.clone()));
-    let mut runs = Vec::with_capacity(repeat);
-    for i in 0..repeat {
-        let mut s = scenario();
-        let mut driver = Driver::on_machine(machine.take().unwrap(), policy(), tasks)
-            .with_backend(backend)
-            .with_verify(verify);
-        if let Some(t) = timer_ns {
-            driver = driver.with_timer(t);
-        }
-        let run = driver.run(s.as_mut());
-        // The run keeps its machine (callers inspect residency); clone it
-        // forward only while more repetitions need it.
-        if i + 1 < repeat {
-            machine = Some(run.machine.clone());
-        }
-        runs.push(run);
+    let mut run = Run::new(topo)
+        .tasks(tasks)
+        .backend(backend)
+        .verify(verify)
+        .repeat(repeat);
+    if let Some(t) = timer_ns {
+        run = run.timer_ns(t);
     }
-    runs
+    run.run_repeated(policy, scenario)
 }
 
 #[cfg(test)]
@@ -483,5 +694,73 @@ mod tests {
         });
         assert_eq!(report.dispatches, 2);
         assert!(machine.max_time() >= 50);
+    }
+
+    /// The consolidated builder and the legacy `Driver` are the same
+    /// engine: identical deterministic reports for the same inputs.
+    #[test]
+    fn run_builder_matches_the_legacy_driver() {
+        let topo = Topology::milan_1s();
+        let mut a = NoopScenario {
+            ran_setup: false,
+            verified: std::cell::Cell::new(false),
+        };
+        let via_run = Run::new(&topo)
+            .policy(Box::new(LocalCachePolicy))
+            .tasks(4)
+            .verify(true)
+            .run(&mut a);
+        let mut b = NoopScenario {
+            ran_setup: false,
+            verified: std::cell::Cell::new(false),
+        };
+        let via_driver = Driver::new(&topo, Box::new(LocalCachePolicy), 4)
+            .with_verify(true)
+            .run(&mut b);
+        assert!(a.verified.get() && b.verified.get());
+        assert_eq!(via_run.report.makespan_ns, via_driver.report.makespan_ns);
+        assert_eq!(via_run.report.dispatches, via_driver.report.dispatches);
+        assert_eq!(via_run.report.request_shed, 0);
+        assert!(via_run.report.class_latency.is_empty());
+    }
+
+    #[test]
+    fn run_builder_repeats_on_a_warm_machine() {
+        let topo = Topology::milan_1s();
+        let runs = Run::new(&topo)
+            .tasks(4)
+            .repeat(3)
+            .verify(true)
+            .run_repeated(
+                || Box::new(LocalCachePolicy),
+                || {
+                    Box::new(NoopScenario {
+                        ran_setup: false,
+                        verified: std::cell::Cell::new(false),
+                    })
+                },
+            );
+        assert_eq!(runs.len(), 3);
+        for run in &runs {
+            assert!(run.report.makespan_ns >= 100);
+            assert!(run.report.makespan_ns < 100_000);
+        }
+        assert!(runs[2].machine.max_time() > runs[0].report.makespan_ns);
+    }
+
+    #[test]
+    fn run_builder_drives_bare_groups() {
+        let topo = Topology::milan_1s();
+        let (report, machine) = Run::new(&topo).tasks(2).run_group(|_| {
+            Box::new(FnTask(|ctx: &mut TaskCtx<'_>| ctx.compute_ns(50)))
+        });
+        assert_eq!(report.dispatches, 2);
+        assert!(machine.max_time() >= 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "repeat must be >= 1")]
+    fn run_builder_rejects_zero_repeat() {
+        let _ = Run::new(&Topology::milan_1s()).repeat(0);
     }
 }

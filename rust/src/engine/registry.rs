@@ -22,7 +22,7 @@ use crate::workloads::mixed::MixedScenario;
 use crate::workloads::olap::{all_queries, Db, OlapScenario, QuerySpec};
 use crate::workloads::oltp::{OltpScenario, OltpWorkload};
 use crate::workloads::serve::{
-    ArrivalModel, ServeKvScenario, ServeMixedScenario, Trace, TraceConfig,
+    ArrivalModel, PriorityMix, ServeKvScenario, ServeMixedScenario, ServeOpts, Trace, TraceConfig,
 };
 use crate::workloads::sgd::{
     generate_data, DwStrategy, RustGrad, SgdConfig, SgdMode, SgdScenario,
@@ -50,6 +50,15 @@ pub struct ScenarioParams {
     /// format, see `workloads::serve::trace`). `None` = seeded synthetic
     /// trace.
     pub trace: Option<String>,
+    /// Per-tenant priority shares for synthetic serve traces
+    /// (`--priority-mix <critical>,<background>`). `None` = all-Normal.
+    pub priority_mix: Option<PriorityMix>,
+    /// Queue-wait budget in ns after which Background requests are shed
+    /// (`--slo-p99`, given in µs on the CLI). `None` = never shed.
+    pub slo_p99_ns: Option<u64>,
+    /// Closed-loop client think time in ns (`--closed-loop`). `None` =
+    /// open-loop trace replay.
+    pub closed_loop_think_ns: Option<u64>,
 }
 
 impl Default for ScenarioParams {
@@ -60,6 +69,9 @@ impl Default for ScenarioParams {
             iters: None,
             variant: None,
             trace: None,
+            priority_mix: None,
+            slo_p99_ns: None,
+            closed_loop_think_ns: None,
         }
     }
 }
@@ -71,13 +83,53 @@ pub struct ScenarioSpec {
     /// Workload family (graph | streamcluster | sgd | olap | oltp).
     pub family: &'static str,
     pub about: &'static str,
+    /// Optional [`ScenarioParams`] knobs this scenario understands,
+    /// named by CLI flag. `scale`, `seed` and `iters` are universal and
+    /// never listed. [`ScenarioSpec::validate`] rejects anything else.
+    pub accepts: &'static [&'static str],
     build: fn(&ScenarioParams) -> Box<dyn Scenario>,
 }
 
 impl ScenarioSpec {
-    /// Construct a fresh (single-run) scenario for `params`.
+    /// Reject `Some`-valued optional knobs this scenario does not
+    /// understand, naming the offending flag and what *is* accepted —
+    /// running a serve-only flag against e.g. PageRank would otherwise
+    /// silently ignore it and corrupt a sweep.
+    pub fn validate(&self, params: &ScenarioParams) -> Result<(), String> {
+        let given: &[(&str, bool)] = &[
+            ("--variant", params.variant.is_some()),
+            ("--trace", params.trace.is_some()),
+            ("--priority-mix", params.priority_mix.is_some()),
+            ("--slo-p99", params.slo_p99_ns.is_some()),
+            ("--closed-loop", params.closed_loop_think_ns.is_some()),
+        ];
+        for (flag, set) in given {
+            if *set && !self.accepts.contains(flag) {
+                let accepted = if self.accepts.is_empty() {
+                    "--scale/--seed/--iters only".to_string()
+                } else {
+                    format!("--scale/--seed/--iters and {}", self.accepts.join(", "))
+                };
+                return Err(format!(
+                    "scenario {:?} does not accept {flag} (accepted: {accepted})",
+                    self.name
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Validate `params` against this scenario, then construct it.
+    pub fn try_build(&self, params: &ScenarioParams) -> Result<Box<dyn Scenario>, String> {
+        self.validate(params)?;
+        Ok((self.build)(params))
+    }
+
+    /// Construct a fresh (single-run) scenario for `params`, panicking
+    /// on knobs the scenario rejects. Prefer [`ScenarioSpec::try_build`]
+    /// where the error can be reported (the CLI does).
     pub fn build(&self, params: &ScenarioParams) -> Box<dyn Scenario> {
-        (self.build)(params)
+        self.try_build(params).unwrap_or_else(|e| panic!("{e}"))
     }
 }
 
@@ -263,7 +315,16 @@ fn serve_trace(
         read_frac,
         arrivals,
         seed: p.seed,
+        priority_mix: p.priority_mix,
     }))
+}
+
+/// SLO / load-generation knobs shared by both serve builders.
+fn serve_opts(p: &ScenarioParams) -> ServeOpts {
+    ServeOpts {
+        slo_shed_ns: p.slo_p99_ns,
+        closed_loop_think_ns: p.closed_loop_think_ns,
+    }
 }
 
 fn build_serve_kv(p: &ScenarioParams) -> Box<dyn Scenario> {
@@ -271,7 +332,7 @@ fn build_serve_kv(p: &ScenarioParams) -> Box<dyn Scenario> {
         unreachable!("ycsb_scaled always builds a Ycsb workload")
     };
     let trace = serve_trace(p, records as u64, read_frac, 20_000);
-    Box::new(ServeKvScenario::new(records, trace))
+    Box::new(ServeKvScenario::new(records, trace).with_opts(serve_opts(p)))
 }
 
 fn build_serve_mixed(p: &ScenarioParams) -> Box<dyn Scenario> {
@@ -283,8 +344,17 @@ fn build_serve_mixed(p: &ScenarioParams) -> Box<dyn Scenario> {
     // The scan tenant is fixed to Q1 (the join-free pricing summary):
     // `variant` selects the serve arrival model here, not the query.
     let spec = all_queries()[0].clone();
-    Box::new(ServeMixedScenario::new(records, trace, db, spec))
+    Box::new(ServeMixedScenario::new(records, trace, db, spec).with_opts(serve_opts(p)))
 }
+
+/// The serve scenarios take every optional knob.
+const SERVE_ACCEPTS: &[&str] = &[
+    "--variant",
+    "--trace",
+    "--priority-mix",
+    "--slo-p99",
+    "--closed-loop",
+];
 
 static REGISTRY: &[ScenarioSpec] = &[
     ScenarioSpec {
@@ -292,6 +362,7 @@ static REGISTRY: &[ScenarioSpec] = &[
         aliases: &[],
         family: "graph",
         about: "level-synchronous BFS on a Kronecker graph (TEPS)",
+        accepts: &[],
         build: build_bfs,
     },
     ScenarioSpec {
@@ -299,6 +370,7 @@ static REGISTRY: &[ScenarioSpec] = &[
         aliases: &["pr"],
         family: "graph",
         about: "push-based PageRank, 3 BSP phases/iteration",
+        accepts: &[],
         build: build_pagerank,
     },
     ScenarioSpec {
@@ -306,6 +378,7 @@ static REGISTRY: &[ScenarioSpec] = &[
         aliases: &[],
         family: "graph",
         about: "connected components via label propagation",
+        accepts: &[],
         build: build_cc,
     },
     ScenarioSpec {
@@ -313,6 +386,7 @@ static REGISTRY: &[ScenarioSpec] = &[
         aliases: &[],
         family: "graph",
         about: "chunked Bellman-Ford single-source shortest paths",
+        accepts: &[],
         build: build_sssp,
     },
     ScenarioSpec {
@@ -320,6 +394,7 @@ static REGISTRY: &[ScenarioSpec] = &[
         aliases: &[],
         family: "graph",
         about: "HPCC RandomAccess XOR updates (GUPS)",
+        accepts: &[],
         build: build_gups,
     },
     ScenarioSpec {
@@ -327,6 +402,7 @@ static REGISTRY: &[ScenarioSpec] = &[
         aliases: &["sc"],
         family: "streamcluster",
         about: "PARSEC streaming k-median clustering",
+        accepts: &[],
         build: build_streamcluster,
     },
     ScenarioSpec {
@@ -334,6 +410,7 @@ static REGISTRY: &[ScenarioSpec] = &[
         aliases: &[],
         family: "sgd",
         about: "DimmWitted-style SGD, logistic regression (gradient mode)",
+        accepts: &["--variant"],
         build: build_sgd,
     },
     ScenarioSpec {
@@ -341,6 +418,7 @@ static REGISTRY: &[ScenarioSpec] = &[
         aliases: &[],
         family: "sgd",
         about: "DimmWitted-style SGD, forward pass only (loss mode)",
+        accepts: &["--variant"],
         build: build_sgd_loss,
     },
     ScenarioSpec {
@@ -348,6 +426,7 @@ static REGISTRY: &[ScenarioSpec] = &[
         aliases: &["olap"],
         family: "olap",
         about: "one TPC-H-shaped query on the mini OLAP engine (--variant q1..q22)",
+        accepts: &["--variant"],
         build: build_tpch,
     },
     ScenarioSpec {
@@ -355,6 +434,7 @@ static REGISTRY: &[ScenarioSpec] = &[
         aliases: &[],
         family: "oltp",
         about: "YCSB key-value mix on the ERMIA-style OLTP engine",
+        accepts: &[],
         build: build_ycsb,
     },
     ScenarioSpec {
@@ -362,6 +442,7 @@ static REGISTRY: &[ScenarioSpec] = &[
         aliases: &[],
         family: "oltp",
         about: "TPC-C-lite transaction mix on the OLTP engine",
+        accepts: &[],
         build: build_tpcc,
     },
     ScenarioSpec {
@@ -369,6 +450,7 @@ static REGISTRY: &[ScenarioSpec] = &[
         aliases: &["mixed"],
         family: "mixed",
         about: "YCSB + TPC-H scan co-resident: cross-tenant cache/bandwidth contention",
+        accepts: &["--variant"],
         build: build_mixed,
     },
     ScenarioSpec {
@@ -376,6 +458,7 @@ static REGISTRY: &[ScenarioSpec] = &[
         aliases: &["serve"],
         family: "serve",
         about: "open-loop trace-replay KV serving with per-request p50/p95/p99 latency",
+        accepts: SERVE_ACCEPTS,
         build: build_serve_kv,
     },
     ScenarioSpec {
@@ -383,6 +466,7 @@ static REGISTRY: &[ScenarioSpec] = &[
         aliases: &[],
         family: "serve",
         about: "KV serving co-resident with a TPC-H scan tenant (tail under interference)",
+        accepts: SERVE_ACCEPTS,
         build: build_serve_mixed,
     },
 ];
@@ -405,13 +489,14 @@ pub fn by_name(name: &str) -> Option<&'static ScenarioSpec> {
 pub fn scenarios_table() -> String {
     let mut tab = crate::util::table::Table::new(
         "scenario registry (arcas run --scenario <name>)",
-        &["name", "family", "aliases", "description"],
+        &["name", "family", "aliases", "params", "description"],
     );
     for s in registry() {
         tab.row(vec![
             s.name.to_string(),
             s.family.to_string(),
             s.aliases.join(","),
+            s.accepts.join(","),
             s.about.to_string(),
         ]);
     }
@@ -511,6 +596,74 @@ mod tests {
         for v in ["uniform", "diurnal", "bursty"] {
             assert_ne!(poisson, build_trace(Some(v)), "{v} must differ from poisson");
         }
+    }
+
+    #[test]
+    fn validate_rejects_unaccepted_knobs_naming_the_flag() {
+        let spec = by_name("pagerank").unwrap();
+        let p = ScenarioParams {
+            priority_mix: Some(PriorityMix {
+                critical: 0.1,
+                background: 0.1,
+            }),
+            ..Default::default()
+        };
+        let err = spec.try_build(&p).err().expect("pagerank must reject --priority-mix");
+        assert!(err.contains("--priority-mix"), "{err}");
+        assert!(err.contains("pagerank"), "{err}");
+        assert!(err.contains("--scale/--seed/--iters"), "{err}");
+
+        // tpch takes --variant but not --trace; the error names the
+        // accepted extras.
+        let spec = by_name("tpch").unwrap();
+        let p = ScenarioParams {
+            trace: Some("/tmp/t.txt".into()),
+            ..Default::default()
+        };
+        let err = spec.try_build(&p).err().unwrap();
+        assert!(err.contains("--trace") && err.contains("--variant"), "{err}");
+    }
+
+    #[test]
+    #[should_panic(expected = "does not accept --closed-loop")]
+    fn build_panics_on_knobs_the_scenario_rejects() {
+        let p = ScenarioParams {
+            closed_loop_think_ns: Some(1_000),
+            ..Default::default()
+        };
+        let _ = by_name("gups").unwrap().build(&p);
+    }
+
+    #[test]
+    fn serve_accepts_every_slo_knob_and_threads_the_mix() {
+        let p = ScenarioParams {
+            iters: Some(64),
+            priority_mix: Some(PriorityMix {
+                critical: 0.5,
+                background: 0.5,
+            }),
+            slo_p99_ns: Some(100_000),
+            ..Default::default()
+        };
+        for name in ["serve-kv", "serve-mixed"] {
+            let spec = by_name(name).unwrap();
+            assert!(spec.validate(&p).is_ok(), "{name} must accept SLO knobs");
+            let _ = spec.try_build(&p).unwrap();
+        }
+        // The mix reaches the generated trace: with critical+background
+        // at 1.0, no request stays Normal.
+        let trace = serve_trace(&p, 1_000, 0.45, 64);
+        assert!(trace
+            .requests
+            .iter()
+            .all(|r| r.priority != crate::engine::Priority::Normal));
+    }
+
+    #[test]
+    fn scenarios_table_lists_accepted_params() {
+        let t = scenarios_table();
+        assert!(t.contains("params"));
+        assert!(t.contains("--priority-mix"));
     }
 
     #[test]

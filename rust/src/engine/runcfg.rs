@@ -4,6 +4,7 @@
 
 use super::{registry, ExecBackend, ScenarioParams};
 use crate::util::cli::Cli;
+use crate::workloads::serve::PriorityMix;
 
 /// Everything `arcas run` needs, validated.
 #[derive(Clone, Debug)]
@@ -30,7 +31,7 @@ impl RunConfig {
         Cli::new("arcas run", "run one scenario under a policy")
             .opt("scenario", "bfs", &names.join("|"))
             .opt_nodefault("workload", "deprecated alias for --scenario")
-            .opt("policy", "arcas", "arcas|ring|shoal|local|distributed|os_async")
+            .opt("policy", "arcas", "arcas|ring|shoal|local|distributed|os_async|slo")
             .opt("cores", "16", "worker count")
             .opt("backend", "sim", "executor backend: sim (virtual time) | host (real threads)")
             .opt("repeat", "1", "run N times on one machine (warm caches after run 1)")
@@ -42,7 +43,19 @@ impl RunConfig {
             )
             .opt_nodefault(
                 "trace",
-                "request trace file for serve-* scenarios (text: \"<arrival_ns> <op> <key>\" lines)",
+                "request trace file for serve-* scenarios (text: \"<arrival_ns> <op> <key> [priority]\" lines)",
+            )
+            .opt_nodefault(
+                "priority-mix",
+                "serve-* priority shares \"<critical>,<background>\" in [0,1] (rest is normal)",
+            )
+            .opt_nodefault(
+                "slo-p99",
+                "serve-* queue-wait SLO budget in us: past it, background requests are shed",
+            )
+            .opt_nodefault(
+                "closed-loop",
+                "serve-* closed-loop client think time in ns (replaces open-loop trace arrivals)",
             )
             .opt("topology", "milan_2s", "machine preset")
             .opt("timer-us", "100", "ARCAS controller timer (us)")
@@ -79,6 +92,34 @@ impl RunConfig {
             .str("scale")
             .parse()
             .map_err(|_| format!("--scale {} is not a number", a.str("scale")))?;
+        let priority_mix = match a.get("priority-mix") {
+            Some(v) => Some(PriorityMix::parse(v)?),
+            None => None,
+        };
+        let slo_p99_ns = match a.get("slo-p99") {
+            Some(v) => {
+                let us: f64 = v
+                    .parse()
+                    .ok()
+                    .filter(|us: &f64| *us > 0.0)
+                    .ok_or_else(|| format!("--slo-p99 {v} is not a positive microsecond count"))?;
+                Some((us * 1_000.0) as u64)
+            }
+            None => None,
+        };
+        let closed_loop_think_ns = match a.get("closed-loop") {
+            Some(v) => Some(
+                v.parse()
+                    .map_err(|_| format!("--closed-loop {v} is not a think time in ns"))?,
+            ),
+            None => None,
+        };
+        if closed_loop_think_ns.is_some() && slo_p99_ns.is_some() {
+            return Err(
+                "--closed-loop and --slo-p99 conflict: a closed loop has no arrival queue to shed from"
+                    .into(),
+            );
+        }
         let (scenario, deprecated_workload) = match a.get("workload") {
             Some(w) => (w.to_string(), true),
             None => (a.str("scenario"), false),
@@ -98,6 +139,9 @@ impl RunConfig {
                 iters,
                 variant: a.get("variant").map(str::to_string),
                 trace: a.get("trace").map(str::to_string),
+                priority_mix,
+                slo_p99_ns,
+                closed_loop_think_ns,
             },
             deprecated_workload,
         })
@@ -152,6 +196,47 @@ mod tests {
     }
 
     #[test]
+    fn slo_knobs_thread_into_params() {
+        let c = from(&[
+            "--scenario",
+            "serve-kv",
+            "--priority-mix",
+            "0.2,0.3",
+            "--slo-p99",
+            "150",
+        ])
+        .unwrap();
+        let m = c.params.priority_mix.unwrap();
+        assert!((m.critical - 0.2).abs() < 1e-12 && (m.background - 0.3).abs() < 1e-12);
+        assert_eq!(c.params.slo_p99_ns, Some(150_000)); // 150 us -> ns
+        assert_eq!(c.params.closed_loop_think_ns, None);
+
+        let c = from(&["--scenario", "serve-kv", "--closed-loop", "500"]).unwrap();
+        assert_eq!(c.params.closed_loop_think_ns, Some(500));
+    }
+
+    #[test]
+    fn malformed_slo_knobs_are_rejected_with_the_flag_name() {
+        let err = from(&["--priority-mix", "0.2"]).unwrap_err();
+        assert!(err.contains("--priority-mix"), "{err}");
+        let err = from(&["--priority-mix", "0.9,0.9"]).unwrap_err();
+        assert!(err.contains("--priority-mix"), "{err}");
+        let err = from(&["--slo-p99", "-3"]).unwrap_err();
+        assert!(err.contains("--slo-p99"), "{err}");
+        let err = from(&["--closed-loop", "soon"]).unwrap_err();
+        assert!(err.contains("--closed-loop"), "{err}");
+    }
+
+    #[test]
+    fn closed_loop_conflicts_with_the_shedding_budget() {
+        let err = from(&["--closed-loop", "500", "--slo-p99", "100"]).unwrap_err();
+        assert!(
+            err.contains("--closed-loop") && err.contains("--slo-p99"),
+            "{err}"
+        );
+    }
+
+    #[test]
     fn workload_alias_flags_deprecation() {
         let c = from(&["--workload", "gups"]).unwrap();
         assert_eq!(c.scenario, "gups");
@@ -166,5 +251,8 @@ mod tests {
         assert!(help.contains("--backend"));
         assert!(help.contains("--repeat"));
         assert!(help.contains("sim (virtual time) | host (real threads)"));
+        assert!(help.contains("--priority-mix"));
+        assert!(help.contains("--slo-p99"));
+        assert!(help.contains("--closed-loop"));
     }
 }

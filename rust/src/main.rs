@@ -111,6 +111,24 @@ fn print_report(name: &str, r: &RunReport) {
             arcas::util::fmt_ns(l.mean_service_ns.round() as u64),
         );
     }
+    if r.request_shed > 0 {
+        println!(
+            "  req shed          {} (background past the SLO queue-wait budget)",
+            r.request_shed
+        );
+    }
+    // Per-class tails only matter once the trace actually has tiers;
+    // an all-normal run would just repeat the overall line.
+    if r.class_latency.iter().any(|(n, _)| *n != "normal") {
+        for (class, l) in &r.class_latency {
+            println!(
+                "  class {class:<11} p50 {} | p99 {} ({} reqs)",
+                arcas::util::fmt_ns(l.p50_ns),
+                arcas::util::fmt_ns(l.p99_ns),
+                l.count,
+            );
+        }
+    }
 }
 
 fn cmd_run(args: Vec<String>) {
@@ -154,20 +172,21 @@ fn cmd_run(args: Vec<String>) {
         );
         std::process::exit(2);
     };
+    if let Err(msg) = spec.validate(&rc.params) {
+        eprintln!("{msg}");
+        eprintln!("{}", engine::scenarios_table());
+        std::process::exit(2);
+    }
     println!(
         "scenario {} [{}]: {} | {} cores on {} | {} backend",
         spec.name, spec.family, spec.about, rc.cores, topo.name, rc.backend
     );
-    let runs = engine::run_repeated(
-        &topo,
-        rc.repeat,
-        rc.cores,
-        rc.backend,
-        rc.verify,
-        None,
-        make_policy,
-        || spec.build(&rc.params),
-    );
+    let runs = engine::Run::new(&topo)
+        .tasks(rc.cores)
+        .backend(rc.backend)
+        .verify(rc.verify)
+        .repeat(rc.repeat)
+        .run_repeated(make_policy, || spec.build(&rc.params));
     if rc.repeat > 1 {
         for (i, run) in runs.iter().enumerate() {
             println!(
@@ -297,7 +316,7 @@ fn cmd_bench_check(args: Vec<String>) {
 fn cmd_policies() {
     let topo = Topology::milan_2s();
     println!("available policies:");
-    for name in ["arcas", "ring", "shoal", "local", "distributed", "os_async"] {
+    for name in ["arcas", "ring", "shoal", "local", "distributed", "os_async", "slo"] {
         let p = policy::by_name(name, &topo).unwrap();
         println!("  {:<12} {}", name, p.name());
     }

@@ -15,8 +15,12 @@
 //! | [`LocalCachePolicy`]       | §2.3 LocalCache        | static compaction on fewest chiplets |
 //! | [`DistributedCachePolicy`] | §2.3 DistributedCache  | static max spread across chiplets |
 //! | [`OsAsyncPolicy`]          | std::async baseline    | OS threads, no affinity, OS switch costs |
+//! | [`SloPolicy`]              | SLO-aware serving      | p99-driven spread from queue-wait vs service feedback |
+
+use std::sync::Arc;
 
 use crate::controller::{placement_map, placement_map_bounded, AdaptiveController, Approach};
+use crate::engine::dispatch::SloSignal;
 use crate::profiler::WindowSample;
 use crate::topology::Topology;
 
@@ -68,6 +72,12 @@ pub trait Policy: Send {
     fn timer_ns(&self) -> Option<u64> {
         None
     }
+
+    /// Wire a serving scenario's per-chiplet queue-wait/service feedback
+    /// channel into the policy. The engine driver calls this before the
+    /// run when the scenario publishes an [`SloSignal`]; policies that
+    /// don't react to tail latency keep the default no-op.
+    fn connect_slo(&mut self, _signal: Arc<SloSignal>) {}
 }
 
 /// ARCAS's steal order (§4.4): same chiplet first, then same NUMA, then
@@ -479,6 +489,125 @@ impl Policy for OsAsyncPolicy {
     }
 }
 
+// =====================================================================
+// SLO-aware serving policy (p99-driven placement)
+// =====================================================================
+
+/// p99-driven placement for serving scenarios: watches the per-chiplet
+/// queue-wait vs service-time windows a serve scenario publishes through
+/// an [`SloSignal`] (wired by `Policy::connect_slo`) and adapts the
+/// spread rate — queue wait dominating service means requests pile up
+/// behind busy chiplets, so spread hot tenants' tasks across more
+/// chiplets (more aggregate L3 + more claim bandwidth); queue wait far
+/// below service means the spread buys nothing, so compact back for
+/// locality. Without a connected signal it behaves like
+/// [`LocalCachePolicy`] (spread 1, never migrates).
+pub struct SloPolicy {
+    signal: Option<Arc<SloSignal>>,
+    spread: usize,
+    max_spread: usize,
+    timer_ns: u64,
+    /// Chiplet histogram of the last emitted map (skip no-op reshuffles).
+    last_hist: Vec<usize>,
+}
+
+impl SloPolicy {
+    /// Spread doubles when mean queue wait exceeds `SPREAD_FACTOR` ×
+    /// mean service time, halves when it drops below service/`4`.
+    const SPREAD_FACTOR: f64 = 2.0;
+
+    pub fn new(topo: &Topology) -> Self {
+        Self {
+            signal: None,
+            spread: 1,
+            max_spread: topo.num_chiplets().max(1),
+            timer_ns: 100_000,
+            last_hist: Vec::new(),
+        }
+    }
+
+    pub fn with_timer(mut self, timer_ns: u64) -> Self {
+        self.timer_ns = timer_ns;
+        self
+    }
+
+    pub fn spread(&self) -> usize {
+        self.spread
+    }
+}
+
+impl Policy for SloPolicy {
+    fn name(&self) -> &'static str {
+        "SLO"
+    }
+
+    fn initial_placement(&mut self, topo: &Topology, group_size: usize) -> Vec<usize> {
+        // Start compact (the LocalCache posture): the signal, not a
+        // static guess, decides whether the workload earns more chiplets.
+        self.spread = 1;
+        let map = placement_map(topo, self.spread, group_size);
+        self.last_hist = chiplet_hist(topo, &map);
+        map
+    }
+
+    fn on_timer(
+        &mut self,
+        topo: &Topology,
+        _now_ns: u64,
+        _sample: &WindowSample,
+        group_size: usize,
+    ) -> Option<Vec<usize>> {
+        let windows = self.signal.as_ref()?.drain();
+        let served: u64 = windows.iter().map(|w| w.count).sum();
+        if served == 0 {
+            return None;
+        }
+        let queue: u64 = windows.iter().map(|w| w.queue_ns).sum();
+        let service: u64 = windows.iter().map(|w| w.service_ns).sum();
+        let mean_queue = queue as f64 / served as f64;
+        let mean_service = (service as f64 / served as f64).max(1.0);
+        let want = if mean_queue > Self::SPREAD_FACTOR * mean_service {
+            (self.spread * 2).min(self.max_spread)
+        } else if mean_queue * 4.0 < mean_service {
+            (self.spread / 2).max(1)
+        } else {
+            self.spread
+        };
+        if want == self.spread {
+            return None;
+        }
+        self.spread = want;
+        let map = placement_map(topo, self.spread, group_size);
+        // Migrate only when the chiplet occupancy actually changes.
+        let hist = chiplet_hist(topo, &map);
+        if hist == self.last_hist {
+            return None;
+        }
+        self.last_hist = hist;
+        Some(map)
+    }
+
+    fn spread_rate(&self) -> usize {
+        self.spread
+    }
+
+    fn timer_ns(&self) -> Option<u64> {
+        Some(self.timer_ns)
+    }
+
+    fn connect_slo(&mut self, signal: Arc<SloSignal>) {
+        self.signal = Some(signal);
+    }
+}
+
+fn chiplet_hist(topo: &Topology, map: &[usize]) -> Vec<usize> {
+    let mut h = vec![0usize; topo.num_chiplets()];
+    for &c in map {
+        h[topo.chiplet_of(c)] += 1;
+    }
+    h
+}
+
 /// Construct a policy by name (CLI surface).
 pub fn by_name(name: &str, topo: &Topology) -> Option<Box<dyn Policy>> {
     match name {
@@ -488,6 +617,7 @@ pub fn by_name(name: &str, topo: &Topology) -> Option<Box<dyn Policy>> {
         "local" => Some(Box::new(LocalCachePolicy)),
         "distributed" => Some(Box::new(DistributedCachePolicy)),
         "os_async" => Some(Box::new(OsAsyncPolicy::new())),
+        "slo" => Some(Box::new(SloPolicy::new(topo))),
         _ => None,
     }
 }
@@ -612,10 +742,53 @@ mod tests {
     #[test]
     fn by_name_resolves_all() {
         let t = topo();
-        for n in ["arcas", "ring", "shoal", "local", "distributed", "os_async"] {
+        for n in ["arcas", "ring", "shoal", "local", "distributed", "os_async", "slo"] {
             assert!(by_name(n, &t).is_some(), "{n}");
         }
         assert!(by_name("nope", &t).is_none());
+    }
+
+    #[test]
+    fn slo_policy_spreads_on_queue_pressure_and_compacts_when_idle() {
+        let t = Topology::milan_1s();
+        let mut p = SloPolicy::new(&t);
+        let map = p.initial_placement(&t, 8);
+        assert_eq!(chiplets_used(&t, &map), 1, "starts compact");
+        let sample = WindowSample {
+            at_ns: 100_000,
+            fill_events: 0.0,
+            rate: 0.0,
+            counts: ClassCounts::default(),
+            live_tasks: 8,
+        };
+        // No signal connected: never migrates.
+        assert!(p.on_timer(&t, 100_000, &sample, 8).is_none());
+
+        let sig = SloSignal::new(t.num_chiplets());
+        p.connect_slo(sig.clone());
+        // Queue wait dominating service -> spread doubles.
+        for _ in 0..100 {
+            sig.record(0, 10_000, 1_000);
+        }
+        let m = p.on_timer(&t, 200_000, &sample, 8).expect("must spread");
+        assert_eq!(p.spread_rate(), 2);
+        assert_eq!(chiplets_used(&t, &m), 2);
+        // Sustained pressure keeps doubling toward every chiplet.
+        for _ in 0..3 {
+            for _ in 0..100 {
+                sig.record(1, 10_000, 1_000);
+            }
+            p.on_timer(&t, 300_000, &sample, 8);
+        }
+        assert_eq!(p.spread_rate(), t.num_chiplets());
+        // Queue wait far below service -> compacts back one step.
+        for _ in 0..100 {
+            sig.record(0, 10, 1_000);
+        }
+        p.on_timer(&t, 400_000, &sample, 8).expect("must compact");
+        assert_eq!(p.spread_rate(), t.num_chiplets() / 2);
+        // An empty window is a no-op, not a divide-by-zero.
+        assert!(p.on_timer(&t, 500_000, &sample, 8).is_none());
     }
 
     #[test]

@@ -94,6 +94,13 @@ pub struct RunReport {
     /// Per-request sojourn aggregate for request-serving scenarios
     /// (`serve-kv`, `serve-mixed`); `None` for batch workloads.
     pub request_latency: Option<LatencyReport>,
+    /// Requests dropped by admission control / load shedding (serving
+    /// scenarios under overload; always 0 for batch workloads).
+    pub request_shed: u64,
+    /// Per-priority-class latency aggregates, in dispatch order
+    /// (critical first); empty unless the scenario serves a
+    /// priority-tiered trace.
+    pub class_latency: Vec<(&'static str, LatencyReport)>,
 }
 
 impl RunReport {
@@ -480,6 +487,8 @@ impl SimExecutor {
             wall_ns: wall_start.elapsed().as_nanos() as u64,
             host_steals: 0,
             request_latency: None,
+            request_shed: 0,
+            class_latency: Vec::new(),
         }
     }
 

@@ -147,8 +147,12 @@ fn check_config(baseline: &Json, current: &Json) -> Result<(), String> {
     Ok(())
 }
 
-/// Gate `BENCH_serving_latency.json`: per-(policy, backend) p99 sojourn,
-/// lower is better. Baseline series without a `"tol"` use `default_tol`.
+/// Gate `BENCH_serving_latency.json` (and `BENCH_serving_slo.json`):
+/// per-(policy, backend) latency metrics, lower is better. Each baseline
+/// series entry may carry a `"metric"` key naming the gated field
+/// (default `"p99_ns"`), so one file can gate overall p99, per-class
+/// p99s and shed rates side by side. Series without a `"tol"` use
+/// `default_tol`.
 pub fn check_serving(
     baseline: &Json,
     current: &Json,
@@ -163,19 +167,25 @@ pub fn check_serving(
         .get("series")
         .and_then(Json::as_arr)
         .ok_or("current results have no \"series\" array")?;
+    let metric_of = |entry: &Json| entry.str_of("metric").unwrap_or("p99_ns").to_string();
     let mut checks = Vec::new();
     for b in base_series {
         let policy = b.str_of("policy").ok_or("baseline series missing \"policy\"")?;
         let backend = b.str_of("backend").ok_or("baseline series missing \"backend\"")?;
-        let base = b.num("p99_ns").ok_or_else(|| {
-            format!("baseline series {policy}/{backend} missing numeric \"p99_ns\"")
+        let metric = metric_of(b);
+        let base = b.num(&metric).ok_or_else(|| {
+            format!("baseline series {policy}/{backend} missing numeric \"{metric}\"")
         })?;
         let tol = b.num("tol").unwrap_or(default_tol);
-        let label = format!("{policy}/{backend} p99_ns");
+        let label = format!("{policy}/{backend} {metric}");
         let cur = cur_series
             .iter()
-            .find(|c| c.str_of("policy") == Some(policy) && c.str_of("backend") == Some(backend))
-            .and_then(|c| c.num("p99_ns"));
+            .find(|c| {
+                c.str_of("policy") == Some(policy)
+                    && c.str_of("backend") == Some(backend)
+                    && metric_of(c) == metric
+            })
+            .and_then(|c| c.num(&metric));
         let (current, verdict) = match cur {
             Some(v) => (v, verdict(base, v, tol, false)),
             None => (f64::NAN, Verdict::Missing),
@@ -343,6 +353,47 @@ mod tests {
         .unwrap();
         assert!(check_serving(&with_cfg(4000, 100.0), &no_cfg, 0.25).is_ok());
         assert!(check_serving(&no_cfg, &with_cfg(4000, 100.0), 0.25).is_ok());
+    }
+
+    #[test]
+    fn metric_key_selects_the_gated_field_per_entry() {
+        // One file gates the overall p99 (implicit metric) and a
+        // per-class p99 + shed rate (explicit metrics) side by side.
+        let mk = |crit_p99: f64, shed: f64| {
+            Json::parse(&format!(
+                r#"{{"pinned": true, "series": [
+                    {{"policy": "arcas", "backend": "sim", "p99_ns": 1000, "tol": 0.10}},
+                    {{"policy": "arcas", "backend": "sim", "metric": "critical_p99_ns",
+                      "critical_p99_ns": {crit_p99}, "tol": 0.10}},
+                    {{"policy": "arcas", "backend": "sim", "metric": "shed_rate",
+                      "shed_rate": {shed}, "tol": 0.10}}
+                ]}}"#
+            ))
+            .unwrap()
+        };
+        let base = mk(500.0, 0.20);
+        let r = check_serving(&base, &mk(510.0, 0.21), 0.25).unwrap();
+        assert!(!r.failed());
+        assert_eq!(r.checks.len(), 3);
+        assert!(r.checks[1].label.contains("critical_p99_ns"), "{}", r.checks[1].label);
+        // The critical-class tail regressing fails the gate even though
+        // the overall p99 entry is unchanged.
+        let r = check_serving(&base, &mk(900.0, 0.20), 0.25).unwrap();
+        assert!(r.failed());
+        assert_eq!(r.checks[1].verdict, Verdict::Regressed);
+        assert_eq!(r.checks[0].verdict, Verdict::Ok);
+        // A baseline entry whose metric is absent from the current file
+        // is Missing, not silently matched to another entry.
+        let no_shed = Json::parse(
+            r#"{"series": [
+                {"policy": "arcas", "backend": "sim", "p99_ns": 1000},
+                {"policy": "arcas", "backend": "sim", "metric": "critical_p99_ns",
+                 "critical_p99_ns": 500}
+            ]}"#,
+        )
+        .unwrap();
+        let r = check_serving(&base, &no_shed, 0.25).unwrap();
+        assert_eq!(r.checks[2].verdict, Verdict::Missing);
     }
 
     #[test]

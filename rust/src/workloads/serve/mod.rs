@@ -8,15 +8,27 @@
 //!
 //! - [`trace`] — deterministic request traces: seeded synthetic
 //!   generators (Zipfian keys; uniform/Poisson/diurnal/bursty open-loop
-//!   arrivals) and a tiny text format for replaying recorded traffic.
+//!   arrivals; optional per-tenant [`PriorityMix`]) and a tiny text
+//!   format for replaying recorded traffic.
 //! - **Server workers** — each rank is a server coroutine that claims
-//!   requests FCFS from an [`OpenLoopQueue`] (engine-side dispatcher).
-//!   An idle server *waits for the next arrival* (advances its virtual
-//!   clock to the request's timestamp); a backlogged one starts service
-//!   immediately — so sojourn = queue wait + service, measured per
-//!   request in virtual time and folded into a log-scaled histogram
-//!   ([`LatencyRecorder`]) that the driver attaches to
-//!   [`RunReport::request_latency`].
+//!   requests from a [`TieredQueue`] (engine-side dispatcher): per-class
+//!   FCFS with Critical-first dispatch among arrived requests, streak
+//!   promotion so Background never starves, and (opt-in) Background
+//!   shedding once queue wait blows the SLO budget. An idle server
+//!   *waits for the next arrival* (advances its virtual clock to the
+//!   request's timestamp); a backlogged one starts service immediately —
+//!   so sojourn = queue wait + service, measured per request in virtual
+//!   time and folded into per-class log-scaled histograms
+//!   ([`ClassLatencyRecorder`]) that the driver attaches to
+//!   [`RunReport::request_latency`] / `class_latency`. Workers also
+//!   publish per-chiplet queue/service windows to an [`SloSignal`] for
+//!   p99-driven placement (`policy::SloPolicy`).
+//! - **Open vs closed loop** ([`ServeOpts`]) — the default open loop
+//!   replays trace arrivals regardless of server progress (honest tails
+//!   under overload). `closed_loop_think_ns` turns each worker into a
+//!   fixed-concurrency client: issue → serve → think → issue, the
+//!   load-generator shape whose latency *cannot* diverge (queue wait is
+//!   structurally 0) — the control experiment for overload plots.
 //! - [`ServeKvScenario`] (`serve-kv`) — YCSB-style point reads/updates
 //!   over the shared [`Store`] from the OLTP engine: zipfian key
 //!   contention, a shared commit line and log appends on the update
@@ -33,13 +45,15 @@
 
 pub mod trace;
 
-pub use trace::{ArrivalModel, ReqOp, Request, Trace, TraceConfig};
+pub use trace::{ArrivalModel, PriorityMix, ReqOp, Request, Trace, TraceConfig};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::cachesim::Access;
-use crate::engine::{LatencyRecorder, OpenLoopQueue, Scenario, ScenarioMetrics};
+use crate::engine::{
+    ClassLatencyRecorder, Priority, Scenario, ScenarioMetrics, SloSignal, TieredQueue,
+};
 use crate::mem::{Placement, RegionId};
 use crate::sched::{LatencyReport, RunReport};
 use crate::sim::Machine;
@@ -49,20 +63,48 @@ use crate::workloads::mixed::ScanTenant;
 use crate::workloads::olap::{Db, QuerySpec};
 use crate::workloads::oltp::Store;
 
-/// The KV serving tenant: store + commit/log regions + the admission
-/// queue and latency accounting, shared by `serve-kv` and `serve-mixed`.
+/// SLO / load-generation knobs of the serving scenarios. The default
+/// (`None` everywhere) is the plain open loop with no shedding — the
+/// byte-identical golden path.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeOpts {
+    /// Queue-wait budget after which Background requests are shed
+    /// instead of served (`arcas run --slo-p99`). Ignored under
+    /// `closed_loop_think_ns` (a closed loop has no arrival queue).
+    pub slo_shed_ns: Option<u64>,
+    /// Run closed-loop clients instead of open-loop trace replay: each
+    /// worker issues its next request after this much think time
+    /// (`arcas run --closed-loop`). Trace arrival times are ignored.
+    pub closed_loop_think_ns: Option<u64>,
+}
+
+/// The KV serving tenant: store + commit/log regions + the tiered
+/// admission queue and per-class latency accounting, shared by
+/// `serve-kv` and `serve-mixed`.
 struct KvTenant {
     store: Arc<Store>,
     commit_region: RegionId,
     log_region: RegionId,
-    queue: Arc<OpenLoopQueue<Request>>,
+    queue: Arc<TieredQueue<Request>>,
     served: Arc<AtomicU64>,
     conflicts: Arc<AtomicU64>,
-    lat: Arc<Mutex<LatencyRecorder>>,
+    lat: Arc<Mutex<ClassLatencyRecorder>>,
+    slo: Arc<SloSignal>,
+    /// Machine clock at setup: trace arrivals are relative to *this
+    /// run's* start, so warm `--repeat` runs replay the arrival process
+    /// instead of treating past timestamps as an instant backlog.
+    base_ns: u64,
+    closed_loop_think_ns: Option<u64>,
 }
 
 impl KvTenant {
-    fn new(machine: &mut Machine, label_prefix: &str, records: usize, trace: &Trace) -> Self {
+    fn new(
+        machine: &mut Machine,
+        label_prefix: &str,
+        records: usize,
+        trace: &Trace,
+        opts: ServeOpts,
+    ) -> Self {
         let store = Arc::new(Store::new(
             machine,
             &format!("{label_prefix}-kv-table"),
@@ -73,14 +115,22 @@ impl KvTenant {
             machine.alloc(&format!("{label_prefix}-commit-counter"), 64, Placement::Bind(0));
         let log_region =
             machine.alloc(&format!("{label_prefix}-log"), 64 << 20, Placement::Bind(0));
+        // A closed loop has no arrival queue, so a queue-wait budget is
+        // meaningless there (and `pop(u64::MAX)` would shed everything).
+        let shed = opts
+            .slo_shed_ns
+            .filter(|_| opts.closed_loop_think_ns.is_none());
         Self {
             store,
             commit_region,
             log_region,
-            queue: OpenLoopQueue::new(trace.requests.clone()),
+            queue: TieredQueue::new(trace.requests.clone(), shed),
             served: Arc::new(AtomicU64::new(0)),
             conflicts: Arc::new(AtomicU64::new(0)),
-            lat: Arc::new(Mutex::new(LatencyRecorder::new())),
+            lat: Arc::new(Mutex::new(ClassLatencyRecorder::new())),
+            slo: SloSignal::new(machine.topo.num_chiplets()),
+            base_ns: machine.max_time(),
+            closed_loop_think_ns: opts.closed_loop_think_ns,
         }
     }
 
@@ -92,8 +142,16 @@ impl KvTenant {
         self.conflicts.load(Ordering::Relaxed)
     }
 
+    fn shed(&self) -> u64 {
+        self.queue.shed_total()
+    }
+
     fn report(&self) -> Option<LatencyReport> {
         self.lat.lock().unwrap().report()
+    }
+
+    fn class_reports(&self) -> Vec<(&'static str, LatencyReport)> {
+        self.lat.lock().unwrap().class_reports()
     }
 
     fn histogram(&self) -> LogHistogram {
@@ -111,22 +169,47 @@ impl KvTenant {
         let served = self.served.clone();
         let conflicts = self.conflicts.clone();
         let lat = self.lat.clone();
-        let mut local = LatencyRecorder::new();
+        let slo = self.slo.clone();
+        let base_ns = self.base_ns;
+        let closed_loop = self.closed_loop_think_ns;
+        let mut local = ClassLatencyRecorder::new();
         Box::new(StateTask::new(move |ctx, _step| {
-            let Some(req) = queue.pop() else {
+            // The queue clock: trace-relative virtual time (re-based so
+            // warm repeats replay arrivals against this run's start).
+            // Closed-loop clients ignore arrivals — every queued request
+            // is "due", so pops are pure priority order.
+            let pop_now = if closed_loop.is_some() {
+                u64::MAX
+            } else {
+                ctx.view().now().saturating_sub(base_ns)
+            };
+            let Some(req) = queue.pop(pop_now) else {
                 // Trace drained: publish this worker's latency samples.
                 lat.lock().unwrap().merge(&local);
-                local = LatencyRecorder::new();
+                local = ClassLatencyRecorder::new();
                 return Step::Done;
             };
-            // Open loop: an idle server waits for the arrival; a
-            // backlogged one starts immediately (the request was
-            // queueing while every server was busy).
-            let v = ctx.view();
-            if v.now() < req.arrival_ns {
-                v.advance_to(req.arrival_ns);
-            }
-            let start = v.now();
+            let (start, queue_wait) = if let Some(think_ns) = closed_loop {
+                // Closed loop: think, then issue. The request never
+                // waits in an arrival queue, so queue wait is 0 by
+                // construction — the saturating counterpart to the
+                // open loop's unbounded backlog.
+                if think_ns > 0 {
+                    ctx.compute_ns(think_ns);
+                }
+                (ctx.view().now(), 0)
+            } else {
+                // Open loop: an idle server waits for the arrival; a
+                // backlogged one starts immediately (the request was
+                // queueing while every server was busy).
+                let arrival = base_ns + req.arrival_ns;
+                let v = ctx.view();
+                if v.now() < arrival {
+                    v.advance_to(arrival);
+                }
+                let start = v.now();
+                (start, start - arrival)
+            };
             let key = req.key as usize;
             match req.op {
                 ReqOp::Read => {
@@ -151,11 +234,37 @@ impl KvTenant {
             // Request parse/dispatch CPU.
             ctx.compute_flops(300);
             let end = ctx.view().now();
-            local.record(start - req.arrival_ns, end - start);
+            let service = end - start;
+            local.record(req.priority, queue_wait, service);
+            slo.record(ctx.chiplet(), queue_wait, service);
             served.fetch_add(1, Ordering::Relaxed);
             Step::Yield
         }))
     }
+}
+
+/// Admission-control invariant shared by both serving scenarios: every
+/// request is either served (with a latency sample) or shed, exactly
+/// once — and only Background is ever shed.
+fn verify_kv(kv: &KvTenant, trace: &Trace) {
+    let served = kv.served();
+    let shed = kv.shed();
+    assert_eq!(
+        served + shed,
+        trace.len() as u64,
+        "every request must be served or shed exactly once ({served} + {shed})"
+    );
+    let counts = kv.queue.shed_counts();
+    assert_eq!(
+        counts[Priority::Critical.idx()] + counts[Priority::Normal.idx()],
+        0,
+        "only Background requests may be shed"
+    );
+    let recorded = kv.lat.lock().unwrap().count();
+    assert_eq!(
+        recorded, served,
+        "every served request must have a latency sample"
+    );
 }
 
 /// `serve-kv`: open-loop trace replay of YCSB-style point ops over the
@@ -163,6 +272,7 @@ impl KvTenant {
 pub struct ServeKvScenario {
     records: usize,
     trace: Arc<Trace>,
+    opts: ServeOpts,
     kv: Option<KvTenant>,
 }
 
@@ -173,8 +283,15 @@ impl ServeKvScenario {
         Self {
             records,
             trace,
+            opts: ServeOpts::default(),
             kv: None,
         }
+    }
+
+    /// SLO / load-generation knobs (default: plain open loop).
+    pub fn with_opts(mut self, opts: ServeOpts) -> Self {
+        self.opts = opts;
+        self
     }
 
     /// Requests served; valid after the run.
@@ -185,6 +302,12 @@ impl ServeKvScenario {
     /// Update RMWs that lost their version race; valid after the run.
     pub fn conflicts(&self) -> u64 {
         self.kv.as_ref().map_or(0, KvTenant::conflicts)
+    }
+
+    /// Requests shed per priority class (indexed by [`Priority::idx`]);
+    /// valid after the run. Only the Background slot can be non-zero.
+    pub fn shed_counts(&self) -> [u64; 3] {
+        self.kv.as_ref().map_or([0; 3], |kv| kv.queue.shed_counts())
     }
 
     /// The sojourn histogram (CDF source for `fig_serving`).
@@ -199,7 +322,13 @@ impl Scenario for ServeKvScenario {
     }
 
     fn setup(&mut self, machine: &mut Machine, _tasks: usize) {
-        self.kv = Some(KvTenant::new(machine, "serve", self.records, &self.trace));
+        self.kv = Some(KvTenant::new(
+            machine,
+            "serve",
+            self.records,
+            &self.trace,
+            self.opts,
+        ));
     }
 
     fn spawn(&mut self, _rank: usize) -> Box<dyn Coroutine> {
@@ -207,21 +336,23 @@ impl Scenario for ServeKvScenario {
     }
 
     fn verify(&self) {
-        let served = self.served();
-        assert_eq!(
-            served,
-            self.trace.len() as u64,
-            "every request must be served exactly once"
-        );
-        let recorded = self.kv.as_ref().map_or(0, |kv| kv.lat.lock().unwrap().count());
-        assert_eq!(
-            recorded, served,
-            "every served request must have a latency sample"
-        );
+        verify_kv(self.kv.as_ref().expect("setup() before verify()"), &self.trace);
     }
 
     fn latency(&self) -> Option<LatencyReport> {
         self.kv.as_ref().and_then(KvTenant::report)
+    }
+
+    fn shed(&self) -> u64 {
+        self.kv.as_ref().map_or(0, KvTenant::shed)
+    }
+
+    fn class_latency(&self) -> Vec<(&'static str, LatencyReport)> {
+        self.kv.as_ref().map_or_else(Vec::new, KvTenant::class_reports)
+    }
+
+    fn slo_signal(&self) -> Option<Arc<SloSignal>> {
+        self.kv.as_ref().map(|kv| kv.slo.clone())
     }
 
     fn metrics(&self, report: &RunReport) -> ScenarioMetrics {
@@ -230,6 +361,7 @@ impl Scenario for ServeKvScenario {
             .with("reqs_per_s", report.throughput(self.served() as f64))
             .with("update_conflicts", self.conflicts() as f64)
             .with("p99_sojourn_ns", p99)
+            .with("shed", self.shed() as f64)
     }
 }
 
@@ -240,6 +372,7 @@ pub struct ServeMixedScenario {
     trace: Arc<Trace>,
     db: Arc<Db>,
     spec: QuerySpec,
+    opts: ServeOpts,
     tasks: usize,
     n_serve: usize,
     st: Option<(KvTenant, ScanTenant)>,
@@ -259,10 +392,17 @@ impl ServeMixedScenario {
             trace,
             db,
             spec,
+            opts: ServeOpts::default(),
             tasks: 0,
             n_serve: 0,
             st: None,
         }
+    }
+
+    /// SLO / load-generation knobs (default: plain open loop).
+    pub fn with_opts(mut self, opts: ServeOpts) -> Self {
+        self.opts = opts;
+        self
     }
 
     /// Requests served; valid after the run.
@@ -296,7 +436,7 @@ impl Scenario for ServeMixedScenario {
         // Serving gets the ceiling half (a single-rank group degenerates
         // to pure serving, never to nothing), like the mixed scenario.
         self.n_serve = tasks.div_ceil(2);
-        let kv = KvTenant::new(machine, "serve-mixed", self.records, &self.trace);
+        let kv = KvTenant::new(machine, "serve-mixed", self.records, &self.trace, self.opts);
         let scan = ScanTenant::new(machine, "serve-mixed", self.db.clone(), self.spec.clone());
         self.st = Some((kv, scan));
     }
@@ -312,11 +452,7 @@ impl Scenario for ServeMixedScenario {
 
     fn verify(&self) {
         let (kv, scan) = self.st.as_ref().expect("setup() before verify()");
-        assert_eq!(
-            kv.served(),
-            self.trace.len() as u64,
-            "every request must be served exactly once"
-        );
+        verify_kv(kv, &self.trace);
         if self.tasks > self.n_serve {
             scan.verify_against_serial();
         }
@@ -324,6 +460,20 @@ impl Scenario for ServeMixedScenario {
 
     fn latency(&self) -> Option<LatencyReport> {
         self.st.as_ref().and_then(|(kv, _)| kv.report())
+    }
+
+    fn shed(&self) -> u64 {
+        self.st.as_ref().map_or(0, |(kv, _)| kv.shed())
+    }
+
+    fn class_latency(&self) -> Vec<(&'static str, LatencyReport)> {
+        self.st
+            .as_ref()
+            .map_or_else(Vec::new, |(kv, _)| kv.class_reports())
+    }
+
+    fn slo_signal(&self) -> Option<Arc<SloSignal>> {
+        self.st.as_ref().map(|(kv, _)| kv.slo.clone())
     }
 
     fn metrics(&self, report: &RunReport) -> ScenarioMetrics {
@@ -337,6 +487,7 @@ impl Scenario for ServeMixedScenario {
             .with("reqs_per_s", report.throughput(self.served() as f64))
             .with("p99_sojourn_ns", p99)
             .with("olap_rows_out", self.olap_result().0 as f64)
+            .with("shed", self.shed() as f64)
     }
 }
 
@@ -517,5 +668,150 @@ mod tests {
         assert_eq!(s.split(), (1, 0));
         assert_eq!(s.served(), 128);
         assert_eq!(s.olap_result().0, 0);
+    }
+
+    /// Regression for the `--repeat` re-base bug: a warm machine's clock
+    /// is far past the trace's arrival timestamps, and before arrivals
+    /// were re-based every warm repetition treated the whole trace as an
+    /// instant backlog — all queue, no arrival process. Re-based, each
+    /// repetition replays the arrival schedule against its own start.
+    #[test]
+    fn warm_repeats_rebase_trace_arrivals() {
+        let trace = kv_trace(600, 0.5e6); // underloaded on 8 workers
+        let runs = crate::engine::Run::new(&topo())
+            .tasks(8)
+            .repeat(2)
+            .verify(true)
+            .run_repeated(
+                || Box::new(LocalCachePolicy),
+                || Box::new(ServeKvScenario::new(10_000, trace.clone())),
+            );
+        let horizon = trace.last_arrival_ns();
+        for (i, run) in runs.iter().enumerate() {
+            // The arrival process was replayed: the run spans the
+            // arrival horizon instead of draining a day-old backlog at
+            // full tilt.
+            assert!(
+                run.report.makespan_ns >= horizon,
+                "rep {i}: makespan {} under the arrival horizon {horizon}",
+                run.report.makespan_ns
+            );
+            let l = run.report.request_latency.clone().unwrap();
+            assert!(
+                l.mean_queue_ns < 5.0 * l.mean_service_ns,
+                "rep {i}: queue {} vs service {} — arrivals were not re-based",
+                l.mean_queue_ns,
+                l.mean_service_ns
+            );
+        }
+    }
+
+    /// Under overload with an SLO budget, Background is shed (and only
+    /// Background), and admission control conserves the trace length.
+    #[test]
+    fn overload_sheds_background_only_and_conserves_requests() {
+        let trace = Arc::new(Trace::synth(&TraceConfig {
+            requests: 2_000,
+            rate_rps: 100.0e6, // far past capacity: queue wait explodes
+            keyspace: 10_000,
+            seed: 3,
+            priority_mix: Some(PriorityMix {
+                critical: 0.2,
+                background: 0.4,
+            }),
+            ..Default::default()
+        }));
+        let mut s = ServeKvScenario::new(10_000, trace.clone()).with_opts(ServeOpts {
+            slo_shed_ns: Some(50_000),
+            closed_loop_think_ns: None,
+        });
+        let run = Driver::new(&topo(), Box::new(LocalCachePolicy), 4)
+            .with_verify(true)
+            .run(&mut s);
+        assert!(run.report.request_shed > 0, "overload must shed");
+        assert_eq!(
+            s.served() + run.report.request_shed,
+            trace.len() as u64,
+            "admitted + shed must equal the trace length"
+        );
+        // Per-class reports cover the classes that were served.
+        let classes: Vec<&str> = run
+            .report
+            .class_latency
+            .iter()
+            .map(|(n, _)| *n)
+            .collect();
+        assert!(classes.contains(&"critical") && classes.contains(&"normal"));
+        // Critical never waits behind the shed Background backlog.
+        let crit = &run.report.class_latency[0];
+        assert_eq!(crit.0, "critical");
+    }
+
+    /// Open- vs closed-loop overload: the open loop's tail diverges with
+    /// the backlog; the closed loop saturates (queue wait is 0 by
+    /// construction and the tail stays service-shaped).
+    #[test]
+    fn closed_loop_saturates_where_open_loop_diverges() {
+        let trace = kv_trace(1_000, 100.0e6);
+        let mut open = ServeKvScenario::new(10_000, trace.clone());
+        let open_run = Driver::new(&topo(), Box::new(LocalCachePolicy), 4)
+            .with_verify(true)
+            .run(&mut open);
+        let open_l = open_run.report.request_latency.unwrap();
+        assert!(open_l.mean_queue_ns > 10.0 * open_l.mean_service_ns);
+
+        let mut closed = ServeKvScenario::new(10_000, trace).with_opts(ServeOpts {
+            slo_shed_ns: None,
+            closed_loop_think_ns: Some(500),
+        });
+        let closed_run = Driver::new(&topo(), Box::new(LocalCachePolicy), 4)
+            .with_verify(true)
+            .run(&mut closed);
+        let closed_l = closed_run.report.request_latency.unwrap();
+        assert_eq!(closed_run.report.request_shed, 0, "closed loop never sheds");
+        assert_eq!(closed_l.count, 1_000);
+        assert!(closed_l.mean_queue_ns == 0.0, "no arrival queue to wait in");
+        assert!(
+            closed_l.p99_ns * 5 < open_l.p99_ns,
+            "closed loop p99 {} must stay far below the diverged open loop {}",
+            closed_l.p99_ns,
+            open_l.p99_ns
+        );
+    }
+
+    /// Priority tiers under load: Critical's tail stays below
+    /// Background's, and the tiered default path (all-Normal trace)
+    /// matches the historical FCFS behavior bit-for-bit.
+    #[test]
+    fn critical_tail_beats_background_under_load() {
+        let trace = Arc::new(Trace::synth(&TraceConfig {
+            requests: 2_000,
+            rate_rps: 20.0e6,
+            keyspace: 10_000,
+            seed: 3,
+            priority_mix: Some(PriorityMix {
+                critical: 0.2,
+                background: 0.3,
+            }),
+            ..Default::default()
+        }));
+        let mut s = ServeKvScenario::new(10_000, trace);
+        let run = Driver::new(&topo(), Box::new(LocalCachePolicy), 4)
+            .with_verify(true)
+            .run(&mut s);
+        let by_class: std::collections::HashMap<&str, _> = run
+            .report
+            .class_latency
+            .iter()
+            .map(|(n, l)| (*n, l.clone()))
+            .collect();
+        let crit = &by_class["critical"];
+        let bg = &by_class["background"];
+        assert!(
+            crit.p99_ns <= bg.p99_ns,
+            "critical p99 {} must not exceed background p99 {}",
+            crit.p99_ns,
+            bg.p99_ns
+        );
     }
 }

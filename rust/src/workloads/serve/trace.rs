@@ -15,19 +15,28 @@
 //!   line-oriented format for replaying recorded or hand-written traffic:
 //!
 //!   ```text
-//!   # arcas request trace: "<arrival_ns> <op> <key>" per line
+//!   # arcas request trace: "<arrival_ns> <op> <key> [priority]" per line
 //!   0 r 17
-//!   250 u 3
-//!   900 r 17
+//!   250 u 3 critical
+//!   900 r 17 bg
 //!   ```
 //!
 //!   `#` starts a comment, blank lines are skipped, ops are `r`/`read`
 //!   and `u`/`update` (alias `w`/`write`), arrivals are non-decreasing
-//!   nanoseconds. [`Trace::to_text`] writes the same format back, so
+//!   nanoseconds. The optional fourth column is a priority class
+//!   (`critical`/`normal`/`background`, defaulting to normal — see
+//!   [`Priority`]). [`Trace::to_text`] writes the same format back, so
 //!   traces round-trip.
+//!
+//! Synthetic traces assign priorities per *key* (a key models a tenant):
+//! a [`PriorityMix`] carves the keyspace into critical / background
+//! tenants by hashing the key, so the class assignment adds no PRNG
+//! draws and the arrival/op/key stream is byte-identical with or
+//! without a mix.
 
 use std::path::Path;
 
+use crate::engine::dispatch::{Prioritized, Priority};
 use crate::util::prng::Rng;
 
 /// A request's operation.
@@ -48,13 +57,85 @@ impl ReqOp {
     }
 }
 
-/// One request: when it arrives (virtual ns since trace start) and what
-/// it asks for.
+/// One request: when it arrives (virtual ns since trace start), what it
+/// asks for, and its priority class.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Request {
     pub arrival_ns: u64,
     pub op: ReqOp,
     pub key: u64,
+    pub priority: Priority,
+}
+
+impl Prioritized for Request {
+    fn arrival_ns(&self) -> u64 {
+        self.arrival_ns
+    }
+
+    fn priority(&self) -> Priority {
+        self.priority
+    }
+}
+
+/// Fractions of tenants (keys) assigned to the non-default priority
+/// classes; the remainder is Normal. Assignment is by key hash, so a
+/// key's class is stable across the whole trace — a tenant is critical,
+/// not an individual request.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PriorityMix {
+    /// Fraction of the keyspace that is [`Priority::Critical`].
+    pub critical: f64,
+    /// Fraction of the keyspace that is [`Priority::Background`].
+    pub background: f64,
+}
+
+impl PriorityMix {
+    /// Parse the CLI form `"<critical>,<background>"` (two fractions,
+    /// e.g. `0.2,0.3`), validating each lies in `[0, 1]` and the pair
+    /// sums to at most 1.
+    pub fn parse(s: &str) -> Result<PriorityMix, String> {
+        let err = || {
+            format!(
+                "bad --priority-mix {s:?}: expected \"<critical>,<background>\" \
+                 fractions, e.g. 0.2,0.3"
+            )
+        };
+        let (c, b) = s.split_once(',').ok_or_else(err)?;
+        let critical: f64 = c.trim().parse().map_err(|_| err())?;
+        let background: f64 = b.trim().parse().map_err(|_| err())?;
+        if !(0.0..=1.0).contains(&critical)
+            || !(0.0..=1.0).contains(&background)
+            || critical + background > 1.0
+        {
+            return Err(format!(
+                "bad --priority-mix {s:?}: fractions must lie in [0, 1] and sum to <= 1"
+            ));
+        }
+        Ok(PriorityMix {
+            critical,
+            background,
+        })
+    }
+
+    /// The class of a key (tenant): a hash of the key is mapped to
+    /// `[0, 1)` and compared against the critical/background bands.
+    /// Deterministic, PRNG-free — mixing priorities into a trace never
+    /// perturbs its arrival/op/key stream.
+    pub fn class_for_key(&self, key: u64) -> Priority {
+        // splitmix64 finalizer: cheap, well-mixed 64-bit avalanche.
+        let mut x = key.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        x ^= x >> 31;
+        let u = (x >> 11) as f64 / (1u64 << 53) as f64;
+        if u < self.critical {
+            Priority::Critical
+        } else if u < self.critical + self.background {
+            Priority::Background
+        } else {
+            Priority::Normal
+        }
+    }
 }
 
 /// The arrival process of a synthetic trace.
@@ -88,6 +169,8 @@ pub struct TraceConfig {
     pub read_frac: f64,
     pub arrivals: ArrivalModel,
     pub seed: u64,
+    /// Optional per-tenant priority assignment; `None` = all Normal.
+    pub priority_mix: Option<PriorityMix>,
 }
 
 impl Default for TraceConfig {
@@ -100,6 +183,7 @@ impl Default for TraceConfig {
             read_frac: 0.45,
             arrivals: ArrivalModel::Poisson,
             seed: 42,
+            priority_mix: None,
         }
     }
 }
@@ -170,10 +254,14 @@ impl Trace {
                 ReqOp::Update
             };
             let key = rng.gen_zipf(cfg.keyspace, cfg.zipf_theta);
+            let priority = cfg
+                .priority_mix
+                .map_or(Priority::Normal, |m| m.class_for_key(key));
             requests.push(Request {
                 arrival_ns: t as u64,
                 op,
                 key,
+                priority,
             });
         }
         Trace { requests }
@@ -191,13 +279,20 @@ impl Trace {
                 continue;
             }
             let mut fields = line.split_whitespace();
-            let (Some(a), Some(o), Some(k), None) =
-                (fields.next(), fields.next(), fields.next(), fields.next())
-            else {
-                return Err(format!(
-                    "trace line {}: expected \"<arrival_ns> <op> <key>\", got {raw:?}",
-                    lineno + 1
-                ));
+            let (a, o, k, p) = match (
+                fields.next(),
+                fields.next(),
+                fields.next(),
+                fields.next(),
+                fields.next(),
+            ) {
+                (Some(a), Some(o), Some(k), p, None) => (a, o, k, p),
+                _ => {
+                    return Err(format!(
+                        "trace line {}: expected \"<arrival_ns> <op> <key> [priority]\", got {raw:?}",
+                        lineno + 1
+                    ))
+                }
             };
             let arrival_ns: u64 = a.parse().map_err(|_| {
                 format!("trace line {}: bad arrival {a:?}", lineno + 1)
@@ -215,6 +310,12 @@ impl Trace {
             let key: u64 = k
                 .parse()
                 .map_err(|_| format!("trace line {}: bad key {k:?}", lineno + 1))?;
+            let priority = match p {
+                None => Priority::Normal,
+                Some(s) => s
+                    .parse()
+                    .map_err(|e| format!("trace line {}: {e}", lineno + 1))?,
+            };
             if arrival_ns < last_arrival {
                 return Err(format!(
                     "trace line {}: arrivals must be non-decreasing ({arrival_ns} after {last_arrival})",
@@ -226,6 +327,7 @@ impl Trace {
                 arrival_ns,
                 op,
                 key,
+                priority,
             });
         }
         if requests.is_empty() {
@@ -245,9 +347,20 @@ impl Trace {
     /// [`Trace::parse`]).
     pub fn to_text(&self) -> String {
         let mut out = String::with_capacity(16 * self.requests.len() + 64);
-        out.push_str("# arcas request trace: \"<arrival_ns> <op> <key>\" per line\n");
+        out.push_str("# arcas request trace: \"<arrival_ns> <op> <key> [priority]\" per line\n");
         for r in &self.requests {
-            out.push_str(&format!("{} {} {}\n", r.arrival_ns, r.op.as_str(), r.key));
+            match r.priority {
+                Priority::Normal => {
+                    out.push_str(&format!("{} {} {}\n", r.arrival_ns, r.op.as_str(), r.key))
+                }
+                p => out.push_str(&format!(
+                    "{} {} {} {}\n",
+                    r.arrival_ns,
+                    r.op.as_str(),
+                    r.key,
+                    p.as_str()
+                )),
+            }
         }
         out
     }
@@ -356,13 +469,118 @@ mod tests {
             ("", "empty"),
             ("# only comments\n", "no requests"),
             ("10 r\n", "missing key"),
-            ("10 r 5 extra\n", "extra field"),
+            ("10 r 5 urgent\n", "unknown priority"),
+            ("10 r 5 critical extra\n", "extra field"),
             ("x r 5\n", "bad arrival"),
             ("10 q 5\n", "unknown op"),
             ("10 r x\n", "bad key"),
             ("20 r 1\n10 r 2\n", "out of order"),
         ] {
             assert!(Trace::parse(bad).is_err(), "{why}: {bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn parse_accepts_a_priority_column_defaulting_to_normal() {
+        let t = Trace::parse("10 r 5\n20 u 6 critical\n30 r 7 bg\n40 r 8 n\n").unwrap();
+        let classes: Vec<Priority> = t.requests.iter().map(|r| r.priority).collect();
+        assert_eq!(
+            classes,
+            vec![
+                Priority::Normal,
+                Priority::Critical,
+                Priority::Background,
+                Priority::Normal
+            ]
+        );
+    }
+
+    #[test]
+    fn priorities_round_trip_through_the_text_format() {
+        let t = Trace::synth(&TraceConfig {
+            requests: 500,
+            keyspace: 64, // few tenants: every class is populated
+            priority_mix: Some(PriorityMix {
+                critical: 0.25,
+                background: 0.25,
+            }),
+            ..Default::default()
+        });
+        for p in Priority::ALL {
+            assert!(
+                t.requests.iter().any(|r| r.priority == p),
+                "mix produced no {p} requests"
+            );
+        }
+        let parsed = Trace::parse(&t.to_text()).unwrap();
+        assert_eq!(parsed, t);
+    }
+
+    /// The priority mix must not perturb the arrival/op/key stream: a
+    /// mixed trace is the all-Normal trace plus a class column.
+    #[test]
+    fn priority_mix_leaves_the_request_stream_byte_identical() {
+        let base = cfg(ArrivalModel::Poisson);
+        let plain = Trace::synth(&base);
+        let mixed = Trace::synth(&TraceConfig {
+            priority_mix: Some(PriorityMix {
+                critical: 0.2,
+                background: 0.3,
+            }),
+            ..base
+        });
+        assert!(plain.requests.iter().all(|r| r.priority == Priority::Normal));
+        for (a, b) in plain.requests.iter().zip(&mixed.requests) {
+            assert_eq!((a.arrival_ns, a.op, a.key), (b.arrival_ns, b.op, b.key));
+        }
+        // Same key -> same class, everywhere in the trace.
+        let mix = PriorityMix {
+            critical: 0.2,
+            background: 0.3,
+        };
+        for r in &mixed.requests {
+            assert_eq!(r.priority, mix.class_for_key(r.key));
+        }
+    }
+
+    #[test]
+    fn priority_mix_hits_the_configured_shares() {
+        let mix = PriorityMix {
+            critical: 0.2,
+            background: 0.3,
+        };
+        let n = 100_000u64;
+        let crit = (0..n)
+            .filter(|&k| mix.class_for_key(k) == Priority::Critical)
+            .count() as f64
+            / n as f64;
+        let bg = (0..n)
+            .filter(|&k| mix.class_for_key(k) == Priority::Background)
+            .count() as f64
+            / n as f64;
+        assert!((crit - 0.2).abs() < 0.01, "critical share {crit}");
+        assert!((bg - 0.3).abs() < 0.01, "background share {bg}");
+    }
+
+    #[test]
+    fn priority_mix_parses_and_validates() {
+        assert_eq!(
+            PriorityMix::parse("0.2,0.3").unwrap(),
+            PriorityMix {
+                critical: 0.2,
+                background: 0.3,
+            }
+        );
+        assert_eq!(
+            PriorityMix::parse(" 0 , 1 ").unwrap(),
+            PriorityMix {
+                critical: 0.0,
+                background: 1.0,
+            }
+        );
+        for bad in ["", "0.2", "0.2,0.3,0.4", "x,0.3", "0.8,0.8", "-0.1,0.2"] {
+            let err = PriorityMix::parse(bad).unwrap_err();
+            assert!(err.contains("--priority-mix"), "{bad:?}: {err}");
         }
     }
 }

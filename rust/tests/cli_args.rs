@@ -46,9 +46,28 @@ fn run_help_documents_the_new_flags() {
     let help = RunConfig::cli()
         .parse_from(["--help".to_string()])
         .unwrap_err();
-    for flag in ["--backend", "--repeat", "--scenario", "--verify"] {
+    for flag in [
+        "--backend",
+        "--repeat",
+        "--scenario",
+        "--verify",
+        "--priority-mix",
+        "--slo-p99",
+        "--closed-loop",
+    ] {
         assert!(help.contains(flag), "help is missing {flag}:\n{help}");
     }
+}
+
+#[test]
+fn run_rejects_conflicting_and_malformed_slo_flags() {
+    let err = parse(&["--closed-loop", "500", "--slo-p99", "100"]).unwrap_err();
+    assert!(
+        err.contains("--closed-loop") && err.contains("--slo-p99"),
+        "{err}"
+    );
+    let err = parse(&["--priority-mix", "1.5,0.2"]).unwrap_err();
+    assert!(err.contains("--priority-mix"), "{err}");
 }
 
 #[test]
@@ -235,6 +254,57 @@ fn arcas_bench_check_gates_regressions() {
     assert!(String::from_utf8_lossy(&out.stdout).contains("re-pin"));
     std::fs::remove_file(&base_path).ok();
     std::fs::remove_file(&cur_path).ok();
+}
+
+/// SLO serving end-to-end: a prioritized overloaded run with a shed
+/// budget prints the shed line and per-class tails, and verifies.
+#[test]
+fn arcas_run_serve_kv_slo_prints_class_tails_and_shed() {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_arcas"))
+        .args([
+            "run",
+            "--scenario",
+            "serve-kv",
+            "--policy",
+            "local",
+            "--cores",
+            "4",
+            "--verify",
+            "--scale",
+            "0.002",
+            "--iters",
+            "2000",
+            "--priority-mix",
+            "0.2,0.4",
+            "--slo-p99",
+            "50",
+        ])
+        .output()
+        .expect("spawn arcas binary");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        out.status.success(),
+        "arcas run serve-kv SLO failed:\nstdout:\n{stdout}\nstderr:\n{stderr}"
+    );
+    assert!(stdout.contains("verified"), "{stdout}");
+    for needle in ["class critical", "class normal", "class background"] {
+        assert!(stdout.contains(needle), "missing {needle:?} in:\n{stdout}");
+    }
+}
+
+/// A serve-only knob against a batch scenario is a hard CLI error that
+/// names the flag and lists what the scenario accepts.
+#[test]
+fn arcas_run_rejects_slo_flags_on_batch_scenarios() {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_arcas"))
+        .args(["run", "--scenario", "gups", "--priority-mix", "0.2,0.2"])
+        .output()
+        .expect("spawn arcas binary");
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("--priority-mix"), "{stderr}");
+    assert!(stderr.contains("gups"), "{stderr}");
 }
 
 /// Unknown backends must be a hard CLI error (exit != 0), not a silent

@@ -173,8 +173,7 @@ fn serve_kv_sim_report_is_golden() {
         scale: 0.002,
         seed: 11,
         iters: Some(512),
-        variant: None,
-        trace: None,
+        ..Default::default()
     };
     let run_once = || {
         let mut s = engine::by_name("serve-kv").unwrap().build(&params);
@@ -185,6 +184,16 @@ fn serve_kv_sim_report_is_golden() {
     let a = run_once();
     let b = run_once();
     assert_eq!(key(&a.report), key(&b.report));
+    // The Run builder is a pure re-plumbing of the Driver: same scenario,
+    // same report, bit for bit.
+    let mut s = engine::by_name("serve-kv").unwrap().build(&params);
+    let built = engine::Run::new(&topo())
+        .policy(by_name("local", &topo()).unwrap())
+        .tasks(8)
+        .verify(true)
+        .run(s.as_mut());
+    assert_eq!(key(&a.report), key(&built.report));
+    assert_eq!(a.report.request_latency, built.report.request_latency);
     assert_eq!(a.report.request_latency, b.report.request_latency);
     let l = a.report.request_latency.expect("serve-kv must report latency");
     assert_eq!(l.count, 512);
@@ -206,8 +215,7 @@ fn every_registry_scenario_runs_verified_on_a_toy_topology() {
         scale: 0.002,
         seed: 11,
         iters: Some(4),
-        variant: None,
-        trace: None,
+        ..Default::default()
     };
     for spec in engine::registry() {
         let mut s = spec.build(&params);
@@ -236,10 +244,9 @@ fn registry_runs_under_every_policy_on_the_toy_topology() {
         scale: 0.002,
         seed: 5,
         iters: Some(2),
-        variant: None,
-        trace: None,
+        ..Default::default()
     };
-    for policy in ["arcas", "ring", "shoal", "local", "distributed", "os_async"] {
+    for policy in ["arcas", "ring", "shoal", "local", "distributed", "os_async", "slo"] {
         let mut s = engine::by_name("bfs").unwrap().build(&params);
         let run = Driver::new(&toy, by_name(policy, &toy).unwrap(), 8)
             .with_verify(true)
