@@ -6,12 +6,14 @@
 #   make ci           everything CI runs, in order (all three workflow jobs)
 #   make host-suites  the release-mode host-backend suites CI's host job runs
 #   make host-scaling host-backend scaling smoke (BENCH_host_scaling.json)
+#   make sched-overhead  scheduler-overhead smoke: batched stepping must
+#                     beat --batch-steps 1 by 2x (BENCH_sched_overhead.json)
 #   make bench-regression  serving bench + baseline gates (CI's bench job)
 #   make artifacts    AOT-lower the JAX/Pallas kernels to HLO text (needs
 #                     python + jax; the rust build runs fine without them)
 #   make bench-smoke  quick pass over two figure benches
 
-.PHONY: verify build test fmt clippy ci artifacts bench-smoke host-suites host-scaling bench-regression
+.PHONY: verify build test fmt clippy ci artifacts bench-smoke host-suites host-scaling sched-overhead bench-regression
 
 verify: build test
 
@@ -51,15 +53,25 @@ bench-smoke:
 host-scaling:
 	cargo bench --bench micro_runtime -- --scaling-only --assert-scaling --scaling-reps 5 --workers 1,8
 
+# Scheduler-overhead smoke: batched host stepping (run-until-yield,
+# --batch-steps 16) must beat the step-per-job pipeline (--batch-steps 1)
+# by >= 2x at zero work on 8 workers. Emits BENCH_sched_overhead.json.
+sched-overhead:
+	cargo bench --bench micro_runtime -- --overhead-only --assert-overhead
+
 # The CI bench-regression gate, locally: run fig_serving + the scaling
-# smoke, then compare the emitted BENCH_*.json against ci/baselines/
-# (fail on regression, warn on improvement; unpinned baselines only
-# report). fig_serving emits both the latency file and the SLO-section
-# file (per-class p99 + shed rate, gated via the per-entry "metric" key).
-# Cargo runs bench binaries with CWD = the package root, so the emitted
-# BENCH_*.json files land under rust/.
-bench-regression: build host-scaling
+# and overhead smokes, then compare the emitted BENCH_*.json against
+# ci/baselines/ (fail on regression, warn on improvement; unpinned
+# baselines only report). fig_serving emits the latency file, the
+# SLO-section file (per-class p99 + shed rate, gated via the per-entry
+# "metric" key) and the throughput file (rps at a fixed p99 budget,
+# gated higher-is-better). Cargo runs bench binaries with CWD = the
+# package root, so the emitted BENCH_*.json files land under rust/.
+# Re-pin all baselines from fresh artifacts: `arcas bench-check --pin`.
+bench-regression: build host-scaling sched-overhead
 	cargo bench --bench fig_serving -- --quick
 	./target/release/arcas bench-check --kind serving --baseline ci/baselines/BENCH_serving_latency.json --current rust/BENCH_serving_latency.json
 	./target/release/arcas bench-check --kind serving --baseline ci/baselines/BENCH_serving_slo.json --current rust/BENCH_serving_slo.json
+	./target/release/arcas bench-check --kind serving --baseline ci/baselines/BENCH_serving_throughput.json --current rust/BENCH_serving_throughput.json
+	./target/release/arcas bench-check --kind overhead --baseline ci/baselines/BENCH_sched_overhead.json --current rust/BENCH_sched_overhead.json
 	./target/release/arcas bench-check --kind scaling --baseline ci/baselines/BENCH_host_scaling.json --current rust/BENCH_host_scaling.json

@@ -12,11 +12,16 @@
 //! `{"series": [{"policy", "backend", "p50_ns", ..., "cdf": [[ns, frac], ...]}]}`
 //! plus `BENCH_serving_slo.json` from the SLO section: a prioritized
 //! trace driven past capacity per policy (sim only), gating per-class
-//! p99s and the Background shed rate via the `"metric"` key.
+//! p99s and the Background shed rate via the `"metric"` key, and
+//! `BENCH_serving_throughput.json` from the throughput section: per
+//! policy, the highest offered rate on a x0.5..x4 ladder whose sojourn
+//! p99 still fits `--p99-budget` (sim only, `higher_is_better` so the
+//! gate fails on throughput loss, not gain).
 //!
 //! Flags beyond the standard set: `--requests N`, `--rate RPS`,
 //! `--arrivals poisson|uniform|diurnal|bursty`, `--workers N`,
-//! `--policies a,b,c`, `--slo-rate RPS`, `--slo-budget US`.
+//! `--policies a,b,c`, `--slo-rate RPS`, `--slo-budget US`,
+//! `--p99-budget US`.
 
 use std::sync::Arc;
 
@@ -57,6 +62,7 @@ fn main() {
         .opt("policies", "local,distributed,arcas", "comma-separated policy list")
         .opt("slo-rate", "8000000", "offered load of the SLO overload section, requests/second")
         .opt("slo-budget", "150", "queue-wait SLO budget of the overload section, microseconds")
+        .opt("p99-budget", "300", "sojourn p99 budget of the throughput section, microseconds")
         .parse();
     let topo = harness::bench_topology(&args);
     harness::print_header("fig_serving: open-loop serve-kv latency", &args, &topo);
@@ -314,5 +320,90 @@ fn main() {
                 .display()
         ),
         Err(e) => println!("=> could not write BENCH_serving_slo.json: {e}"),
+    }
+
+    // ---- Throughput section: requests/sec at a fixed p99 budget (sim) ----
+    // The latency series above pin a tail at one offered rate; this section
+    // pins capacity: per policy, replay the trace at a x0.5..x4 ladder of
+    // offered rates and report the highest rate whose sojourn p99 still
+    // fits `--p99-budget`. Sim only, so the number is deterministic and
+    // the CI gate can hold a throughput floor (`higher_is_better`) instead
+    // of asserting a speedup at bench time.
+    let budget_us = args.f64("p99-budget");
+    let budget_ns = (budget_us * 1_000.0) as u64;
+    const LADDER: [f64; 4] = [0.5, 1.0, 2.0, 4.0];
+    let mut tp_tab = Table::new(
+        "serve-kv throughput (sim): highest offered rate with sojourn p99 <= budget",
+        &["policy", "budget (us)", "rps_at_p99", "ladder p99s (rate:ns)"],
+    );
+    let mut tp_entries: Vec<String> = Vec::new();
+    for policy in &policies {
+        let mut best_rps = 0.0_f64;
+        let mut rung_p99s: Vec<String> = Vec::new();
+        for mult in LADDER {
+            let rung_rate = rate * mult;
+            let rung_trace = Arc::new(Trace::synth(&TraceConfig {
+                requests,
+                rate_rps: rung_rate,
+                keyspace: records as u64,
+                zipf_theta: 0.99,
+                read_frac,
+                arrivals,
+                seed: args.u64("seed"),
+                priority_mix: None,
+            }));
+            let mut s = ServeKvScenario::new(records, rung_trace);
+            let run = Run::new(&topo)
+                .policy(policy_by_name(policy, &topo, &args))
+                .tasks(workers)
+                .verify(true)
+                .run(&mut s);
+            let lat = run
+                .report
+                .request_latency
+                .unwrap_or_else(|| panic!("{policy}@{rung_rate:.0}rps: no latency report"));
+            rung_p99s.push(format!("{:.1}M:{}", rung_rate / 1e6, lat.p99_ns));
+            if lat.p99_ns <= budget_ns && rung_rate > best_rps {
+                best_rps = rung_rate;
+            }
+        }
+        tp_tab.row(vec![
+            policy.clone(),
+            format!("{budget_us:.0}"),
+            format!("{best_rps:.0}"),
+            rung_p99s.join(" "),
+        ]);
+        // `rps_at_p99` is 0 when no rung fits the budget — a pinned gate
+        // then fails loudly instead of silently skipping the policy.
+        tp_entries.push(format!(
+            "    {{\"policy\": \"{}\", \"backend\": \"sim\", \"metric\": \"rps_at_p99\", \
+             \"rps_at_p99\": {best_rps:.1}, \"higher_is_better\": true, \"tol\": 0.05}}",
+            escape(policy),
+        ));
+    }
+    tp_tab.emit("fig_serving_throughput");
+
+    let tp_json = format!(
+        "{{\n  \"bench\": \"serving_throughput\",\n  \"scenario\": \"serve-kv\",\n  \
+         \"pinned\": true,\n  \
+         \"config\": {{\"requests\": {requests}, \"base_rate_rps\": {rate}, \"arrivals\": \"{}\", \
+         \"workers\": {workers}, \"scale\": {}, \"seed\": {}, \"quick\": {}, \
+         \"budget_us\": {budget_us}, \"ladder\": \"0.5,1,2,4\"}},\n  \
+         \"series\": [\n{}\n  ]\n}}\n",
+        escape(&args.str("arrivals")),
+        args.f64("scale"),
+        args.u64("seed"),
+        args.flag("quick"),
+        tp_entries.join(",\n")
+    );
+    let tp_path = std::path::Path::new("BENCH_serving_throughput.json");
+    match std::fs::write(tp_path, &tp_json) {
+        Ok(()) => println!(
+            "=> wrote {}",
+            std::fs::canonicalize(tp_path)
+                .unwrap_or_else(|_| tp_path.to_path_buf())
+                .display()
+        ),
+        Err(e) => println!("=> could not write BENCH_serving_throughput.json: {e}"),
     }
 }

@@ -12,13 +12,21 @@
 //!     single-worker (steps charge disjoint shards concurrently); CI
 //!     pins this with `--assert-scaling` and the run emits
 //!     `BENCH_host_scaling.json` for trend tracking.
+//!   - *scheduler overhead*: steps/sec at zero work per backend × batch
+//!     budget (`--batch-steps` semantics), emitting
+//!     `BENCH_sched_overhead.json`. This is the run-until-yield batching
+//!     claim as a number: the batched host pipeline must beat
+//!     `--batch-steps 1` (pool round-trip per step) by ≥ 2× on ≥ 4
+//!     workers; CI pins it with `--assert-overhead` + the bench-check
+//!     gate.
 //!
-//! Flags: `--workers a,b,..` sets the axis, `--scaling-only` skips the
-//! micro section (CI), `--assert-scaling` makes the scaling check fatal.
+//! Flags: `--workers a,b,..` sets the scaling axis, `--scaling-only` /
+//! `--overhead-only` select one section (CI), `--assert-scaling` /
+//! `--assert-overhead` make the respective bound fatal.
 
 use arcas::controller::placement_map;
 use arcas::deque::Deque;
-use arcas::engine::{ExecBackend, Run};
+use arcas::engine::{ExecBackend, Run, DEFAULT_BATCH_STEPS};
 use arcas::mem::Placement;
 use arcas::policy::{LocalCachePolicy, ShoalPolicy};
 use arcas::sched::HostExecutor;
@@ -39,6 +47,11 @@ fn cli() -> Cli {
         .opt("scaling-reps", "3", "repetitions per workers point (best-of)")
         .flag("assert-scaling", "fail unless max-workers beats 1-worker wall time")
         .flag("scaling-only", "run only the host-backend scaling section")
+        .flag(
+            "assert-overhead",
+            "fail unless batched host steps/sec beats --batch-steps 1 by 2x",
+        )
+        .flag("overhead-only", "run only the scheduler-overhead section")
         .flag("quick", "smaller runs for smoke testing")
         .flag("bench", "(passed by `cargo bench`; ignored)")
 }
@@ -157,6 +170,102 @@ fn host_scaling(args: &Args) -> bool {
     true
 }
 
+/// The scheduler-overhead microbench: steps/sec at **zero work** per
+/// backend × batch budget. With no workload cost, wall time is pure
+/// runtime overhead — submit/park/wake round-trips, queue traffic,
+/// probe-cache setup — so the batch axis isolates exactly what
+/// run-until-yield batching amortizes. 8 ranks spread over 8 one-core
+/// chiplet shards by Shoal (worker *i* = shard *i*), well past the
+/// ≥ 4-worker bar the 2× acceptance bound is defined on. Returns false
+/// when `--assert-overhead` is set and batched host throughput fails to
+/// double the `--batch-steps 1` pipeline.
+fn sched_overhead(args: &Args) -> bool {
+    let topo = scaling_topo();
+    let ranks = 8usize;
+    let (steps_per_rank, reps) = if args.flag("quick") {
+        (2_000usize, 2u64)
+    } else {
+        (10_000usize, 3u64)
+    };
+    let total_steps = (ranks * steps_per_rank) as u64;
+    println!("### scheduler overhead (steps/sec at zero work)");
+    println!(
+        "# ranks={ranks} steps/rank={steps_per_rank} reps={reps} (best-of); \
+         topology={} (1 core/CCD: worker i = shard i)",
+        topo.name
+    );
+
+    // Best-of-reps wall time for one backend × batch point (batch is
+    // host-only; the deterministic sim ignores it).
+    let run_point = |backend: ExecBackend, batch: usize| -> f64 {
+        let mut best = u64::MAX;
+        for _ in 0..reps {
+            let (r, _) = Run::new(&topo)
+                .policy(Box::new(ShoalPolicy::new()))
+                .tasks(ranks)
+                .backend(backend)
+                .batch_steps(batch)
+                .run_group(|_| Box::new(IterTask::new(steps_per_rank, |_, _| {})));
+            assert_eq!(r.dispatches, total_steps, "batching must not change step counts");
+            best = best.min(r.wall_ns.max(1));
+        }
+        total_steps as f64 / (best as f64 / 1e9)
+    };
+
+    // points: (backend, batch_steps, steps_per_sec, tol). batch_steps 0
+    // marks the sim reference (no pool, budget not applicable).
+    let host_batches = [1usize, DEFAULT_BATCH_STEPS, 64];
+    let mut points: Vec<(&str, usize, f64, f64)> = Vec::new();
+    for &batch in &host_batches {
+        let sps = run_point(ExecBackend::Host, batch);
+        println!("  host  batch={batch:<4} {:>10.2} M steps/s", sps / 1e6);
+        points.push(("host", batch, sps, 0.50));
+    }
+    let sim_sps = run_point(ExecBackend::Sim, DEFAULT_BATCH_STEPS);
+    println!("  sim   (n/a)      {:>10.2} M steps/s", sim_sps / 1e6);
+    points.push(("sim", 0, sim_sps, 0.50));
+
+    let sps_of = |batch: usize| points.iter().find(|p| p.0 == "host" && p.1 == batch).unwrap().2;
+    let speedup = sps_of(DEFAULT_BATCH_STEPS) / sps_of(1);
+    println!(
+        "  => batched (batch={DEFAULT_BATCH_STEPS}) vs per-step: {speedup:.2}x ({})",
+        if speedup >= 2.0 { "pass" } else { "FAIL: expected >= 2x" }
+    );
+
+    // Emit BENCH_sched_overhead.json ("pinned": true + per-point tol so
+    // the bench-check re-pin flow yields a live gate; host points are
+    // loose for shared-runner noise).
+    let json_points: Vec<String> = points
+        .iter()
+        .map(|(backend, batch, sps, tol)| {
+            format!(
+                "{{\"backend\": \"{backend}\", \"batch_steps\": {batch}, \
+                 \"steps_per_sec\": {sps:.1}, \"tol\": {tol}}}"
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"sched_overhead\",\n  \"pinned\": true,\n  \"tol\": 0.40,\n  \
+         \"config\": {{\"ranks\": {ranks}, \"steps_per_rank\": {steps_per_rank}, \
+         \"quick\": {}}},\n  \
+         \"points\": [{}],\n  \"speedup_batched_vs_1\": {speedup:.3}\n}}\n",
+        args.flag("quick"),
+        json_points.join(",\n             "),
+    );
+    let path = std::path::Path::new("BENCH_sched_overhead.json");
+    match std::fs::write(path, &json) {
+        Ok(()) => println!(
+            "  => wrote {}",
+            std::fs::canonicalize(path)
+                .unwrap_or_else(|_| path.to_path_buf())
+                .display()
+        ),
+        Err(e) => println!("  => could not write BENCH_sched_overhead.json: {e}"),
+    }
+
+    !(args.flag("assert-overhead") && speedup < 2.0)
+}
+
 fn micro(args: &Args) {
     let mut b = if args.flag("quick") {
         Bencher::quick()
@@ -239,10 +348,16 @@ fn micro(args: &Args) {
 
 fn main() {
     let args = cli().parse();
-    if !args.flag("scaling-only") {
+    let scaling_only = args.flag("scaling-only");
+    let overhead_only = args.flag("overhead-only");
+    if !scaling_only && !overhead_only {
         micro(&args);
     }
-    if !host_scaling(&args) {
+    if !scaling_only && !sched_overhead(&args) {
+        eprintln!("scheduler-overhead assertion failed");
+        std::process::exit(1);
+    }
+    if !overhead_only && !host_scaling(&args) {
         eprintln!("host-backend scaling assertion failed");
         std::process::exit(1);
     }

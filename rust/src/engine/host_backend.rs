@@ -1,26 +1,37 @@
 //! Host-threaded execution backend behind [`crate::engine::execute_on`].
 //!
 //! [`execute_host`] runs a spawn group's per-rank coroutines to
-//! completion on the [`HostExecutor`] work-stealing pool: each coroutine
-//! step is one pool job on a real worker thread, with the chiplet-aware
-//! steal order from the [`Topology`] deciding which worker picks it up.
+//! completion on the [`HostExecutor`] work-stealing pool. A pool job is
+//! a **run-until-yield batch**, not a single step: the worker that picks
+//! up a rank steps its coroutine repeatedly — up to a `batch_steps`
+//! budget (the `--batch-steps` CLI knob, default
+//! [`DEFAULT_BATCH_STEPS`]) — and only goes back through the queues when
+//! the rank parks at a barrier, finishes, or exhausts the budget. That
+//! amortizes the submit/park/wake round-trip across the batch, so the
+//! steady-state cost of a fine-grained step approaches a function call;
+//! the budget keeps the quantum moldable — thieves can still rebalance
+//! at every batch boundary (`--batch-steps 1` recovers the old
+//! step-per-job pipeline exactly).
 //!
 //! ## Semantics vs the simulator
 //!
 //! - **Placement**: the policy's `initial_placement` maps each rank to a
 //!   home core; jobs are submitted to that core's worker inbox (worker
 //!   *i* = core *i*; the pool covers up to the highest home core, so
-//!   spread-out policies keep their spread). Steals move a step — and
+//!   spread-out policies keep their spread). Steals move a batch — and
 //!   its virtual-time charges — to the thief's core, like the
 //!   simulator's migration-on-steal.
-//! - **Yield**: the step's job ends and the rank is resubmitted to its
-//!   home worker, so thieves can rebalance at every yield point.
-//! - **Barrier**: non-blocking. A rank parking at a barrier releases its
-//!   worker thread (no thread ever blocks inside a job, so groups larger
-//!   than the pool cannot deadlock); the last arrival advances every
-//!   worker core's virtual clock to the epoch maximum (the simulator's
-//!   `release_barrier` rule, keeping BSP makespans comparable) and
-//!   resubmits every parked rank.
+//! - **Yield**: within the batch budget, a yield just loops to the next
+//!   step on the same worker (charging the same core). When the budget
+//!   is exhausted the job ends and the rank is resubmitted to its home
+//!   worker, so thieves can rebalance at every batch boundary.
+//! - **Barrier**: breaks the batch immediately; non-blocking. A rank
+//!   parking at a barrier releases its worker thread (no thread ever
+//!   blocks inside a job, so groups larger than the pool cannot
+//!   deadlock); the last arrival advances every worker core's virtual
+//!   clock to the epoch maximum (the simulator's `release_barrier` rule,
+//!   keeping BSP makespans comparable) and resubmits every parked rank
+//!   in one burst (one pool wake-up for the whole epoch).
 //! - **Machine model**: the [`Machine`] is shared *without any
 //!   whole-machine lock*. Accounting state is sharded per chiplet /
 //!   per socket ([`crate::coordinator`]): a step charges its worker
@@ -30,21 +41,28 @@
 //!   **truly concurrently**, workload computation included, and
 //!   cross-chiplet traffic is the only contention (mirroring the
 //!   hardware). A worker's shard is `worker_shard(topo, worker)`
-//!   (worker *i* = core *i* = chiplet *i / cores_per_chiplet*). The
+//!   (worker *i* = core *i* = chiplet *i / cores_per_chiplet*). One
+//!   [`ProbeCache`] is carried across the whole batch (same core,
+//!   consecutive steps), so remote-residency probes are paid once per
+//!   batch rather than once per step — exact for the single-core case
+//!   (pinned by `rust/tests/shard_equivalence.rs`) and the same
+//!   accepted-staleness class as concurrent fills for the rest. The
 //!   host-scaling smoke (`micro_runtime --workers …`, asserted in CI)
-//!   pins that multi-worker runs now beat single-worker wall time on a
-//!   memory-bound scenario. Policy timers / adaptive migration are
-//!   simulator-only and do not fire here.
-//! - **Determinism**: step interleaving is *not* deterministic, and with
-//!   concurrent charging the *virtual-time* interleaving of accesses is
-//!   not either (residency probes may observe concurrent fills — exactly
-//!   like real cores racing on a shared L3). Scenario results still
-//!   verify because workload state is atomics/locks and barrier rounds
-//!   are properly synchronized; virtual-time totals remain conserved
-//!   (every charge lands on exactly one shard — pinned by
-//!   `rust/tests/shard_equivalence.rs`). The conformance suite in
+//!   pins that multi-worker runs beat single-worker wall time on a
+//!   memory-bound scenario; the scheduler-overhead microbench
+//!   (`micro_runtime --overhead-only`) pins the batching speedup
+//!   itself. Policy timers / adaptive migration are simulator-only and
+//!   do not fire here.
+//! - **Determinism**: batch interleaving is *not* deterministic, and
+//!   with concurrent charging the *virtual-time* interleaving of
+//!   accesses is not either (residency probes may observe concurrent
+//!   fills — exactly like real cores racing on a shared L3). Scenario
+//!   results still verify because workload state is atomics/locks and
+//!   barrier rounds are properly synchronized; virtual-time totals
+//!   remain conserved (every charge lands on exactly one shard — pinned
+//!   by `rust/tests/shard_equivalence.rs`). The conformance suite in
 //!   `rust/tests/backend_conformance.rs` runs every registry scenario on
-//!   both backends.
+//!   both backends and pins `--batch-steps 1` ≡ default outcomes.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -52,8 +70,15 @@ use std::sync::{Arc, Mutex};
 use crate::cachesim::Outcome;
 use crate::policy::Policy;
 use crate::sched::{current_worker, worker_core, HostExecutor, RunReport, Submitter};
-use crate::sim::Machine;
+use crate::sim::{Machine, ProbeCache};
 use crate::task::{Coroutine, Step, TaskCtx};
+
+/// Default run-until-yield batch budget: coroutine steps a worker runs
+/// per pool job before the rank goes back through the queues. Large
+/// enough to amortize the pool round-trip on fine-grained scenarios,
+/// small enough that thieves can still rebalance skewed work (`1`
+/// recovers the old step-per-job pipeline; tune with `--batch-steps`).
+pub const DEFAULT_BATCH_STEPS: usize = 16;
 
 /// Ranks parked at the group barrier, plus finished count: the barrier
 /// releases when every unfinished rank is parked (same rule as the
@@ -64,7 +89,7 @@ struct BarrierState {
     epochs: u64,
 }
 
-/// A rank's parking slot: `None` while a step is in flight on a worker.
+/// A rank's parking slot: `None` while a batch is in flight on a worker.
 type RankSlot = Mutex<Option<Box<dyn Coroutine>>>;
 
 /// Shared state of one host-backed run. The machine itself carries no
@@ -78,6 +103,8 @@ struct HostRun {
     barrier: Mutex<BarrierState>,
     dispatches: AtomicU64,
     n_workers: usize,
+    /// Run-until-yield budget (>= 1): max coroutine steps per pool job.
+    batch_steps: usize,
 }
 
 /// Run `n` coroutines over `machine` on a [`HostExecutor`] pool sized to
@@ -91,6 +118,7 @@ pub(crate) fn execute_host(
     mut policy: Box<dyn Policy>,
     n: usize,
     mut make: impl FnMut(usize) -> Box<dyn Coroutine>,
+    batch_steps: usize,
 ) -> (RunReport, Machine) {
     assert!(n > 0, "spawn at least one rank");
     let wall_start = std::time::Instant::now();
@@ -112,13 +140,18 @@ pub(crate) fn execute_host(
         }),
         dispatches: AtomicU64::new(0),
         n_workers,
+        batch_steps: batch_steps.max(1),
     });
 
     let pool = HostExecutor::new(n_workers, &topo, false);
     let sub = pool.submitter();
-    for rank in 0..n {
-        submit_rank(&run, &sub, rank);
-    }
+    // One burst (and one pool wake-up) for the whole spawn group.
+    sub.execute_on_many((0..n).map(|rank| {
+        let worker = run.placement[rank] % run.n_workers;
+        let run = run.clone();
+        let sub2 = sub.clone();
+        (worker, move || step_rank(run, sub2, rank))
+    }));
     pool.wait_all();
     let host_steals = pool.steal_count() as u64;
     drop(pool);
@@ -154,7 +187,7 @@ pub(crate) fn execute_host(
     (report, machine)
 }
 
-/// Enqueue one step of `rank` on its home worker.
+/// Enqueue one batch of `rank` on its home worker.
 fn submit_rank(run: &Arc<HostRun>, sub: &Submitter, rank: usize) {
     let worker = run.placement[rank] % run.n_workers;
     let run = run.clone();
@@ -162,38 +195,60 @@ fn submit_rank(run: &Arc<HostRun>, sub: &Submitter, rank: usize) {
     sub.execute_on(worker, move || step_rank(run, sub2, rank));
 }
 
-/// One pool job: step `rank`'s coroutine once, then yield/park/finish.
-/// The step charges the sharded machine directly — no run-wide lock is
-/// taken around the step body.
+/// One pool job: a run-until-yield batch. Step `rank`'s coroutine up to
+/// `batch_steps` times on this worker — yields inside the budget loop
+/// straight to the next step; a barrier, completion, or an exhausted
+/// budget ends the batch. Steps charge the sharded machine directly —
+/// no run-wide lock is taken around the step body — and one
+/// [`ProbeCache`] is carried across the batch's steps (same core), so
+/// remote-residency probes are paid once per batch.
 fn step_rank(run: Arc<HostRun>, sub: Submitter, rank: usize) {
     let mut coro = run.ranks[rank]
         .lock()
         .unwrap()
         .take()
         .expect("rank stepped while already in flight");
-    // Charge the worker actually running the step (worker i = core i, the
-    // `worker_core` map), so steals move virtual-time charges exactly
-    // like the simulator — and the charges land on the worker's own
-    // chiplet shard (`worker_shard`).
+    // Charge the worker actually running the batch (worker i = core i,
+    // the `worker_core` map), so steals move virtual-time charges
+    // exactly like the simulator — and the charges land on the worker's
+    // own chiplet shard (`worker_shard`).
     let worker = current_worker().expect("step_rank runs on a pool worker");
     let core = worker_core(&run.machine.topo, worker);
-    let step = {
-        let machine = &run.machine;
-        let mut ctx = TaskCtx {
-            machine,
-            core,
-            task_id: rank,
-            rank,
-            group_size: run.ranks.len(),
-            now_ns: machine.now(core),
-            step_outcome: Outcome::default(),
-            probe_cache: Default::default(),
+    let mut cache = ProbeCache::default();
+    let mut steps_done: u64 = 0;
+    let step = loop {
+        let step = {
+            let machine = &run.machine;
+            let mut ctx = TaskCtx {
+                machine,
+                core,
+                task_id: rank,
+                rank,
+                group_size: run.ranks.len(),
+                now_ns: machine.now(core),
+                step_outcome: Outcome::default(),
+                probe_cache: cache,
+            };
+            let step = coro.step(&mut ctx);
+            // Carry the probe cache into the batch's next step (the
+            // context itself stays per-step).
+            cache = ctx.probe_cache;
+            step
         };
-        coro.step(&mut ctx)
+        steps_done += 1;
+        match step {
+            Step::Yield if (steps_done as usize) < run.batch_steps => continue,
+            other => break other,
+        }
     };
-    run.dispatches.fetch_add(1, Ordering::Relaxed);
+    // `dispatches` counts coroutine *steps* (batching must not change
+    // it — pinned by the batching-equivalence conformance test), so one
+    // add covers the whole batch.
+    run.dispatches.fetch_add(steps_done, Ordering::Relaxed);
     match step {
         Step::Yield => {
+            // Budget exhausted: back through the queues so thieves can
+            // rebalance.
             *run.ranks[rank].lock().unwrap() = Some(coro);
             submit_rank(&run, &sub, rank);
         }
@@ -222,7 +277,8 @@ fn step_rank(run: Arc<HostRun>, sub: Submitter, rank: usize) {
 
 /// Resume a released barrier epoch: synchronize the worker cores'
 /// virtual clocks to the epoch max (every rank resumes at the latest
-/// clock, like the simulator's `release_barrier`), then resubmit.
+/// clock, like the simulator's `release_barrier`), then resubmit every
+/// parked rank in one burst — one pool wake-up for the whole epoch.
 ///
 /// Runs lock-free over the clock atomics: a barrier only releases once
 /// every unfinished rank is parked, so no step is concurrently charging
@@ -238,9 +294,12 @@ fn release_ranks(run: &Arc<HostRun>, sub: &Submitter, woken: Vec<usize>) {
     for c in 0..run.n_workers {
         run.machine.advance_to(c, t_max);
     }
-    for r in woken {
-        submit_rank(run, sub, r);
-    }
+    sub.execute_on_many(woken.into_iter().map(|r| {
+        let worker = run.placement[r] % run.n_workers;
+        let run = run.clone();
+        let sub2 = sub.clone();
+        (worker, move || step_rank(run, sub2, r))
+    }));
 }
 
 /// If every unfinished rank is parked, take them all for resubmission.
@@ -266,9 +325,13 @@ mod tests {
 
     #[test]
     fn single_task_completes_on_host() {
-        let (report, _) = execute_host(machine(), Box::new(LocalCachePolicy), 1, |_| {
-            Box::new(FnTask(|ctx: &mut TaskCtx<'_>| ctx.compute_ns(1000)))
-        });
+        let (report, _) = execute_host(
+            machine(),
+            Box::new(LocalCachePolicy),
+            1,
+            |_| Box::new(FnTask(|ctx: &mut TaskCtx<'_>| ctx.compute_ns(1000))),
+            DEFAULT_BATCH_STEPS,
+        );
         assert_eq!(report.dispatches, 1);
         assert!(report.makespan_ns >= 1000);
         assert!(report.wall_ns > 0);
@@ -276,11 +339,60 @@ mod tests {
 
     #[test]
     fn yields_step_the_expected_number_of_times() {
-        let (report, _) = execute_host(machine(), Box::new(LocalCachePolicy), 4, |_| {
-            Box::new(IterTask::new(10, |ctx, _| ctx.compute_ns(100)))
-        });
-        // 4 tasks x 10 steps.
+        let (report, _) = execute_host(
+            machine(),
+            Box::new(LocalCachePolicy),
+            4,
+            |_| Box::new(IterTask::new(10, |ctx, _| ctx.compute_ns(100))),
+            DEFAULT_BATCH_STEPS,
+        );
+        // 4 tasks x 10 steps: dispatches counts steps, not batches.
         assert_eq!(report.dispatches, 40);
+    }
+
+    #[test]
+    fn batch_budget_one_matches_default_step_counts() {
+        // --batch-steps 1 is exactly the old step-per-job pipeline; the
+        // observable outcome (steps run, barrier structure) must match
+        // the batched default.
+        let run_with = |batch: usize| {
+            execute_host(
+                machine(),
+                Box::new(LocalCachePolicy),
+                4,
+                |_| Box::new(BspTask::new(3, |ctx, _| ctx.compute_ns(100))),
+                batch,
+            )
+            .0
+        };
+        let per_step = run_with(1);
+        let batched = run_with(DEFAULT_BATCH_STEPS);
+        assert_eq!(per_step.dispatches, batched.dispatches);
+        assert_eq!(per_step.barrier_epochs, batched.barrier_epochs);
+    }
+
+    #[test]
+    fn a_barrier_breaks_the_batch() {
+        // Budget far above the phase length: barriers must still fire
+        // per phase (a batch never runs through a barrier), so epochs
+        // and hits match the step-per-job pipeline.
+        use std::sync::atomic::AtomicUsize;
+        let hits = Arc::new(AtomicUsize::new(0));
+        let (report, _) = execute_host(
+            machine(),
+            Box::new(LocalCachePolicy),
+            4,
+            |_| {
+                let hits = hits.clone();
+                Box::new(BspTask::new(2, move |ctx, _| {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                    ctx.compute_ns(10);
+                }))
+            },
+            1_000,
+        );
+        assert_eq!(hits.load(Ordering::Relaxed), 4 * 2);
+        assert_eq!(report.barrier_epochs, 1);
     }
 
     #[test]
@@ -293,13 +405,19 @@ mod tests {
         topo.chiplets_per_numa = 1;
         assert_eq!(topo.num_cores(), 8);
         let hits = Arc::new(AtomicUsize::new(0));
-        let (report, _) = execute_host(Machine::new(topo), Box::new(LocalCachePolicy), 32, |_| {
-            let hits = hits.clone();
-            Box::new(BspTask::new(3, move |ctx, _| {
-                hits.fetch_add(1, Ordering::Relaxed);
-                ctx.compute_ns(10);
-            }))
-        });
+        let (report, _) = execute_host(
+            Machine::new(topo),
+            Box::new(LocalCachePolicy),
+            32,
+            |_| {
+                let hits = hits.clone();
+                Box::new(BspTask::new(3, move |ctx, _| {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                    ctx.compute_ns(10);
+                }))
+            },
+            DEFAULT_BATCH_STEPS,
+        );
         assert_eq!(hits.load(Ordering::Relaxed), 32 * 3);
         assert_eq!(report.barrier_epochs, 2);
     }
@@ -309,12 +427,18 @@ mod tests {
         // Phase 1: rank 0 slow; phase 2: rank 1 slow. With clock sync at
         // the barrier the phases cannot overlap in virtual time, so the
         // makespan must cover both slow phases (the simulator's rule).
-        let (report, _) = execute_host(machine(), Box::new(LocalCachePolicy), 2, |rank| {
-            Box::new(BspTask::new(2, move |ctx, iter| {
-                let slow = (iter == 0) == (rank == 0);
-                ctx.compute_ns(if slow { 1_000_000 } else { 1_000 });
-            }))
-        });
+        let (report, _) = execute_host(
+            machine(),
+            Box::new(LocalCachePolicy),
+            2,
+            |rank| {
+                Box::new(BspTask::new(2, move |ctx, iter| {
+                    let slow = (iter == 0) == (rank == 0);
+                    ctx.compute_ns(if slow { 1_000_000 } else { 1_000 });
+                }))
+            },
+            DEFAULT_BATCH_STEPS,
+        );
         assert_eq!(report.barrier_epochs, 1);
         assert!(
             report.makespan_ns >= 2_000_000,
@@ -325,9 +449,13 @@ mod tests {
 
     #[test]
     fn machine_comes_back_warm() {
-        let (_, machine) = execute_host(machine(), Box::new(LocalCachePolicy), 2, |_| {
-            Box::new(FnTask(|ctx: &mut TaskCtx<'_>| ctx.compute_ns(50)))
-        });
+        let (_, machine) = execute_host(
+            machine(),
+            Box::new(LocalCachePolicy),
+            2,
+            |_| Box::new(FnTask(|ctx: &mut TaskCtx<'_>| ctx.compute_ns(50))),
+            DEFAULT_BATCH_STEPS,
+        );
         assert!(machine.max_time() >= 50);
     }
 
@@ -353,6 +481,7 @@ mod tests {
             Box::new(DistributedCachePolicy),
             8,
             |_| Box::new(IterTask::new(20, |ctx, _| ctx.compute_ns(1_000))),
+            DEFAULT_BATCH_STEPS,
         );
         assert_eq!(report.dispatches, 8 * steps);
         // Total charged virtual time is conserved: 8 ranks x 20 x 1µs

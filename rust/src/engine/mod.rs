@@ -46,6 +46,7 @@ pub use dispatch::{
     ClassLatencyRecorder, LatencyRecorder, OpenLoopQueue, Prioritized, Priority, SloSignal,
     TieredQueue,
 };
+pub use host_backend::DEFAULT_BATCH_STEPS;
 pub use registry::{by_name, registry, scenarios_table, ScenarioParams, ScenarioSpec};
 pub use runcfg::RunConfig;
 
@@ -236,6 +237,7 @@ pub struct Run {
     timer_ns: Option<u64>,
     verify: bool,
     repeat: usize,
+    batch_steps: usize,
 }
 
 impl Run {
@@ -257,6 +259,7 @@ impl Run {
             timer_ns: None,
             verify: false,
             repeat: 1,
+            batch_steps: DEFAULT_BATCH_STEPS,
         }
     }
 
@@ -300,6 +303,18 @@ impl Run {
         self
     }
 
+    /// Host backend run-until-yield budget: max coroutine steps a pool
+    /// worker runs per job before the rank goes back through the queues
+    /// (default [`DEFAULT_BATCH_STEPS`]; `1` recovers the old
+    /// step-per-job pipeline — same outcomes, more pool round-trips).
+    /// The deterministic sim backend has no pool round-trip to amortize
+    /// and ignores it, so sim reports stay byte-identical.
+    pub fn batch_steps(mut self, batch_steps: usize) -> Self {
+        assert!(batch_steps >= 1, "batch_steps must be >= 1");
+        self.batch_steps = batch_steps;
+        self
+    }
+
     fn take_policy(&mut self) -> Box<dyn Policy> {
         self.policy.take().unwrap_or_else(|| Box::new(LocalCachePolicy))
     }
@@ -314,6 +329,7 @@ impl Run {
             self.timer_ns,
             self.verify,
             self.backend,
+            self.batch_steps,
             scenario,
         )
     }
@@ -340,6 +356,7 @@ impl Run {
             timer_ns,
             verify,
             repeat,
+            batch_steps,
         } = self;
         let mut machine = Some(machine);
         let mut runs = Vec::with_capacity(repeat);
@@ -352,6 +369,7 @@ impl Run {
                 timer_ns,
                 verify,
                 backend,
+                batch_steps,
                 s.as_mut(),
             );
             // The run keeps its machine (callers inspect residency);
@@ -372,19 +390,21 @@ impl Run {
         make: impl FnMut(usize) -> Box<dyn Coroutine>,
     ) -> (RunReport, Machine) {
         let policy = self.take_policy();
-        execute_on(
+        execute_on_with(
             self.backend,
             self.machine,
             policy,
             self.timer_ns,
             self.tasks,
             make,
+            self.batch_steps,
         )
     }
 }
 
 /// One scenario execution: setup → SLO wiring → execute → verify →
 /// report decoration. Shared by [`Run`] and the legacy [`Driver`].
+#[allow(clippy::too_many_arguments)]
 fn run_once(
     mut machine: Machine,
     mut policy: Box<dyn Policy>,
@@ -392,6 +412,7 @@ fn run_once(
     timer_ns: Option<u64>,
     verify: bool,
     backend: ExecBackend,
+    batch_steps: usize,
     scenario: &mut dyn Scenario,
 ) -> ScenarioRun {
     // Warm machines carry virtual time and counters from earlier
@@ -407,9 +428,15 @@ fn run_once(
     if let Some(signal) = scenario.slo_signal() {
         policy.connect_slo(signal);
     }
-    let (mut report, machine) = execute_on(backend, machine, policy, timer_ns, tasks, |rank| {
-        scenario.spawn(rank)
-    });
+    let (mut report, machine) = execute_on_with(
+        backend,
+        machine,
+        policy,
+        timer_ns,
+        tasks,
+        |rank| scenario.spawn(rank),
+        batch_steps,
+    );
     report.makespan_ns = report.makespan_ns.saturating_sub(t0);
     report.counts.local -= counts0.local;
     report.counts.near -= counts0.near;
@@ -496,7 +523,16 @@ impl Driver {
             verify,
             backend,
         } = self;
-        run_once(machine, policy, tasks, timer_ns, verify, backend, scenario)
+        run_once(
+            machine,
+            policy,
+            tasks,
+            timer_ns,
+            verify,
+            backend,
+            DEFAULT_BATCH_STEPS,
+            scenario,
+        )
     }
 }
 
@@ -517,6 +553,29 @@ pub fn execute_on(
     n: usize,
     make: impl FnMut(usize) -> Box<dyn Coroutine>,
 ) -> (RunReport, Machine) {
+    execute_on_with(
+        backend,
+        machine,
+        policy,
+        timer_ns,
+        n,
+        make,
+        DEFAULT_BATCH_STEPS,
+    )
+}
+
+/// [`execute_on`] with an explicit host `batch_steps` budget (the
+/// `Run::batch_steps` / `--batch-steps` knob). The sim backend ignores
+/// it — the deterministic executor has no pool round-trip to amortize.
+fn execute_on_with(
+    backend: ExecBackend,
+    machine: Machine,
+    policy: Box<dyn Policy>,
+    timer_ns: Option<u64>,
+    n: usize,
+    make: impl FnMut(usize) -> Box<dyn Coroutine>,
+    batch_steps: usize,
+) -> (RunReport, Machine) {
     match backend {
         ExecBackend::Sim => {
             let mut ex = SimExecutor::new(machine, policy);
@@ -527,7 +586,7 @@ pub fn execute_on(
             let report = ex.run();
             (report, ex.machine)
         }
-        ExecBackend::Host => host_backend::execute_host(machine, policy, n, make),
+        ExecBackend::Host => host_backend::execute_host(machine, policy, n, make, batch_steps),
     }
 }
 
@@ -762,5 +821,50 @@ mod tests {
     #[should_panic(expected = "repeat must be >= 1")]
     fn run_builder_rejects_zero_repeat() {
         let _ = Run::new(&Topology::milan_1s()).repeat(0);
+    }
+
+    #[test]
+    #[should_panic(expected = "batch_steps must be >= 1")]
+    fn run_builder_rejects_zero_batch_steps() {
+        let _ = Run::new(&Topology::milan_1s()).batch_steps(0);
+    }
+
+    #[test]
+    fn batch_steps_one_matches_the_batched_default_on_host() {
+        use crate::task::IterTask;
+        let run_with = |batch: usize| {
+            Run::new(&Topology::milan_1s())
+                .tasks(4)
+                .backend(ExecBackend::Host)
+                .batch_steps(batch)
+                .run_group(|_| Box::new(IterTask::new(10, |ctx, _| ctx.compute_ns(100))))
+                .0
+        };
+        let per_step = run_with(1);
+        let batched = run_with(DEFAULT_BATCH_STEPS);
+        // dispatches counts coroutine steps, not pool jobs, so the
+        // budget must not change it.
+        assert_eq!(per_step.dispatches, 40);
+        assert_eq!(batched.dispatches, 40);
+    }
+
+    #[test]
+    fn batch_steps_is_ignored_by_the_sim_backend() {
+        use crate::task::IterTask;
+        let run_with = |batch: usize| {
+            Run::new(&Topology::milan_1s())
+                .tasks(4)
+                .policy(Box::new(LocalCachePolicy))
+                .batch_steps(batch)
+                .run_group(|_| Box::new(IterTask::new(10, |ctx, _| ctx.compute_ns(100))))
+                .0
+        };
+        let a = run_with(1);
+        let b = run_with(64);
+        // Deterministic sim: reports must be byte-identical regardless
+        // of the host-only knob.
+        assert_eq!(a.makespan_ns, b.makespan_ns);
+        assert_eq!(a.dispatches, b.dispatches);
+        assert_eq!(a.steals, b.steals);
     }
 }

@@ -500,7 +500,13 @@ pub fn scenarios_table() -> String {
             s.about.to_string(),
         ]);
     }
-    tab.render()
+    let mut out = tab.render();
+    out.push_str(
+        "\nevery scenario also accepts the engine-wide knobs: --policy, --cores, \
+         --backend sim|host, --repeat, --batch-steps (host run-until-yield batch \
+         budget; 1 = step-per-job), --topology, --timer-us, --seed, --verify\n",
+    );
+    out
 }
 
 #[cfg(test)]
@@ -664,6 +670,9 @@ mod tests {
         let t = scenarios_table();
         assert!(t.contains("params"));
         assert!(t.contains("--priority-mix"));
+        // The footer documents the engine-wide knobs every scenario takes.
+        assert!(t.contains("--batch-steps"));
+        assert!(t.contains("--backend sim|host"));
     }
 
     #[test]

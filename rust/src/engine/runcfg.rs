@@ -2,7 +2,7 @@
 //! `main.rs`) so argument validation is unit-testable: unknown backends
 //! and `--repeat 0` are rejected here with actionable messages.
 
-use super::{registry, ExecBackend, ScenarioParams};
+use super::{registry, ExecBackend, ScenarioParams, DEFAULT_BATCH_STEPS};
 use crate::util::cli::Cli;
 use crate::workloads::serve::PriorityMix;
 
@@ -16,6 +16,9 @@ pub struct RunConfig {
     pub backend: ExecBackend,
     /// Warm-cache repetitions over one machine (`--repeat N`, N >= 1).
     pub repeat: usize,
+    /// Host-backend run-until-yield batch budget (`--batch-steps N`,
+    /// N >= 1; 1 = the old step-per-job pipeline). Ignored by sim.
+    pub batch_steps: usize,
     pub verify: bool,
     pub topology: String,
     pub timer_us: u64,
@@ -35,6 +38,11 @@ impl RunConfig {
             .opt("cores", "16", "worker count")
             .opt("backend", "sim", "executor backend: sim (virtual time) | host (real threads)")
             .opt("repeat", "1", "run N times on one machine (warm caches after run 1)")
+            .opt(
+                "batch-steps",
+                "16",
+                "host backend: max coroutine steps per pool job (run-until-yield batching; 1 = step-per-job)",
+            )
             .opt("scale", "0.02", "dataset scale factor vs the paper's sizes")
             .opt_nodefault("iters", "intensity knob (PR iterations, txns/core, SGD epochs)")
             .opt_nodefault(
@@ -73,6 +81,15 @@ impl RunConfig {
             .map_err(|_| format!("--repeat {} is not a number", a.str("repeat")))?;
         if repeat == 0 {
             return Err("--repeat must be >= 1 (each repetition reuses the warm machine)".into());
+        }
+        let batch_steps: usize = a
+            .str("batch-steps")
+            .parse()
+            .map_err(|_| format!("--batch-steps {} is not a number", a.str("batch-steps")))?;
+        if batch_steps == 0 {
+            return Err(
+                "--batch-steps must be >= 1 (1 disables run-until-yield batching)".into(),
+            );
         }
         let cores: usize = a
             .str("cores")
@@ -130,6 +147,7 @@ impl RunConfig {
             cores,
             backend,
             repeat,
+            batch_steps,
             verify: a.flag("verify"),
             topology: a.str("topology"),
             timer_us: a.u64("timer-us"),
@@ -163,8 +181,20 @@ mod tests {
         assert_eq!(c.backend, ExecBackend::Sim);
         assert_eq!(c.repeat, 1);
         assert_eq!(c.cores, 16);
+        // The CLI default string must track the engine constant.
+        assert_eq!(c.batch_steps, DEFAULT_BATCH_STEPS);
         assert!(!c.verify);
         assert!(!c.deprecated_workload);
+    }
+
+    #[test]
+    fn batch_steps_parses_and_rejects_zero() {
+        let c = from(&["--batch-steps", "4"]).unwrap();
+        assert_eq!(c.batch_steps, 4);
+        let err = from(&["--batch-steps", "0"]).unwrap_err();
+        assert!(err.contains("--batch-steps must be >= 1"), "{err}");
+        let err = from(&["--batch-steps", "lots"]).unwrap_err();
+        assert!(err.contains("--batch-steps"), "{err}");
     }
 
     #[test]
@@ -250,6 +280,8 @@ mod tests {
             .unwrap_err();
         assert!(help.contains("--backend"));
         assert!(help.contains("--repeat"));
+        assert!(help.contains("--batch-steps"));
+        assert!(help.contains("run-until-yield"));
         assert!(help.contains("sim (virtual time) | host (real threads)"));
         assert!(help.contains("--priority-mix"));
         assert!(help.contains("--slo-p99"));

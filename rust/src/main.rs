@@ -184,6 +184,7 @@ fn cmd_run(args: Vec<String>) {
     let runs = engine::Run::new(&topo)
         .tasks(rc.cores)
         .backend(rc.backend)
+        .batch_steps(rc.batch_steps)
         .verify(rc.verify)
         .repeat(rc.repeat)
         .run_repeated(make_policy, || spec.build(&rc.params));
@@ -241,8 +242,14 @@ fn cmd_artifacts() {
 /// baseline is an unpinned bootstrap placeholder), exit 1 = regression
 /// or missing series, exit 2 = usage/parse error. Improvements beyond
 /// tolerance pass with a re-pin nudge.
+///
+/// `--pin` flips the gate into pinning mode: every baseline under
+/// `--baselines-dir` with a freshly emitted counterpart under
+/// `--artifacts-dir` is overwritten by that artifact (with
+/// `"pinned": true` forced), turning bootstrap placeholders into real
+/// gates in one command after a bench run.
 fn cmd_bench_check(args: Vec<String>) {
-    use arcas::util::baseline::{check_scaling, check_serving};
+    use arcas::util::baseline::{check_overhead, check_scaling, check_serving};
     use arcas::util::json::Json;
 
     let cli = arcas::util::cli::Cli::new(
@@ -252,7 +259,8 @@ fn cmd_bench_check(args: Vec<String>) {
     .opt(
         "kind",
         "serving",
-        "metric family: serving (p99, lower=better) | scaling (speedup, higher=better)",
+        "metric family: serving (latency, lower=better unless the entry says otherwise) | \
+         scaling (speedup, higher=better) | overhead (steps/sec, higher=better)",
     )
     .opt_nodefault("baseline", "checked-in baseline json (ci/baselines/...)")
     .opt_nodefault("current", "freshly emitted BENCH_*.json")
@@ -260,6 +268,20 @@ fn cmd_bench_check(args: Vec<String>) {
         "tolerance",
         "0.25",
         "default relative tolerance for entries without their own \"tol\"",
+    )
+    .flag(
+        "pin",
+        "copy fresh BENCH_*.json artifacts over their baselines (forces \"pinned\": true)",
+    )
+    .opt(
+        "baselines-dir",
+        "ci/baselines",
+        "with --pin: directory of checked-in baselines to overwrite",
+    )
+    .opt(
+        "artifacts-dir",
+        "rust",
+        "with --pin: directory where the benches emitted fresh BENCH_*.json",
     );
     let a = match cli.parse_from(args) {
         Ok(a) => a,
@@ -268,6 +290,10 @@ fn cmd_bench_check(args: Vec<String>) {
             std::process::exit(2);
         }
     };
+    if a.flag("pin") {
+        cmd_bench_pin(&a.str("baselines-dir"), &a.str("artifacts-dir"));
+        return;
+    }
     let load = |opt: &str| -> Json {
         let Some(path) = a.get(opt) else {
             eprintln!("bench-check: --{opt} is required");
@@ -289,8 +315,9 @@ fn cmd_bench_check(args: Vec<String>) {
     let result = match kind.as_str() {
         "serving" => check_serving(&baseline, &current, tol),
         "scaling" => check_scaling(&baseline, &current, tol),
+        "overhead" => check_overhead(&baseline, &current, tol),
         other => {
-            eprintln!("bench-check: unknown --kind {other} (serving|scaling)");
+            eprintln!("bench-check: unknown --kind {other} (serving|scaling|overhead)");
             std::process::exit(2);
         }
     };
@@ -311,6 +338,62 @@ fn cmd_bench_check(args: Vec<String>) {
         );
     }
     println!("bench-check: OK");
+}
+
+/// `bench-check --pin`: for every `BENCH_*.json` baseline, copy its
+/// freshly emitted artifact over it (validated: both parse, bench names
+/// match, `"pinned"` forced true). Baselines without a fresh artifact
+/// are reported and left alone. Exit 1 when nothing could be pinned.
+fn cmd_bench_pin(baselines_dir: &str, artifacts_dir: &str) {
+    let entries = std::fs::read_dir(baselines_dir).unwrap_or_else(|e| {
+        eprintln!("bench-check --pin: cannot read {baselines_dir}: {e}");
+        std::process::exit(2);
+    });
+    let mut pinned = 0usize;
+    let mut missing = Vec::new();
+    let mut names: Vec<String> = entries
+        .filter_map(|e| e.ok())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .filter(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+        .collect();
+    names.sort();
+    for name in &names {
+        let base_path = format!("{baselines_dir}/{name}");
+        let cur_path = format!("{artifacts_dir}/{name}");
+        let Ok(cur_text) = std::fs::read_to_string(&cur_path) else {
+            missing.push(cur_path);
+            continue;
+        };
+        let base_text = std::fs::read_to_string(&base_path).unwrap_or_else(|e| {
+            eprintln!("bench-check --pin: cannot read {base_path}: {e}");
+            std::process::exit(2);
+        });
+        match arcas::util::baseline::pin_payload(&base_text, &cur_text) {
+            Ok(text) => {
+                std::fs::write(&base_path, text).unwrap_or_else(|e| {
+                    eprintln!("bench-check --pin: cannot write {base_path}: {e}");
+                    std::process::exit(2);
+                });
+                println!("pinned {base_path} <- {cur_path}");
+                pinned += 1;
+            }
+            Err(e) => {
+                eprintln!("bench-check --pin: {base_path}: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
+    for m in &missing {
+        println!("no fresh artifact at {m} — baseline left as-is (run the bench first)");
+    }
+    if pinned == 0 {
+        eprintln!(
+            "bench-check --pin: nothing pinned ({} baselines, 0 fresh artifacts under {artifacts_dir})",
+            names.len()
+        );
+        std::process::exit(1);
+    }
+    println!("bench-check --pin: {pinned} baseline(s) pinned");
 }
 
 fn cmd_policies() {

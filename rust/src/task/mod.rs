@@ -57,7 +57,10 @@ pub struct TaskCtx<'a> {
     /// Per-step cache of remote residency probes: accesses in this step
     /// probe each `(region, remote chiplet)` pair once instead of once
     /// per access (bit-identical on the Sim backend — writes evict; see
-    /// [`ProbeCache`]). Fresh per step, like the context itself.
+    /// [`ProbeCache`]). Fresh per step on the Sim backend; the host
+    /// backend carries it across the consecutive steps of a
+    /// run-until-yield batch (the rank stays on one core for the whole
+    /// batch, so the carry is exact — `shard_equivalence` pins this).
     pub probe_cache: ProbeCache,
 }
 

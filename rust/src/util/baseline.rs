@@ -11,13 +11,21 @@
 //!   comparisons are reported but never fail, so the very first CI run
 //!   on a new bench can mint the numbers to pin.
 //!
-//! Two metrics are gated today: the per-series p99 request sojourn of
-//! `fig_serving` (`BENCH_serving_latency.json`, lower is better) and the
-//! host-scaling speedup of `micro_runtime` (`BENCH_host_scaling.json`,
+//! Gated metric families: the per-series latency metrics of
+//! `fig_serving` (`BENCH_serving_latency.json` / `BENCH_serving_slo.json`,
+//! lower is better; `BENCH_serving_throughput.json` entries flip the
+//! direction with `"higher_is_better": true`), the host-scaling speedup
+//! of `micro_runtime` (`BENCH_host_scaling.json`, higher is better) and
+//! the zero-work scheduler throughput of the same bench
+//! (`BENCH_sched_overhead.json`, steps/sec per backend × batch budget,
 //! higher is better). Each baseline entry may carry its own `"tol"`
 //! (relative band, e.g. `0.25`); entries without one use the caller's
 //! default — keep simulator series tight (they are deterministic) and
 //! host series loose (shared-runner noise).
+//!
+//! [`pin_payload`] backs `arcas bench-check --pin`: one command that
+//! copies fresh artifacts over their baselines (forcing
+//! `"pinned": true`) instead of hand-editing placeholders.
 
 use super::json::Json;
 
@@ -147,11 +155,13 @@ fn check_config(baseline: &Json, current: &Json) -> Result<(), String> {
     Ok(())
 }
 
-/// Gate `BENCH_serving_latency.json` (and `BENCH_serving_slo.json`):
-/// per-(policy, backend) latency metrics, lower is better. Each baseline
-/// series entry may carry a `"metric"` key naming the gated field
-/// (default `"p99_ns"`), so one file can gate overall p99, per-class
-/// p99s and shed rates side by side. Series without a `"tol"` use
+/// Gate `BENCH_serving_latency.json` (and `BENCH_serving_slo.json` /
+/// `BENCH_serving_throughput.json`): per-(policy, backend) metrics,
+/// lower is better unless the baseline entry says
+/// `"higher_is_better": true` (throughput series). Each baseline series
+/// entry may carry a `"metric"` key naming the gated field (default
+/// `"p99_ns"`), so one file can gate overall p99, per-class p99s, shed
+/// rates and requests/sec side by side. Series without a `"tol"` use
 /// `default_tol`.
 pub fn check_serving(
     baseline: &Json,
@@ -186,8 +196,11 @@ pub fn check_serving(
                     && metric_of(c) == metric
             })
             .and_then(|c| c.num(&metric));
+        // Latency-shaped metrics default to lower-is-better; throughput
+        // entries flip the direction in the baseline.
+        let hib = b.get("higher_is_better").and_then(Json::as_bool) == Some(true);
         let (current, verdict) = match cur {
-            Some(v) => (v, verdict(base, v, tol, false)),
+            Some(v) => (v, verdict(base, v, tol, hib)),
             None => (f64::NAN, Verdict::Missing),
         };
         checks.push(Check {
@@ -234,6 +247,103 @@ pub fn check_scaling(
         }],
         unpinned: is_unpinned(baseline),
     })
+}
+
+/// Gate `BENCH_sched_overhead.json`: zero-work scheduler throughput in
+/// steps/sec per `(backend, batch_steps)` point, higher is better, plus
+/// the headline `speedup_batched_vs_1` ratio (batched host pipeline vs
+/// `--batch-steps 1`) when the baseline carries one. Points without a
+/// `"tol"` use `default_tol`.
+pub fn check_overhead(
+    baseline: &Json,
+    current: &Json,
+    default_tol: f64,
+) -> Result<GateResult, String> {
+    check_config(baseline, current)?;
+    let base_pts = baseline
+        .get("points")
+        .and_then(Json::as_arr)
+        .ok_or("baseline has no \"points\" array")?;
+    let cur_pts = current
+        .get("points")
+        .and_then(Json::as_arr)
+        .ok_or("current results have no \"points\" array")?;
+    let mut checks = Vec::new();
+    for b in base_pts {
+        let backend = b
+            .str_of("backend")
+            .ok_or("baseline point missing \"backend\"")?;
+        let batch = b
+            .num("batch_steps")
+            .ok_or("baseline point missing \"batch_steps\"")? as u64;
+        let base = b.num("steps_per_sec").ok_or_else(|| {
+            format!("baseline point {backend}/batch{batch} missing \"steps_per_sec\"")
+        })?;
+        let tol = b.num("tol").unwrap_or(default_tol);
+        let cur = cur_pts
+            .iter()
+            .find(|c| {
+                c.str_of("backend") == Some(backend)
+                    && c.num("batch_steps").map(|v| v as u64) == Some(batch)
+            })
+            .and_then(|c| c.num("steps_per_sec"));
+        let (current_v, verdict) = match cur {
+            Some(v) => (v, verdict(base, v, tol, true)),
+            None => (f64::NAN, Verdict::Missing),
+        };
+        checks.push(Check {
+            label: format!("{backend} batch={batch} steps_per_sec"),
+            base,
+            current: current_v,
+            tol,
+            verdict,
+        });
+    }
+    if checks.is_empty() {
+        return Err("baseline has an empty \"points\" array — nothing to gate".into());
+    }
+    // The headline claim behind run-until-yield batching: batched host
+    // steps/sec over the step-per-job pipeline must not erode.
+    if let Some(base_sp) = baseline.num("speedup_batched_vs_1") {
+        let tol = baseline.num("tol").unwrap_or(default_tol);
+        let (cur, verdict) = match current.num("speedup_batched_vs_1") {
+            Some(v) => (v, verdict(base_sp, v, tol, true)),
+            None => (f64::NAN, Verdict::Missing),
+        };
+        checks.push(Check {
+            label: "sched_overhead speedup_batched_vs_1".into(),
+            base: base_sp,
+            current: cur,
+            tol,
+            verdict,
+        });
+    }
+    Ok(GateResult {
+        checks,
+        unpinned: is_unpinned(baseline),
+    })
+}
+
+/// Validate a baseline/artifact pair for `bench-check --pin` and return
+/// the text to write over the baseline: the fresh artifact with
+/// `"pinned"` forced to `true`. Errors (instead of silently pinning)
+/// when either side fails to parse or the `"bench"` names disagree —
+/// catching an artifact written over the wrong baseline file.
+pub fn pin_payload(baseline_text: &str, current_text: &str) -> Result<String, String> {
+    let base = Json::parse(baseline_text).map_err(|e| format!("baseline is not valid JSON: {e}"))?;
+    let cur =
+        Json::parse(current_text).map_err(|e| format!("fresh artifact is not valid JSON: {e}"))?;
+    if let (Some(b), Some(c)) = (base.str_of("bench"), cur.str_of("bench")) {
+        if b != c {
+            return Err(format!(
+                "bench name mismatch: baseline is \"{b}\" but the artifact is \"{c}\" — \
+                 wrong artifact for this baseline"
+            ));
+        }
+    }
+    // Benches emit "pinned": true already; force it in case the
+    // artifact came from an older bench build.
+    Ok(current_text.replacen("\"pinned\": false", "\"pinned\": true", 1))
 }
 
 #[cfg(test)]
@@ -403,7 +513,113 @@ mod tests {
         assert!(check_serving(&no_series, &ok, 0.25).is_err());
         assert!(check_serving(&ok, &no_series, 0.25).is_err());
         assert!(check_scaling(&no_series, &ok, 0.3).is_err());
+        assert!(check_overhead(&no_series, &ok, 0.4).is_err());
         let empty = Json::parse(r#"{"series": []}"#).unwrap();
         assert!(check_serving(&empty, &ok, 0.25).is_err());
+        let empty_pts = Json::parse(r#"{"points": []}"#).unwrap();
+        assert!(check_overhead(&empty_pts, &empty_pts, 0.4).is_err());
+    }
+
+    fn overhead_json(sps_b1: f64, sps_b16: f64, speedup: f64, pinned: bool) -> Json {
+        Json::parse(&format!(
+            r#"{{
+                "bench": "sched_overhead",
+                "pinned": {pinned},
+                "tol": 0.40,
+                "points": [
+                    {{"backend": "host", "batch_steps": 1, "steps_per_sec": {sps_b1}, "tol": 0.50}},
+                    {{"backend": "host", "batch_steps": 16, "steps_per_sec": {sps_b16}, "tol": 0.50}}
+                ],
+                "speedup_batched_vs_1": {speedup}
+            }}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn overhead_gate_matches_points_by_backend_and_batch() {
+        let base = overhead_json(1e6, 4e6, 4.0, true);
+        // Within the bands: passes.
+        let r = check_overhead(&base, &overhead_json(0.9e6, 3.8e6, 4.2, true), 0.4).unwrap();
+        assert!(!r.failed());
+        assert_eq!(r.checks.len(), 3); // 2 points + the speedup headline
+        // steps/sec is higher-is-better: a batched-point collapse fails.
+        let r = check_overhead(&base, &overhead_json(1e6, 1.1e6, 1.1, true), 0.4).unwrap();
+        assert!(r.failed());
+        assert_eq!(r.checks[1].verdict, Verdict::Regressed);
+        assert_eq!(r.checks[2].verdict, Verdict::Regressed);
+        assert!(r.checks[2].label.contains("speedup_batched_vs_1"));
+        // Faster than baseline: warn-to-repin, never fail.
+        let r = check_overhead(&base, &overhead_json(1e6, 9e6, 9.0, true), 0.4).unwrap();
+        assert!(!r.failed());
+        assert!(r.improved());
+        // A baseline point absent from the current file is Missing.
+        let one_point = Json::parse(
+            r#"{"points": [{"backend": "host", "batch_steps": 1, "steps_per_sec": 1e6}],
+                "speedup_batched_vs_1": 4.0}"#,
+        )
+        .unwrap();
+        let r = check_overhead(&base, &one_point, 0.4).unwrap();
+        assert!(r.failed());
+        assert_eq!(r.checks[1].verdict, Verdict::Missing);
+    }
+
+    #[test]
+    fn overhead_gate_respects_bootstrap_and_config_guard() {
+        // Unpinned bootstrap placeholder: reported, never failed.
+        let base = overhead_json(1.0, 1.0, 1.0, false);
+        let r = check_overhead(&base, &overhead_json(1e6, 4e6, 4.0, true), 0.4).unwrap();
+        assert!(r.unpinned);
+        assert!(!r.failed());
+        // Config drift is an error, not a comparison.
+        let with_cfg = |steps: u64| {
+            Json::parse(&format!(
+                r#"{{"config": {{"steps_per_rank": {steps}}},
+                     "points": [{{"backend": "host", "batch_steps": 1, "steps_per_sec": 1e6}}]}}"#
+            ))
+            .unwrap()
+        };
+        let err = check_overhead(&with_cfg(10_000), &with_cfg(2_000), 0.4).unwrap_err();
+        assert!(err.contains("config drift"), "{err}");
+    }
+
+    #[test]
+    fn throughput_entries_flip_direction_with_higher_is_better() {
+        let mk = |rps: f64| {
+            Json::parse(&format!(
+                r#"{{"pinned": true, "series": [
+                    {{"policy": "arcas", "backend": "sim", "metric": "rps_at_p99",
+                      "rps_at_p99": {rps}, "higher_is_better": true, "tol": 0.10}}
+                ]}}"#
+            ))
+            .unwrap()
+        };
+        let base = mk(8_000_000.0);
+        // Higher throughput is an improvement, not a regression.
+        let r = check_serving(&base, &mk(16_000_000.0), 0.25).unwrap();
+        assert!(!r.failed());
+        assert!(r.improved());
+        // Lower throughput fails.
+        let r = check_serving(&base, &mk(4_000_000.0), 0.25).unwrap();
+        assert!(r.failed());
+        assert_eq!(r.checks[0].verdict, Verdict::Regressed);
+    }
+
+    #[test]
+    fn pin_payload_validates_and_forces_pinned() {
+        let base = r#"{"bench": "sched_overhead", "pinned": false, "note": "bootstrap"}"#;
+        let cur = r#"{"bench": "sched_overhead", "pinned": true, "points": []}"#;
+        assert_eq!(pin_payload(base, cur).unwrap(), cur);
+        // An artifact minted with "pinned": false gets the flag forced.
+        let cur_unpinned = r#"{"bench": "sched_overhead", "pinned": false, "points": []}"#;
+        let pinned = pin_payload(base, cur_unpinned).unwrap();
+        assert!(pinned.contains(r#""pinned": true"#), "{pinned}");
+        // Wrong artifact for this baseline: an error, not a silent pin.
+        let wrong = r#"{"bench": "host_scaling", "pinned": true}"#;
+        let err = pin_payload(base, wrong).unwrap_err();
+        assert!(err.contains("mismatch"), "{err}");
+        // Garbage never overwrites a baseline.
+        assert!(pin_payload(base, "not json").is_err());
+        assert!(pin_payload("not json", cur).is_err());
     }
 }

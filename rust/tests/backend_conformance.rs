@@ -412,6 +412,60 @@ fn closed_loop_never_diverges_on_either_backend() {
     }
 }
 
+// ---- Run-until-yield batching equivalence (host) ----
+
+/// `--batch-steps 1` (the old step-per-job pipeline) and the batched
+/// default must be outcome-equivalent on every registry scenario: the
+/// serial-reference `verify()` hook passes under both, the BSP
+/// structure (barrier epochs) is identical, and batch scenarios
+/// dispatch the same coroutine step count. Serving scenarios shed
+/// interleaving-dependently on host, so they assert conservation
+/// (served + shed == trace length, equal across budgets) instead of
+/// step-count equality.
+#[test]
+fn batching_is_outcome_equivalent_on_every_scenario() {
+    for spec in engine::registry() {
+        let run_with = |batch: usize| {
+            let mut s = spec.build(&small_params());
+            engine::Run::new(&topo())
+                .policy(by_name("local", &topo()).unwrap())
+                .tasks(8)
+                .backend(ExecBackend::Host)
+                .batch_steps(batch)
+                .verify(true) // outcome: the serial reference must hold
+                .run(s.as_mut())
+        };
+        let unbatched = run_with(1);
+        let batched = run_with(engine::DEFAULT_BATCH_STEPS);
+        assert!(unbatched.report.dispatches > 0, "{}: ran nothing", spec.name);
+        assert_eq!(
+            unbatched.report.barrier_epochs, batched.report.barrier_epochs,
+            "{}: batching changed the BSP structure",
+            spec.name
+        );
+        match (
+            &unbatched.report.request_latency,
+            &batched.report.request_latency,
+        ) {
+            (Some(a), Some(b)) => assert_eq!(
+                a.count + unbatched.report.request_shed,
+                b.count + batched.report.request_shed,
+                "{}: served+shed conservation differs across batch budgets",
+                spec.name
+            ),
+            (None, None) => assert_eq!(
+                unbatched.report.dispatches, batched.report.dispatches,
+                "{}: batching changed the coroutine step count",
+                spec.name
+            ),
+            _ => panic!(
+                "{}: latency report present under one batch budget only",
+                spec.name
+            ),
+        }
+    }
+}
+
 /// Warm-cache repetition (`--repeat`) composes with both backends.
 #[test]
 fn repeat_runs_compose_with_both_backends() {

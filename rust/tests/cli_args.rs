@@ -49,6 +49,7 @@ fn run_help_documents_the_new_flags() {
     for flag in [
         "--backend",
         "--repeat",
+        "--batch-steps",
         "--scenario",
         "--verify",
         "--priority-mix",
@@ -57,6 +58,18 @@ fn run_help_documents_the_new_flags() {
     ] {
         assert!(help.contains(flag), "help is missing {flag}:\n{help}");
     }
+}
+
+#[test]
+fn run_parses_batch_steps_and_rejects_zero() {
+    let c = parse(&["--batch-steps", "4", "--backend", "host"]).unwrap();
+    assert_eq!(c.batch_steps, 4);
+    assert!(parse(&["--batch-steps", "0"])
+        .unwrap_err()
+        .contains("--batch-steps must be >= 1"));
+    assert!(parse(&["--batch-steps", "many"])
+        .unwrap_err()
+        .contains("--batch-steps"));
 }
 
 #[test]
@@ -181,6 +194,41 @@ fn arcas_run_serve_kv_host_verify_reports_latency() {
     for needle in ["req sojourn", "p50", "p95", "p99", "mean queue"] {
         assert!(stdout.contains(needle), "missing {needle:?} in:\n{stdout}");
     }
+}
+
+/// `--batch-steps 1` (the unbatched step-per-job pipeline) through the
+/// real binary: the host run still completes and verifies.
+#[test]
+fn arcas_run_host_unbatched_pipeline_verifies() {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_arcas"))
+        .args([
+            "run",
+            "--scenario",
+            "gups",
+            "--policy",
+            "local",
+            "--cores",
+            "4",
+            "--backend",
+            "host",
+            "--verify",
+            "--scale",
+            "0.002",
+            "--iters",
+            "1000",
+            "--batch-steps",
+            "1",
+        ])
+        .output()
+        .expect("spawn arcas binary");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        out.status.success(),
+        "arcas run --batch-steps 1 failed:\nstdout:\n{stdout}\nstderr:\n{stderr}"
+    );
+    assert!(stdout.contains("host backend"), "{stdout}");
+    assert!(stdout.contains("verified"), "{stdout}");
 }
 
 /// `--trace` replays a text trace file end-to-end through the binary.

@@ -9,7 +9,12 @@
 //! - `wait_all` with zero jobs returns immediately,
 //! - under a seeded randomized schedule no job is lost or run twice,
 //! - the job slot table is recycled, not append-only (regression for the
-//!   one-slot-per-job leak).
+//!   one-slot-per-job leak),
+//! - injector-era invariants: targeted (`execute_on`) jobs drain ahead
+//!   of untargeted injector floods on their worker, injector overflow
+//!   falls back to inboxes without losing or duplicating jobs, and
+//!   submitting to a fully busy pool performs no wakeups at all
+//!   (thundering-herd regression).
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -207,4 +212,167 @@ fn steals_rebalance_targeted_floods() {
         p.steal_count() > 0,
         "8 idle workers never stole from a flooded victim"
     );
+}
+
+/// Park one worker on a gate job that spins until `release` flips.
+/// Returns once the gate is actually running, so later submissions are
+/// guaranteed to queue up behind it.
+fn hold_worker(p: &HostExecutor, worker: usize, release: Arc<AtomicU64>) {
+    let running = Arc::new(AtomicU64::new(0));
+    let r = running.clone();
+    p.execute_on(worker, move || {
+        r.store(1, Ordering::Release);
+        while release.load(Ordering::Acquire) == 0 {
+            std::hint::spin_loop();
+        }
+    });
+    while running.load(Ordering::Acquire) == 0 {
+        std::hint::spin_loop();
+    }
+}
+
+#[test]
+fn targeted_submits_drain_ahead_of_injector_floods() {
+    // The worker drain order is deque -> own inbox -> injector, so a
+    // core-targeted job must never be starved behind an untargeted
+    // flood: on a single-worker pool every `execute_on(0, ..)` has to
+    // run before any of the 200 injector jobs queued ahead of it in
+    // wall-clock submission order.
+    let p = pool(1);
+    let release = Arc::new(AtomicU64::new(0));
+    hold_worker(&p, 0, release.clone());
+
+    let seq = Arc::new(AtomicU64::new(0));
+    let injector_first = Arc::new(AtomicU64::new(u64::MAX));
+    let targeted_last = Arc::new(AtomicU64::new(0));
+    for _ in 0..200 {
+        let seq = seq.clone();
+        let first = injector_first.clone();
+        p.execute(move || {
+            let s = seq.fetch_add(1, Ordering::Relaxed);
+            first.fetch_min(s, Ordering::Relaxed);
+        });
+    }
+    for _ in 0..8 {
+        let seq = seq.clone();
+        let last = targeted_last.clone();
+        p.execute_on(0, move || {
+            let s = seq.fetch_add(1, Ordering::Relaxed);
+            last.fetch_max(s, Ordering::Relaxed);
+        });
+    }
+    release.store(1, Ordering::Release);
+    p.wait_all();
+    assert_eq!(seq.load(Ordering::Relaxed), 208);
+    assert!(
+        targeted_last.load(Ordering::Relaxed) < injector_first.load(Ordering::Relaxed),
+        "a targeted job ran after an injector job (targeted_last={} injector_first={})",
+        targeted_last.load(Ordering::Relaxed),
+        injector_first.load(Ordering::Relaxed)
+    );
+}
+
+#[test]
+fn injector_overflow_falls_back_without_losing_jobs() {
+    // 3000 untargeted submissions against a blocked single worker
+    // overflow the bounded injector ring (capacity 1024); the excess
+    // must spill to the round-robin inbox path, and afterwards every
+    // job ran exactly once.
+    const TOTAL: usize = 3000;
+    let p = pool(1);
+    let release = Arc::new(AtomicU64::new(0));
+    hold_worker(&p, 0, release.clone());
+
+    let cells: Arc<Vec<AtomicU64>> = Arc::new((0..TOTAL).map(|_| AtomicU64::new(0)).collect());
+    for id in 0..TOTAL {
+        let cells = cells.clone();
+        p.execute(move || {
+            cells[id].fetch_add(1, Ordering::Relaxed);
+        });
+    }
+    release.store(1, Ordering::Release);
+    p.wait_all();
+    for (id, c) in cells.iter().enumerate() {
+        assert_eq!(
+            c.load(Ordering::Relaxed),
+            1,
+            "job {id} ran {} times after injector overflow (must be exactly once)",
+            c.load(Ordering::Relaxed)
+        );
+    }
+}
+
+#[test]
+fn randomized_injector_schedule_with_nested_children() {
+    // Like the randomized schedule above, but every root may also spawn
+    // injector children from *inside* the pool (the path barrier release
+    // uses), interleaved with off-pool targeted submissions. Roots are
+    // exactly-once; the child total must match the seeded plan.
+    let mut rng = Rng::new(0x17EC7);
+    let p = pool(6);
+    const ROOTS: usize = 1200;
+    let cells: Arc<Vec<AtomicU64>> = Arc::new((0..ROOTS).map(|_| AtomicU64::new(0)).collect());
+    let child_runs = Arc::new(AtomicU64::new(0));
+    let sub = p.submitter();
+    let mut expected_children = 0u64;
+    for id in 0..ROOTS {
+        let kids = rng.gen_range(4);
+        expected_children += kids;
+        let cells = cells.clone();
+        let child_runs = child_runs.clone();
+        let sub2 = sub.clone();
+        let job = move || {
+            cells[id].fetch_add(1, Ordering::Relaxed);
+            for _ in 0..kids {
+                let c = child_runs.clone();
+                sub2.execute(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        };
+        if rng.gen_range(3) == 0 {
+            p.execute_on(rng.gen_range(6) as usize, job);
+        } else {
+            p.execute(job);
+        }
+        if rng.gen_range(64) == 0 {
+            p.wait_all();
+        }
+    }
+    p.wait_all();
+    for (id, c) in cells.iter().enumerate() {
+        assert_eq!(c.load(Ordering::Relaxed), 1, "root {id} not exactly-once");
+    }
+    assert_eq!(child_runs.load(Ordering::Relaxed), expected_children);
+}
+
+#[test]
+fn submits_to_a_busy_pool_perform_no_wakeups() {
+    // Thundering-herd regression: the old pool took the park lock and
+    // notified on every submission. With lazy wakeups, submitting to a
+    // pool whose workers are all running (nobody parked) must not
+    // perform a single wakeup.
+    let p = pool(4);
+    let release = Arc::new(AtomicU64::new(0));
+    for w in 0..4 {
+        hold_worker(&p, w, release.clone());
+    }
+    let before = p.wakeup_count();
+    let counter = Arc::new(AtomicU64::new(0));
+    for _ in 0..1000 {
+        let c = counter.clone();
+        p.execute(move || {
+            c.fetch_add(1, Ordering::Relaxed);
+        });
+    }
+    let during = p.wakeup_count();
+    assert_eq!(
+        during - before,
+        0,
+        "flooding a fully busy pool still notified {} times",
+        during - before
+    );
+    release.store(1, Ordering::Release);
+    p.wait_all();
+    assert_eq!(counter.load(Ordering::Relaxed), 1000);
 }

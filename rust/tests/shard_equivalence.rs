@@ -497,6 +497,116 @@ fn prop_step_cached_probes_equal_per_access_probes() {
     );
 }
 
+/// Run-until-yield batching widens the probe-reuse window: the host
+/// backend carries one [`ProbeCache`] across *all* consecutive steps of
+/// a rank inside a batch, not just the accesses within one step. Model
+/// the batch invariant here — a batch never migrates cores, so the
+/// cache is cleared only when the running core changes, never on a step
+/// boundary — and require outcomes, clocks, counter totals, DRAM bytes
+/// and residency to stay bit-identical to fresh per-access probes.
+#[test]
+fn prop_batch_carried_probes_equal_per_access_probes() {
+    check(
+        "batch-carried == uncached",
+        25,
+        gen_schedule,
+        |schedule| {
+            let topo = topo_for(schedule.topo_idx);
+            let plain = Machine::new(topo.clone());
+            let cached = Machine::new(topo.clone());
+
+            let mut ids = Vec::new();
+            let mut sizes = Vec::new();
+            for (i, &(size, placement)) in schedule.regions.iter().enumerate() {
+                let a = plain.alloc(&format!("r{i}"), size, placement);
+                let b = cached.alloc(&format!("r{i}"), size, placement);
+                if a != b {
+                    return Err("region id streams diverge".into());
+                }
+                ids.push(a);
+                sizes.push(size);
+            }
+
+            let mut cache = ProbeCache::new();
+            let mut batch_core = usize::MAX;
+            for (i, op) in schedule.ops.iter().enumerate() {
+                match op {
+                    Op::Access { .. } => {
+                        let (core, acc) = build_access(&ids, &sizes, op).unwrap();
+                        // The only boundary is a core change: an
+                        // unbounded same-core run shares one cache, the
+                        // widest window a host batch can ever hold open.
+                        if core != batch_core {
+                            cache.clear();
+                            batch_core = core;
+                        }
+                        let a = plain.access(core, acc);
+                        let b = cached.access_cached(core, acc, &mut cache);
+                        for (name, x, y) in [
+                            ("local", a.local_hits, b.local_hits),
+                            ("near", a.near_hits, b.near_hits),
+                            ("far", a.far_hits, b.far_hits),
+                            ("dram", a.dram_lines, b.dram_lines),
+                            ("latency", a.latency_ns, b.latency_ns),
+                            ("bytes", a.dram_bytes, b.dram_bytes),
+                        ] {
+                            if x != y {
+                                return Err(format!(
+                                    "op {i}: outcome.{name} {x} != {y} (batch-carried vs uncached)"
+                                ));
+                            }
+                        }
+                    }
+                    Op::Compute { core, ns } => {
+                        plain.compute(*core, *ns);
+                        cached.compute(*core, *ns);
+                    }
+                    Op::Message { from, to, bytes } => {
+                        let a = plain.message(*from, *to, *bytes);
+                        let b = cached.message(*from, *to, *bytes);
+                        if a != b {
+                            return Err(format!("op {i}: message cost {a} != {b}"));
+                        }
+                    }
+                    Op::SyncTo { core, t } => {
+                        plain.advance_to(*core, *t);
+                        cached.advance_to(*core, *t);
+                    }
+                }
+            }
+
+            for core in 0..topo.num_cores() {
+                if plain.now(core) != cached.now(core) {
+                    return Err(format!(
+                        "core {core} clock {} != {}",
+                        plain.now(core),
+                        cached.now(core)
+                    ));
+                }
+            }
+            let (a, b) = (plain.class_totals(), cached.class_totals());
+            if (a.local, a.near, a.far, a.dram) != (b.local, b.near, b.far, b.dram) {
+                return Err(format!("class totals diverge: {a:?} vs {b:?}"));
+            }
+            if plain.dram_total_bytes() != cached.dram_total_bytes() {
+                return Err("dram bytes diverge".into());
+            }
+            for ch in 0..topo.num_chiplets() {
+                for (i, id) in ids.iter().enumerate() {
+                    if plain.resident(ch, *id) != cached.resident(ch, *id) {
+                        return Err(format!(
+                            "chiplet {ch} region {i} residency {} != {}",
+                            plain.resident(ch, *id),
+                            cached.resident(ch, *id)
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 /// Concurrent charging conserves every charge: per-core clocks equal the
 /// exact sum of that worker's charges, and counter/DRAM totals equal the
 /// sum of all returned outcomes (within float-merge tolerance). This is
