@@ -13,7 +13,7 @@
 #                     python + jax; the rust build runs fine without them)
 #   make bench-smoke  quick pass over two figure benches
 
-.PHONY: verify build test fmt clippy ci artifacts bench-smoke host-suites host-scaling sched-overhead bench-regression
+.PHONY: verify build test fmt clippy ci artifacts bench-smoke host-suites host-scaling sched-overhead adaptive-payoff bench-regression
 
 verify: build test
 
@@ -59,8 +59,15 @@ host-scaling:
 sched-overhead:
 	cargo bench --bench micro_runtime -- --overhead-only --assert-overhead
 
-# The CI bench-regression gate, locally: run fig_serving + the scaling
-# and overhead smokes, then compare the emitted BENCH_*.json against
+# Adaptive-migration smoke: on the phase-shift scenario (message-bound
+# then bandwidth-bound) the adaptive policy must migrate at the shift —
+# real-elapsed host timer — and beat every static placement's modeled
+# makespan. Emits BENCH_adaptive.json.
+adaptive-payoff:
+	cargo bench --bench micro_runtime -- --adaptive-only --assert-adaptive --quick
+
+# The CI bench-regression gate, locally: run fig_serving + the scaling,
+# overhead and adaptive smokes, then compare the emitted BENCH_*.json against
 # ci/baselines/ (fail on regression, warn on improvement; unpinned
 # baselines only report). fig_serving emits the latency file, the
 # SLO-section file (per-class p99 + shed rate, gated via the per-entry
@@ -68,10 +75,11 @@ sched-overhead:
 # gated higher-is-better). Cargo runs bench binaries with CWD = the
 # package root, so the emitted BENCH_*.json files land under rust/.
 # Re-pin all baselines from fresh artifacts: `arcas bench-check --pin`.
-bench-regression: build host-scaling sched-overhead
+bench-regression: build host-scaling sched-overhead adaptive-payoff
 	cargo bench --bench fig_serving -- --quick
 	./target/release/arcas bench-check --kind serving --baseline ci/baselines/BENCH_serving_latency.json --current rust/BENCH_serving_latency.json
 	./target/release/arcas bench-check --kind serving --baseline ci/baselines/BENCH_serving_slo.json --current rust/BENCH_serving_slo.json
 	./target/release/arcas bench-check --kind serving --baseline ci/baselines/BENCH_serving_throughput.json --current rust/BENCH_serving_throughput.json
 	./target/release/arcas bench-check --kind overhead --baseline ci/baselines/BENCH_sched_overhead.json --current rust/BENCH_sched_overhead.json
 	./target/release/arcas bench-check --kind scaling --baseline ci/baselines/BENCH_host_scaling.json --current rust/BENCH_host_scaling.json
+	./target/release/arcas bench-check --kind adaptive --baseline ci/baselines/BENCH_adaptive.json --current rust/BENCH_adaptive.json

@@ -19,16 +19,25 @@
 //!     `--batch-steps 1` (pool round-trip per step) by ≥ 2× on ≥ 4
 //!     workers; CI pins it with `--assert-overhead` + the bench-check
 //!     gate.
+//!   - *adaptive migration payoff*: the phase-shift scenario (message-
+//!     bound phase A, bandwidth-bound phase B — no static placement is
+//!     right for both) on the **host backend** with the real-time
+//!     controller tick armed. The adaptive policy must migrate at the
+//!     shift and beat the best static policy's modeled makespan;
+//!     emits `BENCH_adaptive.json` with
+//!     `speedup_adaptive_vs_best_static`, gated by `--assert-adaptive`
+//!     + the bench-check `--kind adaptive` gate.
 //!
 //! Flags: `--workers a,b,..` sets the scaling axis, `--scaling-only` /
-//! `--overhead-only` select one section (CI), `--assert-scaling` /
-//! `--assert-overhead` make the respective bound fatal.
+//! `--overhead-only` / `--adaptive-only` select one section (CI),
+//! `--assert-scaling` / `--assert-overhead` / `--assert-adaptive` make
+//! the respective bound fatal.
 
 use arcas::controller::placement_map;
 use arcas::deque::Deque;
 use arcas::engine::{ExecBackend, Run, DEFAULT_BATCH_STEPS};
 use arcas::mem::Placement;
-use arcas::policy::{LocalCachePolicy, ShoalPolicy};
+use arcas::policy::{by_name, ArcasPolicy, LocalCachePolicy, ShoalPolicy};
 use arcas::sched::HostExecutor;
 use arcas::sim::Machine;
 use arcas::task::IterTask;
@@ -36,6 +45,7 @@ use arcas::topology::Topology;
 use arcas::util::bench::Bencher;
 use arcas::util::cli::{Args, Cli};
 use arcas::workloads::graph::GupsScenario;
+use arcas::workloads::phaseshift::PhaseShiftScenario;
 
 fn cli() -> Cli {
     Cli::new("micro_runtime", "runtime microbenchmarks + host scaling smoke")
@@ -52,6 +62,11 @@ fn cli() -> Cli {
             "fail unless batched host steps/sec beats --batch-steps 1 by 2x",
         )
         .flag("overhead-only", "run only the scheduler-overhead section")
+        .flag(
+            "assert-adaptive",
+            "fail unless adaptive migrates and beats the best static makespan",
+        )
+        .flag("adaptive-only", "run only the adaptive-migration section")
         .flag("quick", "smaller runs for smoke testing")
         .flag("bench", "(passed by `cargo bench`; ignored)")
 }
@@ -266,6 +281,140 @@ fn sched_overhead(args: &Args) -> bool {
     !(args.flag("assert-overhead") && speedup < 2.0)
 }
 
+/// Adaptive-payoff topology: Milan with **four cores per CCD** (32
+/// cores over 8 chiplet shards). Small enough that the adaptive pool
+/// (one worker per core, so any migration target is live) stays
+/// CI-friendly, while the shape keeps both phase preferences real:
+/// compacting the 16-rank group onto one 4-core chiplet stacks only 4
+/// ranks per core — cheaper than paying the cross-chiplet hop on every
+/// phase-A ring message — and 8 chiplets of spread buy 8× L3 + DDR
+/// channels for phase B's shared stream, which blows any single 32 MiB
+/// L3.
+fn adaptive_topo() -> Topology {
+    let mut t = Topology::milan_1s();
+    t.cores_per_chiplet = 4;
+    t.name = "milan_1s_4cpc".into();
+    t
+}
+
+/// One host-backend phase-shift run. `timer_ns: Some(t)` arms the
+/// real-time adaptation tick; `None` is the static reference. Returns
+/// (modeled makespan ns, migrations).
+fn adaptive_run(
+    topo: &Topology,
+    policy: Box<dyn arcas::policy::Policy>,
+    timer_ns: Option<u64>,
+    steps: u64,
+) -> (u64, u64) {
+    let mut s = PhaseShiftScenario::new(96 << 20, steps, steps);
+    let mut run = Run::new(topo)
+        .policy(policy)
+        .tasks(16)
+        .backend(ExecBackend::Host)
+        .batch_steps(4)
+        .verify(true);
+    if let Some(t) = timer_ns {
+        run = run.timer_ns(t);
+    }
+    let r = run.run(&mut s);
+    (r.report.makespan_ns.max(1), r.report.migrations)
+}
+
+/// The adaptive-migration payoff bench: on the phase-shift scenario no
+/// static placement is right for both phases, so the adaptive policy —
+/// migrating at the shift, driven by the host backend's real-elapsed
+/// timer — must beat every static policy's modeled makespan. The gated
+/// headline is `speedup_adaptive_vs_best_static` (higher is better);
+/// migrations > 0 guards against the degenerate "adaptive won without
+/// adapting" pass. Returns false when `--assert-adaptive` is set and
+/// either bound fails.
+fn adaptive_payoff(args: &Args) -> bool {
+    let topo = adaptive_topo();
+    let (steps, timer_ns, reps) = if args.flag("quick") {
+        (200u64, 100_000u64, 2u64)
+    } else {
+        (500u64, 150_000u64, 3u64)
+    };
+    println!("### adaptive migration payoff (host backend, real-time tick)");
+    println!(
+        "# scenario=phase-shift steps/phase={steps} tasks=16 timer={}us reps={reps} \
+         (best-of); topology={} (8 chiplets x 4 cores)",
+        timer_ns / 1000,
+        topo.name
+    );
+
+    // Static references: compact (local) and spread (distributed) — the
+    // two placements the phases respectively reward, so "best static"
+    // is whichever half the workload favors overall.
+    let mut best_static = u64::MAX;
+    let mut static_lines: Vec<String> = Vec::new();
+    for name in ["local", "distributed"] {
+        let mut best = u64::MAX;
+        for _ in 0..reps {
+            let p = by_name(name, &topo).expect("static policy");
+            best = best.min(adaptive_run(&topo, p, None, steps).0);
+        }
+        println!("  static {name:<12} makespan = {:>10.3} ms", best as f64 / 1e6);
+        static_lines.push(format!(
+            "{{\"policy\": \"{name}\", \"makespan_ns\": {best}}}"
+        ));
+        best_static = best_static.min(best);
+    }
+
+    let mut adaptive = u64::MAX;
+    let mut migrations = 0u64;
+    for _ in 0..reps {
+        let p = Box::new(ArcasPolicy::new(&topo));
+        let (ms, mig) = adaptive_run(&topo, p, Some(timer_ns), steps);
+        if ms < adaptive {
+            adaptive = ms;
+            migrations = mig;
+        }
+    }
+    println!(
+        "  adaptive (arcas)    makespan = {:>10.3} ms  ({migrations} migrations)",
+        adaptive as f64 / 1e6
+    );
+
+    let speedup = best_static as f64 / adaptive as f64;
+    let ok = migrations > 0 && speedup > 1.0;
+    println!(
+        "  => adaptive vs best static: {speedup:.2}x, migrations={migrations} ({})",
+        if ok {
+            "pass"
+        } else {
+            "FAIL: expected > 1.0x with migrations > 0"
+        }
+    );
+
+    // Emit BENCH_adaptive.json ("pinned": true + "tol" so the bench-check
+    // re-pin flow yields a live gate; the band is loose — host tick
+    // timing is real elapsed time, so migration points drift run-to-run).
+    let json = format!(
+        "{{\n  \"bench\": \"adaptive\",\n  \"scenario\": \"phase-shift\",\n  \
+         \"backend\": \"host\",\n  \"pinned\": true,\n  \"tol\": 0.35,\n  \
+         \"config\": {{\"tasks\": 16, \"steps_per_phase\": {steps}, \
+         \"timer_ns\": {timer_ns}, \"quick\": {}}},\n  \
+         \"statics\": [{}],\n  \"adaptive_makespan_ns\": {adaptive},\n  \
+         \"migrations\": {migrations},\n  \
+         \"speedup_adaptive_vs_best_static\": {speedup:.3}\n}}\n",
+        args.flag("quick"),
+        static_lines.join(", "),
+    );
+    let path = std::path::Path::new("BENCH_adaptive.json");
+    match std::fs::write(path, &json) {
+        Ok(()) => println!(
+            "  => wrote {}",
+            std::fs::canonicalize(path)
+                .unwrap_or_else(|_| path.to_path_buf())
+                .display()
+        ),
+        Err(e) => println!("  => could not write BENCH_adaptive.json: {e}"),
+    }
+
+    !(args.flag("assert-adaptive") && !ok)
+}
+
 fn micro(args: &Args) {
     let mut b = if args.flag("quick") {
         Bencher::quick()
@@ -350,14 +499,20 @@ fn main() {
     let args = cli().parse();
     let scaling_only = args.flag("scaling-only");
     let overhead_only = args.flag("overhead-only");
-    if !scaling_only && !overhead_only {
+    let adaptive_only = args.flag("adaptive-only");
+    let any_only = scaling_only || overhead_only || adaptive_only;
+    if !any_only {
         micro(&args);
     }
-    if !scaling_only && !sched_overhead(&args) {
+    if (adaptive_only || !any_only) && !adaptive_payoff(&args) {
+        eprintln!("adaptive-migration assertion failed");
+        std::process::exit(1);
+    }
+    if (overhead_only || !any_only) && !sched_overhead(&args) {
         eprintln!("scheduler-overhead assertion failed");
         std::process::exit(1);
     }
-    if !overhead_only && !host_scaling(&args) {
+    if (scaling_only || !any_only) && !host_scaling(&args) {
         eprintln!("host-backend scaling assertion failed");
         std::process::exit(1);
     }

@@ -8,6 +8,13 @@
 //! (more aggregate L3); otherwise they are *compacted* onto fewer chiplets
 //! (better locality). `update_location` maps task ranks to concrete cores
 //! for a given spread rate and binds their memory to the right NUMA node.
+//!
+//! Two drivers tick the same controller: the simulator fires it on
+//! **virtual** time (`SCHEDULER_TIMER` of simulated ns), and the host
+//! backend (`engine::host_backend`) fires it on **real elapsed** time
+//! between batch boundaries, applying the resulting rank → core map as
+//! online migrations. The algorithm is identical either way — only the
+//! clock feeding `now_ns` differs.
 
 use crate::topology::Topology;
 

@@ -51,8 +51,23 @@
 //!   pins that multi-worker runs beat single-worker wall time on a
 //!   memory-bound scenario; the scheduler-overhead microbench
 //!   (`micro_runtime --overhead-only`) pins the batching speedup
-//!   itself. Policy timers / adaptive migration are simulator-only and
-//!   do not fire here.
+//!   itself.
+//! - **Adaptation**: with a timer armed (`execute_host(.., Some(ns))`,
+//!   i.e. `Run::timer_ns` on the Host backend / `--timer-us` with an
+//!   adaptive policy), the policy-timer/migration loop fires here too —
+//!   on **real elapsed time**, not virtual time. Whichever worker first
+//!   crosses a batch boundary past the deadline wins a CAS and ticks:
+//!   it samples the shared [`Profiler`] window over the machine's merged
+//!   `ClassCounts` (virtual fill events per real timer window), runs
+//!   `policy.on_timer`, and applies the returned rank→core map by
+//!   swapping the atomic placement slots — the next batch of a migrated
+//!   rank is submitted through the targeted-inbox path to its new home,
+//!   and its fresh per-batch [`ProbeCache`] starts empty, so post-move
+//!   charging is exact. In-flight batches finish on their old core
+//!   (migration cost is charged as a fabric message, like the sim). With
+//!   the timer off (`None`, the default) the loop never runs, placement
+//!   is static, and batching equivalence is untouched — sim goldens and
+//!   the conformance suite see byte-identical behavior.
 //! - **Determinism**: batch interleaving is *not* deterministic, and
 //!   with concurrent charging the *virtual-time* interleaving of
 //!   accesses is not either (residency probes may observe concurrent
@@ -64,11 +79,12 @@
 //!   `rust/tests/backend_conformance.rs` runs every registry scenario on
 //!   both backends and pins `--batch-steps 1` ≡ default outcomes.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::cachesim::Outcome;
 use crate::policy::Policy;
+use crate::profiler::Profiler;
 use crate::sched::{current_worker, worker_core, HostExecutor, RunReport, Submitter};
 use crate::sim::{Machine, ProbeCache};
 use crate::task::{Coroutine, Step, TaskCtx};
@@ -92,19 +108,59 @@ struct BarrierState {
 /// A rank's parking slot: `None` while a batch is in flight on a worker.
 type RankSlot = Mutex<Option<Box<dyn Coroutine>>>;
 
+/// The adaptive-loop half of a host run, present only when a timer is
+/// armed. The hot path touches just `started`/`next_tick_ns`; the
+/// policy + profiler live behind a mutex only the winning ticker takes
+/// (`try_lock`, so a slow tick never stalls a worker).
+struct AdaptState {
+    inner: Mutex<AdaptInner>,
+    /// Real-time epoch of the run; ticks fire on elapsed wall time.
+    started: std::time::Instant,
+    /// Next tick deadline in real ns since `started`; the worker that
+    /// CASes it forward owns the tick.
+    next_tick_ns: AtomicU64,
+    timer_ns: u64,
+}
+
+struct AdaptInner {
+    policy: Box<dyn Policy>,
+    profiler: Profiler,
+    /// Controller decision log (t_real_ns, window rate, spread) —
+    /// `RunReport::decisions`, the host's adaptation counters.
+    decisions: Vec<(u64, f64, usize)>,
+}
+
 /// Shared state of one host-backed run. The machine itself carries no
 /// run-wide lock — its shards are the synchronization.
 struct HostRun {
     machine: Machine,
     /// Per-rank coroutine parking slots.
     ranks: Vec<RankSlot>,
-    /// rank → home core from the policy's initial placement.
-    placement: Vec<usize>,
+    /// rank → *current* home core: the policy's initial placement,
+    /// re-pointed by adaptive migration mid-run. Atomic because a tick
+    /// swaps entries while other workers read them (for resubmission and
+    /// peer messaging); also handed to every step as
+    /// `TaskCtx::peer_cores`.
+    placement: Vec<AtomicUsize>,
+    /// Ranks that have finished (a tick must not "migrate" them).
+    done: Vec<AtomicBool>,
     barrier: Mutex<BarrierState>,
     dispatches: AtomicU64,
+    /// Rank migrations applied by adaptive ticks (→ `RunReport`).
+    migrations: AtomicU64,
+    /// `Some` iff the policy-timer loop is armed for this run.
+    adapt: Option<AdaptState>,
     n_workers: usize,
     /// Run-until-yield budget (>= 1): max coroutine steps per pool job.
     batch_steps: usize,
+}
+
+impl HostRun {
+    /// The worker that owns `rank`'s next batch under the current
+    /// placement (worker *i* = core *i*, wrapped onto the pool).
+    fn home_worker(&self, rank: usize) -> usize {
+        self.placement[rank].load(Ordering::Relaxed) % self.n_workers
+    }
 }
 
 /// Run `n` coroutines over `machine` on a [`HostExecutor`] pool sized to
@@ -113,9 +169,18 @@ struct HostRun {
 /// spread-out policies stay spread out on real threads). Returns the
 /// report and hands the machine back (cache residency carries across
 /// runs, as on the sim backend).
+///
+/// `timer_ns: Some(t)` arms the adaptive policy-timer loop on **real
+/// elapsed time**: every `t` wall-clock ns (checked at batch
+/// boundaries, so a long batch delays a tick but never loses it) the
+/// policy's `on_timer` sees a fresh profiler window and may emit a new
+/// rank→core map, applied by re-targeting each migrated rank's next
+/// batch. `None` (the default) keeps placement static — the
+/// pre-adaptive behavior, byte for byte.
 pub(crate) fn execute_host(
     machine: Machine,
     mut policy: Box<dyn Policy>,
+    timer_ns: Option<u64>,
     n: usize,
     mut make: impl FnMut(usize) -> Box<dyn Coroutine>,
     batch_steps: usize,
@@ -125,20 +190,58 @@ pub(crate) fn execute_host(
     let topo = machine.topo.clone();
     let placement = policy.initial_placement(&topo, n);
     assert_eq!(placement.len(), n);
-    let n_workers = (placement.iter().copied().max().unwrap_or(0) + 1)
-        .min(topo.num_cores())
-        .max(1);
+    let policy_name = policy.name().to_string();
+    // Static runs size the pool to the initial placement; adaptive runs
+    // cover the whole topology, so any core a migration targets maps to
+    // its own worker (worker i = core i) instead of wrapping onto a
+    // different chiplet's worker.
+    let n_workers = if timer_ns.is_some() {
+        topo.num_cores()
+    } else {
+        (placement.iter().copied().max().unwrap_or(0) + 1)
+            .min(topo.num_cores())
+            .max(1)
+    };
+
+    // The timer loop owns the policy for the run's duration; static runs
+    // keep it out here for the final report.
+    let mut static_policy = None;
+    let adapt = match timer_ns {
+        Some(t) => {
+            let mut profiler = Profiler::new();
+            // Re-anchor on the (possibly warm) machine so the first
+            // window sees only this run's fills.
+            profiler.rebaseline(0, machine.class_totals());
+            Some(AdaptState {
+                inner: Mutex::new(AdaptInner {
+                    policy,
+                    profiler,
+                    decisions: Vec::new(),
+                }),
+                started: std::time::Instant::now(),
+                next_tick_ns: AtomicU64::new(t.max(1)),
+                timer_ns: t.max(1),
+            })
+        }
+        None => {
+            static_policy = Some(policy);
+            None
+        }
+    };
 
     let run = Arc::new(HostRun {
         machine,
         ranks: (0..n).map(|rank| Mutex::new(Some(make(rank)))).collect(),
-        placement,
+        placement: placement.into_iter().map(AtomicUsize::new).collect(),
+        done: (0..n).map(|_| AtomicBool::new(false)).collect(),
         barrier: Mutex::new(BarrierState {
             waiting: Vec::new(),
             finished: 0,
             epochs: 0,
         }),
         dispatches: AtomicU64::new(0),
+        migrations: AtomicU64::new(0),
+        adapt,
         n_workers,
         batch_steps: batch_steps.max(1),
     });
@@ -147,7 +250,7 @@ pub(crate) fn execute_host(
     let sub = pool.submitter();
     // One burst (and one pool wake-up) for the whole spawn group.
     sub.execute_on_many((0..n).map(|rank| {
-        let worker = run.placement[rank] % run.n_workers;
+        let worker = run.home_worker(rank);
         let run = run.clone();
         let sub2 = sub.clone();
         (worker, move || step_rank(run, sub2, rank))
@@ -163,19 +266,27 @@ pub(crate) fn execute_host(
     let machine = run.machine;
     let barrier = run.barrier.into_inner().unwrap();
     assert_eq!(barrier.finished, n, "every rank must run to completion");
+    // Recover the policy (and the tick log) from whichever side owned it.
+    let (policy, decisions) = match run.adapt {
+        Some(state) => {
+            let inner = state.inner.into_inner().unwrap();
+            (inner.policy, inner.decisions)
+        }
+        None => (static_policy.take().expect("static run keeps its policy"), Vec::new()),
+    };
 
     let report = RunReport {
-        policy: policy.name().to_string(),
+        policy: policy_name,
         makespan_ns: machine.max_time(),
         counts: machine.class_totals(),
         dispatches: run.dispatches.load(Ordering::Relaxed),
         steals: host_steals,
-        migrations: 0,
+        migrations: run.migrations.load(Ordering::Relaxed),
         barrier_epochs: barrier.epochs,
         avg_concurrency: n_workers as f64,
         peak_concurrency: n_workers,
         concurrency: Vec::new(),
-        decisions: Vec::new(),
+        decisions,
         dram_bytes: machine.dram_total_bytes(),
         spread_rate: policy.spread_rate(),
         wall_ns: wall_start.elapsed().as_nanos() as u64,
@@ -187,9 +298,65 @@ pub(crate) fn execute_host(
     (report, machine)
 }
 
-/// Enqueue one batch of `rank` on its home worker.
+/// Fire the adaptive tick if its real-time deadline has passed. Called
+/// at every batch boundary; cheap when idle (one Instant read + one
+/// atomic load). The worker that CASes the deadline forward owns the
+/// tick; everyone else returns immediately. `try_lock` on the inner
+/// state means a tick can never stall a worker behind another tick.
+fn maybe_tick(run: &HostRun) {
+    let Some(adapt) = &run.adapt else { return };
+    let now = adapt.started.elapsed().as_nanos() as u64;
+    let due = adapt.next_tick_ns.load(Ordering::Relaxed);
+    if now < due {
+        return;
+    }
+    if adapt
+        .next_tick_ns
+        .compare_exchange(due, now + adapt.timer_ns, Ordering::Relaxed, Ordering::Relaxed)
+        .is_err()
+    {
+        return;
+    }
+    let Ok(mut inner) = adapt.inner.try_lock() else {
+        return;
+    };
+    let n = run.ranks.len();
+    let live = n - run.barrier.lock().unwrap().finished;
+    // The profiler window: *virtual* fill events per *real* timer
+    // window — the host analogue of Algorithm 1's counter read.
+    let totals = run.machine.class_totals();
+    let sample = inner
+        .profiler
+        .sample_window(now, totals, adapt.timer_ns, live);
+    inner.profiler.sample_concurrency(now, live);
+    if let Some(new_map) = inner.policy.on_timer(&run.machine.topo, now, &sample, n) {
+        for (rank, &new) in new_map.iter().enumerate().take(run.placement.len()) {
+            if run.done[rank].load(Ordering::Relaxed) {
+                continue;
+            }
+            let old = run.placement[rank].load(Ordering::Relaxed);
+            if old == new {
+                continue;
+            }
+            // Migration cost: task state crosses the fabric (same charge
+            // as the simulator's `apply_placement`). The in-flight batch,
+            // if any, finishes on the old core; the rank's *next* batch
+            // is submitted to the new home, where its fresh per-batch
+            // ProbeCache starts empty — post-move charging is exact.
+            run.machine.message(old, new, 256);
+            run.placement[rank].store(new, Ordering::Relaxed);
+            run.migrations.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    let spread = inner.policy.spread_rate();
+    inner.decisions.push((now, sample.rate, spread));
+}
+
+/// Enqueue one batch of `rank` on its *current* home worker — the
+/// targeted-inbox path adaptive migration re-targets: a tick that moved
+/// the rank's placement slot re-routes this very submission.
 fn submit_rank(run: &Arc<HostRun>, sub: &Submitter, rank: usize) {
-    let worker = run.placement[rank] % run.n_workers;
+    let worker = run.home_worker(rank);
     let run = run.clone();
     let sub2 = sub.clone();
     sub.execute_on(worker, move || step_rank(run, sub2, rank));
@@ -228,6 +395,7 @@ fn step_rank(run: Arc<HostRun>, sub: Submitter, rank: usize) {
                 now_ns: machine.now(core),
                 step_outcome: Outcome::default(),
                 probe_cache: cache,
+                peer_cores: Some(&run.placement),
             };
             let step = coro.step(&mut ctx);
             // Carry the probe cache into the batch's next step (the
@@ -245,6 +413,10 @@ fn step_rank(run: Arc<HostRun>, sub: Submitter, rank: usize) {
     // it — pinned by the batching-equivalence conformance test), so one
     // add covers the whole batch.
     run.dispatches.fetch_add(steps_done, Ordering::Relaxed);
+    // A batch boundary is the adaptive loop's tick point: real elapsed
+    // time is checked here, so a long batch delays a tick but the next
+    // boundary always catches up (no-op when no timer is armed).
+    maybe_tick(&run);
     match step {
         Step::Yield => {
             // Budget exhausted: back through the queues so thieves can
@@ -265,6 +437,9 @@ fn step_rank(run: Arc<HostRun>, sub: Submitter, rank: usize) {
         }
         Step::Done => {
             drop(coro);
+            // Mark the rank dead *before* bumping `finished`: a tick
+            // that observes the new count must already skip the rank.
+            run.done[rank].store(true, Ordering::Relaxed);
             let woken = {
                 let mut b = run.barrier.lock().unwrap();
                 b.finished += 1;
@@ -295,7 +470,7 @@ fn release_ranks(run: &Arc<HostRun>, sub: &Submitter, woken: Vec<usize>) {
         run.machine.advance_to(c, t_max);
     }
     sub.execute_on_many(woken.into_iter().map(|r| {
-        let worker = run.placement[r] % run.n_workers;
+        let worker = run.home_worker(r);
         let run = run.clone();
         let sub2 = sub.clone();
         (worker, move || step_rank(run, sub2, r))
@@ -328,6 +503,7 @@ mod tests {
         let (report, _) = execute_host(
             machine(),
             Box::new(LocalCachePolicy),
+            None,
             1,
             |_| Box::new(FnTask(|ctx: &mut TaskCtx<'_>| ctx.compute_ns(1000))),
             DEFAULT_BATCH_STEPS,
@@ -342,6 +518,7 @@ mod tests {
         let (report, _) = execute_host(
             machine(),
             Box::new(LocalCachePolicy),
+            None,
             4,
             |_| Box::new(IterTask::new(10, |ctx, _| ctx.compute_ns(100))),
             DEFAULT_BATCH_STEPS,
@@ -359,6 +536,7 @@ mod tests {
             execute_host(
                 machine(),
                 Box::new(LocalCachePolicy),
+                None,
                 4,
                 |_| Box::new(BspTask::new(3, |ctx, _| ctx.compute_ns(100))),
                 batch,
@@ -381,6 +559,7 @@ mod tests {
         let (report, _) = execute_host(
             machine(),
             Box::new(LocalCachePolicy),
+            None,
             4,
             |_| {
                 let hits = hits.clone();
@@ -408,6 +587,7 @@ mod tests {
         let (report, _) = execute_host(
             Machine::new(topo),
             Box::new(LocalCachePolicy),
+            None,
             32,
             |_| {
                 let hits = hits.clone();
@@ -430,6 +610,7 @@ mod tests {
         let (report, _) = execute_host(
             machine(),
             Box::new(LocalCachePolicy),
+            None,
             2,
             |rank| {
                 Box::new(BspTask::new(2, move |ctx, iter| {
@@ -452,11 +633,138 @@ mod tests {
         let (_, machine) = execute_host(
             machine(),
             Box::new(LocalCachePolicy),
+            None,
             2,
             |_| Box::new(FnTask(|ctx: &mut TaskCtx<'_>| ctx.compute_ns(50))),
             DEFAULT_BATCH_STEPS,
         );
         assert!(machine.max_time() >= 50);
+    }
+
+    /// Counts adaptive ticks without ever asking for a migration.
+    struct TickCountPolicy {
+        ticks: Arc<AtomicUsize>,
+    }
+
+    impl Policy for TickCountPolicy {
+        fn name(&self) -> &'static str {
+            "tick-count"
+        }
+        fn initial_placement(&mut self, _topo: &Topology, n: usize) -> Vec<usize> {
+            vec![0; n]
+        }
+        fn on_timer(
+            &mut self,
+            _topo: &Topology,
+            _now_ns: u64,
+            _sample: &crate::profiler::WindowSample,
+            _group_size: usize,
+        ) -> Option<Vec<usize>> {
+            self.ticks.fetch_add(1, Ordering::Relaxed);
+            None
+        }
+    }
+
+    /// Moves every rank to `target` on the first tick (and keeps asking,
+    /// which must be a no-op once applied).
+    struct HopPolicy {
+        target: usize,
+    }
+
+    impl Policy for HopPolicy {
+        fn name(&self) -> &'static str {
+            "hop"
+        }
+        fn initial_placement(&mut self, _topo: &Topology, n: usize) -> Vec<usize> {
+            vec![0; n]
+        }
+        fn on_timer(
+            &mut self,
+            _topo: &Topology,
+            _now_ns: u64,
+            _sample: &crate::profiler::WindowSample,
+            group_size: usize,
+        ) -> Option<Vec<usize>> {
+            Some(vec![self.target; group_size])
+        }
+    }
+
+    /// Two-chiplet cut of milan_1s so adaptive pools (sized to the whole
+    /// topology) stay small in tests.
+    fn small_topo() -> Topology {
+        let mut topo = Topology::milan_1s();
+        topo.chiplets_per_numa = 2;
+        topo
+    }
+
+    #[test]
+    fn timer_fires_at_batch_boundaries_even_under_long_batches() {
+        // Budget far above the run length: each rank runs its whole life
+        // as one long batch, so the only tick points are the few batch
+        // boundaries at completion. A 1 ns real timer is always past due
+        // there — the tick must not be lost, only delayed.
+        let ticks = Arc::new(AtomicUsize::new(0));
+        let (report, _) = execute_host(
+            Machine::new(small_topo()),
+            Box::new(TickCountPolicy {
+                ticks: ticks.clone(),
+            }),
+            Some(1),
+            2,
+            |_| Box::new(IterTask::new(64, |ctx, _| ctx.compute_ns(200))),
+            1_000,
+        );
+        let fired = ticks.load(Ordering::Relaxed);
+        assert!(fired >= 1, "long batches must still reach the tick point");
+        assert_eq!(
+            report.decisions.len(),
+            fired,
+            "one decision-log entry per tick"
+        );
+        assert_eq!(report.migrations, 0, "on_timer returned no map");
+    }
+
+    #[test]
+    fn no_timer_means_no_ticks_and_no_migrations() {
+        let ticks = Arc::new(AtomicUsize::new(0));
+        let (report, _) = execute_host(
+            Machine::new(small_topo()),
+            Box::new(TickCountPolicy {
+                ticks: ticks.clone(),
+            }),
+            None,
+            2,
+            |_| Box::new(IterTask::new(16, |ctx, _| ctx.compute_ns(100))),
+            DEFAULT_BATCH_STEPS,
+        );
+        assert_eq!(ticks.load(Ordering::Relaxed), 0);
+        assert_eq!(report.migrations, 0);
+        assert!(report.decisions.is_empty());
+    }
+
+    #[test]
+    fn a_migrated_rank_charges_its_new_core_from_the_next_batch() {
+        // Step-per-job batches make every step a tick point: the first
+        // tick migrates the rank from core 0 to the first core of the
+        // other chiplet, and every later batch must be re-targeted
+        // through the inbox path — charging the new core's clock with a
+        // fresh per-batch ProbeCache.
+        let topo = small_topo();
+        let target = topo.cores_per_chiplet;
+        let (report, machine) = execute_host(
+            Machine::new(topo),
+            Box::new(HopPolicy { target }),
+            Some(1),
+            1,
+            |_| Box::new(IterTask::new(64, |ctx, _| ctx.compute_ns(1_000))),
+            1,
+        );
+        assert_eq!(report.migrations, 1, "the hop applies exactly once");
+        assert!(
+            machine.now(target) >= 1_000,
+            "post-migration batches must charge the new core: now={}",
+            machine.now(target)
+        );
     }
 
     #[test]
@@ -479,6 +787,7 @@ mod tests {
         let (report, machine) = execute_host(
             machine(),
             Box::new(DistributedCachePolicy),
+            None,
             8,
             |_| Box::new(IterTask::new(20, |ctx, _| ctx.compute_ns(1_000))),
             DEFAULT_BATCH_STEPS,

@@ -542,9 +542,12 @@ impl Driver {
 ///
 /// This is the **only** executor construction site: [`ExecBackend::Sim`]
 /// builds the deterministic [`SimExecutor`]; [`ExecBackend::Host`] runs
-/// the group on the real `HostExecutor` thread pool (which ignores
-/// `timer_ns` — policy timers and adaptive migration are
-/// simulator-only). A future sharded multi-machine driver slots in here.
+/// the group on the real `HostExecutor` thread pool. On the host,
+/// `timer_ns` measures **real elapsed time**: `Some(t)` arms the
+/// adaptive controller tick (`policy.on_timer` over merged profiler
+/// windows, migrations applied to each rank's next batch), `None`
+/// keeps the legacy static-placement behavior byte-identical. A future
+/// sharded multi-machine driver slots in here.
 pub fn execute_on(
     backend: ExecBackend,
     machine: Machine,
@@ -586,7 +589,9 @@ fn execute_on_with(
             let report = ex.run();
             (report, ex.machine)
         }
-        ExecBackend::Host => host_backend::execute_host(machine, policy, n, make, batch_steps),
+        ExecBackend::Host => {
+            host_backend::execute_host(machine, policy, timer_ns, n, make, batch_steps)
+        }
     }
 }
 

@@ -21,6 +21,7 @@ use crate::workloads::graph::{
 use crate::workloads::mixed::MixedScenario;
 use crate::workloads::olap::{all_queries, Db, OlapScenario, QuerySpec};
 use crate::workloads::oltp::{OltpScenario, OltpWorkload};
+use crate::workloads::phaseshift::PhaseShiftScenario;
 use crate::workloads::serve::{
     ArrivalModel, PriorityMix, ServeKvScenario, ServeMixedScenario, ServeOpts, Trace, TraceConfig,
 };
@@ -256,6 +257,16 @@ fn build_tpcc(p: &ScenarioParams) -> Box<dyn Scenario> {
     Box::new(OltpScenario::new(wl, p.iters.unwrap_or(20_000), p.seed))
 }
 
+fn build_phase_shift(p: &ScenarioParams) -> Box<dyn Scenario> {
+    // Phase-B stream: 6.4 GB at paper scale, floored well past twice a
+    // chiplet's L3 (2 x 32 MB on milan_1s) so no compact placement can
+    // ever cache it — the bandwidth phase must stay bandwidth-bound at
+    // any --scale. `iters` sets the per-phase step count per rank.
+    let bytes = ((6.4e9 * p.scale) as u64).max(96 << 20);
+    let steps = p.iters.unwrap_or(60);
+    Box::new(PhaseShiftScenario::new(bytes, steps, steps))
+}
+
 fn build_mixed(p: &ScenarioParams) -> Box<dyn Scenario> {
     // YCSB table at the pure-OLTP scenario's scale convention, TPC-H
     // database at the OLAP one, co-resident. `iters` = transactions per
@@ -454,6 +465,14 @@ static REGISTRY: &[ScenarioSpec] = &[
         build: build_mixed,
     },
     ScenarioSpec {
+        name: "phase-shift",
+        aliases: &["phaseshift"],
+        family: "adaptive",
+        about: "message-bound phase then bandwidth-bound phase: adaptive migration beats every static placement",
+        accepts: &[],
+        build: build_phase_shift,
+    },
+    ScenarioSpec {
         name: "serve-kv",
         aliases: &["serve"],
         family: "serve",
@@ -504,7 +523,11 @@ pub fn scenarios_table() -> String {
     out.push_str(
         "\nevery scenario also accepts the engine-wide knobs: --policy, --cores, \
          --backend sim|host, --repeat, --batch-steps (host run-until-yield batch \
-         budget; 1 = step-per-job), --topology, --timer-us, --seed, --verify\n",
+         budget; 1 = step-per-job), --topology, --timer-us, --seed, --verify\n\
+         with --policy arcas|adaptive, --timer-us is the adaptation cadence: \
+         virtual time on sim, real elapsed time on host; adaptive runs report \
+         migrations and per-window decisions (t_ns, fill rate, spread) in the \
+         run report\n",
     );
     out
 }

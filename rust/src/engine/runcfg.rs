@@ -34,7 +34,11 @@ impl RunConfig {
         Cli::new("arcas run", "run one scenario under a policy")
             .opt("scenario", "bfs", &names.join("|"))
             .opt_nodefault("workload", "deprecated alias for --scenario")
-            .opt("policy", "arcas", "arcas|ring|shoal|local|distributed|os_async|slo")
+            .opt(
+                "policy",
+                "arcas",
+                "arcas|adaptive|ring|shoal|local|distributed|os_async|slo (adaptive = arcas; on --backend host it arms the real-time migration loop)",
+            )
             .opt("cores", "16", "worker count")
             .opt("backend", "sim", "executor backend: sim (virtual time) | host (real threads)")
             .opt("repeat", "1", "run N times on one machine (warm caches after run 1)")
@@ -66,7 +70,11 @@ impl RunConfig {
                 "serve-* closed-loop client think time in ns (replaces open-loop trace arrivals)",
             )
             .opt("topology", "milan_2s", "machine preset")
-            .opt("timer-us", "100", "ARCAS controller timer (us)")
+            .opt(
+                "timer-us",
+                "100",
+                "ARCAS controller timer (us): virtual time on sim; real elapsed time between host adaptation ticks",
+            )
             .opt("seed", "42", "PRNG seed")
             .flag("verify", "check results against the serial references")
     }

@@ -153,8 +153,9 @@ fn cmd_run(args: Vec<String>) {
         std::process::exit(2);
     }
     // Rebuilt per repetition: a policy is consumed by each run.
+    let adaptive = rc.policy == "arcas" || rc.policy == "adaptive";
     let make_policy = || -> Box<dyn policy::Policy> {
-        if rc.policy == "arcas" {
+        if adaptive {
             Box::new(policy::ArcasPolicy::new(&topo).with_timer(rc.timer_us * 1000))
         } else {
             policy::by_name(&rc.policy, &topo).unwrap()
@@ -181,13 +182,20 @@ fn cmd_run(args: Vec<String>) {
         "scenario {} [{}]: {} | {} cores on {} | {} backend",
         spec.name, spec.family, spec.about, rc.cores, topo.name, rc.backend
     );
-    let runs = engine::Run::new(&topo)
+    let mut run = engine::Run::new(&topo)
         .tasks(rc.cores)
         .backend(rc.backend)
         .batch_steps(rc.batch_steps)
         .verify(rc.verify)
-        .repeat(rc.repeat)
-        .run_repeated(make_policy, || spec.build(&rc.params));
+        .repeat(rc.repeat);
+    // On the host backend the run-level timer arms the real-elapsed-time
+    // adaptation loop; arm it only for adaptive policies so static runs
+    // keep the pre-adaptive execution byte for byte. (On sim the policy
+    // carries its own virtual-time timer via `with_timer` above.)
+    if adaptive && rc.backend == engine::ExecBackend::Host {
+        run = run.timer_ns(rc.timer_us * 1000);
+    }
+    let runs = run.run_repeated(make_policy, || spec.build(&rc.params));
     if rc.repeat > 1 {
         for (i, run) in runs.iter().enumerate() {
             println!(
@@ -249,7 +257,7 @@ fn cmd_artifacts() {
 /// `"pinned": true` forced), turning bootstrap placeholders into real
 /// gates in one command after a bench run.
 fn cmd_bench_check(args: Vec<String>) {
-    use arcas::util::baseline::{check_overhead, check_scaling, check_serving};
+    use arcas::util::baseline::{check_adaptive, check_overhead, check_scaling, check_serving};
     use arcas::util::json::Json;
 
     let cli = arcas::util::cli::Cli::new(
@@ -260,7 +268,8 @@ fn cmd_bench_check(args: Vec<String>) {
         "kind",
         "serving",
         "metric family: serving (latency, lower=better unless the entry says otherwise) | \
-         scaling (speedup, higher=better) | overhead (steps/sec, higher=better)",
+         scaling (speedup, higher=better) | overhead (steps/sec, higher=better) | \
+         adaptive (speedup vs best static, higher=better)",
     )
     .opt_nodefault("baseline", "checked-in baseline json (ci/baselines/...)")
     .opt_nodefault("current", "freshly emitted BENCH_*.json")
@@ -316,8 +325,9 @@ fn cmd_bench_check(args: Vec<String>) {
         "serving" => check_serving(&baseline, &current, tol),
         "scaling" => check_scaling(&baseline, &current, tol),
         "overhead" => check_overhead(&baseline, &current, tol),
+        "adaptive" => check_adaptive(&baseline, &current, tol),
         other => {
-            eprintln!("bench-check: unknown --kind {other} (serving|scaling|overhead)");
+            eprintln!("bench-check: unknown --kind {other} (serving|scaling|overhead|adaptive)");
             std::process::exit(2);
         }
     };
@@ -399,7 +409,16 @@ fn cmd_bench_pin(baselines_dir: &str, artifacts_dir: &str) {
 fn cmd_policies() {
     let topo = Topology::milan_2s();
     println!("available policies:");
-    for name in ["arcas", "ring", "shoal", "local", "distributed", "os_async", "slo"] {
+    for name in [
+        "arcas",
+        "adaptive",
+        "ring",
+        "shoal",
+        "local",
+        "distributed",
+        "os_async",
+        "slo",
+    ] {
         let p = policy::by_name(name, &topo).unwrap();
         println!("  {:<12} {}", name, p.name());
     }

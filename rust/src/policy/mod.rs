@@ -611,7 +611,11 @@ fn chiplet_hist(topo: &Topology, map: &[usize]) -> Vec<usize> {
 /// Construct a policy by name (CLI surface).
 pub fn by_name(name: &str, topo: &Topology) -> Option<Box<dyn Policy>> {
     match name {
-        "arcas" => Some(Box::new(ArcasPolicy::new(topo))),
+        // "adaptive" is the ISSUE-8 CLI spelling for the online
+        // migration loop; both names build the same policy — the
+        // backend decides whether its timer runs on virtual (sim) or
+        // real (host) elapsed time.
+        "arcas" | "adaptive" => Some(Box::new(ArcasPolicy::new(topo))),
         "ring" => Some(Box::new(RingPolicy::new())),
         "shoal" => Some(Box::new(ShoalPolicy::new())),
         "local" => Some(Box::new(LocalCachePolicy)),
@@ -742,7 +746,16 @@ mod tests {
     #[test]
     fn by_name_resolves_all() {
         let t = topo();
-        for n in ["arcas", "ring", "shoal", "local", "distributed", "os_async", "slo"] {
+        for n in [
+            "arcas",
+            "adaptive",
+            "ring",
+            "shoal",
+            "local",
+            "distributed",
+            "os_async",
+            "slo",
+        ] {
             assert!(by_name(n, &t).is_some(), "{n}");
         }
         assert!(by_name("nope", &t).is_none());

@@ -62,11 +62,14 @@ impl Profiler {
         let elapsed = now_ns.saturating_sub(self.last_ns).max(1);
         let rate = fills * timer_ns as f64 / elapsed as f64;
         let mut delta = total;
-        // Window delta per class.
-        delta.local -= self.last_total.local;
-        delta.near -= self.last_total.near;
-        delta.far -= self.last_total.far;
-        delta.dram -= self.last_total.dram;
+        // Window delta per class, clamped at zero like `fills` above: a
+        // `Machine::reset()` between repetitions rewinds the absolute
+        // counters below the baseline, and a negative class count would
+        // poison `recent_remote_share`.
+        delta.local = (delta.local - self.last_total.local).max(0.0);
+        delta.near = (delta.near - self.last_total.near).max(0.0);
+        delta.far = (delta.far - self.last_total.far).max(0.0);
+        delta.dram = (delta.dram - self.last_total.dram).max(0.0);
         let sample = WindowSample {
             at_ns: now_ns,
             fill_events: fills,
@@ -80,6 +83,16 @@ impl Profiler {
         self.last_total = total;
         self.last_ns = now_ns;
         sample
+    }
+
+    /// Re-anchor the window baseline to a (possibly warm) machine
+    /// without discarding collected samples. Executors call this at run
+    /// start: with `--repeat`, rep N starts on rep N-1's counters and
+    /// clocks, and a zero baseline would attribute all of them to the
+    /// first window.
+    pub fn rebaseline(&mut self, now_ns: u64, total: ClassCounts) {
+        self.last_total = total;
+        self.last_ns = now_ns;
     }
 
     /// Record a concurrency sample (Fig. 11 timeline).
@@ -150,6 +163,32 @@ mod tests {
         assert!((s.fill_events - 50.0).abs() < 1e-9);
         assert!((s.counts.local - 10.0).abs() < 1e-9);
         assert!((s.counts.dram - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn per_class_deltas_clamp_after_a_counter_rewind() {
+        let mut p = Profiler::new();
+        p.sample_window(10_000, totals_with(100.0, 50.0, 10.0, 40.0), 10_000, 4);
+        // Counters rewound (e.g. `Machine::reset()` between reps): the
+        // next window must clamp at zero instead of going negative.
+        let s = p.sample_window(20_000, totals_with(5.0, 2.0, 0.0, 1.0), 10_000, 4);
+        assert!(s.counts.local >= 0.0, "local={}", s.counts.local);
+        assert!(s.counts.near >= 0.0, "near={}", s.counts.near);
+        assert!(s.counts.far >= 0.0, "far={}", s.counts.far);
+        assert!(s.counts.dram >= 0.0, "dram={}", s.counts.dram);
+        assert!(s.fill_events >= 0.0);
+        let share = p.recent_remote_share(2);
+        assert!((0.0..=1.0).contains(&share), "share={share}");
+    }
+
+    #[test]
+    fn rebaseline_absorbs_warm_counters() {
+        let mut p = Profiler::new();
+        p.rebaseline(5_000, totals_with(1000.0, 1000.0, 0.0, 1000.0));
+        let s = p.sample_window(15_000, totals_with(1010.0, 1005.0, 0.0, 1002.0), 10_000, 2);
+        assert!((s.counts.local - 10.0).abs() < 1e-9, "local={}", s.counts.local);
+        assert!((s.fill_events - 5.0).abs() < 1e-9, "fills={}", s.fill_events);
+        assert!((s.counts.dram - 2.0).abs() < 1e-9, "dram={}", s.counts.dram);
     }
 
     #[test]

@@ -22,7 +22,11 @@
 //! - per-worker mutex-protected **inboxes** carry *core-targeted*
 //!   submissions ([`Submitter::execute_on`]) only. A worker drains its
 //!   own inbox *before* touching the injector, so a job aimed at a
-//!   specific worker cannot be buried under an injector flood.
+//!   specific worker cannot be buried under an injector flood. This is
+//!   also the **migration re-target path**: when the host backend's
+//!   adaptation tick moves a rank, its next batch is simply submitted
+//!   to the new home worker's inbox — no thread teardown, no handoff
+//!   protocol beyond the queue itself.
 //!
 //! An idle worker looks for work in the order: own deque → own inbox →
 //! injector (draining a small batch into its own deque) → steal other

@@ -123,6 +123,12 @@ pub struct SimExecutor {
     tasks: Vec<Task>,
     /// rank → core placement (updated on migration).
     placement: Vec<usize>,
+    /// Atomic mirror of `placement` handed to every `TaskCtx` as
+    /// `peer_cores`, so coroutines can message group peers at their
+    /// *current* home (`TaskCtx::send_to_rank`). Atomics only because the
+    /// field type is shared with the host backend, where migrations race
+    /// in-flight steps; the sim updates it single-threaded.
+    peer_cores: Vec<std::sync::atomic::AtomicUsize>,
     queues: Vec<Deque>,
     active_cores: Vec<usize>,
     profiler: Profiler,
@@ -148,6 +154,7 @@ impl SimExecutor {
             cfg: ExecConfig::default(),
             tasks: Vec::new(),
             placement: Vec::new(),
+            peer_cores: Vec::new(),
             queues: (0..n_cores).map(|_| Deque::new()).collect(),
             active_cores: Vec::new(),
             profiler: Profiler::new(),
@@ -184,6 +191,11 @@ impl SimExecutor {
         }
         self.placement = self.policy.initial_placement(&self.machine.topo, n);
         assert_eq!(self.placement.len(), n);
+        self.peer_cores = self
+            .placement
+            .iter()
+            .map(|&c| std::sync::atomic::AtomicUsize::new(c))
+            .collect();
         for rank in 0..n {
             let id = self.tasks.len();
             let mut t = Task::new(id, rank, n, make(rank));
@@ -196,7 +208,14 @@ impl SimExecutor {
         cores.sort_unstable();
         cores.dedup();
         self.active_cores = cores;
-        self.next_timer_ns = self.cfg.timer_ns;
+        // Re-anchor the profiler on the (possibly warm) machine: with
+        // `--repeat`, rep N starts on rep N-1's counters and clocks, and
+        // a zero baseline would attribute all of them to the first
+        // window. Cold machines report 0/zeros, so this is a no-op there
+        // and the goldens are unaffected.
+        let t0 = self.machine.max_time();
+        self.profiler.rebaseline(t0, self.machine.class_totals());
+        self.next_timer_ns = t0 + self.cfg.timer_ns;
     }
 
     fn live_threads(&self) -> usize {
@@ -243,9 +262,19 @@ impl SimExecutor {
                 queued.push(id);
             }
         }
+        // rank → tid, built once: the old per-rank `iter().position()`
+        // scan was O(tasks²) per timer fire and panicked on a rank with
+        // no live task (e.g. a map wider than the group).
+        let mut rank_to_tid: Vec<Option<TaskId>> = vec![None; new_map.len()];
+        for (tid, t) in self.tasks.iter().enumerate() {
+            if let Some(slot) = rank_to_tid.get_mut(t.rank) {
+                *slot = Some(tid);
+            }
+        }
         for (rank, (&old, &new)) in self.placement.iter().zip(new_map.iter()).enumerate() {
             if old != new {
-                let tid = self.tasks.iter().position(|t| t.rank == rank).unwrap();
+                // A rank without a live task is a no-op, not a panic.
+                let Some(tid) = rank_to_tid[rank] else { continue };
                 if self.tasks[tid].state != TaskState::Finished {
                     // Migration cost: task state moves across the fabric.
                     self.machine.message(old, new, 256);
@@ -256,6 +285,9 @@ impl SimExecutor {
             }
         }
         self.placement = new_map;
+        for (rank, &core) in self.placement.iter().enumerate() {
+            self.peer_cores[rank].store(core, std::sync::atomic::Ordering::Relaxed);
+        }
         // Re-push queued tasks at their (possibly new) placement.
         for id in queued {
             let core = self.placement[self.tasks[id].rank];
@@ -424,6 +456,7 @@ impl SimExecutor {
                 now_ns: t_before,
                 step_outcome: Outcome::default(),
                 probe_cache: Default::default(),
+                peer_cores: Some(&self.peer_cores),
             };
             let step = task.coro.step(&mut ctx);
             let t_after = self.machine.now(core);
@@ -668,6 +701,33 @@ mod tests {
         assert_eq!(report.dispatches, 4);
         let cores: Vec<usize> = ran_on.iter().map(|c| c.load(Ordering::Relaxed)).collect();
         assert_eq!(cores, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn apply_placement_skips_ranks_without_a_live_task() {
+        let m = machine();
+        let mut ex = SimExecutor::new(m, Box::new(LocalCachePolicy));
+        ex.spawn_group(4, |_| {
+            Box::new(IterTask::new(2, |ctx: &mut TaskCtx<'_>, _| ctx.compute_ns(10)))
+                as Box<dyn Coroutine>
+        });
+        // Detach rank 2: its task now answers for rank 3, so rank 2 has
+        // no live task. The old code did `.position(..).unwrap()` per
+        // rank and panicked here.
+        ex.tasks[2].rank = 3;
+        let mut map = ex.placement.clone();
+        let n_cores = ex.machine.topo.num_cores();
+        for c in &mut map {
+            *c = (*c + 1) % n_cores;
+        }
+        let before = ex.migrations;
+        ex.apply_placement(map.clone(), 0);
+        assert_eq!(ex.placement, map);
+        // Ranks 0, 1 and 3 migrated; the taskless rank 2 was a no-op.
+        assert_eq!(ex.migrations - before, 3);
+        // Every queued task was re-pushed somewhere.
+        let queued: usize = (0..n_cores).map(|c| ex.queues[c].len()).sum();
+        assert_eq!(queued, 4);
     }
 
     #[test]

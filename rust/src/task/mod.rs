@@ -62,6 +62,12 @@ pub struct TaskCtx<'a> {
     /// run-until-yield batch (the rank stays on one core for the whole
     /// batch, so the carry is exact — `shard_equivalence` pins this).
     pub probe_cache: ProbeCache,
+    /// Current core of every rank in the spawn group, kept live by the
+    /// executor (atomics because adaptive migration re-homes ranks while
+    /// other ranks are mid-step on the host backend). `None` when the
+    /// executor does not track peers (e.g. hand-built test contexts) —
+    /// then [`TaskCtx::send_to_rank`] is a no-op.
+    pub peer_cores: Option<&'a [std::sync::atomic::AtomicUsize]>,
 }
 
 impl<'a> TaskCtx<'a> {
@@ -114,6 +120,24 @@ impl<'a> TaskCtx<'a> {
         const FLOPS_PER_NS: f64 = 48.0;
         let ns = (flops as f64 / FLOPS_PER_NS).ceil() as u64;
         self.view().compute(ns.max(1));
+    }
+
+    /// Point-to-point message to the group peer at `rank` (charges this
+    /// core as the sender; `Machine::message` latency follows the core
+    /// distance, so intra-chiplet neighbors are ~8× cheaper than
+    /// cross-chiplet ones). The destination core is read from the
+    /// executor's live placement map, so migrations re-route messages
+    /// mid-run. Returns the charged latency (0 when the executor tracks
+    /// no peers or `rank` is out of range).
+    pub fn send_to_rank(&mut self, rank: usize, bytes: u64) -> u64 {
+        let Some(peers) = self.peer_cores else {
+            return 0;
+        };
+        let Some(dest) = peers.get(rank) else {
+            return 0;
+        };
+        let dest = dest.load(std::sync::atomic::Ordering::Relaxed);
+        self.view().message_to(dest, bytes)
     }
 
     /// Which chiplet the task currently runs on.
@@ -280,6 +304,7 @@ mod tests {
             now_ns: 0,
             step_outcome: Outcome::default(),
             probe_cache: Default::default(),
+            peer_cores: None,
         }
     }
 
@@ -356,5 +381,30 @@ mod tests {
         let c = ctx_on(&m, 70);
         assert_eq!(c.chiplet(), 8);
         assert_eq!(c.numa(), 1);
+    }
+
+    #[test]
+    fn send_to_rank_follows_the_live_placement() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let m = Machine::new(Topology::milan_1s());
+        // Rank 1 starts on core 1 (same chiplet as the sender on core 0).
+        let peers: Vec<AtomicUsize> = vec![AtomicUsize::new(0), AtomicUsize::new(1)];
+        let mut c = ctx_on(&m, 0);
+        c.peer_cores = Some(&peers);
+        let intra = c.send_to_rank(1, 64);
+        // "Migrate" rank 1 to another chiplet: the same send gets dearer.
+        peers[1].store(9, Ordering::Relaxed);
+        let inter = c.send_to_rank(1, 64);
+        assert!(
+            inter > intra,
+            "cross-chiplet send ({inter} ns) must cost more than intra ({intra} ns)"
+        );
+        // Out-of-range rank and untracked peers are charged-nothing no-ops.
+        let t = m.now(0);
+        assert_eq!(c.send_to_rank(99, 64), 0);
+        c.peer_cores = None;
+        assert_eq!(c.send_to_rank(1, 64), 0);
+        drop(c);
+        assert_eq!(m.now(0), t);
     }
 }

@@ -18,7 +18,9 @@
 //! of `micro_runtime` (`BENCH_host_scaling.json`, higher is better) and
 //! the zero-work scheduler throughput of the same bench
 //! (`BENCH_sched_overhead.json`, steps/sec per backend × batch budget,
-//! higher is better). Each baseline entry may carry its own `"tol"`
+//! higher is better), and the adaptive-vs-best-static makespan ratio on
+//! the phase-shifting scenario (`BENCH_adaptive.json`, higher is
+//! better). Each baseline entry may carry its own `"tol"`
 //! (relative band, e.g. `0.25`); entries without one use the caller's
 //! default — keep simulator series tight (they are deterministic) and
 //! host series loose (shared-runner noise).
@@ -249,6 +251,39 @@ pub fn check_scaling(
     })
 }
 
+/// Gate `BENCH_adaptive.json`: the adaptive policy's makespan advantage
+/// over the best *static* policy on the phase-shifting scenario
+/// (`speedup_adaptive_vs_best_static`, higher is better; ≥ 1.0 means
+/// adaptation actually pays for itself). The bench also emits the raw
+/// per-policy makespans and the migration count for diagnosis, but only
+/// the headline ratio is gated — absolute host makespans are
+/// runner-noise territory.
+pub fn check_adaptive(
+    baseline: &Json,
+    current: &Json,
+    default_tol: f64,
+) -> Result<GateResult, String> {
+    check_config(baseline, current)?;
+    let base = baseline
+        .num("speedup_adaptive_vs_best_static")
+        .ok_or("baseline missing numeric \"speedup_adaptive_vs_best_static\"")?;
+    let tol = baseline.num("tol").unwrap_or(default_tol);
+    let (cur, verdict) = match current.num("speedup_adaptive_vs_best_static") {
+        Some(v) => (v, verdict(base, v, tol, true)),
+        None => (f64::NAN, Verdict::Missing),
+    };
+    Ok(GateResult {
+        checks: vec![Check {
+            label: "adaptive speedup_vs_best_static".into(),
+            base,
+            current: cur,
+            tol,
+            verdict,
+        }],
+        unpinned: is_unpinned(baseline),
+    })
+}
+
 /// Gate `BENCH_sched_overhead.json`: zero-work scheduler throughput in
 /// steps/sec per `(backend, batch_steps)` point, higher is better, plus
 /// the headline `speedup_batched_vs_1` ratio (batched host pipeline vs
@@ -436,6 +471,38 @@ mod tests {
         // Null speedup (no 1-worker point) is a missing metric.
         let null = Json::parse(r#"{"speedup_max_vs_1": null}"#).unwrap();
         assert!(check_scaling(&base, &null, 0.3).unwrap().failed());
+    }
+
+    #[test]
+    fn adaptive_gate_is_higher_is_better() {
+        let base = Json::parse(
+            r#"{"pinned": true, "speedup_adaptive_vs_best_static": 1.2, "tol": 0.15}"#,
+        )
+        .unwrap();
+        let good = Json::parse(r#"{"speedup_adaptive_vs_best_static": 1.25}"#).unwrap();
+        assert!(!check_adaptive(&base, &good, 0.25).unwrap().failed());
+        // Adaptation losing its edge over the best static policy fails.
+        let bad = Json::parse(r#"{"speedup_adaptive_vs_best_static": 0.9}"#).unwrap();
+        let r = check_adaptive(&base, &bad, 0.25).unwrap();
+        assert!(r.failed());
+        assert_eq!(r.checks[0].verdict, Verdict::Regressed);
+        // A bigger win warns to re-pin, never fails.
+        let better = Json::parse(r#"{"speedup_adaptive_vs_best_static": 2.0}"#).unwrap();
+        let r = check_adaptive(&base, &better, 0.25).unwrap();
+        assert!(!r.failed());
+        assert!(r.improved());
+        // Missing headline fails a pinned gate; bootstrap never fails.
+        let none = Json::parse(r#"{"migrations": 12}"#).unwrap();
+        assert!(check_adaptive(&base, &none, 0.25).unwrap().failed());
+        let bootstrap = Json::parse(
+            r#"{"pinned": false, "speedup_adaptive_vs_best_static": 1.0}"#,
+        )
+        .unwrap();
+        let r = check_adaptive(&bootstrap, &bad, 0.25).unwrap();
+        assert!(r.unpinned);
+        assert!(!r.failed());
+        // Malformed baseline is an error, not a panic.
+        assert!(check_adaptive(&none, &good, 0.25).is_err());
     }
 
     #[test]

@@ -6,4 +6,5 @@ pub mod sgd;
 pub mod olap;
 pub mod oltp;
 pub mod mixed;
+pub mod phaseshift;
 pub mod serve;

@@ -1,0 +1,174 @@
+//! Phase-shifting adaptive-scheduling workload: the adversarial proof
+//! for online migration (ISSUE 8 / ROADMAP item 2).
+//!
+//! Two phases with opposite optimal placements, run back to back by the
+//! same task group:
+//!
+//! - **Phase A — communication-bound.** Every step each rank sends a
+//!   burst of small fabric messages to its ring neighbor
+//!   (`TaskCtx::send_to_rank`). Messages pay core-to-core latency on the
+//!   sender's clock (intra-chiplet ≈ 12 ns vs cross-chiplet ≈ 97 ns on
+//!   `milan_1s`) but generate **zero cache-fill events**, so the
+//!   profiler's remote-fill rate sits at ~0 and Algorithm 1 *compacts*
+//!   the group — which is exactly right: a compact group turns neighbor
+//!   messages intra-chiplet.
+//! - **Phase B — bandwidth-bound.** Every step each rank random-reads a
+//!   shared streaming region sized well past twice a chiplet's L3, so no
+//!   compact placement can cache it. Fills (and DRAM pressure) spike the
+//!   profiler rate past the spread threshold and the controller *spreads*
+//!   the group back out, buying aggregate L3 and DDR channels.
+//!
+//! A static policy is wrong in one of the two phases by construction;
+//! only the adaptive policy can win both. The `BENCH_adaptive.json`
+//! bench gate (`micro_runtime --adaptive-only`) pins that
+//! adaptive ≥ best-static on this scenario, and `backend_conformance`
+//! pins `migrations > 0` on both backends.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::cachesim::Access;
+use crate::engine::{Scenario, ScenarioMetrics};
+use crate::mem::{Placement, RegionId};
+use crate::sched::RunReport;
+use crate::sim::Machine;
+use crate::task::{Coroutine, StateTask, Step};
+
+/// Small-message burst per rank per phase-A step.
+const MSGS_PER_STEP: u64 = 24;
+/// One cache line: the message payload stays latency- (not
+/// bandwidth-) dominated.
+const MSG_BYTES: u64 = 64;
+/// Random reads per rank per phase-B step.
+const READS_PER_STEP: u64 = 2048;
+
+/// The phase-shifting scenario (`--scenario phase-shift`).
+pub struct PhaseShiftScenario {
+    /// Shared streaming-region size for phase B.
+    bytes: u64,
+    /// Steps in the communication-bound phase (per rank).
+    steps_a: u64,
+    /// Steps in the bandwidth-bound phase (per rank).
+    steps_b: u64,
+    tasks: usize,
+    region: Option<RegionId>,
+    /// Steps actually executed across all ranks (verify counter).
+    steps_done: Arc<AtomicU64>,
+}
+
+impl PhaseShiftScenario {
+    pub fn new(bytes: u64, steps_a: u64, steps_b: u64) -> Self {
+        Self {
+            bytes: bytes.max(1),
+            steps_a: steps_a.max(1),
+            steps_b: steps_b.max(1),
+            tasks: 0,
+            region: None,
+            steps_done: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// Total steps the group runs (metrics numerator).
+    pub fn total_steps(&self) -> u64 {
+        self.tasks as u64 * (self.steps_a + self.steps_b)
+    }
+}
+
+impl Scenario for PhaseShiftScenario {
+    fn name(&self) -> &'static str {
+        "phase-shift"
+    }
+
+    fn setup(&mut self, machine: &mut Machine, tasks: usize) {
+        self.tasks = tasks;
+        self.region = Some(machine.alloc("phase-b-stream", self.bytes, Placement::Interleave));
+        self.steps_done.store(0, Ordering::Relaxed);
+    }
+
+    fn spawn(&mut self, _rank: usize) -> Box<dyn Coroutine> {
+        let region = self.region.expect("setup() before spawn()");
+        let bytes = self.bytes;
+        let (steps_a, total) = (self.steps_a, self.steps_a + self.steps_b);
+        let counter = self.steps_done.clone();
+        Box::new(StateTask::new(move |ctx, step| {
+            if step >= total {
+                return Step::Done;
+            }
+            if step < steps_a {
+                // Communication-bound: a burst of small messages to the
+                // ring neighbor. Charged to the sender's clock at the
+                // live core-to-core distance (peer placement is read per
+                // message, so migrations change the cost mid-run) —
+                // invisible to the fill-event counters.
+                let next = (ctx.rank + 1) % ctx.group_size;
+                for _ in 0..MSGS_PER_STEP {
+                    ctx.send_to_rank(next, MSG_BYTES);
+                }
+                ctx.compute_ns(100);
+            } else {
+                // Bandwidth-bound: stream random reads over the shared
+                // region; it overflows any compact placement's L3, so
+                // fills/DRAM pressure push the profiler rate up.
+                ctx.access(Access::rand_read(region, READS_PER_STEP, bytes).with_mlp(4.0));
+                ctx.compute_ns(100);
+            }
+            counter.fetch_add(1, Ordering::Relaxed);
+            if step + 1 >= total {
+                Step::Done
+            } else {
+                Step::Yield
+            }
+        }))
+    }
+
+    fn verify(&self) {
+        let done = self.steps_done.load(Ordering::Relaxed);
+        assert_eq!(
+            done,
+            self.total_steps(),
+            "every rank must run both phases to completion"
+        );
+    }
+
+    fn metrics(&self, report: &RunReport) -> ScenarioMetrics {
+        ScenarioMetrics::new(self.total_steps() as f64, "steps")
+            .with("phase_a_steps", (self.tasks as u64 * self.steps_a) as f64)
+            .with("phase_b_steps", (self.tasks as u64 * self.steps_b) as f64)
+            .with("migrations", report.migrations as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::Driver;
+    use crate::policy::ArcasPolicy;
+    use crate::topology::Topology;
+
+    #[test]
+    fn both_phases_run_and_verify() {
+        let topo = Topology::milan_1s();
+        let mut s = PhaseShiftScenario::new(96 << 20, 8, 8);
+        let run = Driver::new(&topo, Box::new(ArcasPolicy::new(&topo)), 16)
+            .with_verify(true)
+            .run(&mut s);
+        assert_eq!(run.metrics.items, 16.0 * 16.0);
+        assert_eq!(run.report.dispatches, 16 * 16);
+    }
+
+    #[test]
+    fn adaptive_migrates_on_the_shift_in_virtual_time() {
+        // Sim backend, policy timer in virtual ns: phase A's ~zero fill
+        // rate compacts the initially spread group, phase B's fill storm
+        // spreads it back out — both transitions are migrations.
+        let topo = Topology::milan_1s();
+        let mut s = PhaseShiftScenario::new(96 << 20, 60, 60);
+        let policy = Box::new(ArcasPolicy::new(&topo).with_timer(20_000));
+        let run = Driver::new(&topo, policy, 16).with_verify(true).run(&mut s);
+        assert!(
+            run.report.migrations > 0,
+            "the phase shift must trigger adaptive migrations: {:?}",
+            run.report.decisions
+        );
+    }
+}

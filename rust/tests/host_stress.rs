@@ -346,6 +346,82 @@ fn randomized_injector_schedule_with_nested_children() {
     assert_eq!(child_runs.load(Ordering::Relaxed), expected_children);
 }
 
+/// Adaptive migration racing burst submission: a tick that flips every
+/// rank's placement slot on every batch boundary, against a BSP group
+/// whose barrier releases resubmit the whole group in one burst. The
+/// placement swap and the burst's `home_worker` reads race by design;
+/// the invariants that must hold anyway: every step runs exactly once,
+/// the BSP structure is intact, and migrations were actually applied.
+#[test]
+fn migration_races_burst_submission() {
+    use arcas::engine::{ExecBackend, Run};
+    use arcas::policy::Policy;
+    use arcas::profiler::WindowSample;
+    use arcas::task::BspTask;
+
+    /// Hops the whole group between chiplet 0 and chiplet 1 every tick.
+    struct PingPongPolicy {
+        flip: bool,
+    }
+
+    impl Policy for PingPongPolicy {
+        fn name(&self) -> &'static str {
+            "ping-pong"
+        }
+        fn initial_placement(&mut self, topo: &Topology, n: usize) -> Vec<usize> {
+            (0..n).map(|r| r % topo.cores_per_chiplet).collect()
+        }
+        fn on_timer(
+            &mut self,
+            topo: &Topology,
+            _now_ns: u64,
+            _sample: &WindowSample,
+            group_size: usize,
+        ) -> Option<Vec<usize>> {
+            self.flip = !self.flip;
+            let base = if self.flip { topo.cores_per_chiplet } else { 0 };
+            Some(
+                (0..group_size)
+                    .map(|r| base + r % topo.cores_per_chiplet)
+                    .collect(),
+            )
+        }
+    }
+
+    let mut topo = Topology::milan_1s();
+    topo.chiplets_per_numa = 2; // 16 cores: a small 2-chiplet pool
+    const RANKS: usize = 16;
+    const EPOCHS: u64 = 30;
+    let hits = Arc::new(AtomicU64::new(0));
+    let (report, _) = Run::new(&topo)
+        .policy(Box::new(PingPongPolicy { flip: false }))
+        .tasks(RANKS)
+        .backend(ExecBackend::Host)
+        .timer_ns(1) // every batch boundary is past due
+        .batch_steps(1) // step-per-job: maximum boundary frequency
+        .run_group(|_| {
+            let hits = hits.clone();
+            Box::new(BspTask::new(EPOCHS, move |ctx, _| {
+                hits.fetch_add(1, Ordering::Relaxed);
+                ctx.compute_ns(2_000);
+            }))
+        });
+    assert_eq!(
+        hits.load(Ordering::Relaxed),
+        RANKS as u64 * EPOCHS,
+        "a step was lost or duplicated under migration pressure"
+    );
+    assert_eq!(
+        report.barrier_epochs,
+        EPOCHS - 1,
+        "migration pressure changed the BSP structure"
+    );
+    assert!(
+        report.migrations > 0,
+        "the ping-pong policy never actually migrated"
+    );
+}
+
 #[test]
 fn submits_to_a_busy_pool_perform_no_wakeups() {
     // Thundering-herd regression: the old pool took the park lock and
