@@ -8,12 +8,14 @@
 #   make host-scaling host-backend scaling smoke (BENCH_host_scaling.json)
 #   make sched-overhead  scheduler-overhead smoke: batched stepping must
 #                     beat --batch-steps 1 by 2x (BENCH_sched_overhead.json)
+#   make mem-follow   memory-follows-tasks smoke: region moves must beat
+#                     the task-move-only baseline (BENCH_mem_follow.json)
 #   make bench-regression  serving bench + baseline gates (CI's bench job)
 #   make artifacts    AOT-lower the JAX/Pallas kernels to HLO text (needs
 #                     python + jax; the rust build runs fine without them)
 #   make bench-smoke  quick pass over two figure benches
 
-.PHONY: verify build test fmt clippy ci artifacts bench-smoke host-suites host-scaling sched-overhead adaptive-payoff bench-regression
+.PHONY: verify build test fmt clippy ci artifacts bench-smoke host-suites host-scaling sched-overhead adaptive-payoff mem-follow bench-regression
 
 verify: build test
 
@@ -66,6 +68,13 @@ sched-overhead:
 adaptive-payoff:
 	cargo bench --bench micro_runtime -- --adaptive-only --assert-adaptive --quick
 
+# Memory-follows-tasks smoke: a stranded Bind region whose accessors all
+# live on another NUMA node — the adaptive policy with region moves on
+# must re-home it (region_moves > 0) and beat the --no-region-moves
+# task-move-only baseline's makespan. Emits BENCH_mem_follow.json.
+mem-follow:
+	cargo bench --bench micro_runtime -- --mem-follow-only --assert-mem-follow --quick
+
 # The CI bench-regression gate, locally: run fig_serving + the scaling,
 # overhead and adaptive smokes, then compare the emitted BENCH_*.json against
 # ci/baselines/ (fail on regression, warn on improvement; unpinned
@@ -75,7 +84,7 @@ adaptive-payoff:
 # gated higher-is-better). Cargo runs bench binaries with CWD = the
 # package root, so the emitted BENCH_*.json files land under rust/.
 # Re-pin all baselines from fresh artifacts: `arcas bench-check --pin`.
-bench-regression: build host-scaling sched-overhead adaptive-payoff
+bench-regression: build host-scaling sched-overhead adaptive-payoff mem-follow
 	cargo bench --bench fig_serving -- --quick
 	./target/release/arcas bench-check --kind serving --baseline ci/baselines/BENCH_serving_latency.json --current rust/BENCH_serving_latency.json
 	./target/release/arcas bench-check --kind serving --baseline ci/baselines/BENCH_serving_slo.json --current rust/BENCH_serving_slo.json
@@ -83,3 +92,4 @@ bench-regression: build host-scaling sched-overhead adaptive-payoff
 	./target/release/arcas bench-check --kind overhead --baseline ci/baselines/BENCH_sched_overhead.json --current rust/BENCH_sched_overhead.json
 	./target/release/arcas bench-check --kind scaling --baseline ci/baselines/BENCH_host_scaling.json --current rust/BENCH_host_scaling.json
 	./target/release/arcas bench-check --kind adaptive --baseline ci/baselines/BENCH_adaptive.json --current rust/BENCH_adaptive.json
+	./target/release/arcas bench-check --kind mem-follow --baseline ci/baselines/BENCH_mem_follow.json --current rust/BENCH_mem_follow.json

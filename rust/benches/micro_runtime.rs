@@ -27,11 +27,21 @@
 //!     emits `BENCH_adaptive.json` with
 //!     `speedup_adaptive_vs_best_static`, gated by `--assert-adaptive`
 //!     + the bench-check `--kind adaptive` gate.
+//!   - *memory-follows-tasks payoff*: the mem-follow scenario (the group
+//!     compacts onto NUMA 0 while its stream region stays `Bind`-stranded
+//!     on the last NUMA node) on the deterministic **sim backend** with
+//!     the virtual-time tick armed, run twice: task-move-only
+//!     (`with_region_moves(false)`) vs full adaptation. Region moves
+//!     must fire and strictly beat the task-move-only makespan; emits
+//!     `BENCH_mem_follow.json` with `speedup_moves_vs_task_only`, gated
+//!     by `--assert-mem-follow` + the bench-check `--kind mem-follow`
+//!     gate.
 //!
 //! Flags: `--workers a,b,..` sets the scaling axis, `--scaling-only` /
-//! `--overhead-only` / `--adaptive-only` select one section (CI),
-//! `--assert-scaling` / `--assert-overhead` / `--assert-adaptive` make
-//! the respective bound fatal.
+//! `--overhead-only` / `--adaptive-only` / `--mem-follow-only` select
+//! one section (CI), `--assert-scaling` / `--assert-overhead` /
+//! `--assert-adaptive` / `--assert-mem-follow` make the respective
+//! bound fatal.
 
 use arcas::controller::placement_map;
 use arcas::deque::Deque;
@@ -45,7 +55,7 @@ use arcas::topology::Topology;
 use arcas::util::bench::Bencher;
 use arcas::util::cli::{Args, Cli};
 use arcas::workloads::graph::GupsScenario;
-use arcas::workloads::phaseshift::PhaseShiftScenario;
+use arcas::workloads::phaseshift::{MemFollowScenario, PhaseShiftScenario};
 
 fn cli() -> Cli {
     Cli::new("micro_runtime", "runtime microbenchmarks + host scaling smoke")
@@ -67,6 +77,11 @@ fn cli() -> Cli {
             "fail unless adaptive migrates and beats the best static makespan",
         )
         .flag("adaptive-only", "run only the adaptive-migration section")
+        .flag(
+            "assert-mem-follow",
+            "fail unless region moves fire and beat the task-move-only makespan",
+        )
+        .flag("mem-follow-only", "run only the memory-follows-tasks section")
         .flag("quick", "smaller runs for smoke testing")
         .flag("bench", "(passed by `cargo bench`; ignored)")
 }
@@ -415,6 +430,98 @@ fn adaptive_payoff(args: &Args) -> bool {
     !(args.flag("assert-adaptive") && !ok)
 }
 
+/// One sim-backend mem-follow run: 16 ranks under the arcas policy with
+/// the virtual-time tick armed, with or without region moves. Returns
+/// (modeled makespan ns, region moves).
+fn mem_follow_run(topo: &Topology, region_moves: bool, steps_b: u64, timer_ns: u64) -> (u64, u64) {
+    let mut s = MemFollowScenario::new(2 << 30, steps_b * 2, steps_b);
+    let p = Box::new(
+        ArcasPolicy::new(topo)
+            .with_timer(timer_ns)
+            .with_region_moves(region_moves),
+    );
+    let r = Run::new(topo).policy(p).tasks(16).verify(true).run(&mut s);
+    (r.report.makespan_ns.max(1), r.report.region_moves)
+}
+
+/// The memory-follows-tasks payoff bench: on the mem-follow scenario the
+/// controller compacts the 16-rank group onto NUMA 0 during the
+/// message-bound phase A, then phase B hammers a 2 GiB stream region
+/// `Bind`-stranded on the *last* NUMA node. Task migration alone cannot
+/// fix that — only re-homing the region can — so the full adaptive
+/// policy must fire region moves and strictly beat the task-move-only
+/// baseline (same policy, `with_region_moves(false)`). Runs on the sim
+/// backend: virtual time makes both makespans deterministic, so the
+/// headline `speedup_moves_vs_task_only` is noise-free. Returns false
+/// when `--assert-mem-follow` is set and either bound fails.
+fn mem_follow_payoff(args: &Args) -> bool {
+    let topo = Topology::milan_1s_nps4();
+    let (steps_b, timer_ns) = if args.flag("quick") {
+        (60u64, 10_000u64)
+    } else {
+        (150u64, 10_000u64)
+    };
+    println!("### memory-follows-tasks payoff (sim backend, virtual-time tick)");
+    println!(
+        "# scenario=mem-follow region=2GiB steps_a={} steps_b={steps_b} tasks=16 \
+         timer={}us; topology={} (4 NUMA x 2 chiplets x 8 cores)",
+        steps_b * 2,
+        timer_ns / 1000,
+        topo.name
+    );
+
+    let (task_only, moves_off) = mem_follow_run(&topo, false, steps_b, timer_ns);
+    assert_eq!(moves_off, 0, "with_region_moves(false) must plan no moves");
+    println!(
+        "  task-move-only      makespan = {:>10.3} ms  (0 region moves by construction)",
+        task_only as f64 / 1e6
+    );
+    let (with_moves, region_moves) = mem_follow_run(&topo, true, steps_b, timer_ns);
+    println!(
+        "  data-follows-tasks  makespan = {:>10.3} ms  ({region_moves} region moves)",
+        with_moves as f64 / 1e6
+    );
+
+    let speedup = task_only as f64 / with_moves as f64;
+    let ok = region_moves > 0 && speedup > 1.0;
+    println!(
+        "  => region moves vs task-move-only: {speedup:.2}x, region_moves={region_moves} ({})",
+        if ok {
+            "pass"
+        } else {
+            "FAIL: expected > 1.0x with region_moves > 0"
+        }
+    );
+
+    // Emit BENCH_mem_follow.json ("pinned": true + "tol" so the
+    // bench-check re-pin flow yields a live gate; the sim is
+    // deterministic, but the band stays loose so retuning the scenario's
+    // step counts doesn't spuriously trip the gate).
+    let json = format!(
+        "{{\n  \"bench\": \"mem_follow\",\n  \"scenario\": \"mem-follow\",\n  \
+         \"backend\": \"sim\",\n  \"pinned\": true,\n  \"tol\": 0.35,\n  \
+         \"config\": {{\"tasks\": 16, \"steps_b\": {steps_b}, \
+         \"timer_ns\": {timer_ns}, \"quick\": {}}},\n  \
+         \"task_only_makespan_ns\": {task_only},\n  \
+         \"moves_makespan_ns\": {with_moves},\n  \
+         \"region_moves\": {region_moves},\n  \
+         \"speedup_moves_vs_task_only\": {speedup:.3}\n}}\n",
+        args.flag("quick"),
+    );
+    let path = std::path::Path::new("BENCH_mem_follow.json");
+    match std::fs::write(path, &json) {
+        Ok(()) => println!(
+            "  => wrote {}",
+            std::fs::canonicalize(path)
+                .unwrap_or_else(|_| path.to_path_buf())
+                .display()
+        ),
+        Err(e) => println!("  => could not write BENCH_mem_follow.json: {e}"),
+    }
+
+    !(args.flag("assert-mem-follow") && !ok)
+}
+
 fn micro(args: &Args) {
     let mut b = if args.flag("quick") {
         Bencher::quick()
@@ -500,12 +607,17 @@ fn main() {
     let scaling_only = args.flag("scaling-only");
     let overhead_only = args.flag("overhead-only");
     let adaptive_only = args.flag("adaptive-only");
-    let any_only = scaling_only || overhead_only || adaptive_only;
+    let mem_follow_only = args.flag("mem-follow-only");
+    let any_only = scaling_only || overhead_only || adaptive_only || mem_follow_only;
     if !any_only {
         micro(&args);
     }
     if (adaptive_only || !any_only) && !adaptive_payoff(&args) {
         eprintln!("adaptive-migration assertion failed");
+        std::process::exit(1);
+    }
+    if (mem_follow_only || !any_only) && !mem_follow_payoff(&args) {
+        eprintln!("memory-follows-tasks assertion failed");
         std::process::exit(1);
     }
     if (overhead_only || !any_only) && !sched_overhead(&args) {

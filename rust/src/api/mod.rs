@@ -212,6 +212,7 @@ impl Arcas {
             now_ns: 0,
             step_outcome: Default::default(),
             probe_cache: Default::default(),
+            book: Default::default(),
             peer_cores: None,
         };
         let r = f(&mut ctx);
@@ -233,6 +234,7 @@ impl Arcas {
             now_ns: 0,
             step_outcome: Default::default(),
             probe_cache: Default::default(),
+            book: Default::default(),
             peer_cores: None,
         };
         f(&mut ctx);

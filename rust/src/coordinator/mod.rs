@@ -53,6 +53,7 @@
 //! `rust/tests/shard_equivalence.rs` property suite pins this against a
 //! monolithic oracle rebuilt from the same primitives.
 
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
@@ -72,6 +73,10 @@ struct ChipletAcct {
     stamp: u64,
     /// Per-CCD Infinity-Fabric link to the IO die.
     if_link: BwTracker,
+    /// Per-region access heat (classified ops issued from this chiplet
+    /// since the last reset) — the raw signal behind the profiler's
+    /// windowed region-heat deltas and the policy's online region moves.
+    heat: HashMap<RegionId, f64>,
 }
 
 /// One chiplet's shard: clocks outside the lock, accounting inside.
@@ -109,6 +114,7 @@ impl Shards {
                     counts: ClassCounts::default(),
                     stamp: 0,
                     if_link: BwTracker::new(topo.if_bw_per_chiplet, BW_WINDOW_NS),
+                    heat: HashMap::new(),
                 }),
             })
             .collect();
@@ -190,6 +196,7 @@ impl Shards {
         let stamp = acct.stamp;
         acct.l3.fill(region, fill_bytes, stamp, region_size);
         acct.counts.add(out);
+        *acct.heat.entry(region).or_insert(0.0) += out.total_ops();
     }
 
     /// Coherence: drop `frac` of `region`'s residency in `chiplet`.
@@ -202,11 +209,31 @@ impl Shards {
             .invalidate_frac(region, frac);
     }
 
-    /// Drop a freed region everywhere.
+    /// Drop a freed (or just-moved) region everywhere: residency *and*
+    /// accumulated heat, so a region move starts a cold heat window at
+    /// its new home instead of instantly re-triggering on stale counts.
     pub fn drop_region(&self, region: RegionId) {
-        for ch in 0..self.chiplets.len() {
-            self.invalidate(ch, region, 1.0);
+        for sh in &self.chiplets {
+            let mut acct = sh.acct.lock().unwrap();
+            acct.l3.invalidate_frac(region, 1.0);
+            acct.heat.remove(&region);
         }
+    }
+
+    /// Per-region, per-chiplet access heat: cumulative classified ops
+    /// issued from each chiplet, sorted by region id with one slot per
+    /// chiplet in chiplet order — a deterministic snapshot the profiler
+    /// turns into windowed deltas.
+    pub fn region_heat(&self) -> Vec<(RegionId, Vec<f64>)> {
+        let n = self.chiplets.len();
+        let mut by_region: BTreeMap<RegionId, Vec<f64>> = BTreeMap::new();
+        for (ch, sh) in self.chiplets.iter().enumerate() {
+            let acct = sh.acct.lock().unwrap();
+            for (&region, &ops) in &acct.heat {
+                by_region.entry(region).or_insert_with(|| vec![0.0; n])[ch] += ops;
+            }
+        }
+        by_region.into_iter().collect()
     }
 
     // --- bandwidth (socket / chiplet shard lock) --------------------------
@@ -274,6 +301,7 @@ impl Shards {
             acct.l3.flush();
             acct.counts = ClassCounts::default();
             acct.if_link.reset();
+            acct.heat.clear();
         }
         for s in &self.sockets {
             s.ddr.lock().unwrap().reset();
@@ -404,6 +432,24 @@ mod tests {
         assert!(counters.chiplet(0).total_ops() > 0.0);
         assert!(counters.chiplet(1).total_ops() > 0.0);
         assert_eq!(counters.chiplet(2).total_ops(), 0.0);
+    }
+
+    #[test]
+    fn region_heat_tracks_issuing_chiplet() {
+        let m = machine();
+        let r = m.alloc("d", 1 << 20, Placement::Bind(0));
+        m.access(0, Access::rand_read(r, 100, 1 << 20)); // chiplet 0
+        m.access(8, Access::rand_read(r, 300, 1 << 20)); // chiplet 1
+        let heat = m.region_heat();
+        assert_eq!(heat.len(), 1);
+        let (id, per_chiplet) = &heat[0];
+        assert_eq!(*id, r);
+        assert!((per_chiplet[0] - 100.0).abs() < 1e-9);
+        assert!((per_chiplet[1] - 300.0).abs() < 1e-9);
+        assert_eq!(per_chiplet[2], 0.0);
+        // free drops heat along with residency; reset clears everything.
+        m.free(r);
+        assert!(m.region_heat().is_empty());
     }
 
     #[test]

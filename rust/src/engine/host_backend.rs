@@ -64,7 +64,12 @@
 //!   rank is submitted through the targeted-inbox path to its new home,
 //!   and its fresh per-batch [`ProbeCache`] starts empty, so post-move
 //!   charging is exact. In-flight batches finish on their old core
-//!   (migration cost is charged as a fabric message, like the sim). With
+//!   (migration cost is charged as a fabric message, like the sim). The
+//!   same tick also samples the per-region heat window and may rebind
+//!   hot regions toward their accessors (`plan_region_moves` → data
+//!   follows tasks): the ticking worker pays the one-time DDR copy, and
+//!   every in-flight batch picks up the new placement at its next
+//!   access via the region-book generation bump. With
 //!   the timer off (`None`, the default) the loop never runs, placement
 //!   is static, and batching equivalence is untouched — sim goldens and
 //!   the conformance suite see byte-identical behavior.
@@ -83,10 +88,10 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::cachesim::Outcome;
-use crate::policy::Policy;
+use crate::policy::{Policy, RegionHeat};
 use crate::profiler::Profiler;
 use crate::sched::{current_worker, worker_core, HostExecutor, RunReport, Submitter};
-use crate::sim::{Machine, ProbeCache};
+use crate::sim::{Machine, ProbeCache, RegionBookCache};
 use crate::task::{Coroutine, Step, TaskCtx};
 
 /// Default run-until-yield batch budget: coroutine steps a worker runs
@@ -128,6 +133,9 @@ struct AdaptInner {
     /// Controller decision log (t_real_ns, window rate, spread) —
     /// `RunReport::decisions`, the host's adaptation counters.
     decisions: Vec<(u64, f64, usize)>,
+    /// Region-move log (t_real_ns, region id, dest NUMA) —
+    /// `RunReport::region_decisions`.
+    region_decisions: Vec<(u64, u32, usize)>,
 }
 
 /// Shared state of one host-backed run. The machine itself carries no
@@ -148,6 +156,9 @@ struct HostRun {
     dispatches: AtomicU64,
     /// Rank migrations applied by adaptive ticks (→ `RunReport`).
     migrations: AtomicU64,
+    /// Region rebinds applied by adaptive ticks (→ `RunReport`) — the
+    /// "data follows tasks" counterpart of `migrations`.
+    region_moves: AtomicU64,
     /// `Some` iff the policy-timer loop is armed for this run.
     adapt: Option<AdaptState>,
     n_workers: usize,
@@ -212,11 +223,13 @@ pub(crate) fn execute_host(
             // Re-anchor on the (possibly warm) machine so the first
             // window sees only this run's fills.
             profiler.rebaseline(0, machine.class_totals());
+            profiler.seed_heat(&machine.region_heat());
             Some(AdaptState {
                 inner: Mutex::new(AdaptInner {
                     policy,
                     profiler,
                     decisions: Vec::new(),
+                    region_decisions: Vec::new(),
                 }),
                 started: std::time::Instant::now(),
                 next_tick_ns: AtomicU64::new(t.max(1)),
@@ -241,6 +254,7 @@ pub(crate) fn execute_host(
         }),
         dispatches: AtomicU64::new(0),
         migrations: AtomicU64::new(0),
+        region_moves: AtomicU64::new(0),
         adapt,
         n_workers,
         batch_steps: batch_steps.max(1),
@@ -266,13 +280,17 @@ pub(crate) fn execute_host(
     let machine = run.machine;
     let barrier = run.barrier.into_inner().unwrap();
     assert_eq!(barrier.finished, n, "every rank must run to completion");
-    // Recover the policy (and the tick log) from whichever side owned it.
-    let (policy, decisions) = match run.adapt {
+    // Recover the policy (and the tick logs) from whichever side owned it.
+    let (policy, decisions, region_decisions) = match run.adapt {
         Some(state) => {
             let inner = state.inner.into_inner().unwrap();
-            (inner.policy, inner.decisions)
+            (inner.policy, inner.decisions, inner.region_decisions)
         }
-        None => (static_policy.take().expect("static run keeps its policy"), Vec::new()),
+        None => (
+            static_policy.take().expect("static run keeps its policy"),
+            Vec::new(),
+            Vec::new(),
+        ),
     };
 
     let report = RunReport {
@@ -282,6 +300,8 @@ pub(crate) fn execute_host(
         dispatches: run.dispatches.load(Ordering::Relaxed),
         steals: host_steals,
         migrations: run.migrations.load(Ordering::Relaxed),
+        region_moves: run.region_moves.load(Ordering::Relaxed),
+        region_decisions,
         barrier_epochs: barrier.epochs,
         avg_concurrency: n_workers as f64,
         peak_concurrency: n_workers,
@@ -348,6 +368,35 @@ fn maybe_tick(run: &HostRun) {
             run.migrations.fetch_add(1, Ordering::Relaxed);
         }
     }
+    // Data follows tasks: sample the per-region heat window and let the
+    // policy rebind hot regions toward their accessors. The move itself
+    // (rebind + generation bump + L3 drop + DDR copy charge) happens on
+    // the ticking worker's core — the mover pays the one-time copy, the
+    // same accounting rule as the simulator's tick site. In-flight
+    // batches notice the generation bump at their next access and
+    // refresh their region-book snapshot.
+    let heat_deltas = inner.profiler.heat_window(&run.machine.region_heat());
+    if !heat_deltas.is_empty() {
+        let heat: Vec<RegionHeat> = heat_deltas
+            .into_iter()
+            .map(|(region, per_chiplet)| RegionHeat {
+                region,
+                placement: run.machine.placement_of(region),
+                size: run.machine.region_size(region),
+                per_chiplet,
+            })
+            .collect();
+        let mover = worker_core(
+            &run.machine.topo,
+            current_worker().expect("maybe_tick runs on a pool worker"),
+        );
+        for mv in inner.policy.plan_region_moves(&run.machine.topo, now, &heat, n) {
+            if run.machine.move_region(mv.region, mv.to_numa, mover) {
+                run.region_moves.fetch_add(1, Ordering::Relaxed);
+                inner.region_decisions.push((now, mv.region.0, mv.to_numa));
+            }
+        }
+    }
     let spread = inner.policy.spread_rate();
     inner.decisions.push((now, sample.rate, spread));
 }
@@ -382,6 +431,7 @@ fn step_rank(run: Arc<HostRun>, sub: Submitter, rank: usize) {
     let worker = current_worker().expect("step_rank runs on a pool worker");
     let core = worker_core(&run.machine.topo, worker);
     let mut cache = ProbeCache::default();
+    let mut book = RegionBookCache::default();
     let mut steps_done: u64 = 0;
     let step = loop {
         let step = {
@@ -395,12 +445,14 @@ fn step_rank(run: Arc<HostRun>, sub: Submitter, rank: usize) {
                 now_ns: machine.now(core),
                 step_outcome: Outcome::default(),
                 probe_cache: cache,
+                book,
                 peer_cores: Some(&run.placement),
             };
             let step = coro.step(&mut ctx);
-            // Carry the probe cache into the batch's next step (the
-            // context itself stays per-step).
+            // Carry the probe cache and region-book snapshot into the
+            // batch's next step (the context itself stays per-step).
             cache = ctx.probe_cache;
+            book = ctx.book;
             step
         };
         steps_done += 1;

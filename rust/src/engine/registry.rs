@@ -16,12 +16,13 @@ use std::sync::Arc;
 
 use super::Scenario;
 use crate::workloads::graph::{
-    kronecker::kronecker, BfsScenario, CcScenario, GupsScenario, PagerankScenario, SsspScenario,
+    kronecker::kronecker, BfsRandomRootsScenario, BfsScenario, CcScenario, GupsScenario,
+    PagerankScenario, SsspScenario,
 };
 use crate::workloads::mixed::MixedScenario;
 use crate::workloads::olap::{all_queries, Db, OlapScenario, QuerySpec};
 use crate::workloads::oltp::{OltpScenario, OltpWorkload};
-use crate::workloads::phaseshift::PhaseShiftScenario;
+use crate::workloads::phaseshift::{MemFollowScenario, PhaseShiftScenario};
 use crate::workloads::serve::{
     ArrivalModel, PriorityMix, ServeKvScenario, ServeMixedScenario, ServeOpts, Trace, TraceConfig,
 };
@@ -143,6 +144,14 @@ fn build_bfs(p: &ScenarioParams) -> Box<dyn Scenario> {
     let g = Arc::new(kronecker(graph_scale(p), 16, p.seed));
     let src = g.max_degree_vertex();
     Box::new(BfsScenario::new(g, src))
+}
+
+fn build_bfs_random_roots(p: &ScenarioParams) -> Box<dyn Scenario> {
+    let g = Arc::new(kronecker(graph_scale(p), 16, p.seed));
+    // Graph500 runs 64 search keys at full scale; default to a small
+    // sample and let `--iters` set the key count.
+    let roots = p.iters.unwrap_or(4).clamp(1, 64) as usize;
+    Box::new(BfsRandomRootsScenario::new(g, roots, p.seed))
 }
 
 fn build_pagerank(p: &ScenarioParams) -> Box<dyn Scenario> {
@@ -267,6 +276,18 @@ fn build_phase_shift(p: &ScenarioParams) -> Box<dyn Scenario> {
     Box::new(PhaseShiftScenario::new(bytes, steps, steps))
 }
 
+fn build_mem_follow(p: &ScenarioParams) -> Box<dyn Scenario> {
+    // Stranded stream: 6.4 GB at paper scale, floored far past the whole
+    // machine's aggregate L3 (8 x 32 MB on milan_1s) so phase B stays
+    // DRAM-bound — both so the stranded home actually hurts and so the
+    // low fill rate keeps the group compact (DRAM lines are not fill
+    // events). `iters` sets the phase-B step count per rank; phase A is
+    // 2x that, long enough to cover the controller's warmup + ramp-down.
+    let bytes = ((6.4e9 * p.scale) as u64).max(2 << 30);
+    let steps = p.iters.unwrap_or(60);
+    Box::new(MemFollowScenario::new(bytes, steps * 2, steps))
+}
+
 fn build_mixed(p: &ScenarioParams) -> Box<dyn Scenario> {
     // YCSB table at the pure-OLTP scenario's scale convention, TPC-H
     // database at the OLAP one, co-resident. `iters` = transactions per
@@ -385,6 +406,14 @@ static REGISTRY: &[ScenarioSpec] = &[
         build: build_pagerank,
     },
     ScenarioSpec {
+        name: "bfs-random-roots",
+        aliases: &["bfs-rr"],
+        family: "graph",
+        about: "Graph500-style BFS from seeded random roots (--iters = search keys)",
+        accepts: &[],
+        build: build_bfs_random_roots,
+    },
+    ScenarioSpec {
         name: "cc",
         aliases: &[],
         family: "graph",
@@ -473,6 +502,14 @@ static REGISTRY: &[ScenarioSpec] = &[
         build: build_phase_shift,
     },
     ScenarioSpec {
+        name: "mem-follow",
+        aliases: &["memfollow"],
+        family: "adaptive",
+        about: "message-bound phase then a DRAM stream on a mis-homed region: only online region moves fix it",
+        accepts: &[],
+        build: build_mem_follow,
+    },
+    ScenarioSpec {
         name: "serve-kv",
         aliases: &["serve"],
         family: "serve",
@@ -527,7 +564,11 @@ pub fn scenarios_table() -> String {
          with --policy arcas|adaptive, --timer-us is the adaptation cadence: \
          virtual time on sim, real elapsed time on host; adaptive runs report \
          migrations and per-window decisions (t_ns, fill rate, spread) in the \
-         run report\n",
+         run report\n\
+         adaptive ticks also re-home Bind regions toward their accessors' \
+         NUMA node (data follows tasks): runs report region-moves and \
+         per-move decisions (t_ns, region, dest numa); --no-region-moves \
+         keeps the task-move-only behavior\n",
     );
     out
 }

@@ -22,6 +22,9 @@ pub struct RunConfig {
     pub verify: bool,
     pub topology: String,
     pub timer_us: u64,
+    /// Online region re-placement on adaptive ticks (`true` unless
+    /// `--no-region-moves`; only the arcas/adaptive policy acts on it).
+    pub region_moves: bool,
     pub params: ScenarioParams,
     /// Set when the deprecated `--workload` alias was used.
     pub deprecated_workload: bool,
@@ -77,6 +80,10 @@ impl RunConfig {
             )
             .opt("seed", "42", "PRNG seed")
             .flag("verify", "check results against the serial references")
+            .flag(
+                "no-region-moves",
+                "adaptive policy: keep task migration but never re-home regions (the task-move-only baseline)",
+            )
     }
 
     /// Parse + validate `arcas run` arguments.
@@ -159,6 +166,7 @@ impl RunConfig {
             verify: a.flag("verify"),
             topology: a.str("topology"),
             timer_us: a.u64("timer-us"),
+            region_moves: !a.flag("no-region-moves"),
             params: ScenarioParams {
                 scale,
                 seed: a.u64("seed"),
@@ -193,6 +201,17 @@ mod tests {
         assert_eq!(c.batch_steps, DEFAULT_BATCH_STEPS);
         assert!(!c.verify);
         assert!(!c.deprecated_workload);
+        assert!(c.region_moves, "region moves are on by default");
+    }
+
+    #[test]
+    fn no_region_moves_flag_disables_them() {
+        let c = from(&["--no-region-moves"]).unwrap();
+        assert!(!c.region_moves);
+        let help = RunConfig::cli()
+            .parse_from(["--help".to_string()])
+            .unwrap_err();
+        assert!(help.contains("--no-region-moves"), "{help}");
     }
 
     #[test]

@@ -80,6 +80,12 @@ fn print_report(name: &str, r: &RunReport) {
     println!("  dispatches        {}", r.dispatches);
     println!("  steals            {}", r.steals);
     println!("  migrations        {}", r.migrations);
+    if r.region_moves > 0 {
+        println!(
+            "  region moves      {} (data re-homed toward its accessors)",
+            r.region_moves
+        );
+    }
     println!("  barrier epochs    {}", r.barrier_epochs);
     println!("  final spread rate {}", r.spread_rate);
     let c = &r.counts;
@@ -156,7 +162,11 @@ fn cmd_run(args: Vec<String>) {
     let adaptive = rc.policy == "arcas" || rc.policy == "adaptive";
     let make_policy = || -> Box<dyn policy::Policy> {
         if adaptive {
-            Box::new(policy::ArcasPolicy::new(&topo).with_timer(rc.timer_us * 1000))
+            Box::new(
+                policy::ArcasPolicy::new(&topo)
+                    .with_timer(rc.timer_us * 1000)
+                    .with_region_moves(rc.region_moves),
+            )
         } else {
             policy::by_name(&rc.policy, &topo).unwrap()
         }
@@ -257,8 +267,14 @@ fn cmd_artifacts() {
 /// `"pinned": true` forced), turning bootstrap placeholders into real
 /// gates in one command after a bench run.
 fn cmd_bench_check(args: Vec<String>) {
-    use arcas::util::baseline::{check_adaptive, check_overhead, check_scaling, check_serving};
+    use arcas::util::baseline::{
+        check_adaptive, check_mem_follow, check_overhead, check_scaling, check_serving,
+    };
     use arcas::util::json::Json;
+
+    // Single source of truth for the kinds this gate understands; the
+    // unknown-kind error prints it so CI failures are self-explanatory.
+    const KINDS: &str = "serving|scaling|overhead|adaptive|mem-follow";
 
     let cli = arcas::util::cli::Cli::new(
         "arcas bench-check",
@@ -269,7 +285,8 @@ fn cmd_bench_check(args: Vec<String>) {
         "serving",
         "metric family: serving (latency, lower=better unless the entry says otherwise) | \
          scaling (speedup, higher=better) | overhead (steps/sec, higher=better) | \
-         adaptive (speedup vs best static, higher=better)",
+         adaptive (speedup vs best static, higher=better) | \
+         mem-follow (speedup of region moves vs task-move-only, higher=better)",
     )
     .opt_nodefault("baseline", "checked-in baseline json (ci/baselines/...)")
     .opt_nodefault("current", "freshly emitted BENCH_*.json")
@@ -326,8 +343,9 @@ fn cmd_bench_check(args: Vec<String>) {
         "scaling" => check_scaling(&baseline, &current, tol),
         "overhead" => check_overhead(&baseline, &current, tol),
         "adaptive" => check_adaptive(&baseline, &current, tol),
+        "mem-follow" => check_mem_follow(&baseline, &current, tol),
         other => {
-            eprintln!("bench-check: unknown --kind {other} (serving|scaling|overhead|adaptive)");
+            eprintln!("bench-check: unknown --kind {other} ({KINDS})");
             std::process::exit(2);
         }
     };

@@ -90,11 +90,29 @@ impl MemoryManager {
     }
 
     /// Re-bind a region to a NUMA node (Algorithm 2 line 14:
-    /// `set_mempolicy(MPOL_BIND, 1 << numa_node)`).
-    pub fn rebind(&mut self, id: RegionId, numa: usize) {
-        if let Some(r) = self.regions.get_mut(&id) {
-            r.placement = Placement::Bind(numa);
+    /// `set_mempolicy(MPOL_BIND, 1 << numa_node)`). Returns whether the
+    /// region exists — a miss is a caller bug everywhere except the
+    /// adaptive path, where a policy's move can race a free.
+    #[must_use]
+    pub fn rebind(&mut self, id: RegionId, numa: usize) -> bool {
+        match self.regions.get_mut(&id) {
+            Some(r) => {
+                r.placement = Placement::Bind(numa);
+                true
+            }
+            None => false,
         }
+    }
+
+    /// Dense `(size, placement)` snapshot indexed by raw region id, for
+    /// the lock-free region-table published by [`crate::sim::Machine`].
+    /// Ids are allocated sequentially from 1, so the vec stays compact.
+    pub fn snapshot_entries(&self) -> Vec<Option<(u64, Placement)>> {
+        let mut entries = vec![None; self.next as usize + 1];
+        for (id, r) in &self.regions {
+            entries[id.0 as usize] = Some((r.size, r.placement));
+        }
+        entries
     }
 
     /// Expected DRAM-latency multiplier context: which NUMA node serves a
@@ -142,8 +160,27 @@ mod tests {
     fn rebind_changes_placement() {
         let mut m = MemoryManager::new();
         let a = m.alloc("a", 100, Placement::Bind(0));
-        m.rebind(a, 1);
+        assert!(m.rebind(a, 1));
         assert_eq!(m.placement(a), Placement::Bind(1));
+    }
+
+    #[test]
+    fn rebind_unknown_region_reports_miss() {
+        let mut m = MemoryManager::new();
+        let a = m.alloc("a", 100, Placement::Bind(0));
+        assert!(!m.rebind(RegionId(a.0 + 7), 1));
+        assert_eq!(m.placement(a), Placement::Bind(0));
+    }
+
+    #[test]
+    fn snapshot_entries_mirror_registry() {
+        let mut m = MemoryManager::new();
+        let a = m.alloc("a", 100, Placement::Bind(0));
+        let b = m.alloc("b", 200, Placement::Interleave);
+        m.free(a);
+        let entries = m.snapshot_entries();
+        assert_eq!(entries[a.0 as usize], None);
+        assert_eq!(entries[b.0 as usize], Some((200, Placement::Interleave)));
     }
 
     #[test]

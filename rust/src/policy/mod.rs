@@ -21,8 +21,31 @@ use std::sync::Arc;
 
 use crate::controller::{placement_map, placement_map_bounded, AdaptiveController, Approach};
 use crate::engine::dispatch::SloSignal;
+use crate::mem::{Placement, RegionId};
 use crate::profiler::WindowSample;
 use crate::topology::Topology;
+
+/// One region's windowed heat, handed to [`Policy::plan_region_moves`] at
+/// every adaptive tick: where its accessors ran during the last window.
+#[derive(Clone, Debug)]
+pub struct RegionHeat {
+    pub region: RegionId,
+    /// Current placement (from the region book at tick time).
+    pub placement: Placement,
+    pub size: u64,
+    /// Classified ops issued against the region from each chiplet during
+    /// the window, in chiplet order.
+    pub per_chiplet: Vec<f64>,
+}
+
+/// A policy's decision to re-home one region ("data follows tasks").
+/// Applied by the executor via `Machine::move_region`, which charges the
+/// one-time DDR copy to the ticking core.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RegionMove {
+    pub region: RegionId,
+    pub to_numa: usize,
+}
 
 /// Context-switch cost regime.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -49,6 +72,21 @@ pub trait Policy: Send {
         _group_size: usize,
     ) -> Option<Vec<usize>> {
         None
+    }
+
+    /// Periodic memory adaptation, the second half of an adaptive tick:
+    /// given the window's per-region heat, which regions should be
+    /// re-homed to the NUMA node their accessors now run on? The default
+    /// never moves data — only policies that close the memory loop
+    /// (currently [`ArcasPolicy`]) override this.
+    fn plan_region_moves(
+        &mut self,
+        _topo: &Topology,
+        _now_ns: u64,
+        _heat: &[RegionHeat],
+        _group_size: usize,
+    ) -> Vec<RegionMove> {
+        Vec::new()
     }
 
     /// Cores an idle `thief` may steal from, in preference order.
@@ -122,15 +160,37 @@ pub struct ArcasPolicy {
     last_map: Vec<usize>,
     /// Chiplets the group is confined to (minimal socket span).
     avail_chiplets: usize,
+    /// Online memory re-placement: when enabled (the default), adaptive
+    /// ticks also re-home bound regions toward their accessors
+    /// ([`ArcasPolicy::plan_region_moves`]). Disabled for the
+    /// task-move-only baseline (`--no-region-moves`).
+    region_moves_enabled: bool,
 }
 
 impl ArcasPolicy {
+    /// Minimum window heat (classified ops) before a region is worth
+    /// re-homing — below this, the signal is noise and the one-time DDR
+    /// copy can't amortize.
+    const MIN_MOVE_HEAT: f64 = 512.0;
+    /// Fraction of a region's window heat one NUMA node must *exceed*
+    /// before the region follows it (strict majority; an even spread
+    /// across nodes never clears it, so spread-out phases don't thrash).
+    const HOT_NUMA_FRAC: f64 = 0.5;
+
     pub fn new(topo: &Topology) -> Self {
         Self {
             controller: AdaptiveController::new(topo),
             last_map: Vec::new(),
             avail_chiplets: topo.num_chiplets(),
+            region_moves_enabled: true,
         }
+    }
+
+    /// Enable/disable online region re-placement (the task-move-only
+    /// baseline keeps everything else identical).
+    pub fn with_region_moves(mut self, enabled: bool) -> Self {
+        self.region_moves_enabled = enabled;
+        self
     }
 
     pub fn with_approach(mut self, a: Approach) -> Self {
@@ -216,6 +276,51 @@ impl Policy for ArcasPolicy {
         }
         self.last_map = map.clone();
         Some(map)
+    }
+
+    /// Algorithm 2 closed online: a `Bind` region whose window heat is
+    /// dominated by chiplets of some *other* NUMA node follows its
+    /// accessors there. Interleaved/replicated regions are left alone
+    /// (they have no single home to strand), as are regions with too
+    /// little heat to amortize the copy. Deterministic: heat arrives
+    /// sorted by region id and ties break toward the lower NUMA node.
+    fn plan_region_moves(
+        &mut self,
+        topo: &Topology,
+        _now_ns: u64,
+        heat: &[RegionHeat],
+        _group_size: usize,
+    ) -> Vec<RegionMove> {
+        if !self.region_moves_enabled || topo.num_numa() < 2 {
+            return Vec::new();
+        }
+        let mut moves = Vec::new();
+        for h in heat {
+            let Placement::Bind(home) = h.placement else {
+                continue;
+            };
+            let total: f64 = h.per_chiplet.iter().sum();
+            if total < Self::MIN_MOVE_HEAT {
+                continue;
+            }
+            let (mut hot, mut hot_heat) = (0usize, f64::NEG_INFINITY);
+            for numa in 0..topo.num_numa() {
+                let s: f64 = topo
+                    .chiplets_of_numa(numa)
+                    .map(|ch| h.per_chiplet.get(ch).copied().unwrap_or(0.0))
+                    .sum();
+                if s > hot_heat {
+                    (hot, hot_heat) = (numa, s);
+                }
+            }
+            if hot != home && hot_heat > Self::HOT_NUMA_FRAC * total {
+                moves.push(RegionMove {
+                    region: h.region,
+                    to_numa: hot,
+                });
+            }
+        }
+        moves
     }
 
     fn spread_rate(&self) -> usize {
@@ -733,6 +838,48 @@ mod tests {
         let chiplets: std::collections::BTreeSet<_> =
             map.iter().map(|&c| t.chiplet_of(c)).collect();
         assert_eq!(chiplets.len(), 4);
+    }
+
+    #[test]
+    fn arcas_plans_region_moves_toward_hot_numa() {
+        let t = topo(); // milan_2s: 2 NUMA nodes, 8 chiplets each
+        let mut p = ArcasPolicy::new(&t);
+        let heat_at = |ch: usize, ops: f64| {
+            let mut v = vec![0.0; t.num_chiplets()];
+            v[ch] = ops;
+            v
+        };
+        let mk = |placement: Placement, per_chiplet: Vec<f64>| RegionHeat {
+            region: RegionId(1),
+            placement,
+            size: 1 << 20,
+            per_chiplet,
+        };
+        // Bound to numa 1, accessed from chiplet 0 (numa 0): follows.
+        let stranded = mk(Placement::Bind(1), heat_at(0, 10_000.0));
+        assert_eq!(
+            p.plan_region_moves(&t, 0, &[stranded.clone()], 8),
+            vec![RegionMove {
+                region: RegionId(1),
+                to_numa: 0
+            }]
+        );
+        // Already home: stays.
+        let home = mk(Placement::Bind(0), heat_at(0, 10_000.0));
+        assert!(p.plan_region_moves(&t, 0, &[home], 8).is_empty());
+        // Too cold to amortize the copy: stays.
+        let cold = mk(Placement::Bind(1), heat_at(0, 10.0));
+        assert!(p.plan_region_moves(&t, 0, &[cold], 8).is_empty());
+        // Interleaved regions have no single home to strand: stays.
+        let spread = mk(Placement::Interleave, heat_at(0, 10_000.0));
+        assert!(p.plan_region_moves(&t, 0, &[spread], 8).is_empty());
+        // Heat split exactly evenly clears no strict majority: stays.
+        let mut even = mk(Placement::Bind(1), heat_at(0, 10_000.0));
+        even.per_chiplet[8] = 10_000.0;
+        assert!(p.plan_region_moves(&t, 0, &[even], 8).is_empty());
+        // The task-move-only baseline never moves data.
+        let mut off = ArcasPolicy::new(&t).with_region_moves(false);
+        assert!(off.plan_region_moves(&t, 0, &[stranded], 8).is_empty());
     }
 
     #[test]

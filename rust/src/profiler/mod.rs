@@ -12,7 +12,10 @@
 //! In the real system this is libpfm reads at coroutine yield points; here
 //! the counters come from the cache model, sampled at the same points.
 
+use std::collections::BTreeMap;
+
 use crate::cachesim::ClassCounts;
+use crate::mem::RegionId;
 
 /// One profiling window snapshot.
 #[derive(Clone, Copy, Debug, Default)]
@@ -32,6 +35,9 @@ pub struct WindowSample {
 pub struct Profiler {
     last_total: ClassCounts,
     last_ns: u64,
+    /// Per-region heat baseline (cumulative per-chiplet ops at the last
+    /// window boundary) for [`Profiler::heat_window`].
+    last_heat: BTreeMap<RegionId, Vec<f64>>,
     pub samples: Vec<WindowSample>,
     /// Concurrency timeline (Fig. 11): (t_ns, live threads).
     pub concurrency: Vec<(u64, usize)>,
@@ -93,6 +99,35 @@ impl Profiler {
     pub fn rebaseline(&mut self, now_ns: u64, total: ClassCounts) {
         self.last_total = total;
         self.last_ns = now_ns;
+    }
+
+    /// Windowed per-region, per-chiplet heat: the delta of
+    /// `Machine::region_heat`'s cumulative ops since the previous call,
+    /// clamped at zero (a region move or reset drops the raw counters).
+    /// Regions with no activity this window are omitted. Moves the
+    /// baseline, like `sample_window` does for class counts.
+    pub fn heat_window(&mut self, snapshot: &[(RegionId, Vec<f64>)]) -> Vec<(RegionId, Vec<f64>)> {
+        let mut out = Vec::new();
+        for (region, per_chiplet) in snapshot {
+            let base = self.last_heat.get(region);
+            let delta: Vec<f64> = per_chiplet
+                .iter()
+                .enumerate()
+                .map(|(ch, &v)| (v - base.and_then(|b| b.get(ch)).copied().unwrap_or(0.0)).max(0.0))
+                .collect();
+            if delta.iter().any(|&d| d > 0.0) {
+                out.push((*region, delta));
+            }
+        }
+        self.last_heat = snapshot.iter().cloned().collect();
+        out
+    }
+
+    /// Re-anchor the heat baseline to a (possibly warm) machine — the
+    /// region-heat analogue of [`Profiler::rebaseline`], called at the
+    /// same run-start points.
+    pub fn seed_heat(&mut self, snapshot: &[(RegionId, Vec<f64>)]) {
+        self.last_heat = snapshot.iter().cloned().collect();
     }
 
     /// Record a concurrency sample (Fig. 11 timeline).
@@ -207,6 +242,26 @@ mod tests {
         p.sample_window(1000, c, 1000, 1);
         let share = p.recent_remote_share(4);
         assert!((share - 0.5).abs() < 1e-9, "share={share}");
+    }
+
+    #[test]
+    fn heat_window_deltas_and_clamps() {
+        let mut p = Profiler::new();
+        let r = RegionId(1);
+        let w1 = p.heat_window(&[(r, vec![100.0, 0.0])]);
+        assert_eq!(w1, vec![(r, vec![100.0, 0.0])]);
+        // Second window sees only the delta.
+        let w2 = p.heat_window(&[(r, vec![150.0, 30.0])]);
+        assert_eq!(w2, vec![(r, vec![50.0, 30.0])]);
+        // A region move dropped the raw counters: clamp, don't go
+        // negative; all-zero windows are omitted entirely.
+        let w3 = p.heat_window(&[(r, vec![10.0, 5.0])]);
+        assert!(w3.is_empty(), "{w3:?}");
+        // seed_heat absorbs a warm machine without emitting a window.
+        let mut q = Profiler::new();
+        q.seed_heat(&[(r, vec![1000.0, 1000.0])]);
+        let w = q.heat_window(&[(r, vec![1010.0, 1000.0])]);
+        assert_eq!(w, vec![(r, vec![10.0, 0.0])]);
     }
 
     #[test]

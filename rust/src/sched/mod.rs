@@ -13,7 +13,7 @@ pub use host::{current_worker, worker_core, worker_shard, HostExecutor, Submitte
 
 use crate::cachesim::{ClassCounts, Outcome};
 use crate::deque::Deque;
-use crate::policy::{Policy, SwitchModel};
+use crate::policy::{Policy, RegionHeat, SwitchModel};
 use crate::profiler::Profiler;
 use crate::sim::Machine;
 use crate::task::{Coroutine, Step, Task, TaskCtx, TaskId, TaskState};
@@ -80,6 +80,11 @@ pub struct RunReport {
     pub concurrency: Vec<(u64, usize)>,
     /// Controller decisions (t_ns, rate, spread) — ARCAS only.
     pub decisions: Vec<(u64, f64, usize)>,
+    /// Online region re-placements applied during the run ("data follows
+    /// tasks"); 0 unless an adaptive policy moved memory.
+    pub region_moves: u64,
+    /// Per-move decisions: (t_ns, raw region id, destination NUMA node).
+    pub region_decisions: Vec<(u64, u32, usize)>,
     pub dram_bytes: f64,
     /// Final spread rate.
     pub spread_rate: usize,
@@ -138,6 +143,8 @@ pub struct SimExecutor {
     dispatches: u64,
     steals: u64,
     migrations: u64,
+    region_moves: u64,
+    region_decisions: Vec<(u64, u32, usize)>,
     next_timer_ns: u64,
     spawned: Vec<bool>,
     /// §Perf: steal orders are recomputed only when placement changes
@@ -164,6 +171,8 @@ impl SimExecutor {
             dispatches: 0,
             steals: 0,
             migrations: 0,
+            region_moves: 0,
+            region_decisions: Vec::new(),
             next_timer_ns: 0,
             spawned: Vec::new(),
             steal_cache: vec![None; n_cores],
@@ -215,6 +224,7 @@ impl SimExecutor {
         // and the goldens are unaffected.
         let t0 = self.machine.max_time();
         self.profiler.rebaseline(t0, self.machine.class_totals());
+        self.profiler.seed_heat(&self.machine.region_heat());
         self.next_timer_ns = t0 + self.cfg.timer_ns;
     }
 
@@ -232,8 +242,10 @@ impl SimExecutor {
         }
     }
 
-    /// Fire the policy timer (profiling window + possible migration).
-    fn fire_timer(&mut self, now_ns: u64) {
+    /// Fire the policy timer (profiling window + possible migration +
+    /// possible region moves). `core` is the tick-triggering core: it
+    /// plays the mover and is charged each move's one-time DDR copy.
+    fn fire_timer(&mut self, now_ns: u64, core: usize) {
         let live = self.live_threads();
         let totals = self.machine.class_totals();
         let sample = self
@@ -246,6 +258,29 @@ impl SimExecutor {
             .on_timer(&self.machine.topo, now_ns, &sample, group)
         {
             self.apply_placement(new_map, now_ns);
+        }
+        // Memory half of the tick: window the per-region heat and let the
+        // policy re-home regions toward their accessors.
+        let deltas = self.profiler.heat_window(&self.machine.region_heat());
+        if !deltas.is_empty() {
+            let heat: Vec<RegionHeat> = deltas
+                .into_iter()
+                .map(|(region, per_chiplet)| RegionHeat {
+                    region,
+                    placement: self.machine.placement_of(region),
+                    size: self.machine.region_size(region),
+                    per_chiplet,
+                })
+                .collect();
+            for mv in self
+                .policy
+                .plan_region_moves(&self.machine.topo, now_ns, &heat, group)
+            {
+                if self.machine.move_region(mv.region, mv.to_numa, core) {
+                    self.region_moves += 1;
+                    self.region_decisions.push((now_ns, mv.region.0, mv.to_numa));
+                }
+            }
         }
         self.next_timer_ns = now_ns + self.cfg.timer_ns;
     }
@@ -409,7 +444,7 @@ impl SimExecutor {
 
             // Fire the policy timer when virtual time crosses the window.
             if now >= self.next_timer_ns {
-                self.fire_timer(now);
+                self.fire_timer(now, core);
                 continue;
             }
 
@@ -456,6 +491,7 @@ impl SimExecutor {
                 now_ns: t_before,
                 step_outcome: Outcome::default(),
                 probe_cache: Default::default(),
+                book: Default::default(),
                 peer_cores: Some(&self.peer_cores),
             };
             let step = task.coro.step(&mut ctx);
@@ -515,6 +551,8 @@ impl SimExecutor {
                 .unwrap_or(0),
             concurrency: self.profiler.concurrency.clone(),
             decisions: Vec::new(),
+            region_moves: self.region_moves,
+            region_decisions: self.region_decisions.clone(),
             dram_bytes: self.machine.dram_total_bytes(),
             spread_rate: self.policy.spread_rate(),
             wall_ns: wall_start.elapsed().as_nanos() as u64,

@@ -22,7 +22,8 @@
 mod events;
 pub use events::{Event, EventQueue};
 
-use std::sync::RwLock;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 
 use crate::cachesim::{classify, Access, ClassCounts, Counters, Outcome};
 use crate::coordinator::Shards;
@@ -96,15 +97,90 @@ impl ProbeCache {
     }
 }
 
+/// Immutable `(size, placement)` snapshot of the region book, stamped
+/// with the generation it was published at. Readers resolve size and
+/// DRAM home from this table with no lock at all; the generation stamp
+/// tells a [`RegionBookCache`] when the copy it holds went stale.
+#[derive(Debug, Default)]
+pub struct RegionTable {
+    gen: u64,
+    /// Indexed by raw region id (ids are allocated sequentially).
+    entries: Vec<Option<(u64, Placement)>>,
+}
+
+impl RegionTable {
+    /// Size + DRAM home of `id`, with the registry's own unknown-region
+    /// defaults (size 1, `Interleave`) — mirrors `MemoryManager::size` +
+    /// `MemoryManager::dram_home` exactly, so the snapshot path stays
+    /// bit-identical to the locked path.
+    #[inline]
+    fn lookup(&self, id: RegionId, core_numa: usize, num_numa: usize) -> (u64, usize, f64) {
+        let (size, placement) = self
+            .entries
+            .get(id.0 as usize)
+            .and_then(|e| *e)
+            .unwrap_or((1, Placement::Interleave));
+        let (home, frac) = match placement {
+            Placement::Bind(n) => (n, if n == core_numa { 1.0 } else { 0.0 }),
+            Placement::Replicated => (core_numa, 1.0),
+            Placement::Interleave => (core_numa, 1.0 / num_numa.max(1) as f64),
+        };
+        (size, home, frac)
+    }
+}
+
+/// Per-task handle to the region-book snapshot — the lock-free fast
+/// path. One relaxed-cost atomic load per access revalidates the cached
+/// table; only a generation change (alloc/free/rebind/region move)
+/// re-reads under the publication mutex. Lives in `task::TaskCtx` next
+/// to the [`ProbeCache`] and is carried across a host batch the same way.
+#[derive(Clone, Debug, Default)]
+pub struct RegionBookCache {
+    /// Generation of the held table; 0 is a never-published sentinel, so
+    /// a fresh cache always pulls on first use.
+    gen: u64,
+    table: Arc<RegionTable>,
+}
+
+impl RegionBookCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Revalidate against the machine's current generation. Returns
+    /// `true` when a fresh snapshot was pulled — callers must then drop
+    /// stale residency probes, because a bumped generation may mean a
+    /// free or a region move whose L3 eviction already hit the shards.
+    #[inline]
+    fn refresh(&mut self, machine: &Machine) -> bool {
+        let gen = machine.book_gen.load(Ordering::Acquire);
+        if self.gen == gen {
+            return false;
+        }
+        let table = machine.book.lock().unwrap().clone();
+        self.gen = table.gen;
+        self.table = table;
+        true
+    }
+}
+
 /// The simulated machine.
 #[derive(Debug)]
 pub struct Machine {
     pub topo: Topology,
     /// Per-chiplet + per-socket accounting shards.
     shards: Shards,
-    /// Region registry (sizes + NUMA placement), read on every access,
-    /// written only by alloc/free/rebind.
+    /// Region registry (sizes + NUMA placement), the write side of the
+    /// book; mutated only by alloc/free/rebind/move_region. The access
+    /// hot path reads the published snapshot below instead.
     regions: RwLock<MemoryManager>,
+    /// Monotonic generation of the region book; bumped on every
+    /// mutation. Access paths revalidate their snapshot against this
+    /// with a single atomic load.
+    book_gen: AtomicU64,
+    /// Latest immutable snapshot; re-read by task caches only on a
+    /// generation change.
+    book: Mutex<Arc<RegionTable>>,
 }
 
 impl Machine {
@@ -112,26 +188,87 @@ impl Machine {
         Self {
             shards: Shards::new(&topo),
             regions: RwLock::new(MemoryManager::new()),
+            book_gen: AtomicU64::new(1),
+            book: Mutex::new(Arc::new(RegionTable {
+                gen: 1,
+                entries: Vec::new(),
+            })),
             topo,
         }
+    }
+
+    /// Publish a fresh snapshot of the (still write-locked) registry and
+    /// bump the generation. Callers hold the `regions` write lock, which
+    /// serializes publications; readers only touch `book` + `book_gen`,
+    /// so the write lock never blocks the access fast path.
+    fn publish_book(&self, mm: &MemoryManager) {
+        let gen = self.book_gen.load(Ordering::Relaxed) + 1;
+        let table = Arc::new(RegionTable {
+            gen,
+            entries: mm.snapshot_entries(),
+        });
+        *self.book.lock().unwrap() = table;
+        self.book_gen.store(gen, Ordering::Release);
     }
 
     // --- memory management ---------------------------------------------
 
     /// Allocate a region and register it with the accounting model.
     pub fn alloc(&self, label: &str, size: u64, placement: Placement) -> RegionId {
-        self.regions.write().unwrap().alloc(label, size, placement)
+        let mut mm = self.regions.write().unwrap();
+        let id = mm.alloc(label, size, placement);
+        self.publish_book(&mm);
+        id
     }
 
     pub fn free(&self, id: RegionId) {
-        self.regions.write().unwrap().free(id);
+        let mut mm = self.regions.write().unwrap();
+        mm.free(id);
+        // The generation bump makes every live per-batch ProbeCache clear
+        // on its next access, so probes of the freed region can never
+        // resurface (they'd report residency the shards just dropped).
+        self.publish_book(&mm);
+        drop(mm);
         self.shards.drop_region(id);
     }
 
     /// Re-bind a region to a NUMA node (Algorithm 2's
-    /// `set_mempolicy(MPOL_BIND, …)`).
+    /// `set_mempolicy(MPOL_BIND, …)`). Setup-time API: the region must
+    /// exist. For the adaptive path (which may race a free) see
+    /// [`Machine::move_region`].
     pub fn rebind(&self, id: RegionId, numa: usize) {
-        self.regions.write().unwrap().rebind(id, numa);
+        let mut mm = self.regions.write().unwrap();
+        let known = mm.rebind(id, numa);
+        debug_assert!(known, "rebind of unknown region {id:?}");
+        if known {
+            self.publish_book(&mm);
+        }
+    }
+
+    /// Online region re-placement ("data follows tasks"): re-bind `id`
+    /// to `to_numa`, evict its now-stale L3 residency everywhere, and
+    /// charge the one-time DDR copy to `mover_core` — size-proportional,
+    /// queued against the destination socket's channels like any other
+    /// DRAM burst. Returns `false` (charging nothing) for unknown
+    /// regions and moves to the current home, so adaptive ticks can race
+    /// frees safely.
+    pub fn move_region(&self, id: RegionId, to_numa: usize, mover_core: usize) -> bool {
+        let size = {
+            let mut mm = self.regions.write().unwrap();
+            if mm.get(id).is_none() || mm.placement(id) == Placement::Bind(to_numa) {
+                return false;
+            }
+            let known = mm.rebind(id, to_numa);
+            debug_assert!(known, "rebind of unknown region {id:?}");
+            self.publish_book(&mm);
+            mm.size(id)
+        };
+        self.shards.drop_region(id);
+        let now = self.now(mover_core) as f64;
+        let socket = self.topo.socket_of_numa(to_numa);
+        let copy_ns = self.shards.charge_ddr(socket, now, size as f64);
+        self.advance(mover_core, copy_ns.round() as u64);
+        true
     }
 
     /// Registered size of `id` (1 for unknown regions, matching the
@@ -207,6 +344,13 @@ impl Machine {
         self.shards.dram_total_bytes()
     }
 
+    /// Per-region, per-chiplet access heat (cumulative classified ops;
+    /// sorted by region id, chiplet order) — the profiler windows this
+    /// into deltas for the policy's online region moves.
+    pub fn region_heat(&self) -> Vec<(RegionId, Vec<f64>)> {
+        self.shards.region_heat()
+    }
+
     /// A charging handle bound to `core` (what each coroutine step works
     /// through — see [`MachineView`]).
     pub fn view(&self, core: usize) -> MachineView<'_> {
@@ -249,16 +393,56 @@ impl Machine {
         self.access_with(core, acc, Some(cache))
     }
 
-    fn access_with(&self, core: usize, acc: Access, mut cache: Option<&mut ProbeCache>) -> Outcome {
-        let now = self.now(core) as f64;
-        let my_chiplet = self.topo.chiplet_of(core);
+    /// The zero-lock fast path: region size + DRAM home come from the
+    /// caller's generation-validated snapshot ([`RegionBookCache`])
+    /// instead of the book's read lock. In steady state (generation
+    /// unchanged) an access touches no region-book lock at all; on a
+    /// generation change the snapshot is re-read once and the probe
+    /// cache is dropped (a bump may mean a free or a region move whose
+    /// L3 eviction already hit the shards). Bit-identical to
+    /// [`Machine::access`] — pinned by `rust/tests/shard_equivalence.rs`.
+    pub fn access_task(
+        &self,
+        core: usize,
+        acc: Access,
+        cache: &mut ProbeCache,
+        book: &mut RegionBookCache,
+    ) -> Outcome {
+        if book.refresh(self) {
+            cache.clear();
+        }
         let my_numa = self.topo.numa_of_core(core);
+        let (size, home, local_frac) = book.table.lookup(acc.region, my_numa, self.topo.num_numa());
+        self.access_classified(core, acc, size, home, local_frac, Some(cache))
+    }
 
+    fn access_with(&self, core: usize, acc: Access, cache: Option<&mut ProbeCache>) -> Outcome {
+        let my_numa = self.topo.numa_of_core(core);
         let (size, home, local_frac) = {
             let book = self.regions.read().unwrap();
             let (home, frac) = book.dram_home(acc.region, my_numa, self.topo.num_numa());
             (book.size(acc.region), home, frac)
         };
+        self.access_classified(core, acc, size, home, local_frac, cache)
+    }
+
+    /// Everything after the region-book read: classification, residency
+    /// fill, coherence, bandwidth. Shared by the locked path
+    /// ([`Machine::access`] / [`Machine::access_cached`]) and the
+    /// snapshot path ([`Machine::access_task`]) so the arithmetic cannot
+    /// diverge.
+    fn access_classified(
+        &self,
+        core: usize,
+        acc: Access,
+        size: u64,
+        home: usize,
+        local_frac: f64,
+        mut cache: Option<&mut ProbeCache>,
+    ) -> Outcome {
+        let now = self.now(core) as f64;
+        let my_chiplet = self.topo.chiplet_of(core);
+        let my_numa = self.topo.numa_of_core(core);
 
         if acc.pattern.ops() == 0 {
             return Outcome::default();
@@ -373,10 +557,13 @@ impl Machine {
 
 impl Clone for Machine {
     fn clone(&self) -> Self {
+        let table = self.book.lock().unwrap().clone();
         Self {
             topo: self.topo.clone(),
             shards: self.shards.clone(),
             regions: RwLock::new(self.regions.read().unwrap().clone()),
+            book_gen: AtomicU64::new(table.gen),
+            book: Mutex::new(table),
         }
     }
 }
@@ -627,6 +814,77 @@ mod tests {
         assert_eq!(cache.get(r, 3), Some(42));
         cache.clear();
         assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn freed_region_probes_cannot_resurface() {
+        let m = machine();
+        let r = m.alloc("d", 16 << 20, Placement::Bind(0));
+        m.access(8, Access::seq_read(r, 16 << 20)); // chiplet 1 warm
+        let mut cache = ProbeCache::new();
+        let mut book = RegionBookCache::new();
+        m.access_task(0, Access::rand_read(r, 100, 16 << 20), &mut cache, &mut book);
+        assert!(!cache.is_empty(), "remote probes should have been cached");
+        m.free(r);
+        // The free bumped the book generation, so the next access through
+        // the same live caches must re-read and drop the stale probes —
+        // without the bump, chiplet 1's dropped residency would resurface
+        // from the cache. A fresh clone (cold caches) is the oracle.
+        let oracle = m.clone();
+        let expect = oracle.access(0, Access::rand_read(r, 100, 16 << 20));
+        let got = m.access_task(0, Access::rand_read(r, 100, 16 << 20), &mut cache, &mut book);
+        assert_eq!(got.near_hits, expect.near_hits);
+        assert_eq!(got.latency_ns, expect.latency_ns);
+        assert_eq!(got.dram_lines, expect.dram_lines);
+    }
+
+    #[test]
+    fn move_region_rebinds_evicts_and_charges_mover() {
+        let m = machine();
+        let r = m.alloc("d", 8 << 20, Placement::Bind(0));
+        m.access(0, Access::seq_read(r, 8 << 20));
+        assert!(m.resident(0, r) > 0);
+        let t0 = m.now(4);
+        assert!(m.move_region(r, 1, 4));
+        assert_eq!(m.placement_of(r), Placement::Bind(1));
+        assert_eq!(m.resident(0, r), 0, "stale residency must be evicted");
+        assert!(m.now(4) > t0, "mover pays the one-time copy");
+        // Moves to the current home and unknown ids refuse, charging
+        // nothing (an adaptive tick may race a free).
+        let before = m.now(4);
+        assert!(!m.move_region(r, 1, 4));
+        assert!(!m.move_region(RegionId(9999), 0, 4));
+        assert_eq!(m.now(4), before);
+    }
+
+    #[test]
+    fn snapshot_path_matches_locked_path_across_rebinds() {
+        // Same access stream through the locked read path and the
+        // generation-stamped snapshot path, with a mid-stream rebind;
+        // the two must stay bit-identical (the full property lives in
+        // rust/tests/shard_equivalence.rs).
+        let run = |snapshot: bool| {
+            let m = machine();
+            let r = m.alloc("d", 16 << 20, Placement::Bind(0));
+            m.access(8, Access::seq_read(r, 16 << 20)); // chiplet 1 warm
+            let mut cache = ProbeCache::new();
+            let mut book = RegionBookCache::new();
+            let mut outs = Vec::new();
+            for i in 0..6 {
+                if i == 3 {
+                    m.rebind(r, 1);
+                }
+                let acc = Access::rand_read(r, 400, 16 << 20);
+                let out = if snapshot {
+                    m.access_task(0, acc, &mut cache, &mut book)
+                } else {
+                    m.access(0, acc)
+                };
+                outs.push((out.local_hits, out.near_hits, out.dram_lines, out.latency_ns));
+            }
+            (outs, m.now(0), m.resident(0, r), m.resident(1, r))
+        };
+        assert_eq!(run(true), run(false));
     }
 
     #[test]

@@ -13,7 +13,7 @@
 
 use crate::cachesim::{Access, Outcome};
 use crate::mem::RegionId;
-use crate::sim::{Machine, MachineView, ProbeCache};
+use crate::sim::{Machine, MachineView, ProbeCache, RegionBookCache};
 
 pub type TaskId = usize;
 
@@ -62,6 +62,13 @@ pub struct TaskCtx<'a> {
     /// run-until-yield batch (the rank stays on one core for the whole
     /// batch, so the carry is exact — `shard_equivalence` pins this).
     pub probe_cache: ProbeCache,
+    /// Generation-validated snapshot of the region book: every access
+    /// resolves region size + DRAM home from this with one atomic load
+    /// instead of the book's read lock — the zero-lock steady-state path.
+    /// Carried alongside the [`ProbeCache`] (fresh per step on Sim,
+    /// across a batch on the host backend); a generation change re-reads
+    /// the snapshot and drops the probe cache.
+    pub book: RegionBookCache,
     /// Current core of every rank in the spawn group, kept live by the
     /// executor (atomics because adaptive migration re-homes ranks while
     /// other ranks are mid-step on the host backend). `None` when the
@@ -78,12 +85,13 @@ impl<'a> TaskCtx<'a> {
     }
 
     /// Model a memory access; charges virtual time on the current core.
-    /// Routed through the step's [`ProbeCache`], so repeated accesses to
-    /// a region within one step probe remote shards only once.
+    /// Routed through the step's [`ProbeCache`] (repeated accesses to a
+    /// region within one step probe remote shards only once) and the
+    /// lock-free region-book snapshot ([`Machine::access_task`]).
     pub fn access(&mut self, acc: Access) -> Outcome {
-        let out = self
-            .machine
-            .access_cached(self.core, acc, &mut self.probe_cache);
+        let out =
+            self.machine
+                .access_task(self.core, acc, &mut self.probe_cache, &mut self.book);
         self.step_outcome.local_hits += out.local_hits;
         self.step_outcome.near_hits += out.near_hits;
         self.step_outcome.far_hits += out.far_hits;
@@ -304,6 +312,7 @@ mod tests {
             now_ns: 0,
             step_outcome: Outcome::default(),
             probe_cache: Default::default(),
+            book: Default::default(),
             peer_cores: None,
         }
     }

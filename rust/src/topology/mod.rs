@@ -74,6 +74,21 @@ impl Topology {
         }
     }
 
+    /// Single-socket Milan in an NPS4-style ruling: the same 8 CCDs × 8
+    /// cores, carved into 4 NUMA domains of 2 chiplets each. This is the
+    /// multi-node-but-small preset the memory-adaptation tests and the
+    /// `--mem-follow-only` bench run on: a region bound to the wrong
+    /// domain has three other domains to be stranded from, without
+    /// paying dual-socket scale.
+    pub fn milan_1s_nps4() -> Self {
+        Self {
+            name: "milan_1s_nps4".into(),
+            numa_per_socket: 4,
+            chiplets_per_numa: 2,
+            ..Self::milan_1s()
+        }
+    }
+
     /// EPYC Genoa-like preset: 12 CCDs × 8 cores per socket, DDR5-4800.
     pub fn genoa_1s() -> Self {
         Self {
@@ -114,6 +129,7 @@ impl Topology {
         match name {
             "milan_2s" => Some(Self::milan_2s()),
             "milan_1s" => Some(Self::milan_1s()),
+            "milan_1s_nps4" => Some(Self::milan_1s_nps4()),
             "genoa_1s" => Some(Self::genoa_1s()),
             "monolithic_64" => Some(Self::monolithic_64()),
             _ => None,
@@ -321,6 +337,17 @@ mod tests {
         assert_eq!(t.num_numa(), 2);
         assert_eq!(t.total_l3(), 512 << 20);
         assert_eq!(t.cores_per_numa(), 64);
+    }
+
+    #[test]
+    fn nps4_shape() {
+        let t = Topology::milan_1s_nps4();
+        assert_eq!(t.num_cores(), 64);
+        assert_eq!(t.num_chiplets(), 8);
+        assert_eq!(t.num_numa(), 4);
+        assert_eq!(t.cores_per_numa(), 16);
+        assert_eq!(t.socket_of_numa(3), 0);
+        assert_eq!(Topology::preset("milan_1s_nps4").unwrap(), t);
     }
 
     #[test]

@@ -18,8 +18,10 @@
 //! of `micro_runtime` (`BENCH_host_scaling.json`, higher is better) and
 //! the zero-work scheduler throughput of the same bench
 //! (`BENCH_sched_overhead.json`, steps/sec per backend × batch budget,
-//! higher is better), and the adaptive-vs-best-static makespan ratio on
+//! higher is better), the adaptive-vs-best-static makespan ratio on
 //! the phase-shifting scenario (`BENCH_adaptive.json`, higher is
+//! better), and the region-moves-vs-task-move-only makespan ratio on
+//! the stranded-region scenario (`BENCH_mem_follow.json`, higher is
 //! better). Each baseline entry may carry its own `"tol"`
 //! (relative band, e.g. `0.25`); entries without one use the caller's
 //! default — keep simulator series tight (they are deterministic) and
@@ -284,6 +286,38 @@ pub fn check_adaptive(
     })
 }
 
+/// Gate `BENCH_mem_follow.json`: the makespan advantage of online
+/// region re-placement over the task-move-only adaptive baseline on the
+/// stranded-region scenario (`speedup_moves_vs_task_only`, higher is
+/// better; ≥ 1.0 means letting data follow tasks pays for itself). The
+/// bench also emits both raw makespans and the region-move count for
+/// diagnosis, but only the headline ratio is gated.
+pub fn check_mem_follow(
+    baseline: &Json,
+    current: &Json,
+    default_tol: f64,
+) -> Result<GateResult, String> {
+    check_config(baseline, current)?;
+    let base = baseline
+        .num("speedup_moves_vs_task_only")
+        .ok_or("baseline missing numeric \"speedup_moves_vs_task_only\"")?;
+    let tol = baseline.num("tol").unwrap_or(default_tol);
+    let (cur, verdict) = match current.num("speedup_moves_vs_task_only") {
+        Some(v) => (v, verdict(base, v, tol, true)),
+        None => (f64::NAN, Verdict::Missing),
+    };
+    Ok(GateResult {
+        checks: vec![Check {
+            label: "mem_follow speedup_moves_vs_task_only".into(),
+            base,
+            current: cur,
+            tol,
+            verdict,
+        }],
+        unpinned: is_unpinned(baseline),
+    })
+}
+
 /// Gate `BENCH_sched_overhead.json`: zero-work scheduler throughput in
 /// steps/sec per `(backend, batch_steps)` point, higher is better, plus
 /// the headline `speedup_batched_vs_1` ratio (batched host pipeline vs
@@ -503,6 +537,36 @@ mod tests {
         assert!(!r.failed());
         // Malformed baseline is an error, not a panic.
         assert!(check_adaptive(&none, &good, 0.25).is_err());
+    }
+
+    #[test]
+    fn mem_follow_gate_is_higher_is_better() {
+        let base = Json::parse(
+            r#"{"pinned": true, "speedup_moves_vs_task_only": 1.3, "tol": 0.2}"#,
+        )
+        .unwrap();
+        let good = Json::parse(r#"{"speedup_moves_vs_task_only": 1.35}"#).unwrap();
+        assert!(!check_mem_follow(&base, &good, 0.35).unwrap().failed());
+        // Region moves losing their edge over task-move-only fails.
+        let bad = Json::parse(r#"{"speedup_moves_vs_task_only": 0.8}"#).unwrap();
+        let r = check_mem_follow(&base, &bad, 0.35).unwrap();
+        assert!(r.failed());
+        assert_eq!(r.checks[0].verdict, Verdict::Regressed);
+        // A bigger win warns to re-pin, never fails.
+        let better = Json::parse(r#"{"speedup_moves_vs_task_only": 2.5}"#).unwrap();
+        let r = check_mem_follow(&base, &better, 0.35).unwrap();
+        assert!(!r.failed());
+        assert!(r.improved());
+        // Missing headline fails a pinned gate; bootstrap never fails.
+        let none = Json::parse(r#"{"region_moves": 3}"#).unwrap();
+        assert!(check_mem_follow(&base, &none, 0.35).unwrap().failed());
+        let bootstrap =
+            Json::parse(r#"{"pinned": false, "speedup_moves_vs_task_only": 1.0}"#).unwrap();
+        let r = check_mem_follow(&bootstrap, &bad, 0.35).unwrap();
+        assert!(r.unpinned);
+        assert!(!r.failed());
+        // Malformed baseline is an error, not a panic.
+        assert!(check_mem_follow(&none, &good, 0.35).is_err());
     }
 
     #[test]

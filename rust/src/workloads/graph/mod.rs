@@ -8,6 +8,6 @@ pub mod runner;
 
 pub use csr::Csr;
 pub use runner::{
-    run_bfs, run_cc, run_gups, run_pagerank, run_sssp, BfsScenario, CcScenario, GraphRun,
-    GupsScenario, PagerankScenario, SsspScenario,
+    run_bfs, run_cc, run_gups, run_pagerank, run_sssp, BfsRandomRootsScenario, BfsScenario,
+    CcScenario, GraphRun, GupsScenario, PagerankScenario, SsspScenario,
 };

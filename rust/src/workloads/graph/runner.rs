@@ -299,6 +299,170 @@ pub fn run_bfs(
 }
 
 // ====================================================================
+// BFS from random roots (Graph500-style)
+// ====================================================================
+
+/// Graph500-style multi-root BFS as a [`Scenario`]: the same
+/// level-synchronous kernel as [`BfsScenario`], run back to back from a
+/// seeded sample of random roots (the benchmark's "64 search keys"
+/// shape). Every rank walks the *same* root/level schedule — each
+/// transition is read from shared per-root frontier counters after a
+/// barrier, so the schedule is identical across ranks on both backends.
+pub struct BfsRandomRootsScenario {
+    graph: Arc<Csr>,
+    roots: Vec<u32>,
+    st: Option<GraphState>,
+    /// One distance array per root.
+    dists: Option<Vec<Arc<Vec<AtomicU32>>>>,
+    /// Per-root, per-level frontier-update counters.
+    level_updates: Option<Vec<Arc<Vec<AtomicU64>>>>,
+}
+
+impl BfsRandomRootsScenario {
+    /// Sample `n_roots` random roots with at least one outgoing edge
+    /// (Graph500 discards isolated keys; a zero-degree root would make
+    /// its whole traversal a no-op). Sampling is seeded and may repeat a
+    /// root — repeats are valid search keys, as in the benchmark.
+    pub fn new(graph: Arc<Csr>, n_roots: usize, seed: u64) -> Self {
+        let n = graph.num_vertices();
+        let mut rng = crate::util::Rng::new(seed);
+        let mut roots = Vec::with_capacity(n_roots.max(1));
+        while roots.len() < n_roots.max(1) {
+            let v = rng.gen_index(n) as u32;
+            if graph.degree(v) > 0 {
+                roots.push(v);
+            }
+        }
+        Self {
+            graph,
+            roots,
+            st: None,
+            dists: None,
+            level_updates: None,
+        }
+    }
+
+    pub fn roots(&self) -> &[u32] {
+        &self.roots
+    }
+
+    /// Total edges scanned across every traversal; valid after the run.
+    pub fn edges_processed(&self) -> u64 {
+        self.st.as_ref().map_or(0, GraphState::edges)
+    }
+
+    /// Distances of traversal `i`; valid after the run.
+    fn distances(&self, i: usize) -> Vec<u32> {
+        self.dists
+            .as_ref()
+            .map(|d| d[i].iter().map(|x| x.load(Ordering::Relaxed)).collect())
+            .unwrap_or_default()
+    }
+}
+
+impl Scenario for BfsRandomRootsScenario {
+    fn name(&self) -> &'static str {
+        "bfs-random-roots"
+    }
+
+    fn setup(&mut self, machine: &mut Machine, tasks: usize) {
+        let n = self.graph.num_vertices();
+        self.st = Some(GraphState::new(machine, &self.graph, (n * 4) as u64, tasks, 4));
+        let dists: Vec<Arc<Vec<AtomicU32>>> = self
+            .roots
+            .iter()
+            .map(|&root| {
+                let d: Arc<Vec<AtomicU32>> =
+                    Arc::new((0..n).map(|_| AtomicU32::new(u32::MAX)).collect());
+                d[root as usize].store(0, Ordering::Relaxed);
+                d
+            })
+            .collect();
+        self.dists = Some(dists);
+        self.level_updates = Some(
+            self.roots
+                .iter()
+                .map(|_| Arc::new((0..MAX_ROUNDS).map(|_| AtomicU64::new(0)).collect()))
+                .collect(),
+        );
+    }
+
+    fn spawn(&mut self, rank: usize) -> Box<dyn Coroutine> {
+        let st = self.st.as_ref().expect("setup() before spawn()");
+        let graph = self.graph.clone();
+        let n = graph.num_vertices();
+        let dists = self.dists.as_ref().unwrap().clone();
+        let level_updates = self.level_updates.as_ref().unwrap().clone();
+        let edges_scanned = st.edges_scanned.clone();
+        let slice = st.slices[rank];
+        let gslice = st.gslices[rank];
+        let plan = st.plan;
+        // Per-rank traversal cursor. Every rank advances it by the same
+        // rule from the same shared counters, so the (root, level)
+        // schedule stays in lockstep across the barrier-synchronized
+        // group.
+        let (mut root_idx, mut level) = (0usize, 0usize);
+        Box::new(StateTask::new(move |ctx, _step| {
+            loop {
+                if root_idx >= dists.len() {
+                    return Step::Done;
+                }
+                let done_level = level >= MAX_ROUNDS - 1
+                    || (level > 0
+                        && level_updates[root_idx][level - 1].load(Ordering::Relaxed) == 0);
+                if done_level {
+                    root_idx += 1;
+                    level = 0;
+                    continue;
+                }
+                break;
+            }
+            let dist = &dists[root_idx];
+            let (lo, hi) = vertex_range(rank, ctx.group_size, n);
+            let (mut scanned, mut upd) = (0u64, 0u64);
+            for v in lo..hi {
+                if dist[v].load(Ordering::Relaxed) == level as u32 {
+                    for &u in graph.neighbors(v as u32) {
+                        scanned += 1;
+                        if dist[u as usize]
+                            .compare_exchange(
+                                u32::MAX,
+                                level as u32 + 1,
+                                Ordering::Relaxed,
+                                Ordering::Relaxed,
+                            )
+                            .is_ok()
+                        {
+                            upd += 1;
+                        }
+                    }
+                }
+            }
+            level_updates[root_idx][level].fetch_add(upd, Ordering::Relaxed);
+            edges_scanned.fetch_add(scanned, Ordering::Relaxed);
+            charge_step(ctx, &plan, slice, gslice, hi - lo, scanned, upd);
+            level += 1;
+            Step::Barrier
+        }))
+    }
+
+    fn verify(&self) {
+        for (i, &root) in self.roots.iter().enumerate() {
+            assert_eq!(
+                self.distances(i),
+                algos::bfs_ref(&self.graph, root),
+                "BFS from root {root} (traversal {i}) diverges from the serial reference"
+            );
+        }
+    }
+
+    fn metrics(&self, report: &RunReport) -> ScenarioMetrics {
+        graph_metrics(self.edges_processed(), report)
+            .with("roots", self.roots.len() as f64)
+    }
+}
+
+// ====================================================================
 // Connected components (label propagation)
 // ====================================================================
 
@@ -905,6 +1069,31 @@ mod tests {
         let (_, par) = run_bfs(&topo(), Box::new(LocalCachePolicy), 8, g.clone(), 0);
         let ser = algos::bfs_ref(&g, 0);
         assert_eq!(par, ser);
+    }
+
+    #[test]
+    fn bfs_random_roots_matches_reference_per_root() {
+        let g = test_graph();
+        let mut s = BfsRandomRootsScenario::new(g.clone(), 4, 11);
+        assert_eq!(s.roots().len(), 4);
+        for &r in s.roots() {
+            assert!(g.degree(r) > 0, "sampled root {r} is isolated");
+        }
+        let run = Driver::new(&topo(), Box::new(LocalCachePolicy), 8)
+            .with_verify(true)
+            .run(&mut s);
+        assert!(s.edges_processed() > 0);
+        assert!(run.metrics.get("roots").unwrap() == 4.0);
+    }
+
+    #[test]
+    fn bfs_random_roots_sampling_is_seeded() {
+        let g = test_graph();
+        let a = BfsRandomRootsScenario::new(g.clone(), 8, 3);
+        let b = BfsRandomRootsScenario::new(g.clone(), 8, 3);
+        let c = BfsRandomRootsScenario::new(g, 8, 4);
+        assert_eq!(a.roots(), b.roots());
+        assert_ne!(a.roots(), c.roots(), "different seeds must move the sample");
     }
 
     #[test]

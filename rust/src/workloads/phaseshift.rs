@@ -138,6 +138,124 @@ impl Scenario for PhaseShiftScenario {
     }
 }
 
+/// Random reads per rank per mem-follow stream step.
+const MF_READS_PER_STEP: u64 = 4096;
+
+/// The memory-stranding scenario (`--scenario mem-follow`): the
+/// adversarial proof for online *region* moves, the data half of ISSUE 9.
+///
+/// - **Phase A — communication-bound.** Identical to
+///   [`PhaseShiftScenario`]'s phase A: ring-neighbor message bursts with
+///   zero fill events, so the adaptive controller *compacts* the group
+///   (onto chiplet 0, i.e. NUMA node 0).
+/// - **Phase B — DRAM-bound on stranded data.** Every rank random-reads
+///   a shared region bound to the *last* NUMA node, sized far past any
+///   L3 so nearly every access is a DRAM line. Because DRAM lines are
+///   not remote-chiplet *fill* events, the profiler rate stays low and
+///   the group stays compact on NUMA 0 — while every line pays the
+///   cross-NUMA DDR path to the region's stranded home.
+///
+/// Task migration alone cannot fix phase B (compact-vs-spread never
+/// relocates the *data*); only a policy that closes the memory loop can,
+/// by rebinding the region to its accessors' node for a one-time copy
+/// charge. The `BENCH_mem_follow.json` gate (`micro_runtime
+/// --mem-follow-only`) pins that adaptive-with-region-moves beats
+/// task-move-only on this scenario.
+pub struct MemFollowScenario {
+    /// Stranded-region size for phase B.
+    bytes: u64,
+    steps_a: u64,
+    steps_b: u64,
+    tasks: usize,
+    region: Option<RegionId>,
+    /// Steps actually executed across all ranks (verify counter).
+    steps_done: Arc<AtomicU64>,
+}
+
+impl MemFollowScenario {
+    pub fn new(bytes: u64, steps_a: u64, steps_b: u64) -> Self {
+        Self {
+            bytes: bytes.max(1),
+            steps_a: steps_a.max(1),
+            steps_b: steps_b.max(1),
+            tasks: 0,
+            region: None,
+            steps_done: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// Total steps the group runs (metrics numerator).
+    pub fn total_steps(&self) -> u64 {
+        self.tasks as u64 * (self.steps_a + self.steps_b)
+    }
+}
+
+impl Scenario for MemFollowScenario {
+    fn name(&self) -> &'static str {
+        "mem-follow"
+    }
+
+    fn setup(&mut self, machine: &mut Machine, tasks: usize) {
+        self.tasks = tasks;
+        // Strand the stream on the highest NUMA node: phase A compacts
+        // the group onto node 0, so on any multi-node topology the home
+        // is maximally wrong by the time phase B starts. (On one-node
+        // topologies the scenario still runs; there is just nothing to
+        // move.)
+        let home = machine.topo.num_numa() - 1;
+        self.region = Some(machine.alloc("mem-follow-stream", self.bytes, Placement::Bind(home)));
+        self.steps_done.store(0, Ordering::Relaxed);
+    }
+
+    fn spawn(&mut self, _rank: usize) -> Box<dyn Coroutine> {
+        let region = self.region.expect("setup() before spawn()");
+        let bytes = self.bytes;
+        let (steps_a, total) = (self.steps_a, self.steps_a + self.steps_b);
+        let counter = self.steps_done.clone();
+        Box::new(StateTask::new(move |ctx, step| {
+            if step >= total {
+                return Step::Done;
+            }
+            if step < steps_a {
+                // Communication-bound: compacts the group (see
+                // PhaseShiftScenario's phase A).
+                let next = (ctx.rank + 1) % ctx.group_size;
+                for _ in 0..MSGS_PER_STEP {
+                    ctx.send_to_rank(next, MSG_BYTES);
+                }
+                ctx.compute_ns(100);
+            } else {
+                // DRAM-bound: the region dwarfs every L3, so the lines
+                // stream from the region's home DDR — cross-NUMA until a
+                // region move follows the data to the accessors.
+                ctx.access(Access::rand_read(region, MF_READS_PER_STEP, bytes).with_mlp(2.0));
+                ctx.compute_ns(200);
+            }
+            counter.fetch_add(1, Ordering::Relaxed);
+            if step + 1 >= total {
+                Step::Done
+            } else {
+                Step::Yield
+            }
+        }))
+    }
+
+    fn verify(&self) {
+        let done = self.steps_done.load(Ordering::Relaxed);
+        assert_eq!(
+            done,
+            self.total_steps(),
+            "every rank must run both phases to completion"
+        );
+    }
+
+    fn metrics(&self, report: &RunReport) -> ScenarioMetrics {
+        ScenarioMetrics::new(self.total_steps() as f64, "steps")
+            .with("migrations", report.migrations as f64)
+            .with("region_moves", report.region_moves as f64)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -154,6 +272,53 @@ mod tests {
             .run(&mut s);
         assert_eq!(run.metrics.items, 16.0 * 16.0);
         assert_eq!(run.report.dispatches, 16 * 16);
+    }
+
+    #[test]
+    fn mem_follow_runs_and_verifies_without_moves() {
+        let topo = Topology::milan_1s();
+        let mut s = MemFollowScenario::new(2 << 30, 4, 4);
+        let run = Driver::new(&topo, Box::new(ArcasPolicy::new(&topo)), 8)
+            .with_verify(true)
+            .run(&mut s);
+        assert_eq!(run.metrics.items, 8.0 * 8.0);
+        // One NUMA node: nothing to move, and the policy must know it.
+        assert_eq!(run.report.region_moves, 0);
+    }
+
+    #[test]
+    fn adaptive_moves_the_stranded_region_to_its_accessors() {
+        // Phase A compacts the group onto NUMA 0 (long enough to cover
+        // the controller's warmup plus the spread ramp-down); phase B
+        // streams the region stranded on NUMA 3. The mostly-DRAM stream
+        // keeps the fill rate low (DRAM lines are not fill events), so
+        // the group stays compact and the heat majority sits on NUMA 0 —
+        // the policy must rebind the region there, away from its home.
+        let topo = crate::topology::Topology::milan_1s_nps4();
+        let home = topo.num_numa() - 1;
+        let mut s = MemFollowScenario::new(2 << 30, 120, 60);
+        let policy = Box::new(ArcasPolicy::new(&topo).with_timer(10_000));
+        let run = Driver::new(&topo, policy, 16).with_verify(true).run(&mut s);
+        assert!(
+            run.report.region_moves > 0,
+            "the stranded region must follow its accessors: {:?}",
+            run.report.decisions
+        );
+        for (_, _, to) in &run.report.region_decisions {
+            assert_ne!(*to, home, "a move must leave the stranded home");
+            assert!(*to < topo.num_numa());
+        }
+    }
+
+    #[test]
+    fn region_moves_can_be_disabled() {
+        let topo = crate::topology::Topology::milan_1s_nps4();
+        let mut s = MemFollowScenario::new(2 << 30, 120, 60);
+        let policy =
+            Box::new(ArcasPolicy::new(&topo).with_timer(10_000).with_region_moves(false));
+        let run = Driver::new(&topo, policy, 16).with_verify(true).run(&mut s);
+        assert_eq!(run.report.region_moves, 0);
+        assert!(run.report.region_decisions.is_empty());
     }
 
     #[test]

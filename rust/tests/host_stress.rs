@@ -422,6 +422,102 @@ fn migration_races_burst_submission() {
     );
 }
 
+/// Online region moves racing in-flight batches: a tick policy that
+/// re-homes every hot region on every batch boundary (alternating NUMA
+/// nodes) against a BSP group whose ranks hammer that region through the
+/// generation-stamped snapshot path. The move's rebind + eviction + gen
+/// bump race the batches' `access_task` reads by design; the invariants
+/// that must hold anyway: every step runs exactly once, the BSP
+/// structure is intact, and moves were actually applied and reported.
+#[test]
+fn region_moves_race_in_flight_batches() {
+    use arcas::engine::{ExecBackend, Run};
+    use arcas::mem::Placement;
+    use arcas::policy::{Policy, RegionMove};
+    use arcas::task::BspTask;
+    use std::sync::OnceLock;
+
+    /// Re-homes every region it sees heat for, cycling the destination
+    /// NUMA node each tick (moves to the current home refuse cheaply).
+    struct RegionPingPongPolicy {
+        to: usize,
+    }
+
+    impl Policy for RegionPingPongPolicy {
+        fn name(&self) -> &'static str {
+            "region-ping-pong"
+        }
+        fn initial_placement(&mut self, topo: &Topology, n: usize) -> Vec<usize> {
+            (0..n).map(|r| r % topo.num_cores()).collect()
+        }
+        fn plan_region_moves(
+            &mut self,
+            topo: &Topology,
+            _now_ns: u64,
+            heat: &[arcas::policy::RegionHeat],
+            _group_size: usize,
+        ) -> Vec<RegionMove> {
+            self.to = (self.to + 1) % topo.num_numa();
+            heat.iter()
+                .map(|h| RegionMove {
+                    region: h.region,
+                    to_numa: self.to,
+                })
+                .collect()
+        }
+    }
+
+    let mut topo = Topology::milan_1s();
+    topo.numa_per_socket = 2;
+    topo.chiplets_per_numa = 1; // 16 cores, 2 single-chiplet NUMA nodes
+    const RANKS: usize = 16;
+    const EPOCHS: u64 = 30;
+    let hits = Arc::new(AtomicU64::new(0));
+    let region = Arc::new(OnceLock::new());
+    let (report, _) = Run::new(&topo)
+        .policy(Box::new(RegionPingPongPolicy { to: 0 }))
+        .tasks(RANKS)
+        .backend(ExecBackend::Host)
+        .timer_ns(1) // every batch boundary is past due
+        .batch_steps(1) // step-per-job: maximum boundary frequency
+        .run_group(|_| {
+            let hits = hits.clone();
+            let region = region.clone();
+            Box::new(BspTask::new(EPOCHS, move |ctx, _| {
+                let r = *region.get_or_init(|| {
+                    ctx.view()
+                        .machine()
+                        .alloc("hot", 8 << 20, Placement::Bind(0))
+                });
+                ctx.rand_read(r, 64, 8 << 20);
+                hits.fetch_add(1, Ordering::Relaxed);
+                ctx.compute_ns(1_000);
+            }))
+        });
+    assert_eq!(
+        hits.load(Ordering::Relaxed),
+        RANKS as u64 * EPOCHS,
+        "a step was lost or duplicated under region-move pressure"
+    );
+    assert_eq!(
+        report.barrier_epochs,
+        EPOCHS - 1,
+        "region-move pressure changed the BSP structure"
+    );
+    assert!(
+        report.region_moves > 0,
+        "the ping-pong policy never actually moved the region"
+    );
+    assert_eq!(
+        report.region_decisions.len() as u64,
+        report.region_moves,
+        "every applied move must be recorded as a decision"
+    );
+    for &(_, _, dest) in &report.region_decisions {
+        assert!(dest < topo.num_numa(), "move destination out of range");
+    }
+}
+
 #[test]
 fn submits_to_a_busy_pool_perform_no_wakeups() {
     // Thundering-herd regression: the old pool took the park lock and

@@ -17,7 +17,7 @@
 use arcas::cachesim::{classify, Access, ChipletL3, ClassCounts, Outcome, Pattern, LINE};
 use arcas::mem::{MemoryManager, Placement, RegionId};
 use arcas::memsim::{BwTracker, BW_WINDOW_NS};
-use arcas::sim::{Machine, ProbeCache};
+use arcas::sim::{Machine, ProbeCache, RegionBookCache};
 use arcas::topology::Topology;
 use arcas::util::proptest::check;
 use arcas::util::Rng;
@@ -117,6 +117,28 @@ impl Monolith {
         out
     }
 
+    /// Mirror of [`Machine::move_region`] on the monolithic layout:
+    /// refuse unknown ids and moves to the current home, else rebind,
+    /// drop the region's residency in every L3 (chiplet order, exactly
+    /// like `Shards::drop_region`) and charge the size-proportional DDR
+    /// copy on the destination socket to the mover's clock.
+    fn move_region(&mut self, id: RegionId, to: usize, mover: usize) -> bool {
+        if self.mm.get(id).is_none() || self.mm.placement(id) == Placement::Bind(to) {
+            return false;
+        }
+        let known = self.mm.rebind(id, to);
+        debug_assert!(known, "rebind of unknown region {id:?}");
+        let size = self.mm.size(id);
+        for l3 in &mut self.l3s {
+            l3.invalidate_frac(id, 1.0);
+        }
+        let now = self.clocks[mover] as f64;
+        let socket = self.topo.socket_of_numa(to);
+        let copy_ns = self.ddr[socket].charge(now, size as f64);
+        self.clocks[mover] += copy_ns.round() as u64;
+        true
+    }
+
     fn message(&mut self, from: usize, to: usize, bytes: u64) -> u64 {
         let lat = self.topo.core_to_core_ns(from, to);
         let stream = (bytes.saturating_sub(64)) as f64 / 32.0;
@@ -161,6 +183,13 @@ enum Op {
     SyncTo {
         core: usize,
         t: u64,
+    },
+    /// Online region re-placement mid-schedule (the adaptive tick's
+    /// "data follows tasks" action).
+    MoveRegion {
+        region: usize,
+        to: usize,
+        mover: usize,
     },
 }
 
@@ -211,6 +240,11 @@ fn gen_schedule(rng: &mut Rng) -> Schedule {
             2 => Op::SyncTo {
                 core: rng.gen_index(cores),
                 t: rng.gen_range(1 << 20),
+            },
+            3 => Op::MoveRegion {
+                region: rng.gen_index(n_regions),
+                to: rng.gen_index(topo.num_numa()),
+                mover: rng.gen_index(cores),
             },
             _ => {
                 let region = rng.gen_index(n_regions);
@@ -331,6 +365,13 @@ fn prop_sharded_accounting_equals_the_monolith() {
                         machine.advance_to(*core, *t);
                         oracle.clocks[*core] = oracle.clocks[*core].max(*t);
                     }
+                    Op::MoveRegion { region, to, mover } => {
+                        let a = machine.move_region(ids_m[*region], *to, *mover);
+                        let b = oracle.move_region(ids_o[*region], *to, *mover);
+                        if a != b {
+                            return Err(format!("op {i}: move_region applied {a} != {b}"));
+                        }
+                    }
                 }
             }
 
@@ -367,6 +408,16 @@ fn prop_sharded_accounting_equals_the_monolith() {
                             oracle.l3s[ch].resident(*id)
                         ));
                     }
+                }
+            }
+            // Region placements after the schedule's moves match too.
+            for (i, id) in ids_m.iter().enumerate() {
+                if machine.placement_of(*id) != oracle.mm.placement(*id) {
+                    return Err(format!(
+                        "region {i} placement {:?} != {:?}",
+                        machine.placement_of(*id),
+                        oracle.mm.placement(*id)
+                    ));
                 }
             }
             Ok(())
@@ -461,6 +512,18 @@ fn prop_step_cached_probes_equal_per_access_probes() {
                     Op::SyncTo { core, t } => {
                         plain.advance_to(*core, *t);
                         cached.advance_to(*core, *t);
+                    }
+                    Op::MoveRegion { region, to, mover } => {
+                        let a = plain.move_region(ids[*region], *to, *mover);
+                        let b = cached.move_region(ids[*region], *to, *mover);
+                        if a != b {
+                            return Err(format!("op {i}: move_region applied {a} != {b}"));
+                        }
+                        // A move bumps the book generation; the task
+                        // layer (access_task) drops its probe cache on
+                        // the next refresh. This suite drives the raw
+                        // probe-cache path, so model that clear here.
+                        cache.clear();
                     }
                 }
             }
@@ -572,6 +635,18 @@ fn prop_batch_carried_probes_equal_per_access_probes() {
                         plain.advance_to(*core, *t);
                         cached.advance_to(*core, *t);
                     }
+                    Op::MoveRegion { region, to, mover } => {
+                        let a = plain.move_region(ids[*region], *to, *mover);
+                        let b = cached.move_region(ids[*region], *to, *mover);
+                        if a != b {
+                            return Err(format!("op {i}: move_region applied {a} != {b}"));
+                        }
+                        // A move bumps the book generation; the task
+                        // layer (access_task) drops its probe cache on
+                        // the next refresh. This suite drives the raw
+                        // probe-cache path, so model that clear here.
+                        cache.clear();
+                    }
                 }
             }
 
@@ -600,6 +675,133 @@ fn prop_batch_carried_probes_equal_per_access_probes() {
                             cached.resident(ch, *id)
                         ));
                     }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The lock-free region-book fast path is bit-identical to the locked
+/// path: the same seeded schedules (now including mid-schedule region
+/// moves) driven through `Machine::access` (book read lock per access)
+/// and `Machine::access_task` with a **persistent** [`RegionBookCache`]
+/// + batch-carried [`ProbeCache`] must produce exactly equal outcomes,
+/// clocks, counter totals, DRAM bytes, residency and placements. The
+/// probe cache is cleared only on a core change (the batch invariant) —
+/// after a move/rebind the *generation bump alone* must force the
+/// snapshot path to re-read the book and drop stale probes. This pins
+/// the tentpole claim: zero region-book locks in steady state, as a
+/// pure performance change.
+#[test]
+fn prop_snapshot_book_equals_locked_book_across_moves() {
+    check(
+        "snapshot book == locked book",
+        25,
+        gen_schedule,
+        |schedule| {
+            let topo = topo_for(schedule.topo_idx);
+            let locked = Machine::new(topo.clone());
+            let snap = Machine::new(topo.clone());
+
+            let mut ids = Vec::new();
+            let mut sizes = Vec::new();
+            for (i, &(size, placement)) in schedule.regions.iter().enumerate() {
+                let a = locked.alloc(&format!("r{i}"), size, placement);
+                let b = snap.alloc(&format!("r{i}"), size, placement);
+                if a != b {
+                    return Err("region id streams diverge".into());
+                }
+                ids.push(a);
+                sizes.push(size);
+            }
+
+            let mut cache = ProbeCache::new();
+            let mut book = RegionBookCache::new();
+            let mut batch_core = usize::MAX;
+            for (i, op) in schedule.ops.iter().enumerate() {
+                match op {
+                    Op::Access { .. } => {
+                        let (core, acc) = build_access(&ids, &sizes, op).unwrap();
+                        if core != batch_core {
+                            cache.clear();
+                            batch_core = core;
+                        }
+                        let a = locked.access(core, acc);
+                        let b = snap.access_task(core, acc, &mut cache, &mut book);
+                        for (name, x, y) in [
+                            ("local", a.local_hits, b.local_hits),
+                            ("near", a.near_hits, b.near_hits),
+                            ("far", a.far_hits, b.far_hits),
+                            ("dram", a.dram_lines, b.dram_lines),
+                            ("latency", a.latency_ns, b.latency_ns),
+                            ("bytes", a.dram_bytes, b.dram_bytes),
+                        ] {
+                            if x != y {
+                                return Err(format!(
+                                    "op {i}: outcome.{name} {x} != {y} (snapshot vs locked)"
+                                ));
+                            }
+                        }
+                    }
+                    Op::Compute { core, ns } => {
+                        locked.compute(*core, *ns);
+                        snap.compute(*core, *ns);
+                    }
+                    Op::Message { from, to, bytes } => {
+                        let a = locked.message(*from, *to, *bytes);
+                        let b = snap.message(*from, *to, *bytes);
+                        if a != b {
+                            return Err(format!("op {i}: message cost {a} != {b}"));
+                        }
+                    }
+                    Op::SyncTo { core, t } => {
+                        locked.advance_to(*core, *t);
+                        snap.advance_to(*core, *t);
+                    }
+                    Op::MoveRegion { region, to, mover } => {
+                        let a = locked.move_region(ids[*region], *to, *mover);
+                        let b = snap.move_region(ids[*region], *to, *mover);
+                        if a != b {
+                            return Err(format!("op {i}: move_region applied {a} != {b}"));
+                        }
+                        // Deliberately NO cache.clear() here: the bumped
+                        // generation must invalidate the snapshot path's
+                        // probes on its own.
+                    }
+                }
+            }
+
+            for core in 0..topo.num_cores() {
+                if locked.now(core) != snap.now(core) {
+                    return Err(format!(
+                        "core {core} clock {} != {}",
+                        locked.now(core),
+                        snap.now(core)
+                    ));
+                }
+            }
+            let (a, b) = (locked.class_totals(), snap.class_totals());
+            if (a.local, a.near, a.far, a.dram) != (b.local, b.near, b.far, b.dram) {
+                return Err(format!("class totals diverge: {a:?} vs {b:?}"));
+            }
+            if locked.dram_total_bytes() != snap.dram_total_bytes() {
+                return Err("dram bytes diverge".into());
+            }
+            for ch in 0..topo.num_chiplets() {
+                for (i, id) in ids.iter().enumerate() {
+                    if locked.resident(ch, *id) != snap.resident(ch, *id) {
+                        return Err(format!(
+                            "chiplet {ch} region {i} residency {} != {}",
+                            locked.resident(ch, *id),
+                            snap.resident(ch, *id)
+                        ));
+                    }
+                }
+            }
+            for (i, id) in ids.iter().enumerate() {
+                if locked.placement_of(*id) != snap.placement_of(*id) {
+                    return Err(format!("region {i} placement diverges after moves"));
                 }
             }
             Ok(())
