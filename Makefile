@@ -10,12 +10,14 @@
 #                     beat --batch-steps 1 by 2x (BENCH_sched_overhead.json)
 #   make mem-follow   memory-follows-tasks smoke: region moves must beat
 #                     the task-move-only baseline (BENCH_mem_follow.json)
+#   make fig-cluster  cluster scale-out smoke: 4 shards must beat 1
+#                     machine on rps-at-p99 (BENCH_cluster_scaling.json)
 #   make bench-regression  serving bench + baseline gates (CI's bench job)
 #   make artifacts    AOT-lower the JAX/Pallas kernels to HLO text (needs
 #                     python + jax; the rust build runs fine without them)
 #   make bench-smoke  quick pass over two figure benches
 
-.PHONY: verify build test fmt clippy ci artifacts bench-smoke host-suites host-scaling sched-overhead adaptive-payoff mem-follow bench-regression
+.PHONY: verify build test fmt clippy ci artifacts bench-smoke host-suites host-scaling sched-overhead adaptive-payoff mem-follow fig-cluster bench-regression
 
 verify: build test
 
@@ -31,10 +33,11 @@ fmt:
 clippy:
 	cargo clippy --all-targets -- -D warnings
 
-# Mirror of .github/workflows/ci.yml: the `rust` job (fmt+clippy+verify),
-# the `host-backend` job (release-mode suites) and the `bench-regression`
-# job (serving bench + host-scaling smoke + baseline gates) — so a local
-# `make ci` reproduces what the workflow enforces.
+# Mirror of both CI tiers: ci.yml's fast tier (fmt+clippy+verify, the
+# release-mode suites, the --quick bench smokes + gates) plus the extra
+# full-size smokes nightly.yml adds — so a local `make ci` reproduces
+# everything the workflows enforce (except the TSan pass, which needs
+# a nightly toolchain: see nightly.yml's tsan job).
 ci: fmt clippy verify host-suites bench-regression
 
 # Release-mode host-backend suites with bounded parallelism (what CI's
@@ -75,8 +78,14 @@ adaptive-payoff:
 mem-follow:
 	cargo bench --bench micro_runtime -- --mem-follow-only --assert-mem-follow --quick
 
+# Cluster scale-out smoke: run the rps-at-p99 rate ladder for 1 and 4
+# machines on the drifting-hotspot serve trace and require the 4-shard
+# cluster to beat the single machine. Emits BENCH_cluster_scaling.json.
+fig-cluster:
+	cargo bench --bench fig_cluster -- --quick --assert-scaling
+
 # The CI bench-regression gate, locally: run fig_serving + the scaling,
-# overhead and adaptive smokes, then compare the emitted BENCH_*.json against
+# overhead, adaptive and cluster smokes, then compare the emitted BENCH_*.json against
 # ci/baselines/ (fail on regression, warn on improvement; unpinned
 # baselines only report). fig_serving emits the latency file, the
 # SLO-section file (per-class p99 + shed rate, gated via the per-entry
@@ -84,11 +93,12 @@ mem-follow:
 # gated higher-is-better). Cargo runs bench binaries with CWD = the
 # package root, so the emitted BENCH_*.json files land under rust/.
 # Re-pin all baselines from fresh artifacts: `arcas bench-check --pin`.
-bench-regression: build host-scaling sched-overhead adaptive-payoff mem-follow
+bench-regression: build host-scaling sched-overhead adaptive-payoff mem-follow fig-cluster
 	cargo bench --bench fig_serving -- --quick
 	./target/release/arcas bench-check --kind serving --baseline ci/baselines/BENCH_serving_latency.json --current rust/BENCH_serving_latency.json
 	./target/release/arcas bench-check --kind serving --baseline ci/baselines/BENCH_serving_slo.json --current rust/BENCH_serving_slo.json
 	./target/release/arcas bench-check --kind serving --baseline ci/baselines/BENCH_serving_throughput.json --current rust/BENCH_serving_throughput.json
+	./target/release/arcas bench-check --kind cluster --baseline ci/baselines/BENCH_cluster_scaling.json --current rust/BENCH_cluster_scaling.json
 	./target/release/arcas bench-check --kind overhead --baseline ci/baselines/BENCH_sched_overhead.json --current rust/BENCH_sched_overhead.json
 	./target/release/arcas bench-check --kind scaling --baseline ci/baselines/BENCH_host_scaling.json --current rust/BENCH_host_scaling.json
 	./target/release/arcas bench-check --kind adaptive --baseline ci/baselines/BENCH_adaptive.json --current rust/BENCH_adaptive.json

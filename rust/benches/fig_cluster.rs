@@ -1,0 +1,189 @@
+//! Cluster-scaling figure: rps-at-p99 of a 4-shard machine fleet vs the
+//! single machine on the `serve-cluster` hotspot-drift trace.
+//!
+//! The claim behind `--machines N`: key-sharded fan-out through the
+//! cluster link tier buys serving capacity — four machines sustain a
+//! higher offered rate at the same sojourn p99 budget than one, even
+//! though ~3/4 of the traffic pays the cross-machine hop and the
+//! drifting hotspot keeps forcing `plan_shard_moves` rebalances. Sim
+//! backend only, so every number is deterministic and the CI gate can
+//! pin the headline ratio (`ci/baselines/BENCH_cluster_scaling.json`).
+//!
+//! Method: per machine count N in {1, 4}, replay the drifted trace at a
+//! x0.5..x4 ladder of offered rates and report the highest rate whose
+//! merged sojourn p99 still fits `--p99-budget` (the `fig_serving`
+//! throughput section, one tier up). Emits `BENCH_cluster_scaling.json`
+//! with the per-N points and the gated `speedup_n4_vs_n1` headline.
+//!
+//! Flags beyond the standard set: `--requests N`, `--rate RPS`,
+//! `--workers N`, `--p99-budget US`, `--drift-period US`,
+//! `--assert-scaling` (fail unless the fleet beats the single machine).
+
+use std::sync::Arc;
+
+use arcas::engine::Run;
+use arcas::harness;
+use arcas::policy::Policy;
+use arcas::topology::Topology;
+use arcas::util::table::Table;
+use arcas::workloads::oltp::OltpWorkload;
+use arcas::workloads::serve::{ServeKvScenario, Trace, TraceConfig};
+
+const MACHINES: [usize; 2] = [1, 4];
+const LADDER: [f64; 4] = [0.5, 1.0, 2.0, 4.0];
+
+fn main() {
+    let args = harness::bench_cli(
+        "fig_cluster",
+        "serve-cluster rps-at-p99: 4 machine shards vs 1 behind the front end",
+    )
+    .opt("requests", "20000", "requests in the synthetic trace")
+    .opt("rate", "4000000", "base offered load, requests/second of virtual time")
+    .opt("workers", "16", "server worker count per machine shard")
+    .opt("p99-budget", "300", "sojourn p99 budget, microseconds")
+    .opt("drift-period", "500", "hotspot drift period, microseconds")
+    .flag("assert-scaling", "exit non-zero unless 4 shards beat 1 machine")
+    .parse();
+    let topo = harness::bench_topology(&args);
+    harness::print_header("fig_cluster: key-sharded fleet scaling", &args, &topo);
+
+    let requests = if args.flag("quick") {
+        (args.usize("requests") / 5).max(1_000)
+    } else {
+        args.usize("requests")
+    };
+    let base_rate = args.f64("rate");
+    let budget_us = args.f64("p99-budget");
+    let budget_ns = (budget_us * 1_000.0) as u64;
+    let drift_ns = (args.f64("drift-period") * 1_000.0) as u64;
+    let workers = args.usize("workers").clamp(1, topo.num_cores());
+    let OltpWorkload::Ycsb { records, read_frac } = OltpWorkload::ycsb_scaled(args.f64("scale"))
+    else {
+        unreachable!("ycsb_scaled always builds a Ycsb workload")
+    };
+    let keyspace = records as u64;
+    println!(
+        "# requests={requests} base={:.2}M rps budget={budget_us:.0}us \
+         drift={}us workers/shard={workers} records={records}",
+        base_rate / 1e6,
+        drift_ns / 1_000,
+    );
+
+    // The serve-cluster trace shape: zipf-skewed keys whose hot range
+    // walks a quarter of the keyspace every drift period, so the slot
+    // the traffic concentrates on keeps changing shards' loads.
+    let drifted = |rate_rps: f64| -> Arc<Trace> {
+        Arc::new(
+            Trace::synth(&TraceConfig {
+                requests,
+                rate_rps,
+                keyspace,
+                zipf_theta: 0.99,
+                read_frac,
+                seed: args.u64("seed"),
+                ..Default::default()
+            })
+            .with_hotspot_drift(drift_ns, keyspace / 4 + 1, keyspace),
+        )
+    };
+    // Every shard (and the front end) runs the adaptive policy; the
+    // factory owns its captures so the run builder can hold it.
+    let timer_ns = args.u64("timer-us") * 1_000;
+    let topo2 = topo.clone();
+    let shard_policy = move || -> Box<dyn Policy> {
+        Box::new(arcas::policy::ArcasPolicy::new(&topo2).with_timer(timer_ns))
+    };
+
+    let mut tab = Table::new(
+        "serve-cluster rps-at-p99 (sim): highest offered rate with merged p99 <= budget",
+        &["machines", "rps_at_p99", "shard moves", "x-link hops", "ladder p99s (rate:ns)"],
+    );
+    let mut points: Vec<String> = Vec::new();
+    let mut rps_at: Vec<(usize, f64)> = Vec::new();
+    for n in MACHINES {
+        let mut best_rps = 0.0_f64;
+        let mut rung_p99s: Vec<String> = Vec::new();
+        let (mut moves, mut hops) = (0u64, 0u64);
+        for mult in LADDER {
+            let rung_rate = base_rate * mult;
+            let mut s = ServeKvScenario::new(records, drifted(rung_rate));
+            let run = Run::new(&topo)
+                .policy(shard_policy())
+                .tasks(workers)
+                .cluster(n)
+                .cluster_policy(shard_policy.clone())
+                .run(&mut s);
+            let lat = run
+                .report
+                .request_latency
+                .unwrap_or_else(|| panic!("n={n}@{rung_rate:.0}rps: no latency report"));
+            assert_eq!(lat.count, requests as u64, "n={n} dropped requests");
+            assert_eq!(run.report.machines, n, "cluster counters missing");
+            rung_p99s.push(format!("{:.1}M:{}", rung_rate / 1e6, lat.p99_ns));
+            moves = moves.max(run.report.shard_moves);
+            hops = hops.max(run.report.cross_link_hops);
+            if lat.p99_ns <= budget_ns && rung_rate > best_rps {
+                best_rps = rung_rate;
+            }
+        }
+        tab.row(vec![
+            n.to_string(),
+            format!("{best_rps:.0}"),
+            moves.to_string(),
+            hops.to_string(),
+            rung_p99s.join(" "),
+        ]);
+        // `rps_at_p99` is 0 when no rung fits the budget — a pinned gate
+        // then fails loudly instead of reporting a phantom speedup.
+        points.push(format!(
+            "    {{\"machines\": {n}, \"rps_at_p99\": {best_rps:.1}, \
+             \"shard_moves\": {moves}, \"cross_link_hops\": {hops}}}"
+        ));
+        rps_at.push((n, best_rps));
+    }
+    tab.emit("fig_cluster");
+
+    let rps1 = rps_at.iter().find(|(n, _)| *n == 1).map_or(0.0, |(_, r)| *r);
+    let rps4 = rps_at.iter().find(|(n, _)| *n == 4).map_or(0.0, |(_, r)| *r);
+    let speedup = if rps1 > 0.0 {
+        format!("{:.3}", rps4 / rps1)
+    } else {
+        "null".to_string()
+    };
+    println!("# speedup_n4_vs_n1 = {speedup}");
+
+    // "pinned": true so copying this file over ci/baselines/ (the
+    // re-pin flow) yields a live gate, not another bootstrap placeholder.
+    let json = format!(
+        "{{\n  \"bench\": \"cluster_scaling\",\n  \"scenario\": \"serve-cluster\",\n  \
+         \"pinned\": true,\n  \
+         \"config\": {{\"requests\": {requests}, \"base_rate_rps\": {base_rate}, \
+         \"workers\": {workers}, \"scale\": {}, \"seed\": {}, \"quick\": {}, \
+         \"budget_us\": {budget_us}, \"drift_period_ns\": {drift_ns}, \
+         \"ladder\": \"0.5,1,2,4\"}},\n  \
+         \"points\": [\n{}\n  ],\n  \
+         \"speedup_n4_vs_n1\": {speedup},\n  \"tol\": 0.25\n}}\n",
+        args.f64("scale"),
+        args.u64("seed"),
+        args.flag("quick"),
+        points.join(",\n")
+    );
+    let path = std::path::Path::new("BENCH_cluster_scaling.json");
+    match std::fs::write(path, &json) {
+        Ok(()) => println!(
+            "=> wrote {}",
+            std::fs::canonicalize(path)
+                .unwrap_or_else(|_| path.to_path_buf())
+                .display()
+        ),
+        Err(e) => println!("=> could not write BENCH_cluster_scaling.json: {e}"),
+    }
+
+    if args.flag("assert-scaling") {
+        assert!(
+            rps1 > 0.0 && rps4 / rps1 > 1.0,
+            "4 shards must beat 1 machine on rps-at-p99 (n1={rps1:.0}, n4={rps4:.0})"
+        );
+        println!("# assert-scaling: ok (n4/n1 = {:.3})", rps4 / rps1);
+    }
+}

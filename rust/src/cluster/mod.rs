@@ -1,0 +1,533 @@
+//! Cluster scale-out: a fleet of machine shards behind the engine seam.
+//!
+//! ARCAS models one chiplet-based machine; the serving story
+//! ("millions of users") needs the tier *above* the socket — several
+//! independent machines behind one front end. This module adds that
+//! tier without touching the per-machine runtime:
+//!
+//! - **Key-sharded routing.** The front end hashes every request key
+//!   through the same splitmix64 finalizer the trace generator uses for
+//!   priority classing, into one of [`CLUSTER_SLOTS`] key-range slots;
+//!   a slot table maps slots to shards (initially `slot % n`). The
+//!   input trace is never mutated — routing is a deterministic pre-pass
+//!   that splits it into per-shard sub-traces, so per-shard request
+//!   streams are reproducible on both backends and `n = 1` reproduces
+//!   the single-machine run byte-for-byte.
+//! - **An inter-machine link tier.** Shard 0 is colocated with the
+//!   front end; a request routed to any other shard crosses a
+//!   [`ClusterLink`] (NIC + ToR switch) and pays per-link latency plus
+//!   serialized bandwidth, exactly like the IF-link/DDR `BwTracker`
+//!   tiers one level down: each shard's ingress link keeps a busy-until
+//!   horizon, and a request departs at
+//!   `max(arrival, link_busy)`, arriving `xfer + lat` later.
+//! - **A front-end dispatcher over per-shard queues.** Each shard runs
+//!   the serve family's [`TieredQueue`] dispatch loop on its own
+//!   machine with its own per-chiplet queue-wait
+//!   [`SloSignal`](crate::engine::SloSignal) — the cluster extends the
+//!   tiered-dispatch model across machines rather than replacing it.
+//! - **Rebalancing** ([`Policy::plan_shard_moves`]). At every routing
+//!   window boundary the front-end policy sees per-slot load
+//!   ([`ShardHeat`]) and may re-home hot key ranges to colder shards —
+//!   the cluster-level mirror of `plan_region_moves`. Each applied move
+//!   ships [`SLOT_STATE_BYTES`] of key-range state across the link
+//!   tier and is recorded in [`RunReport::shard_decisions`].
+//!
+//! Entry points: [`crate::engine::Run::cluster`] (`--machines N` on the
+//! CLI); scenarios opt in via
+//! [`crate::engine::Scenario::cluster_parts`]. See
+//! `rust/src/engine/README.md` for the box art.
+
+use std::sync::Arc;
+
+use crate::engine::{run_once, Run, ScenarioMetrics, ScenarioRun};
+use crate::policy::{LocalCachePolicy, Policy, ShardHeat};
+use crate::sched::{LatencyReport, RunReport, ShardStat};
+use crate::sim::Machine;
+use crate::topology::ClusterLink;
+use crate::util::stats::LogHistogram;
+use crate::workloads::serve::{Request, ServeKvScenario, ServeOpts, Trace};
+
+/// Number of key-range slots the keyspace is hashed into. Slots are the
+/// unit of rebalancing: fine enough that a hot range can move without
+/// dragging half the keyspace along, coarse enough that the slot table
+/// stays a cache-line-scale array.
+pub const CLUSTER_SLOTS: usize = 64;
+
+/// Routing window: the front end aggregates per-slot load over this
+/// much virtual time, then offers the window's heat to
+/// [`Policy::plan_shard_moves`] at the boundary.
+pub const WINDOW_NS: u64 = 1_000_000;
+
+/// Wire size of one routed request (header + key + small payload).
+pub const REQ_BYTES: u64 = 128;
+
+/// Key-range state shipped when a slot is re-homed to another shard
+/// (the slot's share of a cache-warm working set, not the full table).
+pub const SLOT_STATE_BYTES: u64 = 64 << 10;
+
+/// Hash a request key to its key-range slot — the same splitmix64
+/// finalizer the trace generator uses for priority classing, so slot
+/// membership is uncorrelated with key magnitude (a drifting hotspot
+/// walks *across* slots instead of staying in one).
+pub fn slot_of_key(key: u64) -> usize {
+    let mut x = key.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^= x >> 31;
+    (x % CLUSTER_SLOTS as u64) as usize
+}
+
+/// The ingredients a cluster run needs to rebuild a serve scenario per
+/// shard: the trace to route and the knobs to replay on every shard.
+#[derive(Clone, Debug)]
+pub struct ClusterParts {
+    /// KV table size per shard (each shard owns a full replica of the
+    /// table; only the *traffic* is sharded — cross-shard transactions
+    /// and partial replicas are recorded follow-ups in the ROADMAP).
+    pub records: usize,
+    /// The undivided request trace the front end routes.
+    pub trace: Arc<Trace>,
+    /// Serving knobs replayed on each shard.
+    pub opts: ServeOpts,
+}
+
+/// What the routing pre-pass produced: per-shard sub-traces plus the
+/// link-tier and rebalance accounting for the merged report.
+struct RoutedTrace {
+    sub_traces: Vec<Trace>,
+    hops: u64,
+    link_bytes: u64,
+    decisions: Vec<(u64, usize, usize)>,
+}
+
+/// Deterministic routing pre-pass: walk the trace in arrival order,
+/// charge the link tier on every cross-shard hop, and offer each
+/// window's slot heat to the front-end policy. Backend-independent —
+/// the same trace, policy and `n` always yield the same sub-traces and
+/// the same shard moves on Sim and Host.
+fn route_trace(
+    trace: &Trace,
+    n: usize,
+    link: ClusterLink,
+    policy: &mut dyn Policy,
+) -> RoutedTrace {
+    let mut table: Vec<usize> = (0..CLUSTER_SLOTS).map(|s| s % n).collect();
+    let mut slot_load = vec![0.0f64; CLUSTER_SLOTS];
+    // Per-shard ingress-link busy-until horizon (index 0 unused: the
+    // front end is colocated with shard 0, so that hop is free).
+    let mut link_busy = vec![0u64; n];
+    let mut subs: Vec<Vec<Request>> = (0..n).map(|_| Vec::new()).collect();
+    let mut window_end = WINDOW_NS;
+    let mut hops = 0u64;
+    let mut link_bytes = 0u64;
+    let mut decisions: Vec<(u64, usize, usize)> = Vec::new();
+    for r in &trace.requests {
+        while r.arrival_ns >= window_end {
+            if n > 1 {
+                let heat = ShardHeat {
+                    slot_load: slot_load.clone(),
+                    table: table.clone(),
+                    shards: n,
+                };
+                for mv in policy.plan_shard_moves(window_end, &heat) {
+                    if mv.slot >= CLUSTER_SLOTS || mv.to_shard >= n || table[mv.slot] == mv.to_shard
+                    {
+                        continue;
+                    }
+                    // Re-homing ships the slot's working-set state:
+                    // serialize it on both endpoints' links (the free
+                    // front-end/shard-0 hop excepted).
+                    for shard in [table[mv.slot], mv.to_shard] {
+                        if shard != 0 {
+                            let depart = link_busy[shard].max(window_end);
+                            link_busy[shard] = depart + link.xfer_ns(SLOT_STATE_BYTES);
+                        }
+                    }
+                    link_bytes += SLOT_STATE_BYTES;
+                    table[mv.slot] = mv.to_shard;
+                    decisions.push((window_end, mv.slot, mv.to_shard));
+                }
+            }
+            slot_load.iter_mut().for_each(|l| *l = 0.0);
+            window_end += WINDOW_NS;
+        }
+        let slot = slot_of_key(r.key);
+        slot_load[slot] += 1.0;
+        let shard = table[slot];
+        if shard == 0 {
+            subs[0].push(*r);
+        } else {
+            // FCFS link serialization: a request can't start its wire
+            // transfer before the previous one to the same shard
+            // finished. `depart` is non-decreasing in arrival order, so
+            // every sub-trace stays sorted by (shifted) arrival.
+            let depart = r.arrival_ns.max(link_busy[shard]);
+            let xfer = link.xfer_ns(REQ_BYTES);
+            link_busy[shard] = depart + xfer;
+            hops += 1;
+            link_bytes += REQ_BYTES;
+            subs[shard].push(Request {
+                arrival_ns: depart + xfer + link.lat_ns,
+                ..*r
+            });
+        }
+    }
+    RoutedTrace {
+        sub_traces: subs.into_iter().map(|requests| Trace { requests }).collect(),
+        hops,
+        link_bytes,
+        decisions,
+    }
+}
+
+/// Merge per-shard sojourn aggregates into one fleet-level
+/// [`LatencyReport`]: quantiles from the merged log-scaled histogram
+/// (≤3.2% relative error, same as any single shard), count/max exact,
+/// means count-weighted from the per-shard exact means.
+fn merge_latency(parts: &[(LatencyReport, LogHistogram)]) -> Option<LatencyReport> {
+    if parts.is_empty() {
+        return None;
+    }
+    let mut hist = LogHistogram::new();
+    let (mut count, mut sum, mut q_sum, mut s_sum) = (0u64, 0.0f64, 0.0f64, 0.0f64);
+    for (rep, h) in parts {
+        hist.merge(h);
+        count += rep.count;
+        sum += rep.mean_ns * rep.count as f64;
+        q_sum += rep.mean_queue_ns * rep.count as f64;
+        s_sum += rep.mean_service_ns * rep.count as f64;
+    }
+    if count == 0 {
+        return None;
+    }
+    Some(LatencyReport {
+        count,
+        mean_ns: sum / count as f64,
+        p50_ns: hist.quantile(0.50),
+        p95_ns: hist.quantile(0.95),
+        p99_ns: hist.quantile(0.99),
+        max_ns: hist.max(),
+        mean_queue_ns: q_sum / count as f64,
+        mean_service_ns: s_sum / count as f64,
+    })
+}
+
+/// Drive one scenario over `n` machine shards: route the trace, run
+/// each shard through the ordinary single-machine engine path (one
+/// executor pool per shard on the host backend), and merge the reports.
+/// Called from [`Run::run`] when [`Run::cluster`] armed the fan-out.
+pub(crate) fn run_cluster(
+    mut run: Run,
+    n: usize,
+    scenario: &mut dyn crate::engine::Scenario,
+) -> ScenarioRun {
+    let parts = scenario.cluster_parts().unwrap_or_else(|| {
+        panic!(
+            "scenario {:?} does not support --machines (no cluster_parts)",
+            scenario.name()
+        )
+    });
+    let topo = run.machine.topo.clone();
+    let link = topo.cluster_link();
+    // The front-end policy plans shard moves during routing, then runs
+    // shard 0 (it is colocated with the front end) — with n = 1 that
+    // degenerates to exactly the single-machine path.
+    let mut front_policy = run.take_policy();
+    let routed = route_trace(&parts.trace, n, link, front_policy.as_mut());
+
+    let mut front_policy = Some(front_policy);
+    let mut machine0 = Some(run.machine);
+    let mut shard_runs: Vec<ScenarioRun> = Vec::with_capacity(n);
+    let mut shard_scens: Vec<ServeKvScenario> = Vec::with_capacity(n);
+    for sub in routed.sub_traces {
+        let policy: Box<dyn Policy> = match front_policy.take() {
+            Some(p) => p, // shard 0
+            None => match &run.policy_each {
+                Some(make) => make(),
+                None => Box::new(LocalCachePolicy),
+            },
+        };
+        let machine = machine0.take().unwrap_or_else(|| Machine::new(topo.clone()));
+        let mut scen = ServeKvScenario::new(parts.records, Arc::new(sub)).with_opts(parts.opts);
+        let shard_run = run_once(
+            machine,
+            policy,
+            run.tasks,
+            run.timer_ns,
+            run.verify,
+            run.backend,
+            run.batch_steps,
+            &mut scen,
+        );
+        shard_runs.push(shard_run);
+        shard_scens.push(scen);
+    }
+
+    let per_shard: Vec<ShardStat> = shard_runs
+        .iter()
+        .map(|sr| ShardStat {
+            requests: sr.report.request_latency.as_ref().map_or(0, |l| l.count)
+                + sr.report.request_shed,
+            shed: sr.report.request_shed,
+            makespan_ns: sr.report.makespan_ns,
+            p99_ns: sr.report.request_latency.as_ref().map_or(0, |l| l.p99_ns),
+        })
+        .collect();
+
+    let mut out = if n == 1 {
+        // Single shard: nothing was routed or merged — pass the run
+        // through untouched so reports stay byte-identical to the
+        // non-cluster path (only the cluster counters below are added).
+        shard_runs.pop().unwrap()
+    } else {
+        let served: u64 = shard_scens.iter().map(ServeKvScenario::served).sum();
+        let conflicts: u64 = shard_scens.iter().map(ServeKvScenario::conflicts).sum();
+        let lat_parts: Vec<(LatencyReport, LogHistogram)> = shard_runs
+            .iter()
+            .zip(&shard_scens)
+            .filter_map(|(sr, s)| {
+                Some((sr.report.request_latency.clone()?, s.latency_histogram()?))
+            })
+            .collect();
+        let request_latency = merge_latency(&lat_parts);
+        let first = &shard_runs[0].report;
+        let mut report = RunReport {
+            policy: first.policy.clone(),
+            spread_rate: first.spread_rate,
+            ..RunReport::default()
+        };
+        for sr in &shard_runs {
+            let r = &sr.report;
+            // Shards run concurrently in the modeled fleet: the cluster
+            // makespan is the slowest shard; work counters sum.
+            report.makespan_ns = report.makespan_ns.max(r.makespan_ns);
+            report.counts.local += r.counts.local;
+            report.counts.near += r.counts.near;
+            report.counts.far += r.counts.far;
+            report.counts.dram += r.counts.dram;
+            report.dispatches += r.dispatches;
+            report.steals += r.steals;
+            report.migrations += r.migrations;
+            report.barrier_epochs += r.barrier_epochs;
+            report.avg_concurrency += r.avg_concurrency;
+            report.peak_concurrency += r.peak_concurrency;
+            report.region_moves += r.region_moves;
+            report.dram_bytes += r.dram_bytes;
+            report.host_steals += r.host_steals;
+            report.request_shed += r.request_shed;
+            // This driver executes shards back to back, so real elapsed
+            // time sums. concurrency/decisions/class_latency samples
+            // are per-shard timelines with no meaningful merge — the
+            // merged report leaves them empty (per-shard detail lives
+            // in `per_shard`).
+            report.wall_ns += r.wall_ns;
+        }
+        report.request_latency = request_latency;
+        let p99 = report.request_latency.as_ref().map_or(0.0, |l| l.p99_ns as f64);
+        let metrics = ScenarioMetrics::new(served as f64, "reqs")
+            .with("reqs_per_s", report.throughput(served as f64))
+            .with("update_conflicts", conflicts as f64)
+            .with("p99_sojourn_ns", p99)
+            .with("shed", report.request_shed as f64);
+        let machine = shard_runs.swap_remove(0).machine;
+        ScenarioRun {
+            report,
+            metrics,
+            machine,
+        }
+    };
+    out.report.machines = n;
+    out.report.cross_link_hops = routed.hops;
+    out.report.cross_link_bytes = routed.link_bytes;
+    out.report.shard_moves = routed.decisions.len() as u64;
+    out.report.shard_decisions = routed.decisions;
+    out.report.per_shard = per_shard;
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::ShardMove;
+    use crate::workloads::serve::TraceConfig;
+
+    fn trace(requests: usize, rate_rps: f64) -> Trace {
+        Trace::synth(&TraceConfig {
+            requests,
+            rate_rps,
+            keyspace: 4_096,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn slot_of_key_is_stable_and_in_range() {
+        for key in 0..10_000u64 {
+            let s = slot_of_key(key);
+            assert!(s < CLUSTER_SLOTS);
+            assert_eq!(s, slot_of_key(key), "must be a pure function");
+        }
+        // The finalizer actually spreads keys: all slots get traffic.
+        let mut seen = vec![false; CLUSTER_SLOTS];
+        for key in 0..10_000u64 {
+            seen[slot_of_key(key)] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "every slot must be reachable");
+    }
+
+    #[test]
+    fn routing_partitions_the_trace_and_keeps_shards_sorted() {
+        let t = trace(8_000, 2.0e6);
+        let mut policy = LocalCachePolicy;
+        let link = crate::topology::Topology::milan_1s().cluster_link();
+        let routed = route_trace(&t, 4, link, &mut policy);
+        assert_eq!(routed.sub_traces.len(), 4);
+        let total: usize = routed.sub_traces.iter().map(Trace::len).sum();
+        assert_eq!(total, t.len(), "routing must not drop or duplicate");
+        for (i, sub) in routed.sub_traces.iter().enumerate() {
+            assert!(!sub.is_empty(), "shard {i} starved by the hash");
+            for w in sub.requests.windows(2) {
+                assert!(
+                    w[0].arrival_ns <= w[1].arrival_ns,
+                    "shard {i} arrivals out of order"
+                );
+            }
+        }
+        // Keys route by slot table, deterministically.
+        let mut policy2 = LocalCachePolicy;
+        let routed2 = route_trace(&t, 4, link, &mut policy2);
+        assert_eq!(routed.sub_traces, routed2.sub_traces);
+        assert_eq!(routed.hops, routed2.hops);
+        // Cross-shard requests paid the link: ~3/4 of traffic hopped,
+        // and each hop was delayed by at least lat + xfer.
+        assert!(routed.hops > t.len() as u64 / 2);
+        assert_eq!(
+            routed.link_bytes,
+            routed.hops * REQ_BYTES,
+            "a static LocalCachePolicy front end plans no state moves"
+        );
+        let min_delay = link.lat_ns + link.xfer_ns(REQ_BYTES);
+        let orig_of = |key: u64, arr_max: u64| {
+            t.requests
+                .iter()
+                .filter(|r| r.key == key && r.arrival_ns + min_delay <= arr_max)
+                .count()
+        };
+        for sub in &routed.sub_traces[1..] {
+            for r in &sub.requests {
+                assert!(
+                    orig_of(r.key, r.arrival_ns) > 0,
+                    "routed request must be an original delayed by >= {min_delay}ns"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn routing_for_one_shard_is_the_identity() {
+        let t = trace(2_000, 2.0e6);
+        let mut policy = LocalCachePolicy;
+        let link = crate::topology::Topology::milan_1s().cluster_link();
+        let routed = route_trace(&t, 1, link, &mut policy);
+        assert_eq!(routed.sub_traces.len(), 1);
+        assert_eq!(routed.sub_traces[0], t, "n=1 must not touch the trace");
+        assert_eq!(routed.hops, 0);
+        assert_eq!(routed.link_bytes, 0);
+        assert!(routed.decisions.is_empty());
+    }
+
+    /// A front-end policy that re-homes one fixed slot at the first
+    /// window boundary — exercises the state-transfer accounting
+    /// without depending on ArcasPolicy thresholds.
+    struct OneMovePolicy {
+        moved: bool,
+    }
+
+    impl Policy for OneMovePolicy {
+        fn name(&self) -> &'static str {
+            "one-move"
+        }
+
+        fn initial_placement(&mut self, topo: &crate::topology::Topology, n: usize) -> Vec<usize> {
+            LocalCachePolicy.initial_placement(topo, n)
+        }
+
+        fn plan_shard_moves(&mut self, _now_ns: u64, heat: &ShardHeat) -> Vec<ShardMove> {
+            if self.moved || heat.shards < 2 {
+                return Vec::new();
+            }
+            self.moved = true;
+            vec![ShardMove {
+                slot: 0,
+                to_shard: 1,
+            }]
+        }
+    }
+
+    #[test]
+    fn rebalance_moves_recolor_the_slot_table_and_ship_state() {
+        let t = trace(6_000, 2.0e6); // ~3ms: crosses >= 2 window ticks
+        let link = crate::topology::Topology::milan_1s().cluster_link();
+        let mut policy = OneMovePolicy { moved: false };
+        let routed = route_trace(&t, 2, link, &mut policy);
+        assert_eq!(routed.decisions, vec![(WINDOW_NS, 0, 1)]);
+        // Slot 0 lived on shard 0 before the tick and shard 1 after:
+        // post-move slot-0 requests must appear delayed on shard 1.
+        let moved_after: usize = routed.sub_traces[1]
+            .requests
+            .iter()
+            .filter(|r| slot_of_key(r.key) == 0)
+            .count();
+        let orig_slot0_after: usize = t
+            .requests
+            .iter()
+            .filter(|r| slot_of_key(r.key) == 0 && r.arrival_ns >= WINDOW_NS)
+            .count();
+        assert_eq!(moved_after, orig_slot0_after);
+        assert!(orig_slot0_after > 0, "slot 0 must see post-move traffic");
+        // Accounting: the hops' payload plus one slot-state transfer.
+        assert_eq!(routed.link_bytes, routed.hops * REQ_BYTES + SLOT_STATE_BYTES);
+    }
+
+    #[test]
+    fn merged_latency_is_count_weighted() {
+        let mut ha = LogHistogram::new();
+        let mut hb = LogHistogram::new();
+        for _ in 0..300 {
+            ha.record(1_000);
+        }
+        for _ in 0..100 {
+            hb.record(9_000);
+        }
+        let ra = LatencyReport {
+            count: 300,
+            mean_ns: 1_000.0,
+            p50_ns: 1_000,
+            p95_ns: 1_000,
+            p99_ns: 1_000,
+            max_ns: 1_000,
+            mean_queue_ns: 400.0,
+            mean_service_ns: 600.0,
+        };
+        let rb = LatencyReport {
+            count: 100,
+            mean_ns: 9_000.0,
+            p50_ns: 9_000,
+            p95_ns: 9_000,
+            p99_ns: 9_000,
+            max_ns: 9_000,
+            mean_queue_ns: 8_000.0,
+            mean_service_ns: 1_000.0,
+        };
+        let m = merge_latency(&[(ra, ha), (rb, hb)]).unwrap();
+        assert_eq!(m.count, 400);
+        assert!((m.mean_ns - 3_000.0).abs() < 1e-9);
+        assert!((m.mean_queue_ns - 2_300.0).abs() < 1e-9);
+        assert_eq!(m.max_ns, 9_000);
+        // p99 over 400 samples: the slow shard owns the tail.
+        assert!(m.p99_ns >= 8_000, "merged p99 {} lost the tail", m.p99_ns);
+        // p50: 3/4 of samples are fast.
+        assert!(m.p50_ns <= 1_100, "merged p50 {} lost the body", m.p50_ns);
+        assert!(merge_latency(&[]).is_none());
+    }
+}

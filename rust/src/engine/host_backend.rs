@@ -314,6 +314,12 @@ pub(crate) fn execute_host(
         request_latency: None,
         request_shed: 0,
         class_latency: Vec::new(),
+        machines: 0,
+        cross_link_hops: 0,
+        cross_link_bytes: 0,
+        shard_moves: 0,
+        shard_decisions: Vec::new(),
+        per_shard: Vec::new(),
     };
     (report, machine)
 }

@@ -195,6 +195,15 @@ pub trait Scenario {
         None
     }
 
+    /// The raw ingredients a cluster run needs to rebuild this scenario
+    /// per machine shard ([`Run::cluster`] / `--machines N`): the
+    /// request trace to route and the serving knobs to replay on each
+    /// shard. Scenarios that keep the default `None` don't support
+    /// cluster fan-out (`Run::cluster` panics with a clear message).
+    fn cluster_parts(&self) -> Option<crate::cluster::ClusterParts> {
+        None
+    }
+
     /// Workload-level metrics for the finished run.
     fn metrics(&self, report: &RunReport) -> ScenarioMetrics;
 }
@@ -230,14 +239,20 @@ impl ScenarioRun {
 /// - [`Run::run_group`] — a bare coroutine group without a [`Scenario`]
 ///   (the `api::Arcas` / bench-closure path) → `(RunReport, Machine)`.
 pub struct Run {
-    machine: Machine,
-    policy: Option<Box<dyn Policy>>,
-    tasks: usize,
-    backend: ExecBackend,
-    timer_ns: Option<u64>,
-    verify: bool,
+    pub(crate) machine: Machine,
+    pub(crate) policy: Option<Box<dyn Policy>>,
+    pub(crate) tasks: usize,
+    pub(crate) backend: ExecBackend,
+    pub(crate) timer_ns: Option<u64>,
+    pub(crate) verify: bool,
     repeat: usize,
-    batch_steps: usize,
+    pub(crate) batch_steps: usize,
+    /// `Some(n)` fans the run out over `n` machine shards
+    /// ([`crate::cluster`]); `None` keeps the single-machine path.
+    pub(crate) machines: Option<usize>,
+    /// Per-shard policy factory for cluster runs (each shard consumes
+    /// its own policy box); `None` gives every shard the engine default.
+    pub(crate) policy_each: Option<Box<dyn Fn() -> Box<dyn Policy>>>,
 }
 
 impl Run {
@@ -260,6 +275,8 @@ impl Run {
             verify: false,
             repeat: 1,
             batch_steps: DEFAULT_BATCH_STEPS,
+            machines: None,
+            policy_each: None,
         }
     }
 
@@ -315,12 +332,40 @@ impl Run {
         self
     }
 
-    fn take_policy(&mut self) -> Box<dyn Policy> {
+    /// Fan the run out over `n` independent machine shards (the
+    /// [`crate::cluster`] tier): requests are key-sharded across `n`
+    /// machines built from the same topology, cross-shard hops pay the
+    /// inter-machine link ([`crate::topology::ClusterLink`]), and the
+    /// builder's [`Run::policy`] becomes the *front-end* policy whose
+    /// [`crate::policy::Policy::plan_shard_moves`] re-homes hot key
+    /// ranges between shards. `n = 1` routes nothing and reproduces the
+    /// single-machine run byte-for-byte. Only scenarios that implement
+    /// [`Scenario::cluster_parts`] (the serve family) support this.
+    pub fn cluster(mut self, n: usize) -> Self {
+        assert!(n >= 1, "cluster size must be >= 1");
+        self.machines = Some(n);
+        self
+    }
+
+    /// Per-shard policy factory for [`Run::cluster`] runs: each machine
+    /// shard consumes its own `factory()` box (policies aren't
+    /// cloneable). Default: every shard runs the engine default
+    /// ([`LocalCachePolicy`]); the front-end planner stays whatever
+    /// [`Run::policy`] chose.
+    pub fn cluster_policy(mut self, factory: impl Fn() -> Box<dyn Policy> + 'static) -> Self {
+        self.policy_each = Some(Box::new(factory));
+        self
+    }
+
+    pub(crate) fn take_policy(&mut self) -> Box<dyn Policy> {
         self.policy.take().unwrap_or_else(|| Box::new(LocalCachePolicy))
     }
 
     /// Set up, spawn and run `scenario` to completion.
     pub fn run(mut self, scenario: &mut dyn Scenario) -> ScenarioRun {
+        if let Some(n) = self.machines {
+            return crate::cluster::run_cluster(self, n, scenario);
+        }
         let policy = self.take_policy();
         run_once(
             self.machine,
@@ -357,6 +402,8 @@ impl Run {
             verify,
             repeat,
             batch_steps,
+            machines: _,
+            policy_each: _,
         } = self;
         let mut machine = Some(machine);
         let mut runs = Vec::with_capacity(repeat);
@@ -403,9 +450,10 @@ impl Run {
 }
 
 /// One scenario execution: setup → SLO wiring → execute → verify →
-/// report decoration. Shared by [`Run`] and the legacy [`Driver`].
+/// report decoration. Shared by [`Run`], the legacy [`Driver`] and the
+/// per-shard executions of [`crate::cluster`].
 #[allow(clippy::too_many_arguments)]
-fn run_once(
+pub(crate) fn run_once(
     mut machine: Machine,
     mut policy: Box<dyn Policy>,
     tasks: usize,

@@ -367,6 +367,21 @@ fn build_serve_kv(p: &ScenarioParams) -> Box<dyn Scenario> {
     Box::new(ServeKvScenario::new(records, trace).with_opts(serve_opts(p)))
 }
 
+fn build_serve_cluster(p: &ScenarioParams) -> Box<dyn Scenario> {
+    let OltpWorkload::Ycsb { records, read_frac } = OltpWorkload::ycsb_scaled(p.scale) else {
+        unreachable!("ycsb_scaled always builds a Ycsb workload")
+    };
+    // Same KV serving as serve-kv, but the key hotspot *drifts*: the
+    // keyspace rotates by ~a quarter every 500 µs, so a static
+    // key→shard table goes stale and `Policy::plan_shard_moves` has
+    // something to chase under `--machines N`. With stride locked to
+    // the keyspace the pass stays deterministic per (scale, seed).
+    let ks = records as u64;
+    let trace = serve_trace(p, ks, read_frac, 20_000);
+    let trace = Arc::new((*trace).clone().with_hotspot_drift(500_000, ks / 4 + 1, ks));
+    Box::new(ServeKvScenario::new(records, trace).with_opts(serve_opts(p)))
+}
+
 fn build_serve_mixed(p: &ScenarioParams) -> Box<dyn Scenario> {
     let OltpWorkload::Ycsb { records, read_frac } = OltpWorkload::ycsb_scaled(p.scale) else {
         unreachable!("ycsb_scaled always builds a Ycsb workload")
@@ -524,6 +539,14 @@ static REGISTRY: &[ScenarioSpec] = &[
         about: "KV serving co-resident with a TPC-H scan tenant (tail under interference)",
         accepts: SERVE_ACCEPTS,
         build: build_serve_mixed,
+    },
+    ScenarioSpec {
+        name: "serve-cluster",
+        aliases: &[],
+        family: "serve",
+        about: "KV serving with a drifting key hotspot, built for --machines N shard fan-out",
+        accepts: SERVE_ACCEPTS,
+        build: build_serve_cluster,
     },
 ];
 

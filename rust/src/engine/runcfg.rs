@@ -19,6 +19,9 @@ pub struct RunConfig {
     /// Host-backend run-until-yield batch budget (`--batch-steps N`,
     /// N >= 1; 1 = the old step-per-job pipeline). Ignored by sim.
     pub batch_steps: usize,
+    /// Machine-shard fan-out for serve scenarios (`--machines N`,
+    /// N >= 1; 1 = the ordinary single-machine run).
+    pub machines: usize,
     pub verify: bool,
     pub topology: String,
     pub timer_us: u64,
@@ -49,6 +52,11 @@ impl RunConfig {
                 "batch-steps",
                 "16",
                 "host backend: max coroutine steps per pool job (run-until-yield batching; 1 = step-per-job)",
+            )
+            .opt(
+                "machines",
+                "1",
+                "serve-*: fan the run out over N key-sharded machine shards behind a cluster link tier",
             )
             .opt("scale", "0.02", "dataset scale factor vs the paper's sizes")
             .opt_nodefault("iters", "intensity knob (PR iterations, txns/core, SGD epochs)")
@@ -104,6 +112,20 @@ impl RunConfig {
         if batch_steps == 0 {
             return Err(
                 "--batch-steps must be >= 1 (1 disables run-until-yield batching)".into(),
+            );
+        }
+        let machines: usize = a
+            .str("machines")
+            .parse()
+            .map_err(|_| format!("--machines {} is not a number", a.str("machines")))?;
+        if machines == 0 {
+            return Err("--machines must be >= 1 (1 = the single-machine run)".into());
+        }
+        if machines > 1 && repeat > 1 {
+            return Err(
+                "--machines and --repeat don't compose: warm-machine repetition is per shard \
+                 (run the cluster sweep in the fig_cluster bench instead)"
+                    .into(),
             );
         }
         let cores: usize = a
@@ -163,6 +185,7 @@ impl RunConfig {
             backend,
             repeat,
             batch_steps,
+            machines,
             verify: a.flag("verify"),
             topology: a.str("topology"),
             timer_us: a.u64("timer-us"),
@@ -222,6 +245,26 @@ mod tests {
         assert!(err.contains("--batch-steps must be >= 1"), "{err}");
         let err = from(&["--batch-steps", "lots"]).unwrap_err();
         assert!(err.contains("--batch-steps"), "{err}");
+    }
+
+    #[test]
+    fn machines_parses_and_rejects_zero() {
+        assert_eq!(from(&[]).unwrap().machines, 1);
+        let c = from(&["--scenario", "serve-cluster", "--machines", "4"]).unwrap();
+        assert_eq!(c.machines, 4);
+        let err = from(&["--machines", "0"]).unwrap_err();
+        assert!(err.contains("--machines must be >= 1"), "{err}");
+        let err = from(&["--machines", "fleet"]).unwrap_err();
+        assert!(err.contains("--machines"), "{err}");
+        let err = from(&["--machines", "4", "--repeat", "2"]).unwrap_err();
+        assert!(
+            err.contains("--machines") && err.contains("--repeat"),
+            "{err}"
+        );
+        let help = RunConfig::cli()
+            .parse_from(["--help".to_string()])
+            .unwrap_err();
+        assert!(help.contains("--machines"), "{help}");
     }
 
     #[test]

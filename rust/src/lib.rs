@@ -44,6 +44,7 @@ pub mod policy;
 pub mod mem;
 pub mod api;
 pub mod engine;
+pub mod cluster;
 pub mod runtime;
 pub mod workloads;
 pub mod harness;

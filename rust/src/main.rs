@@ -123,6 +123,29 @@ fn print_report(name: &str, r: &RunReport) {
             r.request_shed
         );
     }
+    if r.machines > 1 {
+        println!(
+            "  machines          {} shards | {} cross-link hops | {} on the wire",
+            r.machines,
+            r.cross_link_hops,
+            arcas::util::fmt_bytes(r.cross_link_bytes),
+        );
+        if r.shard_moves > 0 {
+            println!(
+                "  shard moves       {} (hot key ranges re-homed by the front end)",
+                r.shard_moves
+            );
+        }
+        for (i, s) in r.per_shard.iter().enumerate() {
+            println!(
+                "  shard {i:<11} {} reqs | shed {} | makespan {} | p99 {}",
+                s.requests,
+                s.shed,
+                arcas::util::fmt_ns(s.makespan_ns),
+                arcas::util::fmt_ns(s.p99_ns),
+            );
+        }
+    }
     // Per-class tails only matter once the trace actually has tiers;
     // an all-normal run would just repeat the overall line.
     if r.class_latency.iter().any(|(n, _)| *n != "normal") {
@@ -205,6 +228,44 @@ fn cmd_run(args: Vec<String>) {
     if adaptive && rc.backend == engine::ExecBackend::Host {
         run = run.timer_ns(rc.timer_us * 1000);
     }
+    if rc.machines > 1 {
+        // Cluster fan-out: the CLI policy becomes the front-end planner
+        // (and shard 0's scheduler); other shards get a fresh policy
+        // from the same factory. The factory owns its captures — the
+        // run builder outlives this scope's borrows.
+        let (topo2, name2) = (topo.clone(), rc.policy.clone());
+        let (timer, region_moves) = (rc.timer_us * 1000, rc.region_moves);
+        let shard_policy = move || -> Box<dyn policy::Policy> {
+            if adaptive {
+                Box::new(
+                    policy::ArcasPolicy::new(&topo2)
+                        .with_timer(timer)
+                        .with_region_moves(region_moves),
+                )
+            } else {
+                policy::by_name(&name2, &topo2).unwrap()
+            }
+        };
+        let mut scenario = spec.build(&rc.params);
+        let run = run
+            .policy(shard_policy())
+            .cluster(rc.machines)
+            .cluster_policy(shard_policy)
+            .run(scenario.as_mut());
+        print_report(spec.name, &run.report);
+        println!(
+            "  throughput        {:.3} M {}/s",
+            run.throughput() / 1e6,
+            run.metrics.unit
+        );
+        for (key, value) in &run.metrics.extras {
+            println!("  {key:<17} {value:.4}");
+        }
+        if rc.verify {
+            println!("  verified          ok (matches the serial reference)");
+        }
+        return;
+    }
     let runs = run.run_repeated(make_policy, || spec.build(&rc.params));
     if rc.repeat > 1 {
         for (i, run) in runs.iter().enumerate() {
@@ -268,13 +329,14 @@ fn cmd_artifacts() {
 /// gates in one command after a bench run.
 fn cmd_bench_check(args: Vec<String>) {
     use arcas::util::baseline::{
-        check_adaptive, check_mem_follow, check_overhead, check_scaling, check_serving,
+        check_adaptive, check_cluster, check_mem_follow, check_overhead, check_scaling,
+        check_serving, load_artifact,
     };
     use arcas::util::json::Json;
 
     // Single source of truth for the kinds this gate understands; the
     // unknown-kind error prints it so CI failures are self-explanatory.
-    const KINDS: &str = "serving|scaling|overhead|adaptive|mem-follow";
+    const KINDS: &str = "serving|scaling|overhead|adaptive|mem-follow|cluster";
 
     let cli = arcas::util::cli::Cli::new(
         "arcas bench-check",
@@ -286,7 +348,8 @@ fn cmd_bench_check(args: Vec<String>) {
         "metric family: serving (latency, lower=better unless the entry says otherwise) | \
          scaling (speedup, higher=better) | overhead (steps/sec, higher=better) | \
          adaptive (speedup vs best static, higher=better) | \
-         mem-follow (speedup of region moves vs task-move-only, higher=better)",
+         mem-follow (speedup of region moves vs task-move-only, higher=better) | \
+         cluster (rps-at-p99 of 4 shards vs 1 machine, higher=better)",
     )
     .opt_nodefault("baseline", "checked-in baseline json (ci/baselines/...)")
     .opt_nodefault("current", "freshly emitted BENCH_*.json")
@@ -320,17 +383,16 @@ fn cmd_bench_check(args: Vec<String>) {
         cmd_bench_pin(&a.str("baselines-dir"), &a.str("artifacts-dir"));
         return;
     }
+    // load_artifact keeps "the bench never ran" (no file) distinct from
+    // "the file is broken" — the former is the common CI mistake of
+    // gating before the matching bench step.
     let load = |opt: &str| -> Json {
         let Some(path) = a.get(opt) else {
             eprintln!("bench-check: --{opt} is required");
             std::process::exit(2);
         };
-        let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
-            eprintln!("bench-check: cannot read {path}: {e}");
-            std::process::exit(2);
-        });
-        Json::parse(&text).unwrap_or_else(|e| {
-            eprintln!("bench-check: {path} is not valid JSON: {e}");
+        load_artifact(path).unwrap_or_else(|e| {
+            eprintln!("bench-check: {e}");
             std::process::exit(2);
         })
     };
@@ -344,6 +406,7 @@ fn cmd_bench_check(args: Vec<String>) {
         "overhead" => check_overhead(&baseline, &current, tol),
         "adaptive" => check_adaptive(&baseline, &current, tol),
         "mem-follow" => check_mem_follow(&baseline, &current, tol),
+        "cluster" => check_cluster(&baseline, &current, tol),
         other => {
             eprintln!("bench-check: unknown --kind {other} ({KINDS})");
             std::process::exit(2);

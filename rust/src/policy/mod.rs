@@ -47,6 +47,31 @@ pub struct RegionMove {
     pub to_numa: usize,
 }
 
+/// One routing window's hash-slot heat, handed to
+/// [`Policy::plan_shard_moves`] by the cluster front-end at every
+/// window boundary: how many requests each slot attracted, and which
+/// machine shard each slot currently homes on. The cluster-level mirror
+/// of [`RegionHeat`].
+#[derive(Clone, Debug)]
+pub struct ShardHeat {
+    /// Requests routed to each hash slot during the window (slot order).
+    pub slot_load: Vec<f64>,
+    /// Current slot → shard table.
+    pub table: Vec<usize>,
+    /// Number of machine shards in the cluster.
+    pub shards: usize,
+}
+
+/// A policy's decision to re-home one hash slot onto another machine
+/// shard ("keys follow load"), the cluster-level mirror of
+/// [`RegionMove`]. Applied by the cluster front-end, which charges the
+/// slot's state transfer to the inter-machine links.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardMove {
+    pub slot: usize,
+    pub to_shard: usize,
+}
+
 /// Context-switch cost regime.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SwitchModel {
@@ -86,6 +111,17 @@ pub trait Policy: Send {
         _heat: &[RegionHeat],
         _group_size: usize,
     ) -> Vec<RegionMove> {
+        Vec::new()
+    }
+
+    /// Periodic cluster adaptation, one level above
+    /// [`Policy::plan_region_moves`]: given a routing window's per-slot
+    /// request heat, which hash slots should re-home onto a colder
+    /// machine shard? Called by the cluster front-end dispatcher at
+    /// every window boundary. The default never moves keys — only
+    /// policies that close the loop (currently [`ArcasPolicy`])
+    /// override this.
+    fn plan_shard_moves(&mut self, _now_ns: u64, _heat: &ShardHeat) -> Vec<ShardMove> {
         Vec::new()
     }
 
@@ -176,6 +212,16 @@ impl ArcasPolicy {
     /// before the region follows it (strict majority; an even spread
     /// across nodes never clears it, so spread-out phases don't thrash).
     const HOT_NUMA_FRAC: f64 = 0.5;
+    /// A machine shard is "hot" when its window load exceeds this
+    /// multiple of the mean shard load — below it, the imbalance is not
+    /// worth shipping slot state across the cluster links.
+    const HOT_SHARD_FRAC: f64 = 1.15;
+    /// Minimum per-slot window heat before a slot is worth re-homing
+    /// (cluster mirror of `MIN_MOVE_HEAT`, scaled to slot granularity).
+    const MIN_SLOT_HEAT: f64 = 16.0;
+    /// Re-homings per window boundary, bounded so one tick never ships
+    /// more slot state than the links can absorb inside a window.
+    const MAX_SHARD_MOVES: usize = 8;
 
     pub fn new(topo: &Topology) -> Self {
         Self {
@@ -319,6 +365,69 @@ impl Policy for ArcasPolicy {
                     to_numa: hot,
                 });
             }
+        }
+        moves
+    }
+
+    /// Algorithm 2 one level up: hot shards shed their hottest slots to
+    /// the coldest shard, greedily, as long as the receiver stays below
+    /// the hot threshold itself — so a single giant slot is never
+    /// ping-ponged between shards, the tail of warm slots drains
+    /// instead. Deterministic: slots are visited in descending-load
+    /// order with ties broken toward the lower slot id, and the
+    /// receiver ties break toward the lower shard id.
+    fn plan_shard_moves(&mut self, _now_ns: u64, heat: &ShardHeat) -> Vec<ShardMove> {
+        if heat.shards < 2 {
+            return Vec::new();
+        }
+        let mut shard_load = vec![0.0; heat.shards];
+        for (slot, &load) in heat.slot_load.iter().enumerate() {
+            shard_load[heat.table[slot]] += load;
+        }
+        let mean = shard_load.iter().sum::<f64>() / heat.shards as f64;
+        if mean <= 0.0 {
+            return Vec::new();
+        }
+        let mut order: Vec<usize> = (0..heat.slot_load.len()).collect();
+        order.sort_by(|&a, &b| {
+            heat.slot_load[b]
+                .partial_cmp(&heat.slot_load[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        let mut moves = Vec::new();
+        for slot in order {
+            if moves.len() >= Self::MAX_SHARD_MOVES {
+                break;
+            }
+            let load = heat.slot_load[slot];
+            if load < Self::MIN_SLOT_HEAT {
+                break; // descending order: everything after is colder
+            }
+            let from = heat.table[slot];
+            if shard_load[from] <= Self::HOT_SHARD_FRAC * mean {
+                continue;
+            }
+            let to = (0..heat.shards)
+                .min_by(|&a, &b| {
+                    shard_load[a]
+                        .partial_cmp(&shard_load[b])
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(a.cmp(&b))
+                })
+                .expect("shards >= 2");
+            // Only move when the receiver stays cold after absorbing
+            // the slot — otherwise the move just relocates the hotspot
+            // (and would thrash back next window).
+            if to == from || shard_load[to] + load > Self::HOT_SHARD_FRAC * mean {
+                continue;
+            }
+            shard_load[from] -= load;
+            shard_load[to] += load;
+            moves.push(ShardMove {
+                slot,
+                to_shard: to,
+            });
         }
         moves
     }
@@ -880,6 +989,76 @@ mod tests {
         // The task-move-only baseline never moves data.
         let mut off = ArcasPolicy::new(&t).with_region_moves(false);
         assert!(off.plan_region_moves(&t, 0, &[stranded], 8).is_empty());
+    }
+
+    #[test]
+    fn arcas_plans_shard_moves_off_hot_shards() {
+        let t = topo();
+        let mut p = ArcasPolicy::new(&t);
+        // 8 slots over 2 shards, interleaved (slot % 2). Shard 0 holds a
+        // hot head on slot 0 plus warm slots; shard 1 is cold.
+        let table: Vec<usize> = (0..8).map(|s| s % 2).collect();
+        let heat = ShardHeat {
+            slot_load: vec![400.0, 50.0, 100.0, 50.0, 100.0, 50.0, 100.0, 50.0],
+            table: table.clone(),
+            shards: 2,
+        };
+        // shard 0 = 700, shard 1 = 200, mean = 450: shard 0 is hot.
+        let moves = p.plan_shard_moves(0, &heat);
+        assert!(!moves.is_empty(), "a hot shard must shed slots");
+        for m in &moves {
+            assert_eq!(table[m.slot], 0, "only the hot shard donates");
+            assert_eq!(m.to_shard, 1, "slots land on the cold shard");
+        }
+        // The giant slot (400) is never moved — absorbing it would push
+        // the receiver past the hot threshold (200 + 400 > 1.15 x 450)
+        // and the hotspot would just relocate. The warm 100-slots drain
+        // instead, strictly improving balance at each step.
+        assert!(
+            moves.iter().all(|m| m.slot != 0),
+            "the giant slot must stay put: {moves:?}"
+        );
+        let mut from_load = 700.0;
+        let mut to_load = 200.0;
+        for m in &moves {
+            let l = heat.slot_load[m.slot];
+            assert!(to_load + l < from_load, "move must strictly improve");
+            from_load -= l;
+            to_load += l;
+        }
+
+        // A balanced table plans nothing.
+        let even = ShardHeat {
+            slot_load: vec![100.0; 8],
+            table: table.clone(),
+            shards: 2,
+        };
+        assert!(p.plan_shard_moves(0, &even).is_empty());
+
+        // Slots below the heat floor are never shipped.
+        let cold = ShardHeat {
+            slot_load: vec![10.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0],
+            table,
+            shards: 2,
+        };
+        assert!(p.plan_shard_moves(0, &cold).is_empty());
+
+        // A single shard has nowhere to move to.
+        let solo = ShardHeat {
+            slot_load: vec![1000.0; 4],
+            table: vec![0; 4],
+            shards: 1,
+        };
+        assert!(p.plan_shard_moves(0, &solo).is_empty());
+
+        // Every other policy keeps the default no-op.
+        let mut ring = RingPolicy::new();
+        let hot = ShardHeat {
+            slot_load: vec![1000.0, 0.0],
+            table: vec![0, 1],
+            shards: 2,
+        };
+        assert!(ring.plan_shard_moves(0, &hot).is_empty());
     }
 
     #[test]

@@ -64,6 +64,21 @@ pub struct LatencyReport {
     pub mean_service_ns: f64,
 }
 
+/// One machine shard's contribution to a cluster run's merged report
+/// (`RunReport::per_shard`): how much traffic it absorbed and what tail
+/// it delivered.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ShardStat {
+    /// Requests routed to (and served or shed by) this shard.
+    pub requests: u64,
+    /// Requests this shard shed past its SLO budget.
+    pub shed: u64,
+    /// The shard's own virtual-time makespan.
+    pub makespan_ns: u64,
+    /// The shard's own p99 sojourn (0 when it served nothing).
+    pub p99_ns: u64,
+}
+
 /// Result of one executor run.
 #[derive(Clone, Debug, Default)]
 pub struct RunReport {
@@ -106,6 +121,23 @@ pub struct RunReport {
     /// (critical first); empty unless the scenario serves a
     /// priority-tiered trace.
     pub class_latency: Vec<(&'static str, LatencyReport)>,
+    /// Number of machine shards the run fanned out over (`Run::cluster`);
+    /// 0 for the legacy single-machine path.
+    pub machines: usize,
+    /// Requests that crossed the inter-machine link tier (routed to a
+    /// shard other than the front end's).
+    pub cross_link_hops: u64,
+    /// Bytes charged to inter-machine links: request payloads on every
+    /// cross-shard hop plus key-range state shipped by rebalances.
+    pub cross_link_bytes: u64,
+    /// Key-range re-homings applied by [`crate::policy::Policy::plan_shard_moves`]
+    /// — the cluster-level mirror of `region_moves`.
+    pub shard_moves: u64,
+    /// Per-move decisions: (t_ns, slot, destination shard) — the
+    /// cluster-level mirror of `region_decisions`.
+    pub shard_decisions: Vec<(u64, usize, usize)>,
+    /// Per-shard traffic/tail breakdown; empty for single-machine runs.
+    pub per_shard: Vec<ShardStat>,
 }
 
 impl RunReport {
@@ -560,6 +592,12 @@ impl SimExecutor {
             request_latency: None,
             request_shed: 0,
             class_latency: Vec::new(),
+            machines: 0,
+            cross_link_hops: 0,
+            cross_link_bytes: 0,
+            shard_moves: 0,
+            shard_decisions: Vec::new(),
+            per_shard: Vec::new(),
         }
     }
 

@@ -13,6 +13,29 @@ pub use latency::{LatencyClass, LatencyModel};
 
 use crate::util::config::Config;
 
+/// The inter-machine link tier above the on-package hierarchy: what a
+/// request pays to hop between two machines of a cluster. Sits above
+/// the IF-link/DDR tiers the same way cross-socket sits above
+/// cross-NUMA — a per-link latency plus a shared-bandwidth pipe that
+/// queues under load (the cluster router keeps a busy-until horizon per
+/// link, exactly like the intra-socket `BwTracker`s charge transfers).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClusterLink {
+    /// One-way propagation latency per hop, ns (NIC + ToR switch; an
+    /// order of magnitude above the ~200 ns cross-socket tier).
+    pub lat_ns: u64,
+    /// Link bandwidth, bytes/ns (12.5 B/ns = 100 Gb/s Ethernet).
+    pub bw: f64,
+}
+
+impl ClusterLink {
+    /// Serialization delay for `bytes` on this link, ns (ceil'd so even
+    /// a 1-byte transfer advances the busy horizon).
+    pub fn xfer_ns(&self, bytes: u64) -> u64 {
+        (bytes as f64 / self.bw).ceil() as u64
+    }
+}
+
 /// A chiplet-based machine description.
 ///
 /// Core numbering is hierarchical: cores `[0, cores_per_chiplet)` are
@@ -158,6 +181,17 @@ impl Topology {
         self.l3_per_chiplet = ((self.l3_per_chiplet as f64) * f) as u64;
         self.l2_per_core = ((self.l2_per_core as f64) * f).max(1.0) as u64;
         self
+    }
+
+    /// The link this machine uses to reach its cluster peers. A method
+    /// rather than a preset field: every preset models the same
+    /// datacenter fabric, and keeping it out of the struct leaves the
+    /// preset literals (and their goldens) untouched.
+    pub fn cluster_link(&self) -> ClusterLink {
+        ClusterLink {
+            lat_ns: 2_000,
+            bw: 12.5,
+        }
     }
 
     // --- derived quantities -------------------------------------------
@@ -432,5 +466,19 @@ mod tests {
     fn cache_scaling() {
         let t = Topology::milan_1s().scale_caches(0.125);
         assert_eq!(t.l3_per_chiplet, 4 << 20);
+    }
+
+    #[test]
+    fn cluster_link_sits_above_the_cross_socket_tier() {
+        let t = Topology::milan_2s();
+        let link = t.cluster_link();
+        // The network hop must dominate every on-package latency class.
+        assert!((link.lat_ns as f64) > t.core_to_core_ns(0, 64));
+        // Serialization: 128 B at 12.5 B/ns rounds up to 11 ns, and a
+        // 1-byte transfer still advances the busy horizon.
+        assert_eq!(link.xfer_ns(128), 11);
+        assert!(link.xfer_ns(1) >= 1);
+        // The wire is far slower than one socket's DRAM complex.
+        assert!(link.bw < t.mem_bw_per_socket());
     }
 }

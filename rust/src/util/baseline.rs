@@ -140,23 +140,61 @@ fn is_unpinned(baseline: &Json) -> bool {
 /// one invocation (request count, offered rate, arrival model, workers,
 /// seed, …) is not comparable to another's — gating across configs
 /// would report phantom regressions or mask real ones. Files without a
-/// config block (e.g. the host-scaling bench) skip the guard.
+/// config block (e.g. the host-scaling bench) skip the guard. Nested
+/// config objects are walked recursively; the error names the exact
+/// dotted key path (e.g. `arrivals.depth`) and both values.
 fn check_config(baseline: &Json, current: &Json) -> Result<(), String> {
-    let (Some(Json::Obj(base)), Some(cur)) = (baseline.get("config"), current.get("config"))
+    let (Some(base @ Json::Obj(_)), Some(cur)) = (baseline.get("config"), current.get("config"))
     else {
         return Ok(());
     };
-    for (key, want) in base {
-        let got = cur.get(key);
-        if got != Some(want) {
-            return Err(format!(
-                "bench config drift on \"{key}\": baseline {want:?} vs current {got:?} — \
-                 the files come from different bench invocations; re-pin the baseline \
-                 from the current invocation instead of gating across configs"
-            ));
+    config_drift(base, cur, "")
+}
+
+fn config_drift(want: &Json, got: &Json, path: &str) -> Result<(), String> {
+    if let Json::Obj(fields) = want {
+        if matches!(got, Json::Obj(_)) {
+            for (key, sub_want) in fields {
+                let sub_path = if path.is_empty() {
+                    key.clone()
+                } else {
+                    format!("{path}.{key}")
+                };
+                match got.get(key) {
+                    Some(sub_got) => config_drift(sub_want, sub_got, &sub_path)?,
+                    None => return Err(drift_msg(&sub_path, sub_want, None)),
+                }
+            }
+            return Ok(());
         }
     }
+    if want != got {
+        return Err(drift_msg(path, want, Some(got)));
+    }
     Ok(())
+}
+
+fn drift_msg(path: &str, want: &Json, got: Option<&Json>) -> String {
+    format!(
+        "bench config drift on \"{path}\": baseline {want:?} vs current {got:?} — \
+         the files come from different bench invocations; re-pin the baseline \
+         from the current invocation instead of gating across configs"
+    )
+}
+
+/// Load a `BENCH_*.json` artifact for gating, distinguishing the three
+/// failure shapes CI actually hits: the bench never ran (no file at the
+/// path — the actionable one), the file is unreadable, and the file is
+/// not valid JSON. Backs `arcas bench-check --baseline/--current`.
+pub fn load_artifact(path: &str) -> Result<Json, String> {
+    if !std::path::Path::new(path).exists() {
+        return Err(format!(
+            "bench did not run — no artifact at {path} \
+             (run the matching `cargo bench` or `make bench-regression` first)"
+        ));
+    }
+    let text = std::fs::read_to_string(path).map_err(|e| format!("cannot read {path}: {e}"))?;
+    Json::parse(&text).map_err(|e| format!("{path} is not valid JSON: {e}"))
 }
 
 /// Gate `BENCH_serving_latency.json` (and `BENCH_serving_slo.json` /
@@ -309,6 +347,38 @@ pub fn check_mem_follow(
     Ok(GateResult {
         checks: vec![Check {
             label: "mem_follow speedup_moves_vs_task_only".into(),
+            base,
+            current: cur,
+            tol,
+            verdict,
+        }],
+        unpinned: is_unpinned(baseline),
+    })
+}
+
+/// Gate `BENCH_cluster_scaling.json`: the rps-at-p99 advantage of a
+/// 4-shard cluster over the single machine on the `serve-cluster`
+/// scenario (`speedup_n4_vs_n1`, higher is better; > 1.0 means the
+/// fleet actually scales through the cross-machine link tier). The
+/// bench also emits per-N rps-at-p99 points for diagnosis, but only the
+/// headline ratio is gated — the sweep grid may change.
+pub fn check_cluster(
+    baseline: &Json,
+    current: &Json,
+    default_tol: f64,
+) -> Result<GateResult, String> {
+    check_config(baseline, current)?;
+    let base = baseline
+        .num("speedup_n4_vs_n1")
+        .ok_or("baseline missing numeric \"speedup_n4_vs_n1\"")?;
+    let tol = baseline.num("tol").unwrap_or(default_tol);
+    let (cur, verdict) = match current.num("speedup_n4_vs_n1") {
+        Some(v) => (v, verdict(base, v, tol, true)),
+        None => (f64::NAN, Verdict::Missing),
+    };
+    Ok(GateResult {
+        checks: vec![Check {
+            label: "cluster speedup_n4_vs_n1".into(),
             base,
             current: cur,
             tol,
@@ -594,6 +664,91 @@ mod tests {
         .unwrap();
         assert!(check_serving(&with_cfg(4000, 100.0), &no_cfg, 0.25).is_ok());
         assert!(check_serving(&no_cfg, &with_cfg(4000, 100.0), 0.25).is_ok());
+    }
+
+    #[test]
+    fn nested_config_drift_names_the_dotted_key_path() {
+        let mk = |depth: f64| {
+            Json::parse(&format!(
+                r#"{{"pinned": true,
+                     "config": {{"requests": 4000, "arrivals": {{"model": "diurnal", "depth": {depth}}}}},
+                     "series": [{{"policy": "local", "backend": "sim", "p99_ns": 100}}]}}"#
+            ))
+            .unwrap()
+        };
+        // Same nested config: gated normally.
+        assert!(!check_serving(&mk(0.8), &mk(0.8), 0.25).unwrap().failed());
+        // A leaf two levels down drifts: the error names the full path
+        // and both values, not just the top-level key.
+        let err = check_serving(&mk(0.8), &mk(0.5), 0.25).unwrap_err();
+        assert!(err.contains("config drift"), "{err}");
+        assert!(err.contains("\"arrivals.depth\""), "{err}");
+        assert!(err.contains("0.8") && err.contains("0.5"), "{err}");
+        // A key missing from the current config names the path too.
+        let no_depth = Json::parse(
+            r#"{"config": {"requests": 4000, "arrivals": {"model": "diurnal"}},
+                "series": [{"policy": "local", "backend": "sim", "p99_ns": 100}]}"#,
+        )
+        .unwrap();
+        let err = check_serving(&mk(0.8), &no_depth, 0.25).unwrap_err();
+        assert!(err.contains("\"arrivals.depth\"") && err.contains("None"), "{err}");
+        // Extra keys on the current side are fine (baseline drives).
+        let extra = Json::parse(
+            r#"{"config": {"requests": 4000,
+                           "arrivals": {"model": "diurnal", "depth": 0.8, "burst": 64}},
+                "series": [{"policy": "local", "backend": "sim", "p99_ns": 100}]}"#,
+        )
+        .unwrap();
+        assert!(check_serving(&mk(0.8), &extra, 0.25).is_ok());
+    }
+
+    #[test]
+    fn cluster_gate_is_higher_is_better() {
+        let base =
+            Json::parse(r#"{"pinned": true, "speedup_n4_vs_n1": 2.0, "tol": 0.25}"#).unwrap();
+        let good = Json::parse(r#"{"speedup_n4_vs_n1": 2.1}"#).unwrap();
+        assert!(!check_cluster(&base, &good, 0.25).unwrap().failed());
+        // The fleet losing its edge over one machine fails.
+        let bad = Json::parse(r#"{"speedup_n4_vs_n1": 1.0}"#).unwrap();
+        let r = check_cluster(&base, &bad, 0.25).unwrap();
+        assert!(r.failed());
+        assert_eq!(r.checks[0].verdict, Verdict::Regressed);
+        // A bigger win warns to re-pin, never fails.
+        let better = Json::parse(r#"{"speedup_n4_vs_n1": 3.5}"#).unwrap();
+        let r = check_cluster(&base, &better, 0.25).unwrap();
+        assert!(!r.failed());
+        assert!(r.improved());
+        // Missing headline fails a pinned gate; bootstrap never fails.
+        let none = Json::parse(r#"{"points": []}"#).unwrap();
+        assert!(check_cluster(&base, &none, 0.25).unwrap().failed());
+        let bootstrap = Json::parse(r#"{"pinned": false, "speedup_n4_vs_n1": 1.0}"#).unwrap();
+        let r = check_cluster(&bootstrap, &bad, 0.25).unwrap();
+        assert!(r.unpinned);
+        assert!(!r.failed());
+        // Malformed baseline is an error, not a panic.
+        assert!(check_cluster(&none, &good, 0.25).is_err());
+    }
+
+    #[test]
+    fn load_artifact_distinguishes_not_run_from_parse_failure() {
+        // No file: the distinct "bench did not run" error.
+        let err = load_artifact("/nonexistent/BENCH_cluster_scaling.json").unwrap_err();
+        assert!(err.contains("bench did not run"), "{err}");
+        assert!(err.contains("/nonexistent/BENCH_cluster_scaling.json"), "{err}");
+        // Present but not JSON: a parse error naming the path.
+        let dir = std::env::temp_dir();
+        let bad = dir.join("arcas_load_artifact_bad.json");
+        std::fs::write(&bad, "not json").unwrap();
+        let err = load_artifact(bad.to_str().unwrap()).unwrap_err();
+        assert!(err.contains("not valid JSON"), "{err}");
+        assert!(!err.contains("bench did not run"), "{err}");
+        // Valid artifact loads.
+        let ok = dir.join("arcas_load_artifact_ok.json");
+        std::fs::write(&ok, r#"{"speedup_n4_vs_n1": 2.0}"#).unwrap();
+        let v = load_artifact(ok.to_str().unwrap()).unwrap();
+        assert_eq!(v.num("speedup_n4_vs_n1"), Some(2.0));
+        std::fs::remove_file(&bad).ok();
+        std::fs::remove_file(&ok).ok();
     }
 
     #[test]

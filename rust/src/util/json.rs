@@ -350,6 +350,85 @@ mod tests {
     }
 
     #[test]
+    fn escape_sequences_cover_the_full_table() {
+        // Every escape the parser claims to handle, in one string.
+        let v = Json::parse(r#""\"\\\/\n\t\r\b\fAé""#).unwrap();
+        assert_eq!(v.as_str(), Some("\"\\/\n\t\r\u{8}\u{c}Aé"));
+        // \u escapes of control characters round-trip through escape().
+        let s = "bell\u{7}end";
+        let round = format!("\"{}\"", escape(s));
+        assert_eq!(Json::parse(&round).unwrap().as_str(), Some(s));
+        // A lone surrogate is replaced, not a crash or a mangled string.
+        let v = Json::parse(r#""\ud800""#).unwrap();
+        assert_eq!(v.as_str(), Some("\u{FFFD}"));
+        // Malformed escapes are errors.
+        for bad in [r#""\q""#, r#""\u12""#, r#""\u12g4""#, r#""\"#] {
+            assert!(Json::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn nested_empty_containers() {
+        assert_eq!(Json::parse("[[]]").unwrap(), Json::Arr(vec![Json::Arr(vec![])]));
+        assert_eq!(
+            Json::parse(r#"{"a": {}}"#).unwrap(),
+            Json::Obj(vec![("a".into(), Json::Obj(vec![]))])
+        );
+        assert_eq!(
+            Json::parse("[{}, [], {}]").unwrap(),
+            Json::Arr(vec![Json::Obj(vec![]), Json::Arr(vec![]), Json::Obj(vec![])])
+        );
+        // Whitespace inside empty containers is fine.
+        assert_eq!(Json::parse("[ \n ]").unwrap(), Json::Arr(vec![]));
+        assert_eq!(Json::parse("{ \t }").unwrap(), Json::Obj(vec![]));
+        // Deep nesting parses and indexes.
+        let v = Json::parse(r#"{"a": [{"b": [[1]]}]}"#).unwrap();
+        let inner = v.get("a").unwrap().as_arr().unwrap()[0]
+            .get("b")
+            .unwrap()
+            .as_arr()
+            .unwrap()[0]
+            .as_arr()
+            .unwrap()[0]
+            .as_f64();
+        assert_eq!(inner, Some(1.0));
+    }
+
+    #[test]
+    fn exponent_form_numbers() {
+        assert_eq!(Json::parse("1e3").unwrap(), Json::Num(1000.0));
+        assert_eq!(Json::parse("2.5E-2").unwrap(), Json::Num(0.025));
+        assert_eq!(Json::parse("-1E+2").unwrap(), Json::Num(-100.0));
+        assert_eq!(Json::parse("0.0").unwrap(), Json::Num(0.0));
+        assert_eq!(Json::parse("[1e0, 1e1]").unwrap().as_arr().unwrap().len(), 2);
+        // Degenerate exponent/sign soup must not parse as a number.
+        for bad in ["1e", "1e+", "--1", "1.2.3", "+1"] {
+            assert!(Json::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn trailing_garbage_is_rejected() {
+        for bad in [
+            "{} extra",
+            "{}{}",
+            "[1, 2]]",
+            "null null",
+            "42 ,",
+            "\"s\" trailing",
+            "true}",
+        ] {
+            let err = Json::parse(bad).unwrap_err();
+            assert!(
+                err.contains("trailing") || err.contains("expected"),
+                "{bad:?}: {err}"
+            );
+        }
+        // …but trailing whitespace is not garbage.
+        assert_eq!(Json::parse("{} \n\t ").unwrap(), Json::Obj(vec![]));
+    }
+
+    #[test]
     fn unicode_and_escapes() {
         let v = Json::parse("\"caf\u{e9} \\u00e9 \\\"q\\\"\"").unwrap();
         assert_eq!(v.as_str(), Some("café é \"q\""));

@@ -355,6 +355,14 @@ impl Scenario for ServeKvScenario {
         self.kv.as_ref().map(|kv| kv.slo.clone())
     }
 
+    fn cluster_parts(&self) -> Option<crate::cluster::ClusterParts> {
+        Some(crate::cluster::ClusterParts {
+            records: self.records,
+            trace: self.trace.clone(),
+            opts: self.opts,
+        })
+    }
+
     fn metrics(&self, report: &RunReport) -> ScenarioMetrics {
         let p99 = self.latency().map_or(0.0, |l| l.p99_ns as f64);
         ScenarioMetrics::new(self.served() as f64, "reqs")

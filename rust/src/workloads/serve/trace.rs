@@ -267,6 +267,28 @@ impl Trace {
         Trace { requests }
     }
 
+    /// Rotate the keyspace by `stride` every `period_ns` of virtual
+    /// time: request `r`'s key becomes
+    /// `(r.key + stride * (r.arrival_ns / period_ns)) % keyspace`.
+    ///
+    /// This turns a static Zipf head into a *moving* hotspot — the hot
+    /// key range walks across the keyspace as the trace plays out, so a
+    /// static key→shard table goes stale and cluster rebalancing
+    /// ([`crate::policy::Policy::plan_shard_moves`]) has something to
+    /// chase. Arrival times, ops, and priorities are untouched, the
+    /// pass is PRNG-free, and `stride = 0` returns the trace
+    /// byte-identical.
+    pub fn with_hotspot_drift(mut self, period_ns: u64, stride: u64, keyspace: u64) -> Trace {
+        assert!(keyspace > 0, "hotspot drift needs a non-empty keyspace");
+        let period = period_ns.max(1);
+        for r in &mut self.requests {
+            let epoch = r.arrival_ns / period;
+            let shift = (stride as u128 * epoch as u128 % keyspace as u128) as u64;
+            r.key = ((r.key % keyspace) as u128 + shift as u128) as u64 % keyspace;
+        }
+        self
+    }
+
     /// Parse the text trace format. Strict: malformed lines and
     /// out-of-order arrivals are errors (a silently reordered trace
     /// would corrupt every latency number derived from it).
@@ -438,6 +460,30 @@ mod tests {
         // Within a burst: ~mean/10; at the burst boundary: a long gap.
         assert!(gap(50) < 500);
         assert!(gap(100) > 50_000);
+    }
+
+    #[test]
+    fn hotspot_drift_rotates_keys_per_epoch() {
+        let base = Trace::synth(&cfg(ArrivalModel::Uniform));
+        let ks = 10_000u64;
+        let drifted = base.clone().with_hotspot_drift(1_000_000, 2_500, ks);
+        assert_eq!(drifted.len(), base.len());
+        for (b, d) in base.requests.iter().zip(&drifted.requests) {
+            // Only the key moves; timing/op/priority are untouched.
+            assert_eq!(b.arrival_ns, d.arrival_ns);
+            assert_eq!(b.op, d.op);
+            assert_eq!(b.priority, d.priority);
+            let epoch = b.arrival_ns / 1_000_000;
+            let want = (b.key + 2_500 * (epoch % 4)) % ks;
+            assert_eq!(d.key, want, "key rotation wrong at t={}", b.arrival_ns);
+            assert!(d.key < ks);
+        }
+        // The 4ms trace spans ≥2 epochs, so some keys actually moved.
+        assert_ne!(base, drifted);
+        // Deterministic and stride-0 is the identity.
+        let again = base.clone().with_hotspot_drift(1_000_000, 2_500, ks);
+        assert_eq!(drifted, again);
+        assert_eq!(base.clone().with_hotspot_drift(1_000_000, 0, ks), base);
     }
 
     #[test]

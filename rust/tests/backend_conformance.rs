@@ -123,6 +123,7 @@ conformance_tests! {
     conformance_mem_follow => "mem-follow";
     conformance_serve_kv => "serve-kv";
     conformance_serve_mixed => "serve-mixed";
+    conformance_serve_cluster => "serve-cluster";
 }
 
 /// ISSUE 8: the adaptive loop actually adapts on BOTH backends. On sim
@@ -249,6 +250,83 @@ fn mem_follow_reports_region_moves_on_both_backends() {
     }
 }
 
+/// ISSUE 10: the cluster rebalance hook is live on BOTH backends. The
+/// routing pre-pass is backend-independent by construction (it runs
+/// before any executor is chosen), so the drifting hotspot of
+/// `serve-cluster` must make `ArcasPolicy::plan_shard_moves` re-home at
+/// least one hot key range, deterministically, with identical routing
+/// counters on Sim and Host.
+#[test]
+fn cluster_rebalances_hot_shards_on_both_backends() {
+    use arcas::cluster::{CLUSTER_SLOTS, WINDOW_NS};
+    use arcas::policy::ArcasPolicy;
+    let spec = engine::by_name("serve-cluster").unwrap();
+    // ~6 ms of trace at the registry's 2M rps: crosses several routing
+    // window boundaries so the front end gets rebalance opportunities.
+    let params = ScenarioParams {
+        scale: 0.002,
+        seed: 11,
+        iters: Some(12_000),
+        ..Default::default()
+    };
+    let run_with = |backend: ExecBackend| {
+        let mut s = spec.build(&params);
+        let topo2 = topo();
+        engine::Run::new(&topo())
+            .policy(Box::new(ArcasPolicy::new(&topo()).with_timer(50_000)))
+            .tasks(8)
+            .backend(backend)
+            .verify(true)
+            .cluster(4)
+            .cluster_policy(move || Box::new(ArcasPolicy::new(&topo2).with_timer(50_000)))
+            .run(s.as_mut())
+    };
+
+    let sim_a = run_with(ExecBackend::Sim);
+    let r = &sim_a.report;
+    assert_eq!(r.machines, 4);
+    assert!(r.cross_link_hops > 0, "no traffic crossed the link tier");
+    assert!(
+        r.shard_moves >= 1,
+        "the drifting hotspot never triggered a shard re-homing \
+         (decisions: {:?})",
+        r.shard_decisions
+    );
+    assert_eq!(
+        r.shard_decisions.len() as u64,
+        r.shard_moves,
+        "applied moves and recorded decisions disagree"
+    );
+    for &(t_ns, slot, to_shard) in &r.shard_decisions {
+        assert_eq!(t_ns % WINDOW_NS, 0, "moves happen at window boundaries");
+        assert!(slot < CLUSTER_SLOTS, "slot out of range");
+        assert!(to_shard < 4, "destination shard out of range");
+    }
+    // Every request landed on exactly one shard.
+    assert_eq!(r.per_shard.len(), 4);
+    let routed: u64 = r.per_shard.iter().map(|s| s.requests).sum();
+    assert_eq!(routed, 12_000, "routing dropped or duplicated requests");
+    let merged = r.request_latency.as_ref().expect("merged latency report");
+    assert_eq!(merged.count + r.request_shed, 12_000);
+
+    // Routing (and therefore every shard's input) is deterministic.
+    let sim_b = run_with(ExecBackend::Sim);
+    assert_eq!(r.shard_decisions, sim_b.report.shard_decisions);
+    assert_eq!(key(r), key(&sim_b.report), "sim cluster run must be deterministic");
+
+    // Host: same pre-pass, so identical routing counters; the shards
+    // themselves pass verify() against the serial reference.
+    let host = run_with(ExecBackend::Host);
+    assert_eq!(host.report.machines, 4);
+    assert_eq!(
+        (host.report.cross_link_hops, host.report.cross_link_bytes),
+        (r.cross_link_hops, r.cross_link_bytes),
+        "host: routing must be backend-independent"
+    );
+    assert_eq!(host.report.shard_decisions, r.shard_decisions);
+    assert!(host.report.wall_ns > 0);
+}
+
 #[test]
 fn suite_covers_entire_registry() {
     for spec in engine::registry() {
@@ -277,7 +355,7 @@ fn suite_covers_entire_registry() {
 /// sampled), and the sim-backend latency numbers are deterministic.
 #[test]
 fn serving_scenarios_report_latency_on_both_backends() {
-    for name in ["serve-kv", "serve-mixed"] {
+    for name in ["serve-kv", "serve-mixed", "serve-cluster"] {
         let sim_a = run_on(name, Some(ExecBackend::Sim));
         let sim_b = run_on(name, Some(ExecBackend::Sim));
         assert_eq!(

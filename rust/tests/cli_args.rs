@@ -304,6 +304,91 @@ fn arcas_bench_check_gates_regressions() {
     std::fs::remove_file(&cur_path).ok();
 }
 
+#[test]
+fn run_parses_machines_and_rejects_bad_combinations() {
+    let c = parse(&["--machines", "4", "--scenario", "serve-cluster"]).unwrap();
+    assert_eq!(c.machines, 4);
+    assert_eq!(parse(&[]).unwrap().machines, 1);
+    assert!(parse(&["--machines", "0"])
+        .unwrap_err()
+        .contains("--machines must be >= 1"));
+    let err = parse(&["--machines", "4", "--repeat", "2"]).unwrap_err();
+    assert!(
+        err.contains("--machines") && err.contains("--repeat"),
+        "{err}"
+    );
+}
+
+/// The cluster acceptance invocation against the real binary:
+/// `arcas run --scenario serve-cluster --machines 4` must exit 0,
+/// verify every shard, and print the fleet block (cross-link traffic +
+/// per-shard breakdown).
+#[test]
+fn arcas_run_serve_cluster_machines_end_to_end() {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_arcas"))
+        .args([
+            "run",
+            "--scenario",
+            "serve-cluster",
+            "--policy",
+            "arcas",
+            "--cores",
+            "8",
+            "--machines",
+            "4",
+            "--verify",
+            "--scale",
+            "0.002",
+            "--iters",
+            "6000",
+        ])
+        .output()
+        .expect("spawn arcas binary");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        out.status.success(),
+        "arcas run --machines 4 failed:\nstdout:\n{stdout}\nstderr:\n{stderr}"
+    );
+    assert!(stdout.contains("4 shards"), "{stdout}");
+    assert!(stdout.contains("cross-link hops"), "{stdout}");
+    for shard in ["shard 0", "shard 1", "shard 2", "shard 3"] {
+        assert!(stdout.contains(shard), "missing {shard:?} in:\n{stdout}");
+    }
+    assert!(stdout.contains("verified"), "{stdout}");
+}
+
+/// A missing BENCH artifact is the distinct "bench did not run" error
+/// (exit 2), not a JSON parse failure — the common CI mistake of gating
+/// before the matching bench step must be self-explanatory.
+#[test]
+fn arcas_bench_check_distinguishes_missing_artifact() {
+    let dir = std::env::temp_dir();
+    let base_path = dir.join(format!("arcas_missing_base_{}.json", std::process::id()));
+    std::fs::write(
+        &base_path,
+        "{\"pinned\": true, \"speedup_n4_vs_n1\": 2.0, \"tol\": 0.25}",
+    )
+    .unwrap();
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_arcas"))
+        .args([
+            "bench-check",
+            "--kind",
+            "cluster",
+            "--baseline",
+            base_path.to_str().unwrap(),
+            "--current",
+            "/nonexistent/BENCH_cluster_scaling.json",
+        ])
+        .output()
+        .expect("spawn arcas binary");
+    std::fs::remove_file(&base_path).ok();
+    assert_eq!(out.status.code(), Some(2), "usage error, not a regression");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("bench did not run"), "{stderr}");
+    assert!(!stderr.contains("not valid JSON"), "{stderr}");
+}
+
 /// SLO serving end-to-end: a prioritized overloaded run with a shed
 /// budget prints the shed line and per-class tails, and verifies.
 #[test]

@@ -203,6 +203,80 @@ fn serve_kv_sim_report_is_golden() {
     assert!(a.metrics.get("p99_sojourn_ns").unwrap() >= 1.0);
 }
 
+/// ISSUE 10 golden pin: `--machines 1` is the single-machine run. A
+/// one-shard cluster must not route, delay, merge or otherwise perturb
+/// anything — the report matches the plain `Run` path byte for byte
+/// (same key, same latency aggregate, same metrics), with only the
+/// cluster counters stamped on top.
+#[test]
+fn cluster_of_one_matches_the_single_machine_serve_kv_run() {
+    let params = ScenarioParams {
+        scale: 0.002,
+        seed: 11,
+        iters: Some(512),
+        ..Default::default()
+    };
+    let plain = {
+        let mut s = engine::by_name("serve-kv").unwrap().build(&params);
+        engine::Run::new(&topo())
+            .policy(by_name("local", &topo()).unwrap())
+            .tasks(8)
+            .verify(true)
+            .run(s.as_mut())
+    };
+    let clustered = {
+        let mut s = engine::by_name("serve-kv").unwrap().build(&params);
+        engine::Run::new(&topo())
+            .policy(by_name("local", &topo()).unwrap())
+            .tasks(8)
+            .verify(true)
+            .cluster(1)
+            .run(s.as_mut())
+    };
+    assert_eq!(key(&plain.report), key(&clustered.report));
+    assert_eq!(plain.report.request_latency, clustered.report.request_latency);
+    assert_eq!(plain.report.request_shed, clustered.report.request_shed);
+    assert_eq!(plain.metrics.items, clustered.metrics.items);
+    assert_eq!(plain.metrics.extras, clustered.metrics.extras);
+    // The only difference: the cluster counters exist (and say "no
+    // cross-machine traffic happened").
+    assert_eq!(plain.report.machines, 0);
+    assert_eq!(clustered.report.machines, 1);
+    assert_eq!(clustered.report.cross_link_hops, 0);
+    assert_eq!(clustered.report.cross_link_bytes, 0);
+    assert_eq!(clustered.report.shard_moves, 0);
+    assert_eq!(clustered.report.per_shard.len(), 1);
+    assert_eq!(
+        clustered.report.per_shard[0].requests,
+        512,
+        "the one shard owns the whole trace"
+    );
+    // The adaptive policy goes through the same front-end seam: a
+    // 1-shard cluster under arcas also reproduces the plain arcas run.
+    let arcas_plain = {
+        let mut s = engine::by_name("serve-kv").unwrap().build(&params);
+        engine::Run::new(&topo())
+            .policy(by_name("arcas", &topo()).unwrap())
+            .tasks(8)
+            .verify(true)
+            .run(s.as_mut())
+    };
+    let arcas_clustered = {
+        let mut s = engine::by_name("serve-kv").unwrap().build(&params);
+        engine::Run::new(&topo())
+            .policy(by_name("arcas", &topo()).unwrap())
+            .tasks(8)
+            .verify(true)
+            .cluster(1)
+            .run(s.as_mut())
+    };
+    assert_eq!(key(&arcas_plain.report), key(&arcas_clustered.report));
+    assert_eq!(
+        arcas_plain.report.request_latency,
+        arcas_clustered.report.request_latency
+    );
+}
+
 #[test]
 fn every_registry_scenario_runs_verified_on_a_toy_topology() {
     // 2 chiplets × 8 cores: the smallest machine with a chiplet boundary.
